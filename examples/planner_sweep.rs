@@ -1,0 +1,90 @@
+//! Planner sweep: AutoHet vs baselines across the paper's cluster
+//! configurations + the elastic replanning loop driven by a generated
+//! spot trace (Figure 1 world).
+//!
+//! ```sh
+//! cargo run --release --example planner_sweep
+//! ```
+
+use autohet::baselines::{megatron::plan_megatron, whale::plan_whale};
+use autohet::cluster::{ClusterSpec, GpuKind, SpotTrace, TraceConfig};
+use autohet::modelcfg::ModelCfg;
+use autohet::planner::{auto_plan, PlanOptions};
+use autohet::profile::ProfileDb;
+use autohet::recovery::ElasticCoordinator;
+use autohet::sim::simulate_plan;
+use autohet::util::bench::Table;
+
+fn main() -> anyhow::Result<()> {
+    let model = ModelCfg::llama_7b();
+    let profile = ProfileDb::build(
+        &model,
+        &[GpuKind::A100, GpuKind::H800, GpuKind::H20],
+        &[1, 2, 4, 8],
+        1,
+    );
+
+    let mut table = Table::new(&["cluster", "autohet", "megatron", "whale", "plan", "time_s"]);
+    for counts in [
+        vec![(4usize, GpuKind::A100), (2, GpuKind::H800)],
+        vec![(5, GpuKind::A100), (3, GpuKind::H800)],
+        vec![(3, GpuKind::A100), (5, GpuKind::H800)],
+        vec![(1, GpuKind::A100), (4, GpuKind::H20)],
+        vec![(8, GpuKind::A100), (8, GpuKind::H800)],
+    ] {
+        let cluster = ClusterSpec::from_counts(&counts);
+        let label: Vec<String> = counts.iter().map(|(n, k)| format!("{n}x{k}")).collect();
+        let auto = auto_plan(&cluster, &profile, &PlanOptions::default())?;
+        let ta = simulate_plan(&profile, &auto).tokens_per_s;
+        let tm = plan_megatron(&cluster, &profile)
+            .map(|p| simulate_plan(&profile, &p).tokens_per_s)
+            .unwrap_or(f64::NAN);
+        let tw = plan_whale(&cluster, &profile)
+            .map(|p| simulate_plan(&profile, &p).tokens_per_s)
+            .unwrap_or(f64::NAN);
+        table.row(&[
+            label.join("+"),
+            format!("{ta:.0}"),
+            format!("{tm:.0}"),
+            format!("{tw:.0}"),
+            auto.summary(),
+            format!("{:.2}", auto.planning_s),
+        ]);
+    }
+    table.print("LLaMA-6.7B tokens/s across clusters (simulated)");
+
+    // --- elastic loop over a spot trace ---
+    println!("\n== elastic replanning over a 12h spot trace ==");
+    let trace = SpotTrace::generate(
+        TraceConfig { horizon_s: 12.0 * 3600.0, ..Default::default() },
+        7,
+    );
+    let cluster = ClusterSpec::from_counts(&[(8, GpuKind::A100), (4, GpuKind::H800)]);
+    let mut coord = ElasticCoordinator::new(model.clone(), profile, cluster)?;
+    let mut handled = 0;
+    for ev in trace.events().into_iter().take(12) {
+        let out = coord.handle_event(&ev)?;
+        handled += 1;
+        match &out.plan {
+            Some(p) => println!(
+                "t={:>7.0}s {:+3} {:<5} -> {:>2} GPUs, plan {} (dp {} -> {})",
+                ev.at_s,
+                ev.delta,
+                ev.kind.name(),
+                out.cluster.total_gpus(),
+                p.summary(),
+                out.dp_change.0,
+                out.dp_change.1
+            ),
+            None => println!(
+                "t={:>7.0}s {:+3} {:<5} -> {:>2} GPUs: NO FEASIBLE PLAN (training pauses)",
+                ev.at_s,
+                ev.delta,
+                ev.kind.name(),
+                out.cluster.total_gpus()
+            ),
+        }
+    }
+    println!("handled {handled} availability events, {} replans", coord.replans);
+    Ok(())
+}

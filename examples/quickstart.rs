@@ -1,0 +1,67 @@
+//! Quickstart: plan 3D parallelism for a heterogeneous cluster and
+//! compare AutoHet against Megatron-LM and Whale in the simulator.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use autohet::baselines::{megatron::plan_megatron, whale::plan_whale};
+use autohet::cluster::{ClusterSpec, GpuKind};
+use autohet::modelcfg::ModelCfg;
+use autohet::planner::{auto_plan, PlanOptions};
+use autohet::profile::ProfileDb;
+use autohet::sim::simulate_plan;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Describe the heterogeneous cluster (the paper's 4×A100 + 4×H800).
+    let cluster = ClusterSpec::from_counts(&[(4, GpuKind::A100), (4, GpuKind::H800)]);
+    println!(
+        "cluster: {} GPUs, {:.0} GiB HBM, Σg = {:.1}",
+        cluster.total_gpus(),
+        cluster.total_mem_gib(),
+        cluster.total_power()
+    );
+
+    // 2. Pick a model and profile it (binary-decomposition profiling, Eq 5).
+    let model = ModelCfg::gpt3_6p7b();
+    let profile = ProfileDb::build(
+        &model,
+        &[GpuKind::A100, GpuKind::H800, GpuKind::H20],
+        &[1, 2, 4, 8],
+        1,
+    );
+    println!(
+        "model: {} ({:.1}B params), profiled {} points (~{:.1} min emulated)",
+        model.name,
+        model.total_params() / 1e9,
+        profile.points(),
+        profile.profiling_cost_s() / 60.0
+    );
+
+    // 3. Run Algorithm 1.
+    let plan = auto_plan(&cluster, &profile, &PlanOptions::default())?;
+    println!("\nAutoHet plan:   {}", plan.summary());
+    println!("planned in {:.2}s, Eq-1 estimate {:.3}s/iter", plan.planning_s, plan.est_iter_s);
+
+    // 4. Compare in the event simulator.
+    let auto = simulate_plan(&profile, &plan);
+    println!("\n{:<12} {:>12} {:>10} {:>8}", "system", "tokens/s", "iter (s)", "vs mega");
+    let mega = plan_megatron(&cluster, &profile).expect("megatron plan");
+    let mega_stats = simulate_plan(&profile, &mega);
+    let whale = plan_whale(&cluster, &profile).expect("whale plan");
+    let whale_stats = simulate_plan(&profile, &whale);
+    for (name, s) in [
+        ("Megatron-LM", &mega_stats),
+        ("Whale", &whale_stats),
+        ("AutoHet", &auto),
+    ] {
+        println!(
+            "{:<12} {:>12.0} {:>10.3} {:>7.2}x",
+            name,
+            s.tokens_per_s,
+            s.iter_s,
+            s.tokens_per_s / mega_stats.tokens_per_s
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,195 @@
+"""AOT pipeline: lower every stage graph to HLO *text* + manifest.json.
+
+Run once at build time (``make artifacts``); the Rust runtime loads the
+text with ``HloModuleProto::from_text_file`` and never touches Python.
+
+HLO text (NOT ``lowered.compiler_ir('hlo')``/``.serialize()``) is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+which xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/gen_hlo.py and its README.
+
+Artifacts per preset (``artifacts/<preset>/``):
+
+  embed_fwd, embed_bwd, block{L}_fwd, block{L}_bwd (L in cfg.block_sizes),
+  head_fwd_bwd, head_fwd, monolith_grad, monolith_loss
+
+plus ``manifest.json`` describing every artifact's inputs/outputs (name,
+shape, dtype) so the Rust side can construct literals without guessing.
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype="f32"):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32 if dtype == "f32" else jnp.int32)
+
+
+def _io_entry(name, shape, dtype="f32"):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def build_artifact_defs(cfg: M.ModelConfig):
+    """Return {artifact_name: (fn, input_specs, output_specs)}.
+
+    input/output specs are lists of (name, shape, dtype).
+    """
+    b, s, d, v, f = cfg.microbatch, cfg.seq, cfg.d_model, cfg.vocab, cfg.d_ff
+    act = ("x", (b, s, d), "f32")
+    tok = ("tokens", (b, s), "i32")
+    tgt = ("targets", (b, s), "i32")
+    defs = {}
+
+    # --- embed ---
+    e_params = [(n, sh, "f32") for n, sh in M.embed_param_specs(cfg)]
+    defs["embed_fwd"] = (
+        M.embed_fwd,
+        e_params + [tok],
+        [act],
+    )
+    defs["embed_bwd"] = (
+        M.make_embed_bwd(cfg),
+        [tok, ("dx", (b, s, d), "f32")],
+        [("d_tok_emb", (v, d), "f32"), ("d_pos_emb", (s, d), "f32")],
+    )
+
+    # --- layer blocks (binary decomposition sizes) ---
+    for nl in cfg.block_sizes:
+        bp = [(n, sh, "f32") for n, sh in M.block_param_specs(cfg, nl)]
+
+        def bfwd(*args, _nl=nl):
+            params = tuple(args[: M.N_BLOCK_PARAMS])
+            x = args[M.N_BLOCK_PARAMS]
+            return M.block_fwd(params, x, cfg.n_heads)
+
+        defs[f"block{nl}_fwd"] = (
+            bfwd,
+            bp + [act],
+            [("y", (b, s, d), "f32"), ("xs", (nl, b, s, d), "f32")],
+        )
+
+        def bbwd(*args, _nl=nl):
+            params = tuple(args[: M.N_BLOCK_PARAMS])
+            xs = args[M.N_BLOCK_PARAMS]
+            dy = args[M.N_BLOCK_PARAMS + 1]
+            dx, dps = M.block_bwd(params, xs, dy, cfg.n_heads)
+            return (dx, *dps)
+
+        defs[f"block{nl}_bwd"] = (
+            bbwd,
+            bp
+            + [("xs", (nl, b, s, d), "f32"), ("dy", (b, s, d), "f32")],
+            [("dx", (b, s, d), "f32")]
+            + [(f"d_{n}", sh, "f32") for n, sh in M.block_param_specs(cfg, nl)],
+        )
+
+    # --- head ---
+    h_params = [(n, sh, "f32") for n, sh in M.head_param_specs(cfg)]
+    defs["head_fwd_bwd"] = (
+        M.head_fwd_bwd,
+        h_params + [act, tgt],
+        [("loss", (), "f32"), ("dx", (b, s, d), "f32")]
+        + [(f"d_{n}", sh, "f32") for n, sh in M.head_param_specs(cfg)],
+    )
+    defs["head_fwd"] = (
+        M.head_fwd,
+        h_params + [act, tgt],
+        [("loss", (), "f32")],
+    )
+
+    # --- monolith oracle ---
+    mono_in = (
+        e_params
+        + [(n, sh, "f32") for n, sh in M.block_param_specs(cfg, cfg.n_layers)]
+        + h_params
+        + [tok, tgt]
+    )
+    n_param_args = len(mono_in) - 2
+    defs["monolith_grad"] = (
+        M.monolith_grad_fn(cfg),
+        mono_in,
+        [("loss", (), "f32")]
+        + [(f"d_{n}", sh, "f32") for n, sh, _ in mono_in[:n_param_args]],
+    )
+
+    def mono_loss(*args):
+        return (M.monolith_loss_fn(cfg)(*args),)
+
+    defs["monolith_loss"] = (mono_loss, mono_in, [("loss", (), "f32")])
+    return defs
+
+
+def lower_all(cfg: M.ModelConfig, out_dir: str, only=None, verbose=True):
+    os.makedirs(out_dir, exist_ok=True)
+    defs = build_artifact_defs(cfg)
+    manifest = {
+        "preset": cfg.name,
+        "config": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff,
+            "seq": cfg.seq,
+            "microbatch": cfg.microbatch,
+            "n_layers": cfg.n_layers,
+            "block_sizes": list(cfg.block_sizes),
+            "params_count": cfg.params_count(),
+        },
+        "artifacts": {},
+    }
+    for name, (fn, ins, outs) in defs.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        specs = [_spec(sh, dt) for _, sh, dt in ins]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as fh:
+            fh.write(text)
+        manifest["artifacts"][name] = {
+            "file": fname,
+            "inputs": [_io_entry(n, sh, dt) for n, sh, dt in ins],
+            "outputs": [_io_entry(n, sh, dt) for n, sh, dt in outs],
+        }
+        if verbose:
+            print(f"  lowered {name:<16} {len(text)/1e6:6.2f} MB  {time.time()-t0:5.1f}s")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=1)
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--preset", default="tiny", choices=sorted(M.PRESETS))
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="lower only these artifact names")
+    args = ap.parse_args()
+    cfg = M.PRESETS[args.preset]
+    out = os.path.join(args.out_dir, cfg.name)
+    print(f"AOT preset={cfg.name} params={cfg.params_count()/1e6:.1f}M -> {out}")
+    t0 = time.time()
+    lower_all(cfg, out, only=args.only)
+    print(f"done in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,161 @@
+"""L1 Pallas kernels: the transformer MLP hot-spot.
+
+The paper's compute hot path on each pipeline stage is the transformer
+block, whose FLOPs are dominated by the MLP GEMMs (2/3 of per-layer FLOPs
+at short sequence lengths).  We implement ``gelu(x @ W1 + b1) @ W2 + b2``
+as a fused Pallas kernel with a hand-written ``custom_vjp`` whose backward
+pass is also built from Pallas matmul kernels, so both fwd and bwd lower
+into the stage HLO that the Rust runtime executes.
+
+Hardware adaptation (paper targets A100/H800/H20 CUDA; we target TPU
+semantics, executed under ``interpret=True`` on the CPU PJRT plugin):
+
+* CUDA threadblock tiling            -> ``BlockSpec`` grid over token rows.
+* SM shared-memory staging           -> VMEM-resident blocks. With the
+  default ``block_m = 128`` and the e2e config (D=768, F=3072, fp32) one
+  grid step holds  x(128x768) + w1(768x3072) + w2(3072x768) + h(128x3072)
+  + out(128x768) = ~21.4 MB... too large for a single 16 MB VMEM, so the
+  weights are streamed per grid step by the Pallas pipeline (index_map
+  keeps them constant, letting the compiler double-buffer activations
+  only).  See EXPERIMENTS.md "Perf/L1" for the footprint table.
+* Tensor-core WMMA                   -> MXU 128x128 systolic matmuls; block
+  shapes are multiples of 128 in the token dim and the full D/F in the
+  contraction dims (D,F are multiples of 128 in all presets).
+
+All kernels run with ``interpret=True``: real-TPU lowering emits a Mosaic
+custom-call the CPU plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Token-row block. Multiple of 128 keeps the MXU fully fed on real TPUs;
+# under interpret mode it just sets the grid granularity.
+DEFAULT_BLOCK_M = 128
+
+
+def _mlp_fwd_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref, pre_ref):
+    """One grid step: a block_m x D slab of tokens through the fused MLP.
+
+    Writes both the output and the pre-activation (saved for backward).
+    """
+    x = x_ref[...]
+    pre = x @ w1_ref[...] + b1_ref[...]
+    pre_ref[...] = pre
+    h = ref.gelu(pre)
+    o_ref[...] = h @ w2_ref[...] + b2_ref[...]
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = a_ref[...] @ b_ref[...]
+
+
+def matmul(a, b, *, block_m: int = DEFAULT_BLOCK_M):
+    """Pallas matmul tiled over rows of ``a``; used by the MLP backward."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    if m % block_m != 0:  # tiny shapes: single-block fallback
+        block_m = m
+    grid = (m // block_m,)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=True,
+    )(a, b)
+
+
+def _mlp_fwd_pallas(x, w1, b1, w2, b2, *, block_m: int):
+    t, d = x.shape
+    f = w1.shape[1]
+    if t % block_m != 0:
+        block_m = t
+    grid = (t // block_m,)
+    out, pre = pl.pallas_call(
+        _mlp_fwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, f), lambda i: (0, 0)),   # weights: constant index map
+            pl.BlockSpec((f,), lambda i: (0,)),
+            pl.BlockSpec((f, d), lambda i: (0, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_m, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_m, f), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, d), x.dtype),
+            jax.ShapeDtypeStruct((t, f), x.dtype),
+        ],
+        interpret=True,
+    )(x, w1, b1, w2, b2)
+    return out, pre
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def fused_mlp(x, w1, b1, w2, b2):
+    """Fused transformer MLP ``gelu(x @ w1 + b1) @ w2 + b2`` (Pallas).
+
+    x: [T, D] flattened tokens; returns [T, D].
+    Differentiable: backward is hand-derived and also uses Pallas matmuls.
+    """
+    out, _ = _mlp_fwd_pallas(x, w1, b1, w2, b2, block_m=DEFAULT_BLOCK_M)
+    return out
+
+
+def _fused_mlp_fwd(x, w1, b1, w2, b2):
+    out, pre = _mlp_fwd_pallas(x, w1, b1, w2, b2, block_m=DEFAULT_BLOCK_M)
+    # Residuals: keep x and pre; h = gelu(pre) is recomputed in bwd
+    # (cheaper to recompute than to spill another [T, F] block to HBM).
+    return out, (x, w1, w2, pre)
+
+
+def _fused_mlp_bwd(res, dy):
+    x, w1, w2, pre = res
+    h = ref.gelu(pre)
+    dh = matmul(dy, w2.T)
+    dpre = dh * ref.gelu_grad(pre)
+    dx = matmul(dpre, w1.T)
+    dw1 = matmul(x.T, dpre)
+    db1 = dpre.sum(axis=0)
+    dw2 = matmul(h.T, dy)
+    db2 = dy.sum(axis=0)
+    return dx, dw1, db1, dw2, db2
+
+
+fused_mlp.defvjp(_fused_mlp_fwd, _fused_mlp_bwd)
+
+
+def vmem_footprint_bytes(block_m: int, d: int, f: int, dtype_bytes: int = 4) -> dict:
+    """Static VMEM footprint estimate for one fwd grid step (see DESIGN.md
+    section Hardware-Adaptation).  Used by the perf notes and tests."""
+    x = block_m * d
+    w1 = d * f
+    b1 = f
+    w2 = f * d
+    b2 = d
+    pre = block_m * f
+    out = block_m * d
+    total = (x + w1 + b1 + w2 + b2 + pre + out) * dtype_bytes
+    return {
+        "x": x * dtype_bytes,
+        "w1": w1 * dtype_bytes,
+        "w2": w2 * dtype_bytes,
+        "pre": pre * dtype_bytes,
+        "out": out * dtype_bytes,
+        "total": total,
+        "fits_16mb_vmem": total <= 16 * 1024 * 1024,
+    }

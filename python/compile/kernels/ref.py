@@ -1,0 +1,51 @@
+"""Pure-jnp reference oracle for the Pallas kernels.
+
+Everything in this file is the *specification*: the Pallas kernels in
+``fused_mlp.py`` must match these functions bit-for-bit-ish (allclose with
+fp32 tolerances). The oracle is also used by the pytest suite to check the
+stage graphs in ``model.py`` against an independently composed monolith.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def gelu(x):
+    """tanh-approximated GELU (the variant used by GPT-2/Megatron)."""
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608028654 * (x + 0.044715 * x**3)))
+
+
+def gelu_grad(x):
+    """d gelu(x) / dx for the tanh approximation."""
+    c = 0.7978845608028654
+    t = jnp.tanh(c * (x + 0.044715 * x**3))
+    dt = (1.0 - t * t) * c * (1.0 + 3 * 0.044715 * x * x)
+    return 0.5 * (1.0 + t) + 0.5 * x * dt
+
+
+def mlp_ref(x, w1, b1, w2, b2):
+    """Reference fused MLP: ``gelu(x @ w1 + b1) @ w2 + b2``.
+
+    x: [T, D], w1: [D, F], b1: [F], w2: [F, D], b2: [D] -> [T, D]
+    """
+    pre = x @ w1 + b1
+    h = gelu(pre)
+    return h @ w2 + b2
+
+
+def mlp_ref_vjp(x, w1, b1, w2, b2, dy):
+    """Hand-derived VJP of ``mlp_ref`` (what the Pallas backward computes)."""
+    pre = x @ w1 + b1
+    h = gelu(pre)
+    dh = dy @ w2.T
+    dpre = dh * gelu_grad(pre)
+    dx = dpre @ w1.T
+    dw1 = x.T @ dpre
+    db1 = dpre.sum(axis=0)
+    dw2 = h.T @ dy
+    db2 = dy.sum(axis=0)
+    return dx, dw1, db1, dw2, db2
+
+
+def matmul_ref(a, b):
+    return a @ b

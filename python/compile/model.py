@@ -1,0 +1,297 @@
+"""L2: JAX transformer stage graphs (build-time only; never on the hot path).
+
+The Rust pipeline executor composes a PP stage of ``n`` layers out of
+AOT-compiled *blocks* of 2^i layers (binary decomposition, mirroring the
+paper's profiling-acceleration trick in section III-D).  This module defines:
+
+* ``embed_fwd`` / ``embed_bwd``       — first-stage token+position embedding
+* ``block_fwd`` / ``block_bwd``       — a scan over ``L`` stacked transformer
+  layers; backward rematerializes layer internals from the saved layer
+  *inputs* (Megatron-style activation recomputation), so the stash is one
+  [L, B, S, D] tensor instead of every intermediate
+* ``head_fwd_bwd`` / ``head_fwd``     — last-stage LN + LM head +
+  cross-entropy, fused fwd+bwd because 1F1B always runs them back-to-back
+* ``monolith_grad`` / ``monolith_loss`` — the whole model in one graph; the
+  gradient oracle for pipeline-vs-monolith equality tests and the single
+  device roofline
+
+Each transformer layer is pre-LN: ``x + Attn(LN(x))`` then
+``h + MLP(LN(h))`` where MLP is the L1 Pallas kernel (``fused_mlp``).
+
+Parameter layout (what the Rust side must feed, in this exact order):
+
+* embed:  tok_emb [V, D], pos_emb [S, D]
+* block:  12 arrays stacked on a leading layer axis — see ``BLOCK_PARAM_SPECS``
+* head:   lnf_g [D], lnf_b [D], w_out [D, V]
+"""
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import fused_mlp as kmlp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Transformer dimensions baked into one artifact set."""
+
+    name: str
+    vocab: int
+    d_model: int
+    n_heads: int
+    d_ff: int
+    seq: int
+    microbatch: int
+    n_layers: int          # total layers in the monolith oracle
+    block_sizes: Tuple[int, ...] = (1, 2, 4)
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    def params_count(self) -> int:
+        """Total parameter count (embeddings + layers + head)."""
+        per_layer = sum(_size(s) for _, s in block_param_specs(self, 1))
+        emb = self.vocab * self.d_model + self.seq * self.d_model
+        head = 2 * self.d_model + self.d_model * self.vocab
+        return emb + per_layer * self.n_layers + head
+
+
+PRESETS = {
+    # Smoke/CI scale: everything compiles + runs in seconds.
+    "tiny": ModelConfig(
+        name="tiny", vocab=512, d_model=128, n_heads=4, d_ff=512,
+        seq=32, microbatch=2, n_layers=4,
+    ),
+    # Mid scale for quicker end-to-end demos (~26M params).
+    "small": ModelConfig(
+        name="small", vocab=8192, d_model=512, n_heads=8, d_ff=2048,
+        seq=64, microbatch=1, n_layers=6, block_sizes=(1, 2, 4),
+    ),
+    # The e2e validation model: ~97M params at 12 layers.
+    "e2e100m": ModelConfig(
+        name="e2e100m", vocab=16384, d_model=768, n_heads=12, d_ff=3072,
+        seq=128, microbatch=1, n_layers=12, block_sizes=(1, 2, 4, 8),
+    ),
+}
+
+
+def _size(shape) -> int:
+    n = 1
+    for s in shape:
+        n *= s
+    return n
+
+
+# ----------------------------------------------------------------------------
+# Parameter specs
+# ----------------------------------------------------------------------------
+
+def embed_param_specs(cfg: ModelConfig):
+    return [
+        ("tok_emb", (cfg.vocab, cfg.d_model)),
+        ("pos_emb", (cfg.seq, cfg.d_model)),
+    ]
+
+
+def block_param_specs(cfg: ModelConfig, n_layers: int):
+    d, f = cfg.d_model, cfg.d_ff
+    return [
+        ("ln1_g", (n_layers, d)),
+        ("ln1_b", (n_layers, d)),
+        ("wqkv", (n_layers, d, 3 * d)),
+        ("bqkv", (n_layers, 3 * d)),
+        ("wo", (n_layers, d, d)),
+        ("bo", (n_layers, d)),
+        ("ln2_g", (n_layers, d)),
+        ("ln2_b", (n_layers, d)),
+        ("w1", (n_layers, d, f)),
+        ("b1", (n_layers, f)),
+        ("w2", (n_layers, f, d)),
+        ("b2", (n_layers, d)),
+    ]
+
+
+def head_param_specs(cfg: ModelConfig):
+    return [
+        ("lnf_g", (cfg.d_model,)),
+        ("lnf_b", (cfg.d_model,)),
+        ("w_out", (cfg.d_model, cfg.vocab)),
+    ]
+
+
+N_BLOCK_PARAMS = 12
+
+
+# ----------------------------------------------------------------------------
+# Core ops
+# ----------------------------------------------------------------------------
+
+def layer_norm(x, g, b, eps=1e-5):
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) * lax.rsqrt(var + eps) * g + b
+
+
+def attention(x, wqkv, bqkv, wo, bo, n_heads: int):
+    """Causal multi-head self-attention. x: [B, S, D]."""
+    bsz, s, d = x.shape
+    dh = d // n_heads
+    qkv = x @ wqkv + bqkv                                   # [B, S, 3D]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(t):  # [B, S, D] -> [B, H, S, dh]
+        return t.reshape(bsz, s, n_heads, dh).transpose(0, 2, 1, 3)
+
+    q, k, v = heads(q), heads(k), heads(v)
+    scores = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(jnp.float32(dh))
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    scores = jnp.where(mask, scores, jnp.float32(-1e9))
+    att = jax.nn.softmax(scores, axis=-1)
+    out = (att @ v).transpose(0, 2, 1, 3).reshape(bsz, s, d)
+    return out @ wo + bo
+
+
+def layer_fwd(p, x, n_heads: int):
+    """One pre-LN transformer layer. ``p`` is the 12-tuple (unstacked)."""
+    (ln1_g, ln1_b, wqkv, bqkv, wo, bo, ln2_g, ln2_b, w1, b1, w2, b2) = p
+    h = x + attention(layer_norm(x, ln1_g, ln1_b), wqkv, bqkv, wo, bo, n_heads)
+    bsz, s, d = h.shape
+    m_in = layer_norm(h, ln2_g, ln2_b).reshape(bsz * s, d)
+    m_out = kmlp.fused_mlp(m_in, w1, b1, w2, b2).reshape(bsz, s, d)
+    return h + m_out
+
+
+# ----------------------------------------------------------------------------
+# Stage graphs
+# ----------------------------------------------------------------------------
+
+def embed_fwd(tok_emb, pos_emb, tokens):
+    """tokens: [B, S] int32 -> activations [B, S, D]."""
+    return (tok_emb[tokens] + pos_emb[None, :, :],)
+
+
+def make_embed_bwd(cfg: ModelConfig):
+    """Gradient of ``embed_fwd`` wrt the embedding tables (scatter-add).
+
+    Needs the vocab size, which is not derivable from the args, hence the
+    config-closure form (build-time only — never at runtime)."""
+    def f(tokens, dx):
+        d_tok = jnp.zeros((cfg.vocab, cfg.d_model), dx.dtype).at[
+            tokens.reshape(-1)
+        ].add(dx.reshape(-1, cfg.d_model))
+        d_pos = dx.sum(axis=0)
+        return d_tok, d_pos
+
+    return f
+
+
+def block_fwd(params, x, n_heads: int):
+    """Scan ``L`` stacked layers forward.
+
+    Returns (y, xs) where xs[l] is the *input* to layer l — the only
+    activation stash needed because backward rematerializes.
+    """
+
+    def step(carry, p):
+        return layer_fwd(p, carry, n_heads), carry
+
+    y, xs = lax.scan(step, x, params)
+    return y, xs
+
+
+def block_bwd(params, xs, dy, n_heads: int):
+    """Reverse scan with per-layer recomputation.
+
+    Returns (dx, dparams) with dparams stacked in the original layer order
+    (``lax.scan(reverse=True)`` stores outputs at matching indices).
+    """
+
+    def step(dcarry, p_xi):
+        p, xi = p_xi
+        _, vjp_fn = jax.vjp(lambda pp, xx: layer_fwd(pp, xx, n_heads), p, xi)
+        dp, dx = vjp_fn(dcarry)
+        return dx, dp
+
+    dx, dps = lax.scan(step, dy, (params, xs), reverse=True)
+    return dx, dps
+
+
+def head_loss(lnf_g, lnf_b, w_out, x, targets):
+    """LN + LM head + mean token cross-entropy. targets: [B, S] int32."""
+    h = layer_norm(x, lnf_g, lnf_b)
+    logits = h @ w_out                                       # [B, S, V]
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return (logz - gold).mean()
+
+
+def head_fwd_bwd(lnf_g, lnf_b, w_out, x, targets):
+    """Fused last-stage fwd+bwd (1F1B runs them back-to-back)."""
+    loss, grads = jax.value_and_grad(head_loss, argnums=(0, 1, 2, 3))(
+        lnf_g, lnf_b, w_out, x, targets
+    )
+    dlnf_g, dlnf_b, dw_out, dx = grads
+    return loss, dx, dlnf_g, dlnf_b, dw_out
+
+
+def head_fwd(lnf_g, lnf_b, w_out, x, targets):
+    return (head_loss(lnf_g, lnf_b, w_out, x, targets),)
+
+
+# ----------------------------------------------------------------------------
+# Monolith oracle
+# ----------------------------------------------------------------------------
+
+def monolith_loss_fn(cfg: ModelConfig):
+    def f(tok_emb, pos_emb, *rest):
+        block_params = rest[:N_BLOCK_PARAMS]
+        lnf_g, lnf_b, w_out, tokens, targets = rest[N_BLOCK_PARAMS:]
+        (x,) = embed_fwd(tok_emb, pos_emb, tokens)
+        y, _ = block_fwd(tuple(block_params), x, cfg.n_heads)
+        return head_loss(lnf_g, lnf_b, w_out, y, targets)
+
+    return f
+
+
+def monolith_grad_fn(cfg: ModelConfig):
+    loss_fn = monolith_loss_fn(cfg)
+    n_param_args = 2 + N_BLOCK_PARAMS + 3
+
+    def f(*args):
+        loss, grads = jax.value_and_grad(loss_fn, argnums=tuple(range(n_param_args)))(
+            *args
+        )
+        return (loss, *grads)
+
+    return f
+
+
+# ----------------------------------------------------------------------------
+# Parameter initialization (used by pytest; Rust has its own PRNG init)
+# ----------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, n_layers: int, seed: int = 0):
+    """Gaussian init matching the Rust side's expectations (scale 0.02)."""
+    key = jax.random.PRNGKey(seed)
+    out = {}
+    specs = (
+        embed_param_specs(cfg)
+        + block_param_specs(cfg, n_layers)
+        + head_param_specs(cfg)
+    )
+    for name, shape in specs:
+        key, sub = jax.random.split(key)
+        if name.endswith(("_g",)):
+            out[name] = jnp.ones(shape, jnp.float32)
+        elif name.endswith(("_b", "bqkv", "bo", "b1", "b2")) or name in (
+            "bqkv", "bo", "b1", "b2",
+        ):
+            out[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            out[name] = 0.02 * jax.random.normal(sub, shape, jnp.float32)
+    return out

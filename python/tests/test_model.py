@@ -1,0 +1,151 @@
+"""L2 correctness: stage graphs compose to the monolith oracle.
+
+The pipeline identity the whole system rests on:
+
+    head_bwd -> blockN_bwd -> ... -> embed_bwd   over stage slices
+        ==  jax.grad(monolith_loss)
+
+If this holds, the Rust executor only has to chain artifacts faithfully.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+CFG = M.PRESETS["tiny"]
+RTOL, ATOL = 2e-4, 3e-4
+
+
+def _data(seed=0):
+    r = np.random.RandomState(seed)
+    tokens = jnp.asarray(r.randint(0, CFG.vocab, (CFG.microbatch, CFG.seq)), jnp.int32)
+    targets = jnp.asarray(r.randint(0, CFG.vocab, (CFG.microbatch, CFG.seq)), jnp.int32)
+    return tokens, targets
+
+
+def _block_tuple(p, n_layers):
+    return tuple(p[n] for n, _ in M.block_param_specs(CFG, n_layers))
+
+
+def _slice_block(bp, lo, hi):
+    return tuple(a[lo:hi] for a in bp)
+
+
+class TestStagePipelineEqualsMonolith:
+    @pytest.mark.parametrize("split", [(2, 2), (1, 3), (3, 1), (1, 1, 2)])
+    def test_grads_match(self, split):
+        """Run fwd through arbitrary stage splits, bwd back, compare every
+        gradient against the monolith's autodiff — the asymmetric-PP
+        correctness property (paper section II-C)."""
+        assert sum(split) == CFG.n_layers
+        p = M.init_params(CFG, CFG.n_layers, seed=3)
+        bp = _block_tuple(p, CFG.n_layers)
+        tokens, targets = _data(1)
+
+        # -- monolith oracle --
+        mono = M.monolith_grad_fn(CFG)
+        out = mono(p["tok_emb"], p["pos_emb"], *bp,
+                   p["lnf_g"], p["lnf_b"], p["w_out"], tokens, targets)
+        loss_ref, grads_ref = out[0], out[1:]
+
+        # -- staged execution --
+        (x,) = M.embed_fwd(p["tok_emb"], p["pos_emb"], tokens)
+        stashes, bounds = [], []
+        lo = 0
+        for n in split:
+            sl = _slice_block(bp, lo, lo + n)
+            x, xs = M.block_fwd(sl, x, CFG.n_heads)
+            stashes.append((sl, xs))
+            bounds.append((lo, lo + n))
+            lo += n
+
+        loss, dx, dlnf_g, dlnf_b, dw_out = M.head_fwd_bwd(
+            p["lnf_g"], p["lnf_b"], p["w_out"], x, targets
+        )
+        np.testing.assert_allclose(loss, loss_ref, rtol=1e-5, atol=1e-6)
+
+        dblocks = [None] * len(split)
+        for i in range(len(split) - 1, -1, -1):
+            sl, xs = stashes[i]
+            dx, dps = M.block_bwd(sl, xs, dx, CFG.n_heads)
+            dblocks[i] = dps
+
+        emb_bwd = M.make_embed_bwd(CFG)
+        d_tok, d_pos = emb_bwd(tokens, dx)
+
+        # embed grads
+        np.testing.assert_allclose(d_tok, grads_ref[0], rtol=RTOL, atol=ATOL)
+        np.testing.assert_allclose(d_pos, grads_ref[1], rtol=RTOL, atol=ATOL)
+        # block grads: concatenate stage slices back together
+        for k in range(M.N_BLOCK_PARAMS):
+            stitched = jnp.concatenate([dblocks[i][k] for i in range(len(split))])
+            np.testing.assert_allclose(
+                stitched, grads_ref[2 + k], rtol=RTOL, atol=ATOL,
+                err_msg=f"block param {k} ({M.block_param_specs(CFG,1)[k][0]})",
+            )
+        # head grads
+        np.testing.assert_allclose(dlnf_g, grads_ref[2 + M.N_BLOCK_PARAMS], rtol=RTOL, atol=ATOL)
+        np.testing.assert_allclose(dlnf_b, grads_ref[3 + M.N_BLOCK_PARAMS], rtol=RTOL, atol=ATOL)
+        np.testing.assert_allclose(dw_out, grads_ref[4 + M.N_BLOCK_PARAMS], rtol=RTOL, atol=ATOL)
+
+
+class TestShapes:
+    def test_block_fwd_shapes(self):
+        p = M.init_params(CFG, 2)
+        bp = _block_tuple(p, 2)
+        x = jnp.zeros((CFG.microbatch, CFG.seq, CFG.d_model))
+        y, xs = M.block_fwd(bp, x, CFG.n_heads)
+        assert y.shape == x.shape
+        assert xs.shape == (2, *x.shape)
+
+    def test_head_loss_positive_at_init(self):
+        p = M.init_params(CFG, 1)
+        tokens, targets = _data(5)
+        x = jnp.zeros((CFG.microbatch, CFG.seq, CFG.d_model))
+        loss = M.head_loss(p["lnf_g"], p["lnf_b"], p["w_out"], x, targets)
+        # ~uniform logits -> loss ~ log(vocab)
+        assert abs(float(loss) - np.log(CFG.vocab)) < 0.5
+
+    def test_params_count_tiny(self):
+        # 12*D^2*L dominates; sanity band.
+        n = CFG.params_count()
+        assert 0.5e6 < n < 2e6
+
+    def test_params_count_e2e_is_about_100m(self):
+        n = M.PRESETS["e2e100m"].params_count()
+        assert 90e6 < n < 120e6, n
+
+
+class TestLayerOps:
+    def test_layer_norm_normalizes(self):
+        r = np.random.RandomState(0)
+        x = jnp.asarray(r.randn(4, 8, 32).astype(np.float32) * 3 + 1)
+        y = M.layer_norm(x, jnp.ones(32), jnp.zeros(32))
+        np.testing.assert_allclose(np.mean(np.asarray(y), -1), 0, atol=1e-5)
+        np.testing.assert_allclose(np.std(np.asarray(y), -1), 1, atol=1e-2)
+
+    def test_attention_is_causal(self):
+        """Changing a future token must not affect earlier positions."""
+        p = M.init_params(CFG, 1)
+        r = np.random.RandomState(2)
+        x = jnp.asarray(r.randn(1, CFG.seq, CFG.d_model).astype(np.float32))
+        args = (p["wqkv"][0], p["bqkv"][0], p["wo"][0], p["bo"][0])
+        y1 = M.attention(x, *args, CFG.n_heads)
+        x2 = x.at[0, -1].add(10.0)
+        y2 = M.attention(x2, *args, CFG.n_heads)
+        np.testing.assert_allclose(y1[0, :-1], y2[0, :-1], rtol=1e-5, atol=1e-5)
+        assert not np.allclose(y1[0, -1], y2[0, -1])
+
+    def test_embed_bwd_scatter(self):
+        emb_bwd = M.make_embed_bwd(CFG)
+        tokens = jnp.zeros((CFG.microbatch, CFG.seq), jnp.int32)  # all token 0
+        dx = jnp.ones((CFG.microbatch, CFG.seq, CFG.d_model))
+        d_tok, d_pos = emb_bwd(tokens, dx)
+        np.testing.assert_allclose(
+            d_tok[0], CFG.microbatch * CFG.seq * np.ones(CFG.d_model)
+        )
+        np.testing.assert_allclose(d_tok[1:], 0)
+        np.testing.assert_allclose(d_pos, CFG.microbatch * np.ones_like(d_pos))

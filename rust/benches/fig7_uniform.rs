@@ -1,0 +1,71 @@
+//! Figure 7: end-to-end training throughput under a UNIFORM GPU
+//! distribution — BERT-Large and GPT-3 6.7B on H800+A100 and A100+H20,
+//! with 2/4/8 GPUs per node; AutoHet vs Megatron-LM vs Whale.
+//!
+//! Paper: AutoHet averages 1.38× over Megatron on BERT-Large and
+//! 1.53×/1.27× over Megatron/Whale on GPT-3.
+
+use autohet::baselines::{megatron::plan_megatron, whale::plan_whale};
+use autohet::cluster::{ClusterSpec, GpuKind};
+use autohet::modelcfg::ModelCfg;
+use autohet::planner::{auto_plan, PlanOptions};
+use autohet::profile::ProfileDb;
+use autohet::sim::simulate_plan;
+use autohet::util::bench::Table;
+use autohet::util::stats::geomean;
+
+fn main() {
+    let combos = [
+        (GpuKind::H800, GpuKind::A100),
+        (GpuKind::A100, GpuKind::H20),
+    ];
+    for model in [ModelCfg::bert_large(), ModelCfg::gpt3_6p7b()] {
+        let profile = ProfileDb::build(
+            &model,
+            &[GpuKind::A100, GpuKind::H800, GpuKind::H20],
+            &[1, 2, 4, 8],
+            1,
+        );
+        let mut t = Table::new(&[
+            "cluster", "megatron", "whale", "autohet", "vs-mega", "vs-whale", "plan",
+        ]);
+        let mut sp_mega = Vec::new();
+        let mut sp_whale = Vec::new();
+        for (ka, kb) in combos {
+            for per_node in [2usize, 4, 8] {
+                let cluster = ClusterSpec::from_counts(&[(per_node, ka), (per_node, kb)]);
+                let Ok(auto) = auto_plan(&cluster, &profile, &PlanOptions::default()) else {
+                    continue;
+                };
+                let ta = simulate_plan(&profile, &auto).tokens_per_s;
+                let tm = plan_megatron(&cluster, &profile)
+                    .map(|p| simulate_plan(&profile, &p).tokens_per_s);
+                let tw = plan_whale(&cluster, &profile)
+                    .map(|p| simulate_plan(&profile, &p).tokens_per_s);
+                let (tm, tw) = (tm.unwrap_or(f64::NAN), tw.unwrap_or(f64::NAN));
+                if tm.is_finite() {
+                    sp_mega.push(ta / tm);
+                }
+                if tw.is_finite() {
+                    sp_whale.push(ta / tw);
+                }
+                t.row(&[
+                    format!("{per_node}x{ka}+{per_node}x{kb}"),
+                    format!("{tm:.0}"),
+                    format!("{tw:.0}"),
+                    format!("{ta:.0}"),
+                    format!("{:.2}x", ta / tm),
+                    format!("{:.2}x", ta / tw),
+                    auto.summary(),
+                ]);
+            }
+        }
+        t.print(&format!("Fig 7: uniform distribution, {} (tokens/s)", model.name));
+        println!(
+            "average speedup (geomean): {:.2}x vs Megatron-LM, {:.2}x vs Whale (paper: {} )",
+            geomean(&sp_mega),
+            geomean(&sp_whale),
+            if model.name == "bert_large" { "1.38x vs Megatron" } else { "1.53x / 1.27x" }
+        );
+    }
+}

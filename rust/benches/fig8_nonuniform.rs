@@ -1,0 +1,90 @@
+//! Figure 8: end-to-end throughput under NON-UNIFORM GPU distributions —
+//! LLaMA 6.7B over H800+A100 and A100+H20 with skewed counts.
+//!
+//! Paper: up to 1.79×/1.51× (H800+A100) and 1.44×/1.16× (A100+H20)
+//! average speedups over Megatron-LM / Whale; the asymmetric structures
+//! (odd counts, unequal group depths) are where the baselines collapse
+//! into long pipelines.
+
+use autohet::baselines::{megatron::plan_megatron, whale::plan_whale};
+use autohet::cluster::{ClusterSpec, GpuKind};
+use autohet::modelcfg::ModelCfg;
+use autohet::planner::{auto_plan, PlanOptions};
+use autohet::profile::ProfileDb;
+use autohet::sim::simulate_plan;
+use autohet::util::bench::Table;
+use autohet::util::stats::geomean;
+
+fn main() {
+    let model = ModelCfg::llama_7b();
+    let profile = ProfileDb::build(
+        &model,
+        &[GpuKind::A100, GpuKind::H800, GpuKind::H20],
+        &[1, 2, 4, 8],
+        1,
+    );
+
+    let suites: [(&str, Vec<Vec<(usize, GpuKind)>>, &str); 2] = [
+        (
+            "H800+A100",
+            vec![
+                vec![(4, GpuKind::A100), (2, GpuKind::H800)],
+                vec![(5, GpuKind::A100), (3, GpuKind::H800)],
+                vec![(3, GpuKind::A100), (5, GpuKind::H800)],
+                vec![(6, GpuKind::A100), (2, GpuKind::H800)],
+            ],
+            "paper avg 1.79x / 1.51x",
+        ),
+        (
+            "A100+H20",
+            vec![
+                vec![(1, GpuKind::A100), (4, GpuKind::H20)],
+                vec![(2, GpuKind::A100), (6, GpuKind::H20)],
+                vec![(1, GpuKind::A100), (7, GpuKind::H20)],
+                vec![(3, GpuKind::A100), (5, GpuKind::H20)],
+            ],
+            "paper avg 1.44x / 1.16x",
+        ),
+    ];
+
+    for (name, clusters, paper) in suites {
+        let mut t = Table::new(&["cluster", "megatron", "whale", "autohet", "vs-mega", "vs-whale", "plan"]);
+        let mut sp_m = Vec::new();
+        let mut sp_w = Vec::new();
+        for counts in clusters {
+            let cluster = ClusterSpec::from_counts(&counts);
+            let label: Vec<String> = counts.iter().map(|(n, k)| format!("{n}x{k}")).collect();
+            let Ok(auto) = auto_plan(&cluster, &profile, &PlanOptions::default()) else {
+                continue;
+            };
+            let ta = simulate_plan(&profile, &auto).tokens_per_s;
+            let tm = plan_megatron(&cluster, &profile)
+                .map(|p| simulate_plan(&profile, &p).tokens_per_s)
+                .unwrap_or(f64::NAN);
+            let tw = plan_whale(&cluster, &profile)
+                .map(|p| simulate_plan(&profile, &p).tokens_per_s)
+                .unwrap_or(f64::NAN);
+            if tm.is_finite() {
+                sp_m.push(ta / tm);
+            }
+            if tw.is_finite() {
+                sp_w.push(ta / tw);
+            }
+            t.row(&[
+                label.join("+"),
+                format!("{tm:.0}"),
+                format!("{tw:.0}"),
+                format!("{ta:.0}"),
+                format!("{:.2}x", ta / tm),
+                format!("{:.2}x", ta / tw),
+                auto.summary(),
+            ]);
+        }
+        t.print(&format!("Fig 8: non-uniform, LLaMA-6.7B, {name} (tokens/s)"));
+        println!(
+            "average speedup (geomean): {:.2}x vs Megatron, {:.2}x vs Whale ({paper})",
+            geomean(&sp_m),
+            geomean(&sp_w)
+        );
+    }
+}

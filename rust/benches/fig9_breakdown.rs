@@ -1,0 +1,56 @@
+//! Figure 9: performance breakdown of AutoHet's modules on GPT-3 6.7B —
+//! basic pipeline parallelism, +device grouping, +node/stage mapping,
+//! +workload balancing (full AutoHet).
+//!
+//! Paper (4×A100+4×H800): grouping 1.11×, +mapping 1.16×, +balancing 1.79×.
+
+use autohet::baselines::ablation::{plan_basic_pp, plan_grouping_mapping, plan_grouping_only};
+use autohet::cluster::{ClusterSpec, GpuKind};
+use autohet::modelcfg::ModelCfg;
+use autohet::planner::{auto_plan, PlanOptions};
+use autohet::profile::ProfileDb;
+use autohet::sim::simulate_plan;
+use autohet::util::bench::Table;
+
+fn main() {
+    let model = ModelCfg::gpt3_6p7b();
+    let profile = ProfileDb::build(
+        &model,
+        &[GpuKind::A100, GpuKind::H800, GpuKind::H20],
+        &[1, 2, 4, 8],
+        1,
+    );
+    for (a, h) in [(4usize, 4usize), (8, 8)] {
+        let cluster = ClusterSpec::from_counts(&[(a, GpuKind::A100), (h, GpuKind::H800)]);
+        let tp = 1; // breakdown isolates the grouping/mapping/balancing modules
+        let base = plan_basic_pp(&cluster, &profile, tp).expect("basic pp");
+        let t0 = simulate_plan(&profile, &base).tokens_per_s;
+
+        let mut t = Table::new(&["configuration", "tokens/s", "gain-vs-baseline", "paper"]);
+        let mut row = |name: &str, tps: f64, paper: &str| {
+            t.row(&[
+                name.to_string(),
+                format!("{tps:.0}"),
+                format!("{:.2}x", tps / t0),
+                paper.to_string(),
+            ]);
+        };
+        row("basic pipeline parallelism", t0, "1.00x");
+        if let Some(p) = plan_grouping_only(&cluster, &profile, tp) {
+            row("+ device grouping", simulate_plan(&profile, &p).tokens_per_s, "1.11x");
+        }
+        if let Some(p) = plan_grouping_mapping(&cluster, &profile, tp) {
+            row("+ node & stage mapping", simulate_plan(&profile, &p).tokens_per_s, "1.16x");
+        }
+        if let Ok(p) = auto_plan(
+            &cluster,
+            &profile,
+            &PlanOptions { force_tp: Some(tp), ..Default::default() },
+        ) {
+            row("+ workload balancing (AutoHet)", simulate_plan(&profile, &p).tokens_per_s, "1.79x");
+        }
+        t.print(&format!(
+            "Fig 9: breakdown, GPT-3 6.7B on {a}xA100+{h}xH800 (cumulative modules)"
+        ));
+    }
+}

@@ -1,0 +1,108 @@
+//! L3 micro-benchmarks for the performance pass (EXPERIMENTS.md section Perf):
+//! solver, layer partition DP, 1F1B event sim, ring AllReduce, JSON, and
+//! (when artifacts exist) a real PJRT train step.
+
+use autohet::cluster::{ClusterSpec, GpuKind};
+use autohet::collective::ring_average;
+use autohet::modelcfg::ModelCfg;
+use autohet::planner::partition::{partition_layers, StageRes};
+use autohet::planner::solver::{solve, EntitySpec, GroupingProblem};
+use autohet::planner::{auto_plan, PlanOptions};
+use autohet::profile::ProfileDb;
+use autohet::sim::onef1b::{simulate, uniform};
+use autohet::util::bench::time_fn;
+use autohet::util::json::Json;
+
+fn main() {
+    let model = ModelCfg::gpt3_6p7b();
+    let profile = ProfileDb::build(
+        &model,
+        &[GpuKind::A100, GpuKind::H800, GpuKind::H20],
+        &[1, 2, 4, 8],
+        1,
+    );
+
+    // solver on the 24-GPU instance
+    let problem = GroupingProblem {
+        counts: [8, 8, 8],
+        entity: [
+            EntitySpec { power: 1.0, mem_gib: 80.0 },
+            EntitySpec { power: 2.0, mem_gib: 80.0 },
+            EntitySpec { power: 0.5, mem_gib: 100.0 },
+        ],
+        min_mem_gib: model.min_mem_bytes() / f64::powi(2.0, 30),
+        microbatches_total: 64,
+        deadline: None,
+    };
+    println!("{}", time_fn("solver/bnb 24 gpus", 1, 5, || {
+        std::hint::black_box(solve(&problem));
+    }).report());
+
+    // full Algorithm 1
+    let cluster = ClusterSpec::from_counts(&[(8, GpuKind::A100), (8, GpuKind::H800)]);
+    println!("{}", time_fn("auto_plan 16 gpus", 1, 5, || {
+        std::hint::black_box(auto_plan(&cluster, &profile, &PlanOptions::default()).ok());
+    }).report());
+
+    // Eq-4 partition DP
+    let stages: Vec<StageRes> = (0..8)
+        .map(|i| StageRes { kind: if i < 4 { GpuKind::A100 } else { GpuKind::H800 }, tp: 2 })
+        .collect();
+    println!("{}", time_fn("partition 8 stages x 32 layers", 2, 20, || {
+        std::hint::black_box(partition_layers(&stages, &profile));
+    }).report());
+
+    // 1F1B event sim
+    let timings = uniform(1e-3, 2e-3, 1e-5, 8);
+    println!("{}", time_fn("1f1b sim p=8 k=64", 2, 50, || {
+        std::hint::black_box(simulate(&timings, 64));
+    }).report());
+
+    // ring allreduce on a 100M-param-scale buffer
+    let mut a = vec![1.0f32; 25_000_000];
+    let mut b = vec![2.0f32; 25_000_000];
+    println!("{}", time_fn("ring_average 2x100MB", 1, 5, || {
+        ring_average(vec![&mut a, &mut b]);
+    }).report());
+
+    // json parse of a plan-sized document
+    let plan = auto_plan(&cluster, &profile, &PlanOptions::default()).unwrap();
+    let doc = plan.to_json().to_string_pretty();
+    println!("{}", time_fn(&format!("json parse {}B plan", doc.len()), 2, 50, || {
+        std::hint::black_box(Json::parse(&doc).unwrap());
+    }).report());
+
+    // real PJRT step if artifacts exist
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+    if dir.join("manifest.json").exists() {
+        use autohet::pipeline::{ExecTopology, PipelineTrainer};
+        use autohet::runtime::{Engine, HostTensor};
+        use autohet::train::{AdamConfig, MarkovCorpus};
+        let engine = Engine::load(&dir).unwrap();
+        let dims = engine.manifest.dims;
+        let topo = ExecTopology::from_layer_splits(&[vec![2, 2], vec![4]]);
+        let mut tr = PipelineTrainer::new(&engine, &topo, 2, AdamConfig::default(), 1).unwrap();
+        let mut corpus = MarkovCorpus::new(dims.vocab, 4, 1);
+        let mut mk = || -> Vec<Vec<(HostTensor, HostTensor)>> {
+            (0..2)
+                .map(|_| {
+                    (0..2)
+                        .map(|_| {
+                            let (t, g) = corpus.next_batch(dims.microbatch, dims.seq);
+                            (
+                                HostTensor::from_i32(&[dims.microbatch, dims.seq], t),
+                                HostTensor::from_i32(&[dims.microbatch, dims.seq], g),
+                            )
+                        })
+                        .collect()
+                })
+                .collect()
+        };
+        let batches = mk();
+        println!("{}", time_fn("real train step (tiny, dp2 asym, k=2)", 2, 10, || {
+            std::hint::black_box(tr.step(&batches).unwrap());
+        }).report());
+    } else {
+        println!("(skip real train-step bench: run `make artifacts`)");
+    }
+}

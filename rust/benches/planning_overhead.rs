@@ -1,0 +1,76 @@
+//! Section V-B table: planning + profiling overheads.
+//!
+//! Paper: SCIP planning times {1.23, 5.72, 16.96, 159.12} s at
+//! {16, 24, 32, 64} GPUs; profiling 11.9–15.4 min (Alpa: 240 min search,
+//! 209 min profiling). We time our branch-and-bound on the same instance
+//! sizes and report the emulated profiling sweep cost.
+
+use std::time::Instant;
+
+use autohet::cluster::{ClusterSpec, GpuKind};
+use autohet::modelcfg::ModelCfg;
+use autohet::planner::{auto_plan, PlanOptions};
+use autohet::profile::ProfileDb;
+use autohet::util::bench::Table;
+
+fn main() {
+    let model = ModelCfg::gpt3_6p7b();
+    let profile = ProfileDb::build(
+        &model,
+        &[GpuKind::A100, GpuKind::H800, GpuKind::H20],
+        &[1, 2, 4, 8],
+        1,
+    );
+
+    let clusters: [(usize, ClusterSpec); 4] = [
+        (16, ClusterSpec::from_counts(&[(8, GpuKind::A100), (8, GpuKind::H800)])),
+        (
+            24,
+            ClusterSpec::from_counts(&[
+                (8, GpuKind::A100),
+                (8, GpuKind::H800),
+                (8, GpuKind::H20),
+            ]),
+        ),
+        (
+            32,
+            ClusterSpec::from_counts(&[
+                (8, GpuKind::A100),
+                (8, GpuKind::H800),
+                (8, GpuKind::H20),
+                (8, GpuKind::A100),
+            ]),
+        ),
+        (
+            64,
+            ClusterSpec::from_counts(&[
+                (16, GpuKind::A100),
+                (16, GpuKind::H800),
+                (16, GpuKind::H20),
+                (16, GpuKind::A100),
+            ]),
+        ),
+    ];
+
+    let mut t = Table::new(&["gpus", "planning_s", "paper_scip_s", "plan"]);
+    let paper = [1.23, 5.72, 16.96, 159.12];
+    for ((n, cluster), paper_s) in clusters.into_iter().zip(paper) {
+        let t0 = Instant::now();
+        let plan = auto_plan(&cluster, &profile, &PlanOptions::default());
+        let dt = t0.elapsed().as_secs_f64();
+        t.row(&[
+            n.to_string(),
+            format!("{dt:.3}"),
+            format!("{paper_s:.2}"),
+            plan.map(|p| p.summary()).unwrap_or_else(|e| format!("infeasible: {e}")),
+        ]);
+    }
+    t.print("Planning overhead vs cluster size (paper section V-B; ours = custom B&B, paper = SCIP)");
+
+    println!(
+        "\nProfiling sweep (emulated measurement cost): {:.1} min over {} points \
+         (paper: 11.9-15.4 min; Alpa ~209 min)",
+        profile.profiling_cost_s() / 60.0,
+        profile.points()
+    );
+}

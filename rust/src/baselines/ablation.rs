@@ -1,0 +1,195 @@
+//! Ablation planners for the Fig-9 breakdown: AutoHet with its modules
+//! progressively enabled, against a "basic pipeline parallelism" floor.
+//!
+//! * [`plan_basic_pp`] — one pipeline over all TP entities in node order,
+//!   uniform layers (the paper's breakdown baseline).
+//! * [`plan_grouping_only`] — Eq-3 device grouping, but naive node-order
+//!   stage mapping and uniform layer split.
+//! * [`plan_grouping_mapping`] — + the §III-C node/stage mapping.
+//! * full AutoHet (grouping + mapping + Eq-4 balancing) is
+//!   [`crate::planner::auto_plan`].
+
+use crate::cluster::{ClusterSpec, GpuKind, GpuRef};
+use crate::planner::grouping::group_devices;
+use crate::planner::mapping::map_nodes_and_stages;
+use crate::planner::types::{DpGroupPlan, ParallelPlan, StagePlan};
+use crate::profile::ProfileDb;
+
+use super::megatron::uniform_layers;
+
+fn entities(cluster: &ClusterSpec, tp: usize) -> Vec<(Vec<GpuRef>, GpuKind)> {
+    let mut out = Vec::new();
+    for n in &cluster.nodes {
+        for e in 0..n.count / tp {
+            out.push((
+                (0..tp)
+                    .map(|i| GpuRef { node: n.node_id, local: e * tp + i })
+                    .collect(),
+                n.kind,
+            ));
+        }
+    }
+    out
+}
+
+fn fill_uniform_layers(groups: &mut [DpGroupPlan], n_layers: usize) {
+    for g in groups.iter_mut() {
+        let layers = uniform_layers(n_layers, g.stages.len());
+        let mut lo = 0;
+        for (s, &l) in g.stages.iter_mut().zip(&layers) {
+            s.layer_lo = lo;
+            s.layer_hi = lo + l;
+            lo += l;
+        }
+    }
+}
+
+/// Basic PP: a single pipeline over every entity, node order, uniform split.
+pub fn plan_basic_pp(cluster: &ClusterSpec, profile: &ProfileDb, tp: usize) -> Option<ParallelPlan> {
+    let model = &profile.model;
+    let ents = entities(cluster, tp);
+    if ents.is_empty() || ents.len() > model.n_layers {
+        return None;
+    }
+    let pp = ents.len();
+    let stages: Vec<StagePlan> = ents
+        .into_iter()
+        .enumerate()
+        .map(|(si, (gpus, kind))| StagePlan {
+            gpus,
+            kind,
+            layer_lo: 0,
+            layer_hi: 0,
+            has_embed: si == 0,
+            has_head: si == pp - 1,
+        })
+        .collect();
+    let mut groups = vec![DpGroupPlan { stages, microbatches: model.microbatches() }];
+    fill_uniform_layers(&mut groups, model.n_layers);
+    let mut plan = ParallelPlan {
+        model_name: model.name.clone(),
+        tp_dim: tp,
+        groups,
+        est_iter_s: 0.0,
+        planning_s: 0.0,
+    };
+    plan.validate(model.n_layers).ok()?;
+    Some(plan)
+}
+
+/// Device grouping enabled; mapping naive (node order); layers uniform.
+pub fn plan_grouping_only(
+    cluster: &ClusterSpec,
+    profile: &ProfileDb,
+    tp: usize,
+) -> Option<ParallelPlan> {
+    let model = &profile.model;
+    let grouping = group_devices(cluster, model, profile, tp, None)?;
+    let mut ents = entities(cluster, tp);
+    // naive: consume entities in node order per group, ignoring placement
+    let mut groups = Vec::new();
+    for comp in &grouping.compositions {
+        let mut need = *comp;
+        let mut stages = Vec::new();
+        let mut i = 0;
+        while i < ents.len() {
+            let k = ents[i].1.index();
+            if need[k] > 0 {
+                need[k] -= 1;
+                let (gpus, kind) = ents.remove(i);
+                stages.push(StagePlan {
+                    gpus,
+                    kind,
+                    layer_lo: 0,
+                    layer_hi: 0,
+                    has_embed: false,
+                    has_head: false,
+                });
+            } else {
+                i += 1;
+            }
+        }
+        if stages.is_empty() || stages.len() > model.n_layers {
+            return None;
+        }
+        let n = stages.len();
+        stages[0].has_embed = true;
+        stages[n - 1].has_head = true;
+        groups.push(DpGroupPlan { stages, microbatches: grouping.k_per_group });
+    }
+    fill_uniform_layers(&mut groups, model.n_layers);
+    let mut plan = ParallelPlan {
+        model_name: model.name.clone(),
+        tp_dim: tp,
+        groups,
+        est_iter_s: 0.0,
+        planning_s: 0.0,
+    };
+    plan.validate(model.n_layers).ok()?;
+    Some(plan)
+}
+
+/// Grouping + §III-C mapping; layers still uniform.
+pub fn plan_grouping_mapping(
+    cluster: &ClusterSpec,
+    profile: &ProfileDb,
+    tp: usize,
+) -> Option<ParallelPlan> {
+    let model = &profile.model;
+    let grouping = group_devices(cluster, model, profile, tp, None)?;
+    let mut groups = map_nodes_and_stages(cluster, &grouping);
+    if groups.iter().any(|g| g.stages.len() > model.n_layers) {
+        return None;
+    }
+    fill_uniform_layers(&mut groups, model.n_layers);
+    let mut plan = ParallelPlan {
+        model_name: model.name.clone(),
+        tp_dim: tp,
+        groups,
+        est_iter_s: 0.0,
+        planning_s: 0.0,
+    };
+    plan.validate(model.n_layers).ok()?;
+    Some(plan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::modelcfg::ModelCfg;
+    use crate::planner::{auto_plan, PlanOptions};
+    use crate::sim::simulate_plan;
+
+    fn profile(model: &ModelCfg) -> ProfileDb {
+        ProfileDb::build(model, &[GpuKind::A100, GpuKind::H800, GpuKind::H20], &[1, 2, 4, 8], 1)
+    }
+
+    #[test]
+    fn each_module_adds_throughput() {
+        // The Fig-9 monotonicity: basic PP ≤ +grouping ≤ +mapping ≤ full.
+        let model = ModelCfg::gpt3_6p7b();
+        let p = profile(&model);
+        let cluster = ClusterSpec::from_counts(&[(4, GpuKind::A100), (4, GpuKind::H800)]);
+        let tp = 1;
+        let t0 = simulate_plan(&p, &plan_basic_pp(&cluster, &p, tp).unwrap()).tokens_per_s;
+        let t1 = simulate_plan(&p, &plan_grouping_only(&cluster, &p, tp).unwrap()).tokens_per_s;
+        let t2 = simulate_plan(&p, &plan_grouping_mapping(&cluster, &p, tp).unwrap()).tokens_per_s;
+        let full = auto_plan(&cluster, &p, &PlanOptions { force_tp: Some(tp), ..Default::default() })
+            .unwrap();
+        let t3 = simulate_plan(&p, &full).tokens_per_s;
+        assert!(t1 >= t0 * 0.98, "grouping {t1} vs basic {t0}");
+        assert!(t2 >= t1 * 0.98, "mapping {t2} vs grouping {t1}");
+        assert!(t3 > t2, "balance {t3} vs mapping {t2}");
+        assert!(t3 > t0 * 1.3, "full {t3} should clearly beat basic {t0}");
+    }
+
+    #[test]
+    fn basic_pp_has_single_group() {
+        let model = ModelCfg::gpt3_6p7b();
+        let p = profile(&model);
+        let cluster = ClusterSpec::from_counts(&[(4, GpuKind::A100), (4, GpuKind::H800)]);
+        let plan = plan_basic_pp(&cluster, &p, 1).unwrap();
+        assert_eq!(plan.dp_degree(), 1);
+        assert_eq!(plan.groups[0].pp_depth(), 8);
+    }
+}

@@ -1,0 +1,19 @@
+//! Baseline systems re-implemented against the same cost model and
+//! simulator so the figure benches compare *plans*, not implementations:
+//!
+//! * [`megatron`] — Megatron-LM: symmetric 3D parallelism, uniform layer
+//!   split, GPUs taken in sequential node order (heterogeneity-blind).
+//! * [`whale`] — Whale (ATC'22): same symmetric structures plus its
+//!   hardware-aware *Intra-TaskGraph load balance* (per-replica batch
+//!   sizes proportional to device power).
+//! * [`varuna`] — Varuna (EuroSys'22): spot-instance recovery that always
+//!   fetches checkpoints from cloud storage (hierarchical but
+//!   cloud-anchored) — the Fig-10 comparison.
+//! * [`ablation`] — AutoHet with modules progressively enabled
+//!   (device grouping → +node/stage mapping → +workload balancing), the
+//!   Fig-9 breakdown.
+
+pub mod ablation;
+pub mod megatron;
+pub mod varuna;
+pub mod whale;

@@ -1,0 +1,57 @@
+//! Varuna recovery baseline (EuroSys'22).
+//!
+//! Varuna checkpoints hierarchically but anchors recovery on cloud
+//! storage: after a preemption changes the parallel configuration, the
+//! surviving nodes pause training and download the checkpoint from the
+//! cloud before resuming. The cloud link is shared, so the download
+//! serializes at `cloud_gbs` regardless of how many nodes pull
+//! (paper §V-C: 1200 MB/s). Tensor-parallel re-sharding is unsupported —
+//! the comparison in Fig 10 is against its checkpoint *fetching* only.
+
+use crate::cluster::gpu::Interconnect;
+use crate::modelcfg::ModelCfg;
+
+/// Fixed pause/restart overhead (process respawn, NCCL re-init).
+pub const RESTART_OVERHEAD_S: f64 = 6.0;
+
+/// Varuna recovery time: the new configuration's nodes download the full
+/// model+optimizer checkpoint (every DP replica needs a copy, but the
+/// cloud link is the shared bottleneck so volume = one copy per *node
+/// group* pulling concurrently through the same front door).
+pub fn varuna_recovery_s(model: &ModelCfg, n_dp_groups: usize, ic: &Interconnect) -> f64 {
+    let bytes = model.ckpt_bytes_total() * n_dp_groups.max(1) as f64;
+    let download = bytes / (ic.cloud_gbs * 1e9);
+    // after download, states load from local disk into device memory
+    let load = model.ckpt_bytes_total() / (ic.nvme_gbs * 1e9);
+    download + load + RESTART_OVERHEAD_S
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recovery_scales_with_model_size() {
+        let ic = Interconnect::default();
+        let small = varuna_recovery_s(&ModelCfg::gpt3_3b(), 2, &ic);
+        let big = varuna_recovery_s(&ModelCfg::gpt3_13b(), 2, &ic);
+        assert!(big > 2.0 * small, "{small} vs {big}");
+    }
+
+    #[test]
+    fn recovery_scales_with_dp_groups() {
+        // the paper's scenario-C point: cloud retrieval degrades as DP
+        // group count (and thus downloaded volume) grows.
+        let ic = Interconnect::default();
+        let m = ModelCfg::gpt3_6p7b();
+        assert!(varuna_recovery_s(&m, 4, &ic) > 1.5 * varuna_recovery_s(&m, 2, &ic));
+    }
+
+    #[test]
+    fn thirteen_b_takes_minutes() {
+        // 13B ≈ 180 GB at 1.2 GB/s ≈ 150 s per copy — minutes, not seconds.
+        let ic = Interconnect::default();
+        let t = varuna_recovery_s(&ModelCfg::gpt3_13b(), 1, &ic);
+        assert!(t > 120.0 && t < 400.0, "{t}");
+    }
+}

@@ -1,0 +1,138 @@
+//! Whale baseline (ATC'22): symmetric structures + hardware-aware
+//! *Intra-TaskGraph load balance* — each DP replica's share of the global
+//! batch is proportional to its aggregate device power, which fixes the
+//! pure-DP straggler problem Megatron has on heterogeneous GPUs, but the
+//! *structure* (stage counts, uniform layer split) stays symmetric.
+
+use crate::cluster::ClusterSpec;
+use crate::planner::types::ParallelPlan;
+use crate::profile::ProfileDb;
+use crate::sim::simulate_plan;
+
+use super::megatron::symmetric_plan;
+
+/// Re-apportion microbatches across groups proportionally to raw power
+/// (largest-remainder method, every group keeps ≥1).
+pub fn rebalance_microbatches(plan: &mut ParallelPlan, total_microbatches: usize) {
+    let powers: Vec<f64> = plan.groups.iter().map(|g| g.raw_power()).collect();
+    let total_p: f64 = powers.iter().sum();
+    if total_p <= 0.0 {
+        return;
+    }
+    let n = plan.groups.len();
+    let mut shares: Vec<(usize, f64)> = powers
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let exact = total_microbatches as f64 * p / total_p;
+            (i, exact)
+        })
+        .collect();
+    let mut assigned: Vec<usize> = shares.iter().map(|&(_, e)| (e.floor() as usize).max(1)).collect();
+    let mut used: usize = assigned.iter().sum();
+    // distribute leftovers by largest fractional remainder
+    shares.sort_by(|a, b| {
+        (b.1 - b.1.floor()).partial_cmp(&(a.1 - a.1.floor())).unwrap()
+    });
+    let mut i = 0;
+    while used < total_microbatches && n > 0 {
+        let gi = shares[i % n].0;
+        assigned[gi] += 1;
+        used += 1;
+        i += 1;
+    }
+    while used > total_microbatches {
+        // claw back from the most-loaded group (keep ≥1)
+        let gi = (0..n).max_by_key(|&g| assigned[g]).unwrap();
+        if assigned[gi] <= 1 {
+            break;
+        }
+        assigned[gi] -= 1;
+        used -= 1;
+    }
+    for (g, k) in plan.groups.iter_mut().zip(assigned) {
+        g.microbatches = k;
+    }
+}
+
+/// Best Whale configuration by simulated throughput.
+pub fn plan_whale(cluster: &ClusterSpec, profile: &ProfileDb) -> Option<ParallelPlan> {
+    let model = &profile.model;
+    let mut best: Option<(f64, ParallelPlan)> = None;
+    for tp in cluster.valid_tp_dims() {
+        let max_pp = cluster.total_gpus() / tp;
+        for pp in 1..=max_pp {
+            if let Some(mut plan) = symmetric_plan(cluster, profile, tp, pp) {
+                rebalance_microbatches(&mut plan, model.microbatches());
+                let stats = simulate_plan(profile, &plan);
+                if best
+                    .as_ref()
+                    .map(|(t, _)| stats.tokens_per_s > *t)
+                    .unwrap_or(true)
+                {
+                    best = Some((stats.tokens_per_s, plan));
+                }
+            }
+        }
+    }
+    best.map(|(_, p)| p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::GpuKind;
+    use crate::modelcfg::ModelCfg;
+    use crate::baselines::megatron::plan_megatron;
+
+    fn profile(model: &ModelCfg) -> ProfileDb {
+        ProfileDb::build(model, &[GpuKind::A100, GpuKind::H800, GpuKind::H20], &[1, 2, 4, 8], 1)
+    }
+
+    #[test]
+    fn rebalance_gives_strong_groups_more_batches() {
+        let model = ModelCfg::bert_large();
+        let p = profile(&model);
+        let cluster = ClusterSpec::from_counts(&[(2, GpuKind::A100), (2, GpuKind::H800)]);
+        let mut plan = symmetric_plan(&cluster, &p, 1, 1).unwrap();
+        rebalance_microbatches(&mut plan, model.microbatches());
+        // H800 replicas should get ~2× the A100 replicas' microbatches
+        let (mut a100_k, mut h800_k) = (0, 0);
+        for g in &plan.groups {
+            match g.stages[0].kind {
+                GpuKind::A100 => a100_k = g.microbatches,
+                GpuKind::H800 => h800_k = g.microbatches,
+                _ => {}
+            }
+        }
+        assert!(h800_k > a100_k, "{h800_k} vs {a100_k}");
+        let total: usize = plan.groups.iter().map(|g| g.microbatches).sum();
+        assert_eq!(total, model.microbatches());
+    }
+
+    #[test]
+    fn whale_beats_megatron_on_hetero_dp() {
+        // the paper's BERT finding: Whale's batch rebalancing fixes the
+        // straggler, beating Megatron's uniform DP.
+        let model = ModelCfg::bert_large();
+        let p = profile(&model);
+        let cluster = ClusterSpec::from_counts(&[(4, GpuKind::A100), (4, GpuKind::H800)]);
+        let mega = plan_megatron(&cluster, &p).unwrap();
+        let whale = plan_whale(&cluster, &p).unwrap();
+        let t_m = simulate_plan(&p, &mega).tokens_per_s;
+        let t_w = simulate_plan(&p, &whale).tokens_per_s;
+        assert!(t_w > t_m, "whale {t_w} vs megatron {t_m}");
+    }
+
+    #[test]
+    fn every_group_keeps_at_least_one_microbatch() {
+        let model = ModelCfg { global_batch: 4, ..ModelCfg::bert_large() };
+        let p = profile(&model);
+        let cluster = ClusterSpec::from_counts(&[(4, GpuKind::A100), (4, GpuKind::H800)]);
+        if let Some(plan) = plan_whale(&cluster, &p) {
+            for g in &plan.groups {
+                assert!(g.microbatches >= 1);
+            }
+        }
+    }
+}

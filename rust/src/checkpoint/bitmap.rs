@@ -1,0 +1,190 @@
+//! The layer bitmap (paper §IV-C): which (layer, TP shard) checkpoint is
+//! physically where, updated on every save and consulted on recovery to
+//! prioritize local retrieval.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// Checkpoint unit key: one layer's one TP shard at one step.
+/// `layer` uses `usize::MAX - 1` for the embedding pseudo-layer and
+/// `usize::MAX` for the head pseudo-layer (see [`CkptKey::embed`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct CkptKey {
+    pub layer: usize,
+    pub tp_shard: usize,
+    pub tp_dim: usize,
+}
+
+impl CkptKey {
+    pub const EMBED: usize = usize::MAX - 1;
+    pub const HEAD: usize = usize::MAX;
+
+    pub fn layer(layer: usize, tp_shard: usize, tp_dim: usize) -> CkptKey {
+        CkptKey { layer, tp_shard, tp_dim }
+    }
+    pub fn embed(tp_shard: usize, tp_dim: usize) -> CkptKey {
+        CkptKey { layer: Self::EMBED, tp_shard, tp_dim }
+    }
+    pub fn head(tp_shard: usize, tp_dim: usize) -> CkptKey {
+        CkptKey { layer: Self::HEAD, tp_shard, tp_dim }
+    }
+
+    /// Stable storage key, mirrors the paper's `<layer>_<tp shard>` naming.
+    pub fn storage_key(&self, step: u64) -> String {
+        let l = match self.layer {
+            Self::EMBED => "embed".to_string(),
+            Self::HEAD => "head".to_string(),
+            l => format!("L{l:04}"),
+        };
+        format!("step{step:08}/{l}_{}of{}", self.tp_shard, self.tp_dim)
+    }
+}
+
+/// Where a checkpoint unit lives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Location {
+    /// CPU memory of `node`.
+    Memory(usize),
+    /// Local SSD of `node`.
+    Disk(usize),
+    Cloud,
+}
+
+/// The bitmap: key -> all known locations.
+#[derive(Debug, Clone, Default)]
+pub struct LayerBitmap {
+    pub step: u64,
+    map: BTreeMap<CkptKey, Vec<Location>>,
+}
+
+impl LayerBitmap {
+    pub fn new(step: u64) -> LayerBitmap {
+        LayerBitmap { step, map: BTreeMap::new() }
+    }
+
+    pub fn record(&mut self, key: CkptKey, loc: Location) {
+        let v = self.map.entry(key).or_default();
+        if !v.contains(&loc) {
+            v.push(loc);
+        }
+    }
+
+    /// Best (cheapest) location honoring local-first: memory < disk < cloud;
+    /// prefer `node`'s own tiers, then any other node (RDMA), then cloud.
+    pub fn best_location(&self, key: &CkptKey, node: usize) -> Option<Location> {
+        let locs = self.map.get(key)?;
+        let rank = |l: &Location| match l {
+            Location::Memory(n) if *n == node => 0,
+            Location::Disk(n) if *n == node => 1,
+            Location::Memory(_) => 2, // peer node via RDMA
+            Location::Disk(_) => 3,
+            Location::Cloud => 4,
+        };
+        locs.iter().min_by_key(|l| rank(l)).copied()
+    }
+
+    pub fn locations(&self, key: &CkptKey) -> &[Location] {
+        self.map.get(key).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// Drop every record on `node` (that node was preempted).
+    pub fn drop_node(&mut self, node: usize) {
+        for locs in self.map.values_mut() {
+            locs.retain(|l| !matches!(l, Location::Memory(n) | Location::Disk(n) if *n == node));
+        }
+    }
+
+    /// Drop volatile (memory) records for a node whose container restarted.
+    pub fn drop_node_memory(&mut self, node: usize) {
+        for locs in self.map.values_mut() {
+            locs.retain(|l| !matches!(l, Location::Memory(n) if *n == node));
+        }
+    }
+
+    /// Keys with no surviving non-cloud location.
+    pub fn cloud_only_keys(&self) -> Vec<CkptKey> {
+        self.map
+            .iter()
+            .filter(|(_, locs)| locs.iter().all(|l| matches!(l, Location::Cloud)))
+            .map(|(k, _)| *k)
+            .collect()
+    }
+
+    pub fn keys(&self) -> Vec<CkptKey> {
+        self.map.keys().copied().collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("step", Json::num(self.step as f64)),
+            (
+                "entries",
+                Json::Arr(
+                    self.map
+                        .iter()
+                        .map(|(k, locs)| {
+                            Json::obj(vec![
+                                ("key", Json::str(k.storage_key(self.step))),
+                                (
+                                    "locations",
+                                    Json::Arr(
+                                        locs.iter()
+                                            .map(|l| Json::str(format!("{l:?}")))
+                                            .collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn local_first_ordering() {
+        let mut bm = LayerBitmap::new(1);
+        let k = CkptKey::layer(0, 0, 1);
+        bm.record(k, Location::Cloud);
+        bm.record(k, Location::Disk(1));
+        bm.record(k, Location::Memory(0));
+        assert_eq!(bm.best_location(&k, 0), Some(Location::Memory(0)));
+        // node 2: peer memory via RDMA beats peer disk beats cloud
+        assert_eq!(bm.best_location(&k, 2), Some(Location::Memory(0)));
+        bm.drop_node_memory(0);
+        assert_eq!(bm.best_location(&k, 2), Some(Location::Disk(1)));
+    }
+
+    #[test]
+    fn drop_node_leaves_cloud() {
+        let mut bm = LayerBitmap::new(1);
+        let k = CkptKey::layer(3, 1, 2);
+        bm.record(k, Location::Disk(0));
+        bm.record(k, Location::Cloud);
+        bm.drop_node(0);
+        assert_eq!(bm.best_location(&k, 0), Some(Location::Cloud));
+        assert_eq!(bm.cloud_only_keys(), vec![k]);
+    }
+
+    #[test]
+    fn storage_keys_stable() {
+        assert_eq!(
+            CkptKey::layer(5, 1, 2).storage_key(7),
+            "step00000007/L0005_1of2"
+        );
+        assert_eq!(CkptKey::embed(0, 1).storage_key(7), "step00000007/embed_0of1");
+        assert_eq!(CkptKey::head(0, 1).storage_key(7), "step00000007/head_0of1");
+    }
+
+    #[test]
+    fn missing_key_none() {
+        let bm = LayerBitmap::new(0);
+        assert_eq!(bm.best_location(&CkptKey::layer(0, 0, 1), 0), None);
+    }
+}

@@ -1,0 +1,132 @@
+//! Binary tensor-bundle codec (the `torch.save` stand-in).
+//!
+//! Format: `AHCK` magic, u32 version, u32 tensor count, then per tensor:
+//! u32 name len + name bytes, u32 ndim + u64 dims, u8 dtype (0=f32,1=i32),
+//! payload little-endian. Self-describing and versioned so recovery can
+//! refuse incompatible files instead of mis-reading them.
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::runtime::tensor::{Data, HostTensor};
+
+const MAGIC: &[u8; 4] = b"AHCK";
+const VERSION: u32 = 1;
+
+pub fn encode(tensors: &[(String, &HostTensor)]) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+    for (name, t) in tensors {
+        out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+        out.extend_from_slice(name.as_bytes());
+        out.extend_from_slice(&(t.shape.len() as u32).to_le_bytes());
+        for &d in &t.shape {
+            out.extend_from_slice(&(d as u64).to_le_bytes());
+        }
+        match &t.data {
+            Data::F32(v) => {
+                out.push(0);
+                for x in v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            Data::I32(v) => {
+                out.push(1);
+                for x in v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+    }
+    out
+}
+
+pub fn decode(bytes: &[u8]) -> Result<Vec<(String, HostTensor)>> {
+    let mut p = 0usize;
+    let take = |p: &mut usize, n: usize| -> Result<&[u8]> {
+        ensure!(*p + n <= bytes.len(), "truncated checkpoint");
+        let s = &bytes[*p..*p + n];
+        *p += n;
+        Ok(s)
+    };
+    ensure!(take(&mut p, 4)? == MAGIC, "bad magic");
+    let ver = u32::from_le_bytes(take(&mut p, 4)?.try_into()?);
+    if ver != VERSION {
+        bail!("checkpoint version {ver} != {VERSION}");
+    }
+    let count = u32::from_le_bytes(take(&mut p, 4)?.try_into()?) as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let nlen = u32::from_le_bytes(take(&mut p, 4)?.try_into()?) as usize;
+        let name = String::from_utf8(take(&mut p, nlen)?.to_vec())
+            .map_err(|_| anyhow!("bad tensor name"))?;
+        let ndim = u32::from_le_bytes(take(&mut p, 4)?.try_into()?) as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(u64::from_le_bytes(take(&mut p, 8)?.try_into()?) as usize);
+        }
+        let n: usize = shape.iter().product();
+        let dtype = take(&mut p, 1)?[0];
+        let t = match dtype {
+            0 => {
+                let raw = take(&mut p, 4 * n)?;
+                let v = raw
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                HostTensor::from_f32(&shape, v)
+            }
+            1 => {
+                let raw = take(&mut p, 4 * n)?;
+                let v = raw
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                HostTensor::from_i32(&shape, v)
+            }
+            d => bail!("unknown dtype tag {d}"),
+        };
+        out.push((name, t));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_mixed_bundle() {
+        let a = HostTensor::from_f32(&[2, 3], vec![1.0, -2.0, 3.5, 0.0, 9.0, -1e-9]);
+        let b = HostTensor::from_i32(&[4], vec![1, -2, 3, 4]);
+        let bytes = encode(&[("w".into(), &a), ("toks".into(), &b)]);
+        let out = decode(&bytes).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].0, "w");
+        assert_eq!(out[0].1, a);
+        assert_eq!(out[1].1, b);
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let a = HostTensor::from_f32(&[2], vec![1.0, 2.0]);
+        let mut bytes = encode(&[("x".into(), &a)]);
+        assert!(decode(&bytes[..bytes.len() - 3]).is_err()); // truncated
+        bytes[0] = b'Z';
+        assert!(decode(&bytes).is_err()); // bad magic
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let a = HostTensor::from_f32(&[1], vec![1.0]);
+        let mut bytes = encode(&[("x".into(), &a)]);
+        bytes[4] = 99;
+        assert!(decode(&bytes).is_err());
+    }
+
+    #[test]
+    fn empty_bundle_ok() {
+        assert!(decode(&encode(&[])).unwrap().is_empty());
+    }
+}

@@ -1,0 +1,422 @@
+//! Checkpoint orchestration: layer-wise save of a training replica
+//! (params + Adam moments) into the tiered store, bitmap maintenance,
+//! and adaptive loading (local-first, reshard on TP change).
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::runtime::HostTensor;
+use crate::train::{Adam, ModelParams, BLOCK_PARAM_NAMES};
+
+use super::bitmap::{CkptKey, LayerBitmap, Location};
+use super::codec;
+use super::shard;
+use super::store::{StorageTier, TieredStore};
+
+/// Outcome of a save: bytes written per tier + simulated seconds.
+#[derive(Debug, Clone, Default)]
+pub struct SaveReport {
+    pub bytes_local: u64,
+    pub bytes_cloud: u64,
+    pub sim_local_s: f64,
+    pub sim_cloud_s: f64,
+    pub units: usize,
+}
+
+/// Outcome of a load: where the bytes came from + simulated seconds.
+#[derive(Debug, Clone, Default)]
+pub struct LoadReport {
+    pub bytes_memory: u64,
+    pub bytes_disk: u64,
+    pub bytes_rdma: u64,
+    pub bytes_cloud: u64,
+    pub sim_s: f64,
+    pub units: usize,
+}
+
+impl LoadReport {
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes_memory + self.bytes_disk + self.bytes_rdma + self.bytes_cloud
+    }
+}
+
+pub struct CheckpointManager {
+    pub store: TieredStore,
+    pub bitmap: LayerBitmap,
+}
+
+impl CheckpointManager {
+    pub fn new(root: &std::path::Path) -> Result<CheckpointManager> {
+        Ok(CheckpointManager { store: TieredStore::new(root)?, bitmap: LayerBitmap::new(0) })
+    }
+
+    /// Bundle one layer's tensors (unstacked) + optional Adam moments.
+    fn layer_bundle(
+        params: &ModelParams,
+        adam: Option<&Adam>,
+        layer: usize,
+    ) -> Result<Vec<(String, HostTensor)>> {
+        let mut out = Vec::new();
+        for (i, name) in BLOCK_PARAM_NAMES.iter().enumerate() {
+            let t = params.blocks[i].slice_axis0(layer, layer + 1)?;
+            out.push((name.to_string(), squeeze0(&t)));
+            if let Some(a) = adam {
+                out.push((
+                    format!("m.{name}"),
+                    squeeze0(&a.m.blocks[i].slice_axis0(layer, layer + 1)?),
+                ));
+                out.push((
+                    format!("v.{name}"),
+                    squeeze0(&a.v.blocks[i].slice_axis0(layer, layer + 1)?),
+                ));
+            }
+        }
+        Ok(out)
+    }
+
+    fn embed_bundle(params: &ModelParams, adam: Option<&Adam>) -> Vec<(String, HostTensor)> {
+        let mut out = vec![
+            ("tok_emb".to_string(), params.tok_emb.clone()),
+            ("pos_emb".to_string(), params.pos_emb.clone()),
+        ];
+        if let Some(a) = adam {
+            out.push(("m.tok_emb".into(), a.m.tok_emb.clone()));
+            out.push(("v.tok_emb".into(), a.v.tok_emb.clone()));
+            out.push(("m.pos_emb".into(), a.m.pos_emb.clone()));
+            out.push(("v.pos_emb".into(), a.v.pos_emb.clone()));
+        }
+        out
+    }
+
+    fn head_bundle(params: &ModelParams, adam: Option<&Adam>) -> Vec<(String, HostTensor)> {
+        let mut out = vec![
+            ("lnf_g".to_string(), params.lnf_g.clone()),
+            ("lnf_b".to_string(), params.lnf_b.clone()),
+            ("w_out".to_string(), params.w_out.clone()),
+        ];
+        if let Some(a) = adam {
+            out.push(("m.w_out".into(), a.m.w_out.clone()));
+            out.push(("v.w_out".into(), a.v.w_out.clone()));
+            out.push(("m.lnf_g".into(), a.m.lnf_g.clone()));
+            out.push(("v.lnf_g".into(), a.v.lnf_g.clone()));
+            out.push(("m.lnf_b".into(), a.m.lnf_b.clone()));
+            out.push(("v.lnf_b".into(), a.v.lnf_b.clone()));
+        }
+        out
+    }
+
+    fn put_unit(
+        &mut self,
+        key: CkptKey,
+        step: u64,
+        bytes: &[u8],
+        node: usize,
+        report: &mut SaveReport,
+    ) -> Result<()> {
+        let skey = key.storage_key(step);
+        // CPU memory (fast path), local SSD (persistent), cloud (replica)
+        self.store.put(StorageTier::CpuMemory, &skey, bytes)?;
+        let rl = self.store.put(StorageTier::LocalDisk, &skey, bytes)?;
+        let rc = self.store.put(StorageTier::Cloud, &skey, bytes)?;
+        self.bitmap.record(key, Location::Memory(node));
+        self.bitmap.record(key, Location::Disk(node));
+        self.bitmap.record(key, Location::Cloud);
+        report.bytes_local += rl.bytes;
+        report.bytes_cloud += rc.bytes;
+        report.sim_local_s += rl.sim_s;
+        report.sim_cloud_s += rc.sim_s;
+        report.units += 1;
+        Ok(())
+    }
+
+    /// Save a full replica layer-wise at TP dimension `tp_dim`.
+    /// `node_of_layer(layer)` maps each (pseudo-)layer to the node whose
+    /// local tiers receive it (`CkptKey::EMBED` / `CkptKey::HEAD` included).
+    pub fn save_full(
+        &mut self,
+        step: u64,
+        params: &ModelParams,
+        adam: Option<&Adam>,
+        tp_dim: usize,
+        node_of_layer: &dyn Fn(usize) -> usize,
+    ) -> Result<SaveReport> {
+        self.bitmap = LayerBitmap::new(step);
+        let n_layers = params.blocks[0].shape[0];
+        let mut report = SaveReport::default();
+        for layer in 0..n_layers {
+            let bundle = Self::layer_bundle(params, adam, layer)?;
+            for s in 0..tp_dim {
+                let sharded: Vec<(String, HostTensor)> = bundle
+                    .iter()
+                    .map(|(name, t)| {
+                        let base = name.rsplit('.').next().unwrap();
+                        Ok((name.clone(), shard::split_for_tp(base, t, tp_dim, s)?))
+                    })
+                    .collect::<Result<_>>()?;
+                let refs: Vec<(String, &HostTensor)> =
+                    sharded.iter().map(|(n, t)| (n.clone(), t)).collect();
+                let bytes = codec::encode(&refs);
+                self.put_unit(
+                    CkptKey::layer(layer, s, tp_dim),
+                    step,
+                    &bytes,
+                    node_of_layer(layer),
+                    &mut report,
+                )?;
+            }
+        }
+        // embed + head (replicated across TP in Megatron's layout)
+        for (key_fn, bundle) in [
+            (
+                CkptKey::embed(0, 1),
+                Self::embed_bundle(params, adam),
+            ),
+            (CkptKey::head(0, 1), Self::head_bundle(params, adam)),
+        ] {
+            let refs: Vec<(String, &HostTensor)> =
+                bundle.iter().map(|(n, t)| (n.clone(), t)).collect();
+            let bytes = codec::encode(&refs);
+            let node = node_of_layer(key_fn.layer);
+            self.put_unit(key_fn, step, &bytes, node, &mut report)?;
+        }
+        Ok(report)
+    }
+
+    /// Fetch one unit honoring local-first; charges RDMA when the best
+    /// copy lives on a peer node.
+    fn fetch(&mut self, key: &CkptKey, node: usize, report: &mut LoadReport) -> Result<Vec<u8>> {
+        let loc = self
+            .bitmap
+            .best_location(key, node)
+            .ok_or_else(|| anyhow!("no location for {key:?}"))?;
+        let skey = key.storage_key(self.bitmap.step);
+        let (bytes, receipt) = match loc {
+            Location::Memory(_) => self.store.get(StorageTier::CpuMemory, &skey)?,
+            Location::Disk(_) => self.store.get(StorageTier::LocalDisk, &skey)?,
+            Location::Cloud => self.store.get(StorageTier::Cloud, &skey)?,
+        };
+        match loc {
+            Location::Memory(n) | Location::Disk(n) if n != node => {
+                // peer fetch rides RDMA on top of the source medium
+                let rdma_s = bytes.len() as f64 / (self.store.ic.rdma_gbs * 1e9);
+                report.bytes_rdma += bytes.len() as u64;
+                report.sim_s += receipt.sim_s + rdma_s;
+            }
+            Location::Memory(_) => {
+                report.bytes_memory += bytes.len() as u64;
+                report.sim_s += receipt.sim_s;
+            }
+            Location::Disk(_) => {
+                report.bytes_disk += bytes.len() as u64;
+                report.sim_s += receipt.sim_s;
+            }
+            Location::Cloud => {
+                report.bytes_cloud += bytes.len() as u64;
+                report.sim_s += receipt.sim_s;
+            }
+        }
+        report.units += 1;
+        Ok(bytes)
+    }
+
+    /// Load a full replica (target TP = 1) into `params` (+ Adam moments),
+    /// resharding from whatever TP dimension the checkpoint was written at.
+    pub fn load_full(
+        &mut self,
+        params: &mut ModelParams,
+        adam: Option<&mut Adam>,
+        node: usize,
+    ) -> Result<LoadReport> {
+        let n_layers = params.blocks[0].shape[0];
+        let mut report = LoadReport::default();
+        // discover checkpoint tp_dim from the bitmap
+        let keys = self.bitmap.keys();
+        let tp_dim = keys
+            .iter()
+            .find(|k| k.layer < CkptKey::EMBED)
+            .map(|k| k.tp_dim)
+            .ok_or_else(|| anyhow!("bitmap has no layer units"))?;
+
+        let mut adam = adam;
+        for layer in 0..n_layers {
+            // gather all shards of the layer
+            let mut decoded: Vec<Vec<(String, HostTensor)>> = Vec::with_capacity(tp_dim);
+            for s in 0..tp_dim {
+                let bytes = self.fetch(&CkptKey::layer(layer, s, tp_dim), node, &mut report)?;
+                decoded.push(codec::decode(&bytes)?);
+            }
+            // reassemble each tensor
+            let names: Vec<String> = decoded[0].iter().map(|(n, _)| n.clone()).collect();
+            for (ti, name) in names.iter().enumerate() {
+                let base = name.rsplit('.').next().unwrap();
+                let shards: Vec<&HostTensor> = decoded.iter().map(|d| &d[ti].1).collect();
+                let full = shard::concat_from_shards(base, &shards)?;
+                let bi = BLOCK_PARAM_NAMES
+                    .iter()
+                    .position(|n| n == &base)
+                    .ok_or_else(|| anyhow!("unknown param {base}"))?;
+                let dst = if name.starts_with("m.") {
+                    match adam.as_mut() {
+                        Some(a) => &mut a.m.blocks[bi],
+                        None => continue,
+                    }
+                } else if name.starts_with("v.") {
+                    match adam.as_mut() {
+                        Some(a) => &mut a.v.blocks[bi],
+                        None => continue,
+                    }
+                } else {
+                    &mut params.blocks[bi]
+                };
+                write_row(dst, layer, &full)?;
+            }
+        }
+        // embed + head
+        let ebytes = self.fetch(&CkptKey::embed(0, 1), node, &mut report)?;
+        for (name, t) in codec::decode(&ebytes)? {
+            match name.as_str() {
+                "tok_emb" => params.tok_emb = t,
+                "pos_emb" => params.pos_emb = t,
+                "m.tok_emb" => if let Some(a) = adam.as_mut() { a.m.tok_emb = t },
+                "v.tok_emb" => if let Some(a) = adam.as_mut() { a.v.tok_emb = t },
+                "m.pos_emb" => if let Some(a) = adam.as_mut() { a.m.pos_emb = t },
+                "v.pos_emb" => if let Some(a) = adam.as_mut() { a.v.pos_emb = t },
+                _ => {}
+            }
+        }
+        let hbytes = self.fetch(&CkptKey::head(0, 1), node, &mut report)?;
+        for (name, t) in codec::decode(&hbytes)? {
+            match name.as_str() {
+                "lnf_g" => params.lnf_g = t,
+                "lnf_b" => params.lnf_b = t,
+                "w_out" => params.w_out = t,
+                "m.w_out" => if let Some(a) = adam.as_mut() { a.m.w_out = t },
+                "v.w_out" => if let Some(a) = adam.as_mut() { a.v.w_out = t },
+                "m.lnf_g" => if let Some(a) = adam.as_mut() { a.m.lnf_g = t },
+                "v.lnf_g" => if let Some(a) = adam.as_mut() { a.v.lnf_g = t },
+                "m.lnf_b" => if let Some(a) = adam.as_mut() { a.m.lnf_b = t },
+                "v.lnf_b" => if let Some(a) = adam.as_mut() { a.v.lnf_b = t },
+                _ => {}
+            }
+        }
+        Ok(report)
+    }
+}
+
+/// Squeeze the leading length-1 axis of a sliced stacked tensor.
+fn squeeze0(t: &HostTensor) -> HostTensor {
+    assert_eq!(t.shape[0], 1);
+    HostTensor::from_f32(&t.shape[1..], t.f32s().to_vec())
+}
+
+/// Write an unstacked per-layer tensor into row `layer` of a stacked one.
+fn write_row(dst: &mut HostTensor, layer: usize, src: &HostTensor) -> Result<()> {
+    let row: usize = dst.shape[1..].iter().product();
+    ensure!(src.len() == row, "row size mismatch: {} vs {row}", src.len());
+    dst.f32s_mut()[layer * row..(layer + 1) * row].copy_from_slice(src.f32s());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ModelDims;
+    use crate::train::AdamConfig;
+
+    fn dims() -> ModelDims {
+        ModelDims {
+            vocab: 32, d_model: 8, n_heads: 2, d_ff: 16,
+            seq: 4, microbatch: 1, n_layers: 4, params_count: 0,
+        }
+    }
+
+    fn tmp() -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "ahckpt-{}-{}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn save_load_roundtrip_tp1() {
+        let d = dims();
+        let params = ModelParams::init(&d, 11);
+        let adam = Adam::new(AdamConfig::default(), &params);
+        let mut mgr = CheckpointManager::new(&tmp()).unwrap();
+        mgr.save_full(5, &params, Some(&adam), 1, &|_| 0).unwrap();
+
+        let mut out = ModelParams::init(&d, 99); // different init
+        let mut out_adam = Adam::new(AdamConfig::default(), &out);
+        let rep = mgr.load_full(&mut out, Some(&mut out_adam), 0).unwrap();
+        assert_eq!(out.max_abs_diff(&params), 0.0);
+        assert!(rep.bytes_cloud == 0, "everything was local: {rep:?}");
+        assert!(rep.bytes_memory > 0);
+    }
+
+    #[test]
+    fn save_tp2_load_tp1_reshards() {
+        let d = dims();
+        let params = ModelParams::init(&d, 3);
+        let mut mgr = CheckpointManager::new(&tmp()).unwrap();
+        mgr.save_full(1, &params, None, 2, &|_| 0).unwrap();
+        let mut out = ModelParams::init(&d, 42);
+        mgr.load_full(&mut out, None, 0).unwrap();
+        assert_eq!(out.max_abs_diff(&params), 0.0);
+    }
+
+    #[test]
+    fn preempted_node_falls_back_to_cloud() {
+        let d = dims();
+        let params = ModelParams::init(&d, 8);
+        let mut mgr = CheckpointManager::new(&tmp()).unwrap();
+        mgr.save_full(2, &params, None, 1, &|_| 0).unwrap();
+        // node 0 disappears entirely
+        mgr.bitmap.drop_node(0);
+        mgr.store.wipe_memory();
+        let mut out = ModelParams::init(&d, 1);
+        let rep = mgr.load_full(&mut out, None, 1).unwrap();
+        assert_eq!(out.max_abs_diff(&params), 0.0);
+        assert!(rep.bytes_cloud > 0);
+        assert_eq!(rep.bytes_memory + rep.bytes_disk + rep.bytes_rdma, 0);
+    }
+
+    #[test]
+    fn peer_fetch_charges_rdma() {
+        let d = dims();
+        let params = ModelParams::init(&d, 8);
+        let mut mgr = CheckpointManager::new(&tmp()).unwrap();
+        // layers saved on node 0; loading from node 1 rides RDMA
+        mgr.save_full(2, &params, None, 1, &|_| 0).unwrap();
+        let mut out = ModelParams::init(&d, 1);
+        let rep = mgr.load_full(&mut out, None, 1).unwrap();
+        assert_eq!(out.max_abs_diff(&params), 0.0);
+        assert!(rep.bytes_rdma > 0);
+        assert_eq!(rep.bytes_cloud, 0);
+    }
+
+    #[test]
+    fn adam_moments_roundtrip() {
+        let d = dims();
+        let params = ModelParams::init(&d, 11);
+        let mut adam = Adam::new(AdamConfig::default(), &params);
+        // make moments non-zero
+        let mut g = params.zeros_like();
+        for (_, t) in g.tensors_mut() {
+            t.f32s_mut().iter_mut().enumerate().for_each(|(i, x)| *x = (i % 7) as f32 * 0.01);
+        }
+        let mut p2 = params.clone();
+        adam.update(&mut p2, &g);
+        let mut mgr = CheckpointManager::new(&tmp()).unwrap();
+        mgr.save_full(9, &p2, Some(&adam), 1, &|_| 0).unwrap();
+        let mut out = ModelParams::init(&d, 0);
+        let mut out_adam = Adam::new(AdamConfig::default(), &out);
+        mgr.load_full(&mut out, Some(&mut out_adam), 0).unwrap();
+        assert_eq!(out_adam.m.max_abs_diff(&adam.m), 0.0);
+        assert_eq!(out_adam.v.max_abs_diff(&adam.v), 0.0);
+    }
+}

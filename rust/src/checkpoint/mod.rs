@@ -1,0 +1,28 @@
+//! Layer-wise checkpointing (paper §IV-B).
+//!
+//! A *layer* is the minimum unit of an LLM under any parallelization plan,
+//! so checkpoints are generated per layer (`layer_dict` + `optimizer_dict`
+//! in the paper's PyTorch terms): each file holds one layer's parameters
+//! and Adam moments for one TP shard. Special pseudo-layers `embed` and
+//! `head` carry the embedding tables and LM head.
+//!
+//! * [`codec`] — the binary tensor format (no serde in the vendor set).
+//! * [`shard`] — Megatron-style TP split/concat per parameter, powering
+//!   the adaptive loading scenarios (unchanged / increased / decreased
+//!   TP dimension, Fig 6).
+//! * [`store`] — tiered storage: CPU memory, local SSD (real files),
+//!   cloud (real files + bandwidth-throttled timing), with transfer-time
+//!   accounting against the paper's 3500 MB/s NVMe and 1200 MB/s cloud.
+//! * [`bitmap`] — the layer bitmap tracking which (layer, shard) lives
+//!   where, driving local-first retrieval.
+//! * [`manager`] — save/load orchestration over a training replica.
+
+pub mod bitmap;
+pub mod codec;
+pub mod manager;
+pub mod shard;
+pub mod store;
+
+pub use bitmap::{CkptKey, LayerBitmap, Location};
+pub use manager::CheckpointManager;
+pub use store::{StorageTier, TieredStore};

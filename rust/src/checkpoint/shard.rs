@@ -1,0 +1,190 @@
+//! Megatron-style tensor-parallel sharding of per-layer parameters, and
+//! the split/concat resharding behind adaptive checkpoint loading
+//! (paper Fig 6: unchanged / increased / decreased TP dimension).
+//!
+//! Per-layer parameter sharding (column = split output dim, row = split
+//! input dim, replicate = copy):
+//!
+//! | param | shape      | sharding  |
+//! |-------|-----------|------------|
+//! | wqkv  | [D, 3D]   | column     |
+//! | bqkv  | [3D]      | column     |
+//! | wo    | [D, D]    | row        |
+//! | w1    | [D, F]    | column     |
+//! | b1    | [F]       | column     |
+//! | w2    | [F, D]    | row        |
+//! | ln*/bo/b2 | [D]   | replicate  |
+
+use anyhow::{ensure, Result};
+
+use crate::runtime::HostTensor;
+
+/// How a named per-layer parameter shards under TP.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Sharding {
+    /// Split the last axis (output features).
+    Column,
+    /// Split the first axis (input features).
+    Row,
+    /// Full copy on every shard.
+    Replicate,
+}
+
+/// Sharding rule for one per-layer (unstacked) parameter name.
+pub fn rule(name: &str) -> Sharding {
+    match name {
+        "wqkv" | "bqkv" | "w1" | "b1" => Sharding::Column,
+        "wo" | "w2" => Sharding::Row,
+        _ => Sharding::Replicate,
+    }
+}
+
+fn split_axis(t: &HostTensor, axis: usize, tp: usize, shard: usize) -> Result<HostTensor> {
+    ensure!(axis < t.shape.len(), "axis out of range");
+    ensure!(t.shape[axis] % tp == 0, "dim {} not divisible by tp {tp}", t.shape[axis]);
+    let seg = t.shape[axis] / tp;
+    let lo = shard * seg;
+    // generic strided copy
+    let outer: usize = t.shape[..axis].iter().product();
+    let inner: usize = t.shape[axis + 1..].iter().product();
+    let src = t.f32s();
+    let mut data = Vec::with_capacity(outer * seg * inner);
+    for o in 0..outer {
+        let base = o * t.shape[axis] * inner + lo * inner;
+        data.extend_from_slice(&src[base..base + seg * inner]);
+    }
+    let mut shape = t.shape.clone();
+    shape[axis] = seg;
+    Ok(HostTensor::from_f32(&shape, data))
+}
+
+fn concat_axis(parts: &[&HostTensor], axis: usize) -> Result<HostTensor> {
+    ensure!(!parts.is_empty(), "empty concat");
+    let mut shape = parts[0].shape.clone();
+    shape[axis] = parts.iter().map(|p| p.shape[axis]).sum();
+    let outer: usize = shape[..axis].iter().product();
+    let inner: usize = shape[axis + 1..].iter().product();
+    let mut data = vec![0.0f32; shape.iter().product()];
+    let total_ax = shape[axis];
+    let mut off = 0usize;
+    for p in parts {
+        let seg = p.shape[axis];
+        let src = p.f32s();
+        for o in 0..outer {
+            let dst_base = o * total_ax * inner + off * inner;
+            let src_base = o * seg * inner;
+            data[dst_base..dst_base + seg * inner]
+                .copy_from_slice(&src[src_base..src_base + seg * inner]);
+        }
+        off += seg;
+    }
+    Ok(HostTensor::from_f32(&shape, data))
+}
+
+/// Extract TP shard `shard` of `tp` from a full per-layer parameter.
+pub fn split_for_tp(name: &str, full: &HostTensor, tp: usize, shard: usize) -> Result<HostTensor> {
+    ensure!(shard < tp, "shard {shard} out of {tp}");
+    if tp == 1 {
+        return Ok(full.clone());
+    }
+    match rule(name) {
+        Sharding::Column => split_axis(full, full.shape.len() - 1, tp, shard),
+        Sharding::Row => split_axis(full, 0, tp, shard),
+        Sharding::Replicate => Ok(full.clone()),
+    }
+}
+
+/// Reassemble the full parameter from all `tp` shards (inverse of split).
+pub fn concat_from_shards(name: &str, shards: &[&HostTensor]) -> Result<HostTensor> {
+    if shards.len() == 1 {
+        return Ok(shards[0].clone());
+    }
+    match rule(name) {
+        Sharding::Column => concat_axis(shards, shards[0].shape.len() - 1),
+        Sharding::Row => concat_axis(shards, 0),
+        Sharding::Replicate => Ok(shards[0].clone()),
+    }
+}
+
+/// Re-shard: checkpoints written at `tp_old` loaded at `tp_new`.
+/// Returns the tensor for `new_shard`. Handles the three Fig-6 cases.
+pub fn reshard(
+    name: &str,
+    old_shards: &[&HostTensor],
+    tp_new: usize,
+    new_shard: usize,
+) -> Result<HostTensor> {
+    let full = concat_from_shards(name, old_shards)?;
+    split_for_tp(name, &full, tp_new, new_shard)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(shape: &[usize]) -> HostTensor {
+        let n: usize = shape.iter().product();
+        HostTensor::from_f32(shape, (0..n).map(|x| x as f32).collect())
+    }
+
+    #[test]
+    fn column_split_concat_roundtrip() {
+        let full = t(&[4, 8]); // like wqkv
+        let s0 = split_for_tp("wqkv", &full, 2, 0).unwrap();
+        let s1 = split_for_tp("wqkv", &full, 2, 1).unwrap();
+        assert_eq!(s0.shape, vec![4, 4]);
+        // first row of s1 is cols 4..8 of row 0
+        assert_eq!(&s1.f32s()[..4], &[4.0, 5.0, 6.0, 7.0]);
+        let back = concat_from_shards("wqkv", &[&s0, &s1]).unwrap();
+        assert_eq!(back, full);
+    }
+
+    #[test]
+    fn row_split_concat_roundtrip() {
+        let full = t(&[8, 4]); // like w2 [F, D]
+        let s0 = split_for_tp("w2", &full, 4, 0).unwrap();
+        assert_eq!(s0.shape, vec![2, 4]);
+        let shards: Vec<HostTensor> = (0..4)
+            .map(|i| split_for_tp("w2", &full, 4, i).unwrap())
+            .collect();
+        let refs: Vec<&HostTensor> = shards.iter().collect();
+        assert_eq!(concat_from_shards("w2", &refs).unwrap(), full);
+    }
+
+    #[test]
+    fn replicated_params_copy() {
+        let full = t(&[6]);
+        let s = split_for_tp("ln1_g", &full, 4, 3).unwrap();
+        assert_eq!(s, full);
+        assert_eq!(concat_from_shards("ln1_g", &[&s, &s]).unwrap(), full);
+    }
+
+    #[test]
+    fn reshard_increase_tp_fig6b() {
+        // tp 2 -> 4: new rank 1 gets the second half of old shard 0
+        let full = t(&[4, 8]);
+        let olds: Vec<HostTensor> = (0..2)
+            .map(|i| split_for_tp("w1", &full, 2, i).unwrap())
+            .collect();
+        let refs: Vec<&HostTensor> = olds.iter().collect();
+        let new1 = reshard("w1", &refs, 4, 1).unwrap();
+        assert_eq!(new1, split_for_tp("w1", &full, 4, 1).unwrap());
+    }
+
+    #[test]
+    fn reshard_decrease_tp_fig6c() {
+        // tp 2 -> 1: concatenation gives the full parameter
+        let full = t(&[8, 4]);
+        let olds: Vec<HostTensor> = (0..2)
+            .map(|i| split_for_tp("wo", &full, 2, i).unwrap())
+            .collect();
+        let refs: Vec<&HostTensor> = olds.iter().collect();
+        assert_eq!(reshard("wo", &refs, 1, 0).unwrap(), full);
+    }
+
+    #[test]
+    fn indivisible_dims_error() {
+        let full = t(&[3, 5]);
+        assert!(split_for_tp("w1", &full, 2, 0).is_err());
+    }
+}

@@ -1,0 +1,231 @@
+//! Node and cluster specifications (the paper's `S = {(node, count, type)}`).
+
+use anyhow::{anyhow, Result};
+
+use super::gpu::{GpuKind, Interconnect, ALL_KINDS};
+use crate::util::json::Json;
+
+/// One host: `count` GPUs of one `kind`, all NVLinked intra-node.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NodeSpec {
+    pub node_id: usize,
+    pub count: usize,
+    pub kind: GpuKind,
+}
+
+/// A single physical GPU slot, addressable as (node, local index).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct GpuRef {
+    pub node: usize,
+    pub local: usize,
+}
+
+/// The heterogeneous cluster: the planner's input universe.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ClusterSpec {
+    pub nodes: Vec<NodeSpec>,
+    pub interconnect_rdma_gbs: f64,
+}
+
+impl ClusterSpec {
+    /// Build from `(count, kind)` pairs, auto-assigning node ids.
+    pub fn from_counts(counts: &[(usize, GpuKind)]) -> ClusterSpec {
+        ClusterSpec {
+            nodes: counts
+                .iter()
+                .enumerate()
+                .map(|(i, &(count, kind))| NodeSpec { node_id: i, count, kind })
+                .collect(),
+            interconnect_rdma_gbs: Interconnect::default().rdma_gbs,
+        }
+    }
+
+    /// The paper's testbed: N0/N3 A100×8, N1 H800×8, N2 H20×8.
+    pub fn paper_testbed() -> ClusterSpec {
+        ClusterSpec::from_counts(&[
+            (8, GpuKind::A100),
+            (8, GpuKind::H800),
+            (8, GpuKind::H20),
+            (8, GpuKind::A100),
+        ])
+    }
+
+    pub fn total_gpus(&self) -> usize {
+        self.nodes.iter().map(|n| n.count).sum()
+    }
+
+    /// GPU count per kind, indexed by `GpuKind::index()`.
+    pub fn kind_counts(&self) -> [usize; 3] {
+        let mut c = [0usize; 3];
+        for n in &self.nodes {
+            c[n.kind.index()] += n.count;
+        }
+        c
+    }
+
+    pub fn kinds_present(&self) -> Vec<GpuKind> {
+        let c = self.kind_counts();
+        ALL_KINDS.iter().copied().filter(|k| c[k.index()] > 0).collect()
+    }
+
+    /// Enumerate every GPU slot.
+    pub fn gpus(&self) -> Vec<(GpuRef, GpuKind)> {
+        let mut out = Vec::with_capacity(self.total_gpus());
+        for n in &self.nodes {
+            for local in 0..n.count {
+                out.push((GpuRef { node: n.node_id, local }, n.kind));
+            }
+        }
+        out
+    }
+
+    pub fn node(&self, id: usize) -> Option<&NodeSpec> {
+        self.nodes.iter().find(|n| n.node_id == id)
+    }
+
+    /// Total aggregate relative computing power (Σ g_i).
+    pub fn total_power(&self) -> f64 {
+        self.nodes
+            .iter()
+            .map(|n| n.count as f64 * n.kind.spec().relative_power)
+            .sum()
+    }
+
+    /// Total HBM across the cluster, GiB.
+    pub fn total_mem_gib(&self) -> f64 {
+        self.nodes
+            .iter()
+            .map(|n| n.count as f64 * n.kind.spec().mem_gib)
+            .sum()
+    }
+
+    /// Valid TP dimensions: powers of two that divide *every* node's GPU
+    /// count (paper: "the number of GPUs per node to be an integer
+    /// multiple of the TP dimension"; TP stays intra-node for NVLink).
+    pub fn valid_tp_dims(&self) -> Vec<usize> {
+        let mut dims = vec![1usize];
+        let min_count = self.nodes.iter().map(|n| n.count).min().unwrap_or(0);
+        let mut d = 2;
+        while d <= min_count.min(8) {
+            if self.nodes.iter().all(|n| n.count % d == 0) {
+                dims.push(d);
+            }
+            d *= 2;
+        }
+        dims
+    }
+
+    /// Remove a set of GPUs (preemption); empty nodes are dropped.
+    pub fn without(&self, preempted: &[GpuRef]) -> ClusterSpec {
+        let mut nodes = Vec::new();
+        for n in &self.nodes {
+            let lost = preempted.iter().filter(|g| g.node == n.node_id).count();
+            let left = n.count.saturating_sub(lost);
+            if left > 0 {
+                nodes.push(NodeSpec { node_id: n.node_id, count: left, kind: n.kind });
+            }
+        }
+        ClusterSpec { nodes, interconnect_rdma_gbs: self.interconnect_rdma_gbs }
+    }
+
+    // ---------- JSON ----------
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "nodes",
+                Json::Arr(
+                    self.nodes
+                        .iter()
+                        .map(|n| {
+                            Json::obj(vec![
+                                ("node_id", Json::num(n.node_id as f64)),
+                                ("count", Json::num(n.count as f64)),
+                                ("kind", Json::str(n.kind.name())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("rdma_gbs", Json::num(self.interconnect_rdma_gbs)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ClusterSpec> {
+        let nodes = j
+            .req("nodes")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("nodes must be an array"))?
+            .iter()
+            .map(|n| {
+                Ok(NodeSpec {
+                    node_id: n.req("node_id")?.as_usize().ok_or_else(|| anyhow!("bad node_id"))?,
+                    count: n.req("count")?.as_usize().ok_or_else(|| anyhow!("bad count"))?,
+                    kind: GpuKind::parse(
+                        n.req("kind")?.as_str().ok_or_else(|| anyhow!("bad kind"))?,
+                    )
+                    .ok_or_else(|| anyhow!("unknown gpu kind"))?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ClusterSpec {
+            nodes,
+            interconnect_rdma_gbs: j
+                .get("rdma_gbs")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(Interconnect::default().rdma_gbs),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_testbed_counts() {
+        let c = ClusterSpec::paper_testbed();
+        assert_eq!(c.total_gpus(), 32);
+        assert_eq!(c.kind_counts(), [16, 8, 8]);
+        // total power: 16×1 + 8×2 + 8×0.5 = 36
+        assert!((c.total_power() - 36.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn valid_tp_dims_require_divisibility() {
+        let c = ClusterSpec::from_counts(&[(8, GpuKind::A100), (4, GpuKind::H800)]);
+        assert_eq!(c.valid_tp_dims(), vec![1, 2, 4]);
+        let odd = ClusterSpec::from_counts(&[(5, GpuKind::A100), (3, GpuKind::H800)]);
+        assert_eq!(odd.valid_tp_dims(), vec![1]); // paper's odd-count case
+    }
+
+    #[test]
+    fn without_drops_preempted() {
+        let c = ClusterSpec::from_counts(&[(4, GpuKind::A100), (4, GpuKind::H20)]);
+        let c2 = c.without(&[
+            GpuRef { node: 0, local: 0 },
+            GpuRef { node: 0, local: 1 },
+            GpuRef { node: 0, local: 2 },
+            GpuRef { node: 0, local: 3 },
+        ]);
+        assert_eq!(c2.nodes.len(), 1);
+        assert_eq!(c2.total_gpus(), 4);
+        assert_eq!(c2.nodes[0].kind, GpuKind::H20);
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let c = ClusterSpec::paper_testbed();
+        let j = c.to_json();
+        let c2 = ClusterSpec::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn gpus_enumeration_is_stable() {
+        let c = ClusterSpec::from_counts(&[(2, GpuKind::A100), (1, GpuKind::H800)]);
+        let gs = c.gpus();
+        assert_eq!(gs.len(), 3);
+        assert_eq!(gs[0].0, GpuRef { node: 0, local: 0 });
+        assert_eq!(gs[2].1, GpuKind::H800);
+    }
+}

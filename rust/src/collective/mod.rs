@@ -1,0 +1,123 @@
+//! Layer-wise gradient synchronization on real buffers (Observation 2).
+//!
+//! With asymmetric pipeline parallelism, "pipeline stage" means different
+//! layer spans in different DP groups, so gradient AllReduce cannot run
+//! at GPU granularity — the ring bifurcates. AutoHet synchronizes at
+//! *layer* granularity: one logical ring per layer, spanning whichever
+//! replica holds that layer in each group.
+//!
+//! In-process the ring is executed as a chunked reduce-scatter +
+//! all-gather over the participants' slices (numerically identical to
+//! NCCL's ring; chunking matters for cache behaviour on the hot path).
+
+/// Average `n` equally-shaped gradient buffers in place (every buffer
+/// ends up holding the mean) using a ring-style chunked pass.
+pub fn ring_average(mut views: Vec<&mut [f32]>) {
+    let n = views.len();
+    if n < 2 {
+        return;
+    }
+    let len = views[0].len();
+    debug_assert!(views.iter().all(|v| v.len() == len));
+    let inv = 1.0 / n as f64;
+    // chunked reduce-scatter: chunk c is reduced into participant c % n
+    let chunk = (len / n).max(1024).min(1 << 16);
+    let mut lo = 0;
+    while lo < len {
+        let hi = (lo + chunk).min(len);
+        // reduce into view 0's chunk
+        let (head, rest) = views.split_first_mut().unwrap();
+        for r in rest.iter() {
+            let src = &r[lo..hi];
+            let dst = &mut head[lo..hi];
+            for (d, s) in dst.iter_mut().zip(src) {
+                *d += *s;
+            }
+        }
+        for d in &mut head[lo..hi] {
+            *d = (*d as f64 * inv) as f32;
+        }
+        // all-gather: broadcast back
+        let (head, rest) = views.split_first_mut().unwrap();
+        for r in rest.iter_mut() {
+            r[lo..hi].copy_from_slice(&head[lo..hi]);
+        }
+        lo = hi;
+    }
+}
+
+/// Per-layer synchronization across DP groups: `layer_views[l]` holds one
+/// mutable slice per group (that group's gradient for layer `l`). Each
+/// layer forms its own ring — layers with a single holder are untouched.
+pub fn layerwise_allreduce(layer_views: Vec<Vec<&mut [f32]>>) {
+    for views in layer_views {
+        ring_average(views);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_party_average() {
+        let mut a = vec![1.0f32, 2.0, 3.0];
+        let mut b = vec![3.0f32, 2.0, 1.0];
+        ring_average(vec![&mut a, &mut b]);
+        assert_eq!(a, vec![2.0, 2.0, 2.0]);
+        assert_eq!(b, a);
+    }
+
+    #[test]
+    fn single_party_noop() {
+        let mut a = vec![5.0f32; 4];
+        ring_average(vec![&mut a]);
+        assert_eq!(a, vec![5.0; 4]);
+    }
+
+    #[test]
+    fn three_party_large_buffer() {
+        let n = 100_000;
+        let mut a: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let mut b: Vec<f32> = (0..n).map(|i| 2.0 * i as f32).collect();
+        let mut c: Vec<f32> = (0..n).map(|i| 3.0 * i as f32).collect();
+        ring_average(vec![&mut a, &mut b, &mut c]);
+        for i in (0..n).step_by(7777) {
+            assert!((a[i] - 2.0 * i as f32).abs() < 1e-2, "i={i}");
+        }
+        assert_eq!(a, b);
+        assert_eq!(b, c);
+    }
+
+    #[test]
+    fn layerwise_only_touches_multi_holder_layers() {
+        let mut l0_a = vec![2.0f32, 4.0];
+        let mut l0_b = vec![0.0f32, 0.0];
+        let mut l1_solo = vec![7.0f32];
+        layerwise_allreduce(vec![
+            vec![&mut l0_a, &mut l0_b],
+            vec![&mut l1_solo],
+        ]);
+        assert_eq!(l0_a, vec![1.0, 2.0]);
+        assert_eq!(l0_b, vec![1.0, 2.0]);
+        assert_eq!(l1_solo, vec![7.0]); // untouched
+    }
+
+    #[test]
+    fn averaging_is_deterministic_wrt_order() {
+        let mk = || {
+            (
+                (0..5000).map(|i| (i % 13) as f32).collect::<Vec<f32>>(),
+                (0..5000).map(|i| (i % 7) as f32).collect::<Vec<f32>>(),
+            )
+        };
+        let (mut a1, mut b1) = mk();
+        let (mut b2, mut a2) = {
+            let (a, b) = mk();
+            (b, a)
+        };
+        ring_average(vec![&mut a1, &mut b1]);
+        ring_average(vec![&mut b2, &mut a2]);
+        assert_eq!(a1, a2);
+    }
+}

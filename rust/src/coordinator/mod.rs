@@ -1,0 +1,244 @@
+//! The leader process: CLI subcommands wiring the planner, simulator,
+//! real trainer, and recovery together. This is the binary a user runs.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::cluster::{ClusterSpec, GpuKind, SpotTrace, TraceConfig};
+use crate::log_info;
+use crate::metrics::Recorder;
+use crate::modelcfg::ModelCfg;
+use crate::pipeline::{ExecTopology, PipelineTrainer};
+use crate::planner::{auto_plan, PlanOptions};
+use crate::profile::ProfileDb;
+use crate::runtime::{Engine, HostTensor};
+use crate::sim::simulate_plan;
+use crate::train::{AdamConfig, MarkovCorpus};
+use crate::util::cli::Args;
+
+pub const USAGE: &str = "\
+autohet — automatic 3D parallelism for heterogeneous spot-instance GPUs
+
+USAGE:
+  autohet plan    [--model NAME] [--cluster FILE|--counts 4xA100,2xH800] [--out FILE]
+  autohet sim     [--model NAME] [--counts ...]       simulate an iteration
+  autohet train   [--artifacts DIR] [--steps N] [--groups 2,2|4] [--k N]
+                  [--lr F] [--seed N] [--csv FILE]    real PJRT training
+  autohet trace   [--hours H] [--seed N]              spot availability trace
+  autohet models                                      list model presets
+";
+
+fn parse_counts(s: &str) -> Result<ClusterSpec> {
+    // "4xA100,2xH800" -> nodes
+    let mut counts = Vec::new();
+    for part in s.split(',') {
+        let (n, k) = part
+            .split_once('x')
+            .ok_or_else(|| anyhow!("bad counts segment `{part}` (want e.g. 4xA100)"))?;
+        let kind = GpuKind::parse(k).ok_or_else(|| anyhow!("unknown GPU `{k}`"))?;
+        counts.push((n.trim().parse::<usize>()?, kind));
+    }
+    Ok(ClusterSpec::from_counts(&counts))
+}
+
+fn load_cluster(args: &Args) -> Result<ClusterSpec> {
+    if let Some(f) = args.get("cluster") {
+        return ClusterSpec::from_json(&crate::util::json::Json::parse_file(Path::new(f))?);
+    }
+    parse_counts(args.get_str("counts", "4xA100,4xH800"))
+}
+
+fn load_model(args: &Args) -> Result<ModelCfg> {
+    let name = args.get_str("model", "gpt3_6p7b");
+    ModelCfg::by_name(name).ok_or_else(|| {
+        anyhow!("unknown model `{name}`; try: {}", ModelCfg::all_presets().join(", "))
+    })
+}
+
+fn build_profile(model: &ModelCfg, seed: u64) -> ProfileDb {
+    ProfileDb::build(
+        model,
+        &[GpuKind::A100, GpuKind::H800, GpuKind::H20],
+        &[1, 2, 4, 8],
+        seed,
+    )
+}
+
+pub fn cmd_plan(args: &Args) -> Result<()> {
+    let model = load_model(args)?;
+    let cluster = load_cluster(args)?;
+    let profile = build_profile(&model, args.get_u64("seed", 1));
+    let plan = auto_plan(&cluster, &profile, &PlanOptions::default())?;
+    let stats = simulate_plan(&profile, &plan);
+    println!("plan: {}", plan.summary());
+    println!(
+        "est iter {:.3}s | sim iter {:.3}s | sim {:.0} tokens/s | planning {:.2}s",
+        plan.est_iter_s, stats.iter_s, stats.tokens_per_s, plan.planning_s
+    );
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, plan.to_json().to_string_pretty())?;
+        log_info!("wrote plan to {out}");
+    }
+    Ok(())
+}
+
+pub fn cmd_sim(args: &Args) -> Result<()> {
+    let model = load_model(args)?;
+    let cluster = load_cluster(args)?;
+    let profile = build_profile(&model, args.get_u64("seed", 1));
+    let plan = auto_plan(&cluster, &profile, &PlanOptions::default())?;
+    let stats = simulate_plan(&profile, &plan);
+    println!("{}", plan.summary());
+    println!(
+        "iter {:.4}s  pipeline {:.4}s  sync {:.4}s  idle {:.1}%  tokens/s {:.0}",
+        stats.iter_s,
+        stats.pipeline_s,
+        stats.sync_s,
+        100.0 * stats.mean_idle_frac,
+        stats.tokens_per_s
+    );
+    Ok(())
+}
+
+/// Parse "--groups 2,2|4" into per-group stage layer splits.
+pub fn parse_groups(s: &str) -> Result<Vec<Vec<usize>>> {
+    s.split('|')
+        .map(|g| {
+            g.split(',')
+                .map(|l| l.trim().parse::<usize>().map_err(|e| anyhow!("bad layers `{l}`: {e}")))
+                .collect()
+        })
+        .collect()
+}
+
+pub fn cmd_train(args: &Args) -> Result<()> {
+    let dir = args.get_str("artifacts", "artifacts/tiny");
+    let engine = Engine::load(Path::new(dir))?;
+    let dims = engine.manifest.dims;
+    let splits = parse_groups(args.get_str("groups", "4"))?;
+    let topo = ExecTopology::from_layer_splits(&splits);
+    let k = args.get_usize("k", 2);
+    let steps = args.get_usize("steps", 50);
+    let seed = args.get_u64("seed", 1);
+    let adam = AdamConfig { lr: args.get_f64("lr", 2e-3) as f32, ..Default::default() };
+
+    let mut trainer = PipelineTrainer::new(&engine, &topo, k, adam, seed)?;
+    let mut corpus = MarkovCorpus::new(dims.vocab, 4, seed ^ 0x5EED);
+    let mut rec = Recorder::new();
+    log_info!(
+        "training {} params on {} ({} groups, k={k}) for {steps} steps",
+        dims.params_count,
+        engine.platform(),
+        trainer.groups.len()
+    );
+    for step in 0..steps {
+        let batches: Vec<Vec<(HostTensor, HostTensor)>> = (0..trainer.groups.len())
+            .map(|_| {
+                (0..k)
+                    .map(|_| {
+                        let (t, g) = corpus.next_batch(dims.microbatch, dims.seq);
+                        (
+                            HostTensor::from_i32(&[dims.microbatch, dims.seq], t),
+                            HostTensor::from_i32(&[dims.microbatch, dims.seq], g),
+                        )
+                    })
+                    .collect()
+            })
+            .collect();
+        let stats = trainer.step(&batches)?;
+        let tokens = (stats.microbatches * dims.microbatch * dims.seq) as u64;
+        rec.record(step as u64, stats.loss, stats.grad_norm as f64, tokens);
+        if step % 10 == 0 || step + 1 == steps {
+            println!(
+                "step {step:>4}  loss {:.4}  |g| {:.3}  {:.0} tok/s",
+                stats.loss,
+                stats.grad_norm,
+                rec.tokens_per_s()
+            );
+        }
+    }
+    if let Some((head, tail)) = rec.loss_drop() {
+        println!("loss: {head:.4} -> {tail:.4} (floor ≈ ln(branch) = {:.4})", (4f64).ln());
+    }
+    if let Some(csv) = args.get("csv") {
+        std::fs::write(csv, rec.to_csv())?;
+        log_info!("wrote loss curve to {csv}");
+    }
+    Ok(())
+}
+
+pub fn cmd_trace(args: &Args) -> Result<()> {
+    let hours = args.get_f64("hours", 72.0);
+    let cfg = TraceConfig { horizon_s: hours * 3600.0, ..Default::default() };
+    let trace = SpotTrace::generate(cfg, args.get_u64("seed", 1));
+    println!("t_hours,A100,H800,H20");
+    for (i, row) in trace.avail.iter().enumerate() {
+        let t = i as f64 * trace.cfg.step_s / 3600.0;
+        println!("{t:.2},{},{},{}", row[0], row[1], row[2]);
+    }
+    eprintln!(
+        "# homogeneous-feasible(12 GPUs): {:.1}%  heterogeneous: {:.1}%",
+        100.0 * trace.homogeneous_feasible_frac(12),
+        100.0 * trace.heterogeneous_feasible_frac(12)
+    );
+    Ok(())
+}
+
+pub fn cmd_models() -> Result<()> {
+    println!("{:<12} {:>8} {:>8} {:>6} {:>10} {:>12}", "name", "layers", "hidden", "seq", "params", "ckpt GB");
+    for name in ModelCfg::all_presets() {
+        let m = ModelCfg::by_name(name).unwrap();
+        println!(
+            "{:<12} {:>8} {:>8} {:>6} {:>9.2}B {:>11.1}",
+            m.name,
+            m.n_layers,
+            m.hidden,
+            m.seq,
+            m.total_params() / 1e9,
+            m.ckpt_bytes_total() / 1e9
+        );
+    }
+    Ok(())
+}
+
+/// Entry point used by `main.rs`.
+pub fn run(args: Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("plan") => cmd_plan(&args),
+        Some("sim") => cmd_sim(&args),
+        Some("train") => cmd_train(&args),
+        Some("trace") => cmd_trace(&args),
+        Some("models") => cmd_models(),
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_counts_ok() {
+        let c = parse_counts("4xA100,2xH800").unwrap();
+        assert_eq!(c.total_gpus(), 6);
+        assert_eq!(c.nodes[1].kind, GpuKind::H800);
+        assert!(parse_counts("4A100").is_err());
+        assert!(parse_counts("4xB300").is_err());
+    }
+
+    #[test]
+    fn parse_groups_ok() {
+        assert_eq!(parse_groups("2,2|4").unwrap(), vec![vec![2, 2], vec![4]]);
+        assert_eq!(parse_groups("4").unwrap(), vec![vec![4]]);
+        assert!(parse_groups("a,b").is_err());
+    }
+
+    #[test]
+    fn models_cmd_runs() {
+        cmd_models().unwrap();
+    }
+}

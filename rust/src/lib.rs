@@ -1,0 +1,40 @@
+//! # AutoHet
+//!
+//! Reproduction of *“Diving into 3D Parallelism with Heterogeneous Spot
+//! Instance GPUs: Design and Implications”* (CS.DC 2025): an automated
+//! 3D-parallel (DP × TP × PP) training planner and elastic runtime for
+//! heterogeneous spot-instance GPU clusters.
+//!
+//! The crate is the **L3 Rust coordinator** of a three-layer stack:
+//!
+//! * [`planner`] — the paper's contribution: effective-computing-power
+//!   maximization (Eq 3), GPU↔node/stage mapping, layer-level model
+//!   partitioning (Eq 4), and the 1F1B cost model (Eq 1).
+//! * [`sim`] — a discrete-event pipeline + interconnect simulator standing
+//!   in for the paper's 24-GPU A100/H800/H20 testbed.
+//! * [`runtime`] / [`pipeline`] / [`collective`] — *real* training: PJRT
+//!   CPU executables AOT-compiled from JAX/Pallas (see `python/compile/`)
+//!   driven by an asymmetric 1F1B executor with layer-wise AllReduce.
+//! * [`checkpoint`] / [`recovery`] — layer-wise checkpoints, the layer
+//!   bitmap, tiered storage, and elastic recovery on preemption.
+//! * [`baselines`] — Megatron-LM, Whale, and Varuna re-implementations
+//!   used by the figure benches.
+//!
+//! See `DESIGN.md` for the per-experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod util;
+pub mod cluster;
+pub mod modelcfg;
+pub mod profile;
+pub mod planner;
+pub mod sim;
+pub mod baselines;
+pub mod runtime;
+pub mod collective;
+pub mod pipeline;
+pub mod train;
+pub mod checkpoint;
+pub mod recovery;
+pub mod coordinator;
+pub mod metrics;

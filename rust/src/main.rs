@@ -1,0 +1,11 @@
+//! `autohet` leader binary: see `coordinator::USAGE`.
+
+use autohet::coordinator;
+use autohet::util::cli::Args;
+
+fn main() {
+    if let Err(e) = coordinator::run(Args::from_env()) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,132 @@
+//! Training metrics: loss curve recording, throughput accounting, and a
+//! CSV/JSON export the examples and EXPERIMENTS.md use.
+
+use std::time::Instant;
+
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+/// Per-step record.
+#[derive(Debug, Clone)]
+pub struct StepRecord {
+    pub step: u64,
+    pub loss: f64,
+    pub grad_norm: f64,
+    pub wall_s: f64,
+    pub tokens: u64,
+}
+
+/// Loss-curve + throughput recorder.
+pub struct Recorder {
+    start: Instant,
+    pub records: Vec<StepRecord>,
+    step_times: Summary,
+    tokens_total: u64,
+}
+
+impl Default for Recorder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Recorder {
+    pub fn new() -> Recorder {
+        Recorder {
+            start: Instant::now(),
+            records: Vec::new(),
+            step_times: Summary::new(),
+            tokens_total: 0,
+        }
+    }
+
+    pub fn record(&mut self, step: u64, loss: f64, grad_norm: f64, tokens: u64) {
+        let wall = self.start.elapsed().as_secs_f64();
+        if let Some(prev) = self.records.last() {
+            self.step_times.add(wall - prev.wall_s);
+        }
+        self.tokens_total += tokens;
+        self.records.push(StepRecord { step, loss, grad_norm, wall_s: wall, tokens });
+    }
+
+    pub fn tokens_per_s(&self) -> f64 {
+        let wall = self.records.last().map(|r| r.wall_s).unwrap_or(0.0);
+        if wall > 0.0 {
+            self.tokens_total as f64 / wall
+        } else {
+            0.0
+        }
+    }
+
+    pub fn mean_step_s(&self) -> f64 {
+        self.step_times.mean()
+    }
+
+    /// First/last smoothed losses (5-step windows) for convergence checks.
+    pub fn loss_drop(&self) -> Option<(f64, f64)> {
+        if self.records.len() < 10 {
+            return None;
+        }
+        let w = 5.min(self.records.len() / 2);
+        let head: f64 = self.records[..w].iter().map(|r| r.loss).sum::<f64>() / w as f64;
+        let tail: f64 =
+            self.records[self.records.len() - w..].iter().map(|r| r.loss).sum::<f64>() / w as f64;
+        Some((head, tail))
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("step,loss,grad_norm,wall_s,tokens\n");
+        for r in &self.records {
+            s.push_str(&format!(
+                "{},{:.6},{:.4},{:.3},{}\n",
+                r.step, r.loss, r.grad_norm, r.wall_s, r.tokens
+            ));
+        }
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("tokens_per_s", Json::num(self.tokens_per_s())),
+            ("mean_step_s", Json::num(self.mean_step_s())),
+            (
+                "loss",
+                Json::Arr(self.records.iter().map(|r| Json::num(r.loss)).collect()),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loss_drop_detects_descent() {
+        let mut r = Recorder::new();
+        for i in 0..20 {
+            r.record(i, 5.0 - 0.2 * i as f64, 1.0, 100);
+        }
+        let (head, tail) = r.loss_drop().unwrap();
+        assert!(tail < head);
+        assert_eq!(r.records.len(), 20);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let mut r = Recorder::new();
+        r.record(0, 1.0, 0.5, 10);
+        let csv = r.to_csv();
+        assert!(csv.starts_with("step,loss"));
+        assert_eq!(csv.lines().count(), 2);
+    }
+
+    #[test]
+    fn tokens_accounting() {
+        let mut r = Recorder::new();
+        r.record(0, 1.0, 0.5, 10);
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        r.record(1, 0.9, 0.5, 10);
+        assert!(r.tokens_per_s() > 0.0);
+    }
+}

@@ -1,0 +1,288 @@
+//! Model configurations + analytic transformer cost model.
+//!
+//! The planner, simulator, and recovery subsystem all consume the same
+//! per-layer parameter / FLOP / activation-memory arithmetic, calibrated
+//! with the standard Megatron accounting:
+//!
+//! * params per transformer layer ≈ 12 h² (attention 4h², MLP 8h²)
+//! * fwd FLOPs per layer          ≈ 24·b·s·h² + 4·b·s²·h
+//! * bwd ≈ 2× fwd (3× with full activation recomputation)
+//! * mixed-precision training state ≈ 18 B/param resident
+//!   (fp16 weight+grad 4 B, fp32 master+momentum+variance 12 B, frag 2 B)
+//! * checkpoint size ≈ 14 B/param (fp16 weight + fp32 Adam triple) — this
+//!   reproduces the paper's "Llama-2 13B checkpoint totals 180 GB".
+
+use crate::util::json::Json;
+
+/// A transformer model's static description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelCfg {
+    pub name: String,
+    pub n_layers: usize,
+    pub hidden: usize,
+    pub heads: usize,
+    /// MLP expansion factor (4 for GPT/BERT, ~2.7 effective for LLaMA).
+    pub ff_mult: f64,
+    pub seq: usize,
+    pub vocab: usize,
+    /// Global batch size in sequences (per iteration).
+    pub global_batch: usize,
+    /// Microbatch size in sequences.
+    pub microbatch: usize,
+}
+
+impl ModelCfg {
+    pub fn new(
+        name: &str,
+        n_layers: usize,
+        hidden: usize,
+        heads: usize,
+        seq: usize,
+        vocab: usize,
+    ) -> ModelCfg {
+        ModelCfg {
+            name: name.to_string(),
+            n_layers,
+            hidden,
+            heads,
+            ff_mult: 4.0,
+            seq,
+            vocab,
+            global_batch: 64,
+            microbatch: 1,
+        }
+    }
+
+    // ---------------- presets (paper's evaluation models) ----------------
+
+    /// BERT-Large, 340M (paper Fig 7).
+    pub fn bert_large() -> ModelCfg {
+        ModelCfg { global_batch: 128, ..ModelCfg::new("bert_large", 24, 1024, 16, 512, 30522) }
+    }
+    /// GPT-3 6.7B (paper Figs 7, 9).
+    pub fn gpt3_6p7b() -> ModelCfg {
+        ModelCfg::new("gpt3_6p7b", 32, 4096, 32, 2048, 50257)
+    }
+    /// LLaMA 6.7B (paper Fig 8).
+    pub fn llama_7b() -> ModelCfg {
+        ModelCfg { ff_mult: 8.0 / 3.0 * 1.5, ..ModelCfg::new("llama_7b", 32, 4096, 32, 2048, 32000) }
+    }
+    /// GPT-3 family for the recovery study (paper Fig 10).
+    pub fn gpt3_3b() -> ModelCfg {
+        ModelCfg::new("gpt3_3b", 32, 2560, 32, 2048, 50257)
+    }
+    pub fn gpt3_13b() -> ModelCfg {
+        ModelCfg::new("gpt3_13b", 40, 5120, 40, 2048, 50257)
+    }
+    pub fn gpt3_20b() -> ModelCfg {
+        ModelCfg::new("gpt3_20b", 44, 6144, 48, 2048, 50257)
+    }
+    /// Scaling models for the asymmetric-TP study (paper Fig 3).
+    pub fn gpt_2b() -> ModelCfg {
+        ModelCfg::new("gpt_2b", 24, 2560, 32, 1024, 50257)
+    }
+    pub fn gpt_4b() -> ModelCfg {
+        ModelCfg::new("gpt_4b", 32, 3072, 32, 1024, 50257)
+    }
+    pub fn gpt_7b() -> ModelCfg {
+        ModelCfg::new("gpt_7b", 32, 4096, 32, 1024, 50257)
+    }
+    pub fn gpt_10b() -> ModelCfg {
+        ModelCfg::new("gpt_10b", 40, 4608, 36, 1024, 50257)
+    }
+
+    pub fn by_name(name: &str) -> Option<ModelCfg> {
+        Some(match name {
+            "bert_large" => Self::bert_large(),
+            "gpt3_3b" => Self::gpt3_3b(),
+            "gpt3_6p7b" => Self::gpt3_6p7b(),
+            "gpt3_13b" => Self::gpt3_13b(),
+            "gpt3_20b" => Self::gpt3_20b(),
+            "llama_7b" => Self::llama_7b(),
+            "gpt_2b" => Self::gpt_2b(),
+            "gpt_4b" => Self::gpt_4b(),
+            "gpt_7b" => Self::gpt_7b(),
+            "gpt_10b" => Self::gpt_10b(),
+            _ => return None,
+        })
+    }
+
+    pub fn all_presets() -> Vec<&'static str> {
+        vec![
+            "bert_large", "gpt3_3b", "gpt3_6p7b", "gpt3_13b", "gpt3_20b",
+            "llama_7b", "gpt_2b", "gpt_4b", "gpt_7b", "gpt_10b",
+        ]
+    }
+
+    // ---------------- parameter accounting ----------------
+
+    /// Parameters in one transformer layer: 4h² (attn) + 2·ff_mult·h² (MLP)
+    /// + LN/bias small terms.
+    pub fn params_per_layer(&self) -> f64 {
+        let h = self.hidden as f64;
+        4.0 * h * h + 2.0 * self.ff_mult * h * h + 9.0 * h
+    }
+
+    pub fn embed_params(&self) -> f64 {
+        (self.vocab + self.seq) as f64 * self.hidden as f64
+    }
+
+    pub fn total_params(&self) -> f64 {
+        self.embed_params()
+            + self.n_layers as f64 * self.params_per_layer()
+            + self.hidden as f64 * self.vocab as f64 // LM head
+    }
+
+    // ---------------- FLOPs ----------------
+
+    /// Forward FLOPs for `l` layers over one microbatch.
+    pub fn fwd_flops_layers(&self, l: usize) -> f64 {
+        let (b, s, h) = (self.microbatch as f64, self.seq as f64, self.hidden as f64);
+        let per_layer = (8.0 + 4.0 * self.ff_mult) * b * s * h * h + 4.0 * b * s * s * h;
+        2.0 * l as f64 * per_layer // ×2: multiply-add
+    }
+
+    /// Fwd+bwd FLOPs for `l` layers over one microbatch (bwd = 2× fwd).
+    pub fn fwdbwd_flops_layers(&self, l: usize) -> f64 {
+        3.0 * self.fwd_flops_layers(l)
+    }
+
+    /// Tokens per iteration (for tokens/s reporting).
+    pub fn tokens_per_iter(&self) -> f64 {
+        (self.global_batch * self.seq) as f64
+    }
+
+    pub fn microbatches(&self) -> usize {
+        (self.global_batch / self.microbatch).max(1)
+    }
+
+    // ---------------- memory ----------------
+
+    /// Fixed memory for `l` layers on one GPU at TP degree `tp`:
+    /// params + grads + Adam state (paper's MEM_F). Bytes.
+    pub fn mem_fixed_bytes(&self, l: usize, tp: usize) -> f64 {
+        18.0 * l as f64 * self.params_per_layer() / tp as f64
+    }
+
+    /// Embedding-stage extra fixed memory (first/last stage), bytes.
+    pub fn mem_embed_bytes(&self, tp: usize) -> f64 {
+        18.0 * self.embed_params() / tp as f64
+    }
+
+    /// Variable (activation) memory for `l` layers at 1F1B stage `stage`
+    /// of a `p`-stage pipeline (paper's MEM_V): earlier stages hold more
+    /// in-flight microbatches — stage i keeps (p − i) stashes. Bytes.
+    pub fn mem_var_bytes(&self, l: usize, stage: usize, p: usize, tp: usize) -> f64 {
+        let inflight = (p - stage.min(p - 1)) as f64;
+        let (b, s, h) = (self.microbatch as f64, self.seq as f64, self.hidden as f64);
+        // With recompute, only layer inputs are stashed: b·s·h·4 bytes/layer
+        // plus working set ~34·b·s·h for the live layer.
+        let per_mb = l as f64 * b * s * h * 4.0 / tp as f64 + 34.0 * b * s * h / tp as f64;
+        inflight * per_mb
+    }
+
+    /// Minimum memory to hold the whole model once (paper's MIN_mem used
+    /// by constraint (3b)), bytes.
+    pub fn min_mem_bytes(&self) -> f64 {
+        18.0 * self.total_params()
+    }
+
+    /// Checkpoint bytes for `l` layers (fp16 weight + fp32 Adam triple).
+    pub fn ckpt_bytes_layers(&self, l: f64) -> f64 {
+        14.0 * l * self.params_per_layer()
+    }
+
+    /// Full-model checkpoint size, bytes.
+    pub fn ckpt_bytes_total(&self) -> f64 {
+        14.0 * self.total_params()
+    }
+
+    /// Gradient-sync volume per DP replica, bytes (fp16 grads all-reduced).
+    pub fn grad_sync_bytes(&self) -> f64 {
+        2.0 * self.total_params()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("n_layers", Json::num(self.n_layers as f64)),
+            ("hidden", Json::num(self.hidden as f64)),
+            ("heads", Json::num(self.heads as f64)),
+            ("seq", Json::num(self.seq as f64)),
+            ("vocab", Json::num(self.vocab as f64)),
+            ("global_batch", Json::num(self.global_batch as f64)),
+            ("total_params", Json::num(self.total_params())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preset_param_counts_are_plausible() {
+        // each preset should land within ~25% of its nominal size
+        let cases = [
+            (ModelCfg::bert_large(), 0.34e9),
+            (ModelCfg::gpt3_6p7b(), 6.7e9),
+            (ModelCfg::gpt3_13b(), 13.0e9),
+            (ModelCfg::gpt_2b(), 2.0e9),
+            (ModelCfg::gpt_10b(), 10.0e9),
+        ];
+        for (cfg, nominal) in cases {
+            let p = cfg.total_params();
+            assert!(
+                p > 0.7 * nominal && p < 1.35 * nominal,
+                "{}: {p:.2e} vs nominal {nominal:.2e}",
+                cfg.name
+            );
+        }
+    }
+
+    #[test]
+    fn llama13b_checkpoint_is_about_180gb() {
+        // Paper §IV-A: "Llama-2 13B ... totaling 180GB". Our 13B config:
+        let c = ModelCfg::gpt3_13b();
+        let gb = c.ckpt_bytes_total() / 1e9;
+        assert!(gb > 160.0 && gb < 200.0, "{gb}");
+    }
+
+    #[test]
+    fn fwdbwd_is_three_times_fwd() {
+        let c = ModelCfg::gpt3_6p7b();
+        assert!((c.fwdbwd_flops_layers(4) / c.fwd_flops_layers(4) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn memory_decreases_with_tp() {
+        let c = ModelCfg::gpt3_6p7b();
+        assert!(c.mem_fixed_bytes(8, 2) < c.mem_fixed_bytes(8, 1));
+        assert!((c.mem_fixed_bytes(8, 2) * 2.0 - c.mem_fixed_bytes(8, 1)).abs() < 1.0);
+    }
+
+    #[test]
+    fn earlier_stages_hold_more_activations() {
+        let c = ModelCfg::gpt3_6p7b();
+        let early = c.mem_var_bytes(4, 0, 4, 1);
+        let late = c.mem_var_bytes(4, 3, 4, 1);
+        assert!(early > late, "{early} vs {late}"); // paper §III-C
+    }
+
+    #[test]
+    fn bert_fits_one_gpu_gpt3_does_not() {
+        // Fig 7's qualitative setup: BERT-Large fits a single 80 GiB GPU,
+        // GPT-3 6.7B does not (18 B/param training state).
+        let gib = 80.0 * 1024.0f64.powi(3);
+        assert!(ModelCfg::bert_large().min_mem_bytes() < gib);
+        assert!(ModelCfg::gpt3_6p7b().min_mem_bytes() > gib);
+    }
+
+    #[test]
+    fn by_name_covers_presets() {
+        for name in ModelCfg::all_presets() {
+            assert!(ModelCfg::by_name(name).is_some(), "{name}");
+        }
+        assert!(ModelCfg::by_name("nope").is_none());
+    }
+}

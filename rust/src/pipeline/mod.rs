@@ -1,0 +1,391 @@
+//! The real asymmetric 1F1B pipeline executor.
+//!
+//! Drives the AOT-compiled stage executables over a [`ParallelPlan`]-shaped
+//! topology: each DP group is a pipeline of stages holding contiguous
+//! layer spans (spans may *differ* across groups — asymmetric PP); a
+//! stage of `n` layers chains pre-compiled blocks of 2^i layers (the
+//! artifact-level mirror of the paper's binary decomposition).
+//!
+//! Per iteration:
+//! 1. every group runs its microbatches through fwd → head(fwd+bwd) → bwd,
+//!    accumulating full-model gradients (activations stashed per block,
+//!    rematerialization happens inside the bwd artifacts);
+//! 2. gradients are synchronized **layer-wise** across groups
+//!    ([`crate::collective`], Observation 2), embeddings/head included;
+//! 3. every group applies an identical Adam step, keeping replicas
+//!    bit-identical (asserted in debug builds).
+//!
+//! Scheduling/timing fidelity lives in [`crate::sim`]; this module is the
+//! numerics path (its gradients are tested against the monolith oracle).
+
+use anyhow::{ensure, Result};
+
+use crate::collective;
+use crate::runtime::{Engine, HostTensor};
+use crate::train::{Adam, AdamConfig, ModelParams};
+
+/// A stage in the executor: a contiguous layer span.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StageSpec {
+    pub layer_lo: usize,
+    pub layer_hi: usize,
+}
+
+/// Executor topology: per group, its stage spans. Must each cover
+/// [0, n_layers) contiguously.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExecTopology {
+    pub groups: Vec<Vec<StageSpec>>,
+}
+
+impl ExecTopology {
+    /// Single group, single stage (the "monolith" topology).
+    pub fn single(n_layers: usize) -> ExecTopology {
+        ExecTopology { groups: vec![vec![StageSpec { layer_lo: 0, layer_hi: n_layers }]] }
+    }
+
+    /// From per-group stage layer counts, e.g. `[[2,2],[4]]`.
+    pub fn from_layer_splits(splits: &[Vec<usize>]) -> ExecTopology {
+        ExecTopology {
+            groups: splits
+                .iter()
+                .map(|g| {
+                    let mut lo = 0;
+                    g.iter()
+                        .map(|&l| {
+                            let s = StageSpec { layer_lo: lo, layer_hi: lo + l };
+                            lo += l;
+                            s
+                        })
+                        .collect()
+                })
+                .collect(),
+        }
+    }
+
+    pub fn validate(&self, n_layers: usize) -> Result<()> {
+        ensure!(!self.groups.is_empty(), "no groups");
+        for (gi, g) in self.groups.iter().enumerate() {
+            let mut lo = 0;
+            for s in g {
+                ensure!(s.layer_lo == lo && s.layer_hi > s.layer_lo, "group {gi} gap");
+                lo = s.layer_hi;
+            }
+            ensure!(lo == n_layers, "group {gi} covers {lo}/{n_layers}");
+        }
+        Ok(())
+    }
+}
+
+/// One DP group's runtime state: a full replica + optimizer.
+pub struct GroupState {
+    pub stages: Vec<StageSpec>,
+    pub params: ModelParams,
+    pub adam: Adam,
+}
+
+/// Per-iteration result.
+#[derive(Debug, Clone)]
+pub struct StepStats {
+    pub loss: f64,
+    pub grad_norm: f32,
+    pub microbatches: usize,
+}
+
+/// The executor.
+pub struct PipelineTrainer<'e> {
+    pub engine: &'e Engine,
+    pub groups: Vec<GroupState>,
+    /// Microbatches per group per iteration.
+    pub k_per_group: usize,
+}
+
+impl<'e> PipelineTrainer<'e> {
+    pub fn new(
+        engine: &'e Engine,
+        topology: &ExecTopology,
+        k_per_group: usize,
+        adam: AdamConfig,
+        seed: u64,
+    ) -> Result<PipelineTrainer<'e>> {
+        let dims = engine.manifest.dims;
+        topology.validate(dims.n_layers)?;
+        // identical init across replicas (same seed)
+        let proto = ModelParams::init(&dims, seed);
+        let groups = topology
+            .groups
+            .iter()
+            .map(|stages| GroupState {
+                stages: stages.clone(),
+                params: proto.clone(),
+                adam: Adam::new(adam, &proto),
+            })
+            .collect();
+        Ok(PipelineTrainer { engine, groups, k_per_group })
+    }
+
+    /// Forward one microbatch through one group; returns (loss, grads).
+    fn group_fwd_bwd(
+        &self,
+        g: &GroupState,
+        tokens: &HostTensor,
+        targets: &HostTensor,
+        grads: &mut ModelParams,
+    ) -> Result<f64> {
+        let eng = self.engine;
+        let man = &eng.manifest;
+
+        // ---- forward ----
+        let mut x = eng
+            .exec("embed_fwd", &[&g.params.tok_emb, &g.params.pos_emb, tokens])?
+            .remove(0);
+        // per stage, per block: (lo, hi, stash)
+        let mut stashes: Vec<(usize, usize, HostTensor)> = Vec::new();
+        for s in &g.stages {
+            for bsz in man.decompose_layers(s.layer_hi - s.layer_lo)? {
+                // layer spans are contiguous from 0, so the next block
+                // starts where the previous stash ended
+                let lo = stashes.last().map(|(_, h, _)| *h).unwrap_or(0);
+                debug_assert!(lo >= s.layer_lo && lo + bsz <= s.layer_hi);
+                let hi = lo + bsz;
+                let slices = g.params.block_slices(lo, hi)?;
+                let mut ins: Vec<&HostTensor> = slices.iter().collect();
+                ins.push(&x);
+                let mut out = eng.exec(&format!("block{bsz}_fwd"), &ins)?;
+                let xs = out.pop().unwrap();
+                x = out.pop().unwrap();
+                stashes.push((lo, hi, xs));
+            }
+        }
+
+        // ---- head fwd+bwd ----
+        let mut out = eng.exec(
+            "head_fwd_bwd",
+            &[&g.params.lnf_g, &g.params.lnf_b, &g.params.w_out, &x, targets],
+        )?;
+        let d_w_out = out.pop().unwrap();
+        let d_lnf_b = out.pop().unwrap();
+        let d_lnf_g = out.pop().unwrap();
+        let mut dx = out.pop().unwrap();
+        let loss = out.pop().unwrap().f32s()[0] as f64;
+        acc(&mut grads.w_out, &d_w_out);
+        acc(&mut grads.lnf_b, &d_lnf_b);
+        acc(&mut grads.lnf_g, &d_lnf_g);
+
+        // ---- backward through blocks (reverse) ----
+        for (lo, hi, xs) in stashes.iter().rev() {
+            let bsz = hi - lo;
+            let slices = g.params.block_slices(*lo, *hi)?;
+            let mut ins: Vec<&HostTensor> = slices.iter().collect();
+            ins.push(xs);
+            ins.push(&dx);
+            let mut out = eng.exec(&format!("block{bsz}_bwd"), &ins)?;
+            // outputs: dx, then 12 stacked grads for [lo, hi)
+            let dparams = out.split_off(1);
+            dx = out.pop().unwrap();
+            for (i, dp) in dparams.iter().enumerate() {
+                acc_rows(&mut grads.blocks[i], dp, *lo);
+            }
+        }
+
+        // ---- embedding bwd ----
+        let mut out = eng.exec("embed_bwd", &[tokens, &dx])?;
+        let d_pos = out.pop().unwrap();
+        let d_tok = out.pop().unwrap();
+        acc(&mut grads.tok_emb, &d_tok);
+        acc(&mut grads.pos_emb, &d_pos);
+
+        Ok(loss)
+    }
+
+    /// Accumulate mean gradients for one group over a microbatch stream
+    /// without updating parameters (returns mean loss + grads). Public
+    /// for the gradient-equality integration tests and recovery paths.
+    pub fn accumulate_grads(
+        &self,
+        gi: usize,
+        batches: &[(HostTensor, HostTensor)],
+    ) -> Result<(f64, ModelParams)> {
+        let g = &self.groups[gi];
+        let mut grads = g.params.zeros_like();
+        let mut loss = 0.0;
+        for (tokens, targets) in batches {
+            loss += self.group_fwd_bwd(g, tokens, targets, &mut grads)?;
+        }
+        let inv = 1.0 / batches.len().max(1) as f32;
+        for (_, t) in grads.tensors_mut() {
+            for v in t.f32s_mut() {
+                *v *= inv;
+            }
+        }
+        Ok((loss / batches.len().max(1) as f64, grads))
+    }
+
+    /// One full training iteration over `k_per_group` microbatches per
+    /// group. `batches[g]` supplies that group's microbatch stream.
+    pub fn step(&mut self, batches: &[Vec<(HostTensor, HostTensor)>]) -> Result<StepStats> {
+        ensure!(batches.len() == self.groups.len(), "one batch stream per group");
+        let n_layers = self.engine.manifest.dims.n_layers;
+
+        // 1) local accumulation
+        let mut all_grads: Vec<ModelParams> = Vec::with_capacity(self.groups.len());
+        let mut loss_sum = 0.0;
+        let mut loss_n = 0usize;
+        for (gi, g) in self.groups.iter().enumerate() {
+            let mut grads = g.params.zeros_like();
+            ensure!(
+                batches[gi].len() == self.k_per_group,
+                "group {gi}: {} microbatches, expected {}",
+                batches[gi].len(),
+                self.k_per_group
+            );
+            for (tokens, targets) in &batches[gi] {
+                loss_sum += self.group_fwd_bwd(g, tokens, targets, &mut grads)?;
+                loss_n += 1;
+            }
+            // mean over microbatches
+            let inv = 1.0 / self.k_per_group as f32;
+            for (_, t) in grads.tensors_mut() {
+                for v in t.f32s_mut() {
+                    *v *= inv;
+                }
+            }
+            all_grads.push(grads);
+        }
+
+        // 2) layer-wise AllReduce across groups (+ embed & head rings)
+        {
+            let mut layer_views: Vec<Vec<&mut [f32]>> = Vec::new();
+            // Safe split: collect raw pointers per layer slice.
+            // Each block tensor is stacked [L, ...]; layer l owns rows [l, l+1).
+            // To appease the borrow checker we sync tensor-by-tensor.
+            for bi in 0..12 {
+                let row: usize = all_grads[0].blocks[bi].shape[1..].iter().product();
+                for l in 0..n_layers {
+                    let views: Vec<&mut [f32]> = all_grads
+                        .iter_mut()
+                        .map(|gr| {
+                            let slice = &mut gr.blocks[bi].f32s_mut()[l * row..(l + 1) * row];
+                            // SAFETY: distinct ModelParams never alias.
+                            unsafe {
+                                std::slice::from_raw_parts_mut(slice.as_mut_ptr(), slice.len())
+                            }
+                        })
+                        .collect();
+                    layer_views.push(views);
+                }
+            }
+            collective::layerwise_allreduce(layer_views);
+            // embeddings + head (held by first/last stages of every group)
+            for name in ["tok_emb", "pos_emb", "lnf_g", "lnf_b", "w_out"] {
+                let views: Vec<&mut [f32]> = all_grads
+                    .iter_mut()
+                    .map(|gr| {
+                        let t = match name {
+                            "tok_emb" => &mut gr.tok_emb,
+                            "pos_emb" => &mut gr.pos_emb,
+                            "lnf_g" => &mut gr.lnf_g,
+                            "lnf_b" => &mut gr.lnf_b,
+                            _ => &mut gr.w_out,
+                        };
+                        let s = t.f32s_mut();
+                        unsafe { std::slice::from_raw_parts_mut(s.as_mut_ptr(), s.len()) }
+                    })
+                    .collect();
+                collective::ring_average(views);
+            }
+        }
+
+        // 3) identical Adam step per replica
+        let mut grad_norm = 0.0f32;
+        for (g, grads) in self.groups.iter_mut().zip(all_grads.iter_mut()) {
+            let n = g.adam.clip_grads(grads);
+            grad_norm = grad_norm.max(n);
+            g.adam.update(&mut g.params, grads);
+        }
+        debug_assert!(self.replicas_synced(1e-6));
+
+        Ok(StepStats {
+            loss: loss_sum / loss_n.max(1) as f64,
+            grad_norm,
+            microbatches: loss_n,
+        })
+    }
+
+    /// Max parameter divergence across replicas ≤ tol?
+    pub fn replicas_synced(&self, tol: f32) -> bool {
+        self.groups
+            .windows(2)
+            .all(|w| w[0].params.max_abs_diff(&w[1].params) <= tol)
+    }
+
+    /// Evaluate mean loss over batches without updating (uses group 0).
+    pub fn eval_loss(&self, batches: &[(HostTensor, HostTensor)]) -> Result<f64> {
+        let g = &self.groups[0];
+        let man = &self.engine.manifest;
+        let mut total = 0.0;
+        for (tokens, targets) in batches {
+            let mut x = self
+                .engine
+                .exec("embed_fwd", &[&g.params.tok_emb, &g.params.pos_emb, tokens])?
+                .remove(0);
+            let mut lo = 0usize;
+            for s in &g.stages {
+                for bsz in man.decompose_layers(s.layer_hi - s.layer_lo)? {
+                    let slices = g.params.block_slices(lo, lo + bsz)?;
+                    let mut ins: Vec<&HostTensor> = slices.iter().collect();
+                    ins.push(&x);
+                    let mut out = self.engine.exec(&format!("block{bsz}_fwd"), &ins)?;
+                    out.pop();
+                    x = out.pop().unwrap();
+                    lo += bsz;
+                }
+            }
+            let out = self.engine.exec(
+                "head_fwd",
+                &[&g.params.lnf_g, &g.params.lnf_b, &g.params.w_out, &x, targets],
+            )?;
+            total += out[0].f32s()[0] as f64;
+        }
+        Ok(total / batches.len().max(1) as f64)
+    }
+}
+
+/// dst += src elementwise.
+fn acc(dst: &mut HostTensor, src: &HostTensor) {
+    debug_assert_eq!(dst.shape, src.shape);
+    for (d, s) in dst.f32s_mut().iter_mut().zip(src.f32s()) {
+        *d += *s;
+    }
+}
+
+/// Accumulate a stacked slice `src` ([span, ...]) into `dst` rows at `lo`.
+fn acc_rows(dst: &mut HostTensor, src: &HostTensor, lo: usize) {
+    let row: usize = dst.shape[1..].iter().product();
+    let span = src.shape[0];
+    let d = &mut dst.f32s_mut()[lo * row..(lo + span) * row];
+    for (x, s) in d.iter_mut().zip(src.f32s()) {
+        *x += *s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topology_validation() {
+        let t = ExecTopology::from_layer_splits(&[vec![2, 2], vec![4]]);
+        t.validate(4).unwrap();
+        assert!(t.validate(5).is_err());
+        let bad = ExecTopology { groups: vec![vec![StageSpec { layer_lo: 1, layer_hi: 4 }]] };
+        assert!(bad.validate(4).is_err());
+    }
+
+    #[test]
+    fn single_topology() {
+        let t = ExecTopology::single(6);
+        assert_eq!(t.groups.len(), 1);
+        assert_eq!(t.groups[0][0].layer_hi, 6);
+    }
+}

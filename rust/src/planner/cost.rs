@@ -1,0 +1,209 @@
+//! The per-iteration cost model (paper Eq 1):
+//!
+//! `T = max_j { Σ_i t_i^j + (K−1)·max_c t_c^j } + T_sync`
+//!
+//! Stage times come from the profile (Eq 5 composition); PP activation
+//! transfers are charged to the sending stage; `T_sync` is evaluated at
+//! *layer granularity* — each layer's AllReduce ring spans exactly the
+//! GPUs holding that layer across DP groups (Observation 2), riding
+//! NVLink when they are co-located and RDMA otherwise.
+
+use crate::cluster::gpu::Interconnect;
+use crate::profile::ProfileDb;
+
+use super::types::{DpGroupPlan, ParallelPlan};
+
+/// Activation bytes crossing one PP boundary per microbatch (fp16).
+fn act_bytes(profile: &ProfileDb) -> f64 {
+    let m = &profile.model;
+    2.0 * (m.microbatch * m.seq * m.hidden) as f64
+}
+
+/// Stage compute+comm time for one microbatch (fwd+bwd), Eq-1's t_i.
+pub fn stage_time(profile: &ProfileDb, g: &DpGroupPlan, si: usize, ic: &Interconnect) -> f64 {
+    let s = &g.stages[si];
+    let mut t = profile.stage_time_s(s.kind, s.tp(), s.n_layers());
+    // PP p2p: fwd activations out + bwd gradient back across the boundary.
+    if si + 1 < g.stages.len() {
+        let next = &g.stages[si + 1];
+        let same_node = s.gpus[0].node == next.gpus[0].node;
+        let bw = if same_node {
+            s.kind.spec().nvlink_gbs * 1e9
+        } else {
+            ic.rdma_gbs * 1e9
+        };
+        t += 2.0 * act_bytes(profile) / bw + 2.0 * ic.rdma_latency_s;
+    }
+    t
+}
+
+/// One group's pipeline time: Σ t_i + (K−1)·max t_i (1F1B steady state).
+pub fn group_time(profile: &ProfileDb, g: &DpGroupPlan, ic: &Interconnect) -> f64 {
+    let times: Vec<f64> = (0..g.stages.len())
+        .map(|si| stage_time(profile, g, si, ic))
+        .collect();
+    let sum: f64 = times.iter().sum();
+    let max = times.iter().fold(0.0f64, |a, &b| a.max(b));
+    sum + (g.microbatches as f64 - 1.0) * max
+}
+
+/// Layer-wise gradient synchronization time across DP groups.
+pub fn sync_time(profile: &ProfileDb, plan: &ParallelPlan, ic: &Interconnect) -> f64 {
+    let j = plan.groups.len();
+    if j < 2 {
+        return 0.0;
+    }
+    let m = &profile.model;
+    let ring = 2.0 * (j as f64 - 1.0) / j as f64;
+    let grad_bytes_layer = 2.0 * m.params_per_layer() / plan.tp_dim as f64;
+
+    let mut total = 0.0;
+    for layer in 0..m.n_layers {
+        // nodes hosting this layer in each group
+        let mut nodes: Vec<usize> = plan
+            .groups
+            .iter()
+            .filter_map(|g| {
+                g.stages
+                    .iter()
+                    .find(|s| s.layer_lo <= layer && layer < s.layer_hi)
+                    .map(|s| s.gpus[0].node)
+            })
+            .collect();
+        nodes.sort();
+        nodes.dedup();
+        let bw = if nodes.len() <= 1 {
+            // all replicas of this layer co-located: NVLink ring
+            plan.groups[0].stages[0].kind.spec().nvlink_gbs * 1e9
+        } else {
+            ic.rdma_gbs * 1e9
+        };
+        total += grad_bytes_layer * ring / bw + ic.rdma_latency_s;
+    }
+    // embedding + head replicas (first/last stages of every group)
+    let emb_bytes = 2.0 * (m.embed_params() + (m.hidden * m.vocab) as f64) / plan.tp_dim as f64;
+    total += emb_bytes * ring / (ic.rdma_gbs * 1e9);
+    total
+}
+
+/// Eq (1): full per-iteration time estimate.
+pub fn iter_time_s(profile: &ProfileDb, plan: &ParallelPlan) -> f64 {
+    let ic = Interconnect::default();
+    let slowest = plan
+        .groups
+        .iter()
+        .map(|g| group_time(profile, g, &ic))
+        .fold(0.0f64, f64::max);
+    slowest + sync_time(profile, plan, &ic)
+}
+
+/// Training throughput in tokens/s implied by the estimate.
+pub fn tokens_per_s(profile: &ProfileDb, plan: &ParallelPlan) -> f64 {
+    profile.model.tokens_per_iter() / iter_time_s(profile, plan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{GpuKind, GpuRef};
+    use crate::modelcfg::ModelCfg;
+    use crate::planner::types::StagePlan;
+
+    fn profile() -> ProfileDb {
+        ProfileDb::build(&ModelCfg::gpt3_6p7b(), &[GpuKind::A100, GpuKind::H800], &[1, 2, 4, 8], 5)
+    }
+
+    fn stage(kind: GpuKind, node: usize, lo: usize, hi: usize, tp: usize) -> StagePlan {
+        StagePlan {
+            gpus: (0..tp).map(|i| GpuRef { node, local: i }).collect(),
+            kind,
+            layer_lo: lo,
+            layer_hi: hi,
+            has_embed: lo == 0,
+            has_head: hi == 32,
+        }
+    }
+
+    #[test]
+    fn deeper_pipeline_pays_bubble() {
+        let p = profile();
+        let ic = Interconnect::default();
+        let one = DpGroupPlan {
+            stages: vec![stage(GpuKind::H800, 0, 0, 32, 8)],
+            microbatches: 8,
+        };
+        let two = DpGroupPlan {
+            stages: vec![
+                stage(GpuKind::H800, 0, 0, 16, 4),
+                stage(GpuKind::H800, 0, 16, 32, 4),
+            ],
+            microbatches: 8,
+        };
+        // same total compute, but the 2-stage pipeline has bubble overhead
+        assert!(group_time(&p, &two, &ic) > group_time(&p, &one, &ic));
+    }
+
+    #[test]
+    fn sync_time_zero_for_single_group() {
+        let p = profile();
+        let plan = ParallelPlan {
+            model_name: "gpt3_6p7b".into(),
+            tp_dim: 8,
+            groups: vec![DpGroupPlan {
+                stages: vec![stage(GpuKind::H800, 0, 0, 32, 8)],
+                microbatches: 8,
+            }],
+            est_iter_s: 0.0,
+            planning_s: 0.0,
+        };
+        assert_eq!(sync_time(&p, &plan, &Interconnect::default()), 0.0);
+        assert!(iter_time_s(&p, &plan) > 0.0);
+    }
+
+    #[test]
+    fn colocated_dp_syncs_faster_than_cross_node() {
+        let p = profile();
+        let ic = Interconnect::default();
+        let mk = |node_b: usize| ParallelPlan {
+            model_name: "gpt3_6p7b".into(),
+            tp_dim: 4,
+            groups: vec![
+                DpGroupPlan { stages: vec![stage(GpuKind::H800, 0, 0, 32, 4)], microbatches: 4 },
+                DpGroupPlan {
+                    stages: vec![StagePlan {
+                        gpus: (4..8).map(|i| GpuRef { node: node_b, local: i }).collect(),
+                        kind: GpuKind::H800,
+                        layer_lo: 0,
+                        layer_hi: 32,
+                        has_embed: true,
+                        has_head: true,
+                    }],
+                    microbatches: 4,
+                },
+            ],
+            est_iter_s: 0.0,
+            planning_s: 0.0,
+        };
+        let same = sync_time(&p, &mk(0), &ic);
+        let cross = sync_time(&p, &mk(1), &ic);
+        assert!(same < cross, "{same} vs {cross}");
+    }
+
+    #[test]
+    fn tokens_per_s_sane_scale() {
+        // 8×H800 on one node, GPT-3 6.7B: expect O(10^3..10^5) tokens/s
+        let p = profile();
+        let plan = ParallelPlan {
+            model_name: "gpt3_6p7b".into(),
+            tp_dim: 8,
+            groups: vec![DpGroupPlan {
+                stages: vec![stage(GpuKind::H800, 0, 0, 32, 8)],
+                microbatches: 64,
+            }],
+            est_iter_s: 0.0,
+            planning_s: 0.0,
+        };
+        let tps = tokens_per_s(&p, &plan);
+        assert!(tps > 1e3 && tps < 1e6, "{tps}");
+    }
+}

@@ -1,0 +1,196 @@
+//! Stage one of the planner: device grouping (paper §III-B).
+//!
+//! Folds GPUs into TP entities (TP is symmetric and intra-node —
+//! Observation 1), derives each entity's *effective* power from the
+//! profile (so TP's AllReduce overhead is priced in, not assumed linear),
+//! and hands the counts to the exact solver for Eq (3).
+
+use crate::cluster::{ClusterSpec, GpuKind};
+use crate::modelcfg::ModelCfg;
+use crate::profile::ProfileDb;
+
+use super::solver::{self, EntitySpec, GroupingProblem, GroupingSolution};
+
+/// Result of device grouping at a fixed TP dimension.
+#[derive(Debug, Clone)]
+pub struct Grouping {
+    pub tp_dim: usize,
+    /// One composition per DP group: TP entities per GPU kind index.
+    pub compositions: Vec<[usize; 3]>,
+    /// Microbatches per group per iteration.
+    pub k_per_group: usize,
+    pub min_g: f64,
+    pub objective: f64,
+    pub heuristic_fallback: bool,
+}
+
+/// Per-kind TP-entity spec: power scaled by profiled TP efficiency, memory
+/// summed across the entity's GPUs.
+pub fn entity_specs(model: &ModelCfg, profile: &ProfileDb, tp: usize) -> [EntitySpec; 3] {
+    let mut out = [EntitySpec { power: 0.0, mem_gib: 0.0 }; 3];
+    let probe_layers = model.n_layers.next_power_of_two().min(8).max(1);
+    for kind in [GpuKind::A100, GpuKind::H800, GpuKind::H20] {
+        let spec = kind.spec();
+        // TP efficiency: how much faster tp GPUs actually are vs one.
+        let eff = if tp == 1 {
+            1.0
+        } else {
+            profile.stage_time_s(kind, 1, probe_layers)
+                / profile.stage_time_s(kind, tp, probe_layers)
+        };
+        out[kind.index()] = EntitySpec {
+            power: spec.relative_power * eff,
+            mem_gib: spec.mem_gib * tp as f64,
+        };
+    }
+    out
+}
+
+/// TP-entity counts per kind: each node of kind k with c GPUs yields
+/// floor(c / tp) entities (TP never crosses nodes).
+pub fn entity_counts(cluster: &ClusterSpec, tp: usize) -> [usize; 3] {
+    let mut counts = [0usize; 3];
+    for n in &cluster.nodes {
+        counts[n.kind.index()] += n.count / tp;
+    }
+    counts
+}
+
+/// All promising groupings for one TP dimension (one per feasible J,
+/// best objective first, capped) — Algorithm 1's `Plans` list.
+pub fn group_devices_all(
+    cluster: &ClusterSpec,
+    model: &ModelCfg,
+    profile: &ProfileDb,
+    tp_dim: usize,
+    deadline: Option<f64>,
+    cap: usize,
+) -> Vec<Grouping> {
+    let counts = entity_counts(cluster, tp_dim);
+    if counts.iter().sum::<usize>() == 0 {
+        return Vec::new();
+    }
+    let problem = GroupingProblem {
+        counts,
+        entity: entity_specs(model, profile, tp_dim),
+        min_mem_gib: model.min_mem_bytes() / f64::powi(2.0, 30),
+        microbatches_total: model.microbatches(),
+        deadline,
+    };
+    solver::bnb::solve_all(&problem)
+        .into_iter()
+        .take(cap)
+        .map(|s| {
+            let j = s.groups.len();
+            Grouping {
+                tp_dim,
+                compositions: s.groups,
+                k_per_group: (model.microbatches() / j).max(1),
+                min_g: s.min_g,
+                objective: s.objective,
+                heuristic_fallback: s.heuristic_fallback,
+            }
+        })
+        .collect()
+}
+
+/// Run device grouping for one TP dimension.
+pub fn group_devices(
+    cluster: &ClusterSpec,
+    model: &ModelCfg,
+    profile: &ProfileDb,
+    tp_dim: usize,
+    deadline: Option<f64>,
+) -> Option<Grouping> {
+    let counts = entity_counts(cluster, tp_dim);
+    if counts.iter().sum::<usize>() == 0 {
+        return None;
+    }
+    let problem = GroupingProblem {
+        counts,
+        entity: entity_specs(model, profile, tp_dim),
+        min_mem_gib: model.min_mem_bytes() / f64::powi(2.0, 30),
+        microbatches_total: model.microbatches(),
+        deadline,
+    };
+    let GroupingSolution { groups, min_g, objective, heuristic_fallback } =
+        solver::solve(&problem)?;
+    let j = groups.len();
+    Some(Grouping {
+        tp_dim,
+        compositions: groups,
+        k_per_group: (model.microbatches() / j).max(1),
+        min_g,
+        objective,
+        heuristic_fallback,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::GpuKind;
+
+    fn profile(model: &ModelCfg) -> ProfileDb {
+        ProfileDb::build(model, &[GpuKind::A100, GpuKind::H800, GpuKind::H20], &[1, 2, 4, 8], 1)
+    }
+
+    #[test]
+    fn bert_on_mixed_cluster_uses_many_groups() {
+        // BERT-Large fits on any single GPU -> the solver should carve
+        // many DP groups rather than one deep pipeline.
+        let model = ModelCfg::bert_large();
+        let cluster = ClusterSpec::from_counts(&[(4, GpuKind::A100), (4, GpuKind::H800)]);
+        let p = profile(&model);
+        let g = group_devices(&cluster, &model, &p, 1, None).unwrap();
+        assert!(g.compositions.len() >= 4, "{:?}", g.compositions);
+    }
+
+    #[test]
+    fn gpt3_needs_multi_gpu_groups() {
+        // 6.7B needs ~112 GiB of training state: no single 80 GiB GPU group.
+        let model = ModelCfg::gpt3_6p7b();
+        let cluster = ClusterSpec::from_counts(&[(4, GpuKind::A100), (4, GpuKind::H800)]);
+        let p = profile(&model);
+        let g = group_devices(&cluster, &model, &p, 1, None).unwrap();
+        for c in &g.compositions {
+            assert!(c.iter().sum::<usize>() >= 2, "{c:?}");
+        }
+    }
+
+    #[test]
+    fn tp_entities_fold_per_node() {
+        let cluster = ClusterSpec::from_counts(&[(8, GpuKind::A100), (4, GpuKind::H800)]);
+        assert_eq!(entity_counts(&cluster, 2), [4, 2, 0]);
+        assert_eq!(entity_counts(&cluster, 4), [2, 1, 0]);
+        // odd counts: node contributes floor(c/tp)
+        let odd = ClusterSpec::from_counts(&[(5, GpuKind::A100)]);
+        assert_eq!(entity_counts(&odd, 2), [2, 0, 0]);
+    }
+
+    #[test]
+    fn tp_efficiency_below_linear(){
+        let model = ModelCfg::gpt3_6p7b();
+        let p = profile(&model);
+        let e1 = entity_specs(&model, &p, 1);
+        let e2 = entity_specs(&model, &p, 2);
+        let a = GpuKind::A100.index();
+        assert!(e2[a].power > e1[a].power); // tp=2 entity beats one gpu
+        assert!(e2[a].power < 2.0 * e1[a].power); // but not 2×
+        assert_eq!(e2[a].mem_gib, 160.0);
+    }
+
+    #[test]
+    fn paper_4a100_2h800_case() {
+        // Fig 8 narrative: 4×A100 + 2×H800 with TP=2 -> H800 entity forms
+        // its own group, A100 entities form a 2-stage pipeline group.
+        let model = ModelCfg::llama_7b();
+        let cluster = ClusterSpec::from_counts(&[(4, GpuKind::A100), (2, GpuKind::H800)]);
+        let p = profile(&model);
+        let g = group_devices(&cluster, &model, &p, 2, None).unwrap();
+        assert_eq!(g.compositions.len(), 2);
+        let mut comps = g.compositions.clone();
+        comps.sort();
+        assert_eq!(comps, vec![[0, 1, 0], [2, 0, 0]], "{:?}", g.compositions);
+    }
+}

@@ -1,0 +1,214 @@
+//! Stage two (a): GPU node + pipeline-stage mapping (paper §III-C).
+//!
+//! Principles reproduced from the paper:
+//!
+//! * TP entities never cross nodes (NVLink only).
+//! * Lower-power GPUs go to *earlier* pipeline stages — early stages hold
+//!   more in-flight activations (more free memory on the low-end part)
+//!   and their communication overlaps better.
+//! * When every DP group needs an entity of the same kind for the same
+//!   stage position, try to take them all from one node so the DP
+//!   AllReduce for those stages rides NVLink instead of RDMA.
+
+use crate::cluster::{ClusterSpec, GpuKind, GpuRef};
+
+use super::grouping::Grouping;
+use super::types::{DpGroupPlan, StagePlan};
+
+/// Per-node inventory of TP entities during allocation.
+#[derive(Debug, Clone)]
+struct NodeInv {
+    node_id: usize,
+    kind: GpuKind,
+    /// entities still free; entity e occupies locals [e·tp, (e+1)·tp)
+    next_entity: usize,
+    total_entities: usize,
+}
+
+impl NodeInv {
+    fn free(&self) -> usize {
+        self.total_entities - self.next_entity
+    }
+    fn take(&mut self, tp: usize) -> Vec<GpuRef> {
+        let e = self.next_entity;
+        self.next_entity += 1;
+        (0..tp)
+            .map(|i| GpuRef { node: self.node_id, local: e * tp + i })
+            .collect()
+    }
+}
+
+/// Materialize a grouping onto physical nodes. Returns per-group stage
+/// skeletons (layer spans are filled by the partitioner afterwards).
+pub fn map_nodes_and_stages(cluster: &ClusterSpec, grouping: &Grouping) -> Vec<DpGroupPlan> {
+    let tp = grouping.tp_dim;
+    let mut inv: Vec<NodeInv> = cluster
+        .nodes
+        .iter()
+        .filter(|n| n.count / tp > 0)
+        .map(|n| NodeInv {
+            node_id: n.node_id,
+            kind: n.kind,
+            next_entity: 0,
+            total_entities: n.count / tp,
+        })
+        .collect();
+
+    // Stage sequences: weak kinds first (paper: low-end GPUs to early stages).
+    let mut kind_order: Vec<GpuKind> = [GpuKind::A100, GpuKind::H800, GpuKind::H20]
+        .into_iter()
+        .collect();
+    kind_order.sort_by(|a, b| {
+        a.spec()
+            .relative_power
+            .partial_cmp(&b.spec().relative_power)
+            .unwrap()
+    });
+
+    // Build per-group ordered kind lists.
+    let stage_kinds: Vec<Vec<GpuKind>> = grouping
+        .compositions
+        .iter()
+        .map(|c| {
+            let mut v = Vec::new();
+            for &k in &kind_order {
+                for _ in 0..c[k.index()] {
+                    v.push(k);
+                }
+            }
+            v
+        })
+        .collect();
+
+    let n_groups = grouping.compositions.len();
+    let mut groups: Vec<Vec<StagePlan>> = vec![Vec::new(); n_groups];
+
+    // Walk stage positions round-robin; at each position, the set of
+    // groups that still need a stage of kind k tries to co-locate on a
+    // single node (NVLink for the DP ring of that stage).
+    let max_depth = stage_kinds.iter().map(|v| v.len()).max().unwrap_or(0);
+    for pos in 0..max_depth {
+        for &k in &kind_order {
+            let needy: Vec<usize> = (0..n_groups)
+                .filter(|&gi| stage_kinds[gi].get(pos) == Some(&k))
+                .collect();
+            if needy.is_empty() {
+                continue;
+            }
+            // co-location: one node with enough free entities for all groups
+            let colocated = inv
+                .iter()
+                .position(|n| n.kind == k && n.free() >= needy.len());
+            for (idx, &gi) in needy.iter().enumerate() {
+                let ni = match colocated {
+                    Some(ni) if inv[ni].free() > 0 => ni,
+                    _ => inv
+                        .iter()
+                        .position(|n| n.kind == k && n.free() > 0)
+                        .unwrap_or_else(|| {
+                            panic!(
+                                "mapping: out of {k} entities at stage {pos} (group {idx})"
+                            )
+                        }),
+                };
+                let gpus = inv[ni].take(tp);
+                groups[gi].push(StagePlan {
+                    gpus,
+                    kind: k,
+                    layer_lo: 0,
+                    layer_hi: 0,
+                    has_embed: pos == 0,
+                    has_head: false, // fixed up below
+                });
+            }
+        }
+    }
+
+    groups
+        .into_iter()
+        .map(|mut stages| {
+            if let Some(last) = stages.last_mut() {
+                last.has_head = true;
+            }
+            DpGroupPlan { stages, microbatches: grouping.k_per_group }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::grouping::Grouping;
+
+    fn grouping(tp: usize, comps: Vec<[usize; 3]>) -> Grouping {
+        Grouping {
+            tp_dim: tp,
+            compositions: comps,
+            k_per_group: 8,
+            min_g: 0.0,
+            objective: 0.0,
+            heuristic_fallback: false,
+        }
+    }
+
+    #[test]
+    fn weak_gpus_land_in_early_stages() {
+        let cluster = ClusterSpec::from_counts(&[(2, GpuKind::A100), (2, GpuKind::H800)]);
+        let g = grouping(1, vec![[1, 1, 0], [1, 1, 0]]);
+        let plans = map_nodes_and_stages(&cluster, &g);
+        for p in &plans {
+            assert_eq!(p.stages[0].kind, GpuKind::A100); // weaker first
+            assert_eq!(p.stages[1].kind, GpuKind::H800);
+            assert!(p.stages[0].has_embed && p.stages[1].has_head);
+        }
+    }
+
+    #[test]
+    fn h20_is_weakest_and_goes_first() {
+        let cluster = ClusterSpec::from_counts(&[(1, GpuKind::H20), (1, GpuKind::A100)]);
+        let g = grouping(1, vec![[1, 0, 1]]);
+        let plans = map_nodes_and_stages(&cluster, &g);
+        assert_eq!(plans[0].stages[0].kind, GpuKind::H20);
+    }
+
+    #[test]
+    fn tp_entities_use_consecutive_locals_on_one_node() {
+        let cluster = ClusterSpec::from_counts(&[(4, GpuKind::A100)]);
+        let g = grouping(2, vec![[1, 0, 0], [1, 0, 0]]);
+        let plans = map_nodes_and_stages(&cluster, &g);
+        for p in &plans {
+            let s = &p.stages[0];
+            assert_eq!(s.gpus.len(), 2);
+            assert_eq!(s.gpus[0].node, s.gpus[1].node);
+            assert_eq!(s.gpus[1].local, s.gpus[0].local + 1);
+        }
+        // no double allocation across groups
+        let mut all: Vec<GpuRef> = plans
+            .iter()
+            .flat_map(|p| p.stages.iter().flat_map(|s| s.gpus.clone()))
+            .collect();
+        all.sort();
+        all.dedup();
+        assert_eq!(all.len(), 4);
+    }
+
+    #[test]
+    fn same_stage_dp_peers_colocate_when_possible() {
+        // two groups, each one A100 stage; one node has 2 A100s -> both
+        // stage-0 entities should come from that node.
+        let cluster = ClusterSpec::from_counts(&[(2, GpuKind::A100)]);
+        let g = grouping(1, vec![[1, 0, 0], [1, 0, 0]]);
+        let plans = map_nodes_and_stages(&cluster, &g);
+        assert_eq!(plans[0].stages[0].gpus[0].node, plans[1].stages[0].gpus[0].node);
+    }
+
+    #[test]
+    fn asymmetric_group_depths_supported() {
+        let cluster = ClusterSpec::from_counts(&[(2, GpuKind::A100), (1, GpuKind::H800)]);
+        let g = grouping(1, vec![[2, 0, 0], [0, 1, 0]]);
+        let plans = map_nodes_and_stages(&cluster, &g);
+        assert_eq!(plans[0].stages.len(), 2);
+        assert_eq!(plans[1].stages.len(), 1);
+        assert!(plans[1].stages[0].has_embed && plans[1].stages[0].has_head);
+    }
+}

@@ -1,0 +1,28 @@
+//! The AutoHet 3D-parallelism planner (paper §III).
+//!
+//! Two-stage decomposition:
+//!
+//! 1. **Effective-computing-power maximization** ([`grouping`], Eq 3):
+//!    assign GPUs (folded into TP entities) to DP groups, maximizing
+//!    `(#groups) × min_j G_j` where `G_j = Σ g_i·x_ij·(1 − ρ_j)` and
+//!    `ρ_j` is the 1F1B bubble ratio — solved exactly by the custom
+//!    branch-and-bound in [`solver`] (the paper uses SCIP; see DESIGN.md
+//!    for the substitution).
+//! 2. **GPU mapping + model partitioning** ([`mapping`], [`partition`]):
+//!    materialize groups onto physical nodes (low-power GPUs to early
+//!    pipeline stages, TP strictly intra-node over NVLink) and split
+//!    model layers per stage by the min-max DP of Eq 4.
+//!
+//! [`plan::auto_plan`] is Algorithm 1: iterate valid TP dims, group, map,
+//! partition, estimate cost (Eq 1), pick the argmin.
+
+pub mod cost;
+pub mod grouping;
+pub mod mapping;
+pub mod partition;
+pub mod plan;
+pub mod solver;
+pub mod types;
+
+pub use plan::{auto_plan, PlanOptions};
+pub use types::{DpGroupPlan, ParallelPlan, StagePlan};

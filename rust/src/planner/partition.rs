@@ -1,0 +1,197 @@
+//! Stage two (b): model partitioning across pipeline stages (paper Eq 4).
+//!
+//! Given a group's ordered stage sequence (kind + TP degree per stage),
+//! assign contiguous layer spans minimizing the *maximum stage time*
+//! subject to each stage's memory capacity (Eq 4c) — solved exactly by
+//! dynamic programming over (stage, layers-consumed) in O(P·N²).
+//!
+//! Note the paper prints the objective as `min max g_i/l_i`; time per
+//! stage is `l_i/g_i`-shaped, and we minimize the profiled stage *time*
+//! directly (which also absorbs TP communication and per-layer overhead).
+
+use crate::cluster::GpuKind;
+use crate::profile::ProfileDb;
+
+/// One stage's resources from the partitioner's point of view.
+#[derive(Debug, Clone, Copy)]
+pub struct StageRes {
+    pub kind: GpuKind,
+    pub tp: usize,
+}
+
+/// Memory headroom: fraction of HBM usable for model state (the rest is
+/// CUDA context, NCCL buffers, fragmentation).
+pub const MEM_HEADROOM: f64 = 0.94;
+
+/// Max layers stage `i` of `p` can hold within its memory cap.
+fn mem_cap_layers(
+    profile: &ProfileDb,
+    s: StageRes,
+    stage: usize,
+    p: usize,
+    n_layers: usize,
+) -> usize {
+    let cap = s.kind.spec().mem_gib * s.tp as f64 * f64::powi(2.0, 30) * MEM_HEADROOM;
+    let with_embed = stage == 0 || stage == p - 1; // embed or LM head
+    let mut best = 0;
+    for l in 1..=n_layers {
+        if profile.mem_bytes(l, stage, p, s.tp, with_embed) <= cap {
+            best = l;
+        } else {
+            break;
+        }
+    }
+    best
+}
+
+/// Exact min-max-time layer partition. Returns layers per stage, or None
+/// when infeasible (more stages than layers, or memory can't hold them).
+pub fn partition_layers(
+    stages: &[StageRes],
+    profile: &ProfileDb,
+) -> Option<Vec<usize>> {
+    let p = stages.len();
+    let n = profile.model.n_layers;
+    if p == 0 || p > n {
+        return None;
+    }
+    let caps: Vec<usize> = stages
+        .iter()
+        .enumerate()
+        .map(|(i, &s)| mem_cap_layers(profile, s, i, p, n))
+        .collect();
+    if caps.iter().any(|&c| c == 0) || caps.iter().sum::<usize>() < n {
+        return None;
+    }
+
+    const INF: f64 = f64::INFINITY;
+    // dp[i][k] = min over assignments of first i stages covering k layers
+    //            of the max stage time; choice[i][k] = layers at stage i-1.
+    let mut dp = vec![vec![INF; n + 1]; p + 1];
+    let mut choice = vec![vec![0usize; n + 1]; p + 1];
+    dp[0][0] = 0.0;
+    for i in 0..p {
+        let s = stages[i];
+        // precompute stage times for all layer counts once
+        let times: Vec<f64> = (0..=caps[i])
+            .map(|l| profile.stage_time_s(s.kind, s.tp, l))
+            .collect();
+        for k in 0..=n {
+            if dp[i][k] == INF {
+                continue;
+            }
+            let remaining_stages = p - i - 1;
+            for l in 1..=caps[i].min(n - k) {
+                let k2 = k + l;
+                // every later stage still needs ≥1 layer
+                if n - k2 < remaining_stages {
+                    break;
+                }
+                let v = dp[i][k].max(times[l]);
+                if v < dp[i + 1][k2] {
+                    dp[i + 1][k2] = v;
+                    choice[i + 1][k2] = l;
+                }
+            }
+        }
+    }
+    if dp[p][n] == INF {
+        return None;
+    }
+    // reconstruct
+    let mut out = vec![0usize; p];
+    let mut k = n;
+    for i in (0..p).rev() {
+        out[i] = choice[i + 1][k];
+        k -= out[i];
+    }
+    Some(out)
+}
+
+/// The resulting bottleneck stage time for a partition.
+pub fn max_stage_time(stages: &[StageRes], layers: &[usize], profile: &ProfileDb) -> f64 {
+    stages
+        .iter()
+        .zip(layers)
+        .map(|(s, &l)| profile.stage_time_s(s.kind, s.tp, l))
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::modelcfg::ModelCfg;
+
+    fn profile() -> ProfileDb {
+        ProfileDb::build(
+            &ModelCfg::gpt3_6p7b(),
+            &[GpuKind::A100, GpuKind::H800, GpuKind::H20],
+            &[1, 2, 4, 8],
+            3,
+        )
+    }
+
+    #[test]
+    fn proportional_split_on_hetero_pair() {
+        // A100 + H800 pipeline: H800 (2× power) should get ~2× the layers.
+        let p = profile();
+        let stages = [
+            StageRes { kind: GpuKind::A100, tp: 8 },
+            StageRes { kind: GpuKind::H800, tp: 8 },
+        ];
+        let l = partition_layers(&stages, &p).unwrap();
+        assert_eq!(l.iter().sum::<usize>(), 32);
+        let ratio = l[1] as f64 / l[0] as f64;
+        assert!(ratio > 1.5 && ratio < 2.5, "{l:?}");
+    }
+
+    #[test]
+    fn homogeneous_split_is_even() {
+        let p = profile();
+        let stages = [StageRes { kind: GpuKind::A100, tp: 8 }; 4];
+        let l = partition_layers(&stages, &p).unwrap();
+        assert_eq!(l, vec![8, 8, 8, 8]);
+    }
+
+    #[test]
+    fn more_stages_than_layers_infeasible() {
+        let model = ModelCfg { n_layers: 2, ..ModelCfg::gpt3_6p7b() };
+        let p = ProfileDb::build(&model, &[GpuKind::A100], &[1], 1);
+        let stages = [StageRes { kind: GpuKind::A100, tp: 1 }; 3];
+        assert!(partition_layers(&stages, &p).is_none());
+    }
+
+    #[test]
+    fn memory_cap_binds_single_small_gpu() {
+        // one A100 can't hold 6.7B worth of training state at tp=1
+        let p = profile();
+        let stages = [StageRes { kind: GpuKind::A100, tp: 1 }];
+        assert!(partition_layers(&stages, &p).is_none());
+    }
+
+    #[test]
+    fn minmax_beats_even_split() {
+        let p = profile();
+        let stages = [
+            StageRes { kind: GpuKind::A100, tp: 8 },
+            StageRes { kind: GpuKind::H800, tp: 8 },
+        ];
+        let l = partition_layers(&stages, &p).unwrap();
+        let opt = max_stage_time(&stages, &l, &p);
+        let even = max_stage_time(&stages, &[16, 16], &p);
+        assert!(opt < even, "opt {opt} vs even {even}");
+    }
+
+    #[test]
+    fn every_stage_gets_at_least_one_layer() {
+        let p = profile();
+        let stages = [
+            StageRes { kind: GpuKind::H20, tp: 8 },
+            StageRes { kind: GpuKind::H800, tp: 8 },
+            StageRes { kind: GpuKind::H800, tp: 8 },
+        ];
+        let l = partition_layers(&stages, &p).unwrap();
+        assert!(l.iter().all(|&x| x >= 1), "{l:?}");
+        assert_eq!(l.iter().sum::<usize>(), 32);
+    }
+}

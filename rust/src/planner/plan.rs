@@ -1,0 +1,190 @@
+//! Algorithm 1: the top-level 3D-parallel planning loop.
+//!
+//! ```text
+//! for tp_dim in getValidTpSize(cluster):
+//!     grouping  <- solve Eq(3)                 (grouping.rs / solver)
+//!     skeleton  <- mapNodeAndStage(grouping)   (mapping.rs)
+//!     layers    <- balanceWorkload per group   (partition.rs, Eq 4)
+//!     keep plan with min Cost (Eq 1)           (cost.rs)
+//! ```
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::cluster::ClusterSpec;
+use crate::profile::ProfileDb;
+
+use super::cost;
+use super::grouping;
+use super::mapping::map_nodes_and_stages;
+use super::partition::{partition_layers, StageRes};
+use super::types::ParallelPlan;
+
+#[derive(Debug, Clone, Default)]
+pub struct PlanOptions {
+    /// Per-TP-dim solver deadline (seconds); over it, LPT fallback.
+    pub solver_deadline_s: Option<f64>,
+    /// Restrict to one TP dim (ablations / baselines).
+    pub force_tp: Option<usize>,
+}
+
+/// Produce the best plan for a cluster+model, Algorithm 1.
+pub fn auto_plan(
+    cluster: &ClusterSpec,
+    profile: &ProfileDb,
+    opts: &PlanOptions,
+) -> Result<ParallelPlan> {
+    let t0 = Instant::now();
+    let model = &profile.model;
+    let tp_dims: Vec<usize> = match opts.force_tp {
+        Some(tp) => vec![tp],
+        None => cluster.valid_tp_dims(),
+    };
+
+    let mut best: Option<ParallelPlan> = None;
+    for tp in tp_dims {
+        // Algorithm 1 keeps several promising grouping plans per TP dim
+        // ("Plans <- append(plan)"); the cost estimator arbitrates.
+        let candidates =
+            grouping::group_devices_all(cluster, model, profile, tp, opts.solver_deadline_s, 6);
+        for grouping in candidates {
+        let mut groups = map_nodes_and_stages(cluster, &grouping);
+
+        // balanceWorkload: Eq-4 layer partition per group
+        let mut feasible = true;
+        for g in groups.iter_mut() {
+            let res: Vec<StageRes> = g
+                .stages
+                .iter()
+                .map(|s| StageRes { kind: s.kind, tp: s.tp() })
+                .collect();
+            match partition_layers(&res, profile) {
+                Some(layers) => {
+                    let mut lo = 0;
+                    for (s, l) in g.stages.iter_mut().zip(&layers) {
+                        s.layer_lo = lo;
+                        s.layer_hi = lo + l;
+                        lo += l;
+                    }
+                }
+                None => {
+                    feasible = false;
+                    break;
+                }
+            }
+        }
+        if !feasible {
+            continue;
+        }
+
+        let mut plan = ParallelPlan {
+            model_name: model.name.clone(),
+            tp_dim: tp,
+            groups,
+            est_iter_s: 0.0,
+            planning_s: 0.0,
+        };
+        plan.validate(model.n_layers)?;
+        // Algorithm 1 line 13: Cost(P) — "estimates the iteration times
+        // and selects the optimal plan". The 1F1B event simulation is the
+        // estimator (it captures heterogeneous-drain effects the Eq-1
+        // closed form misses); Eq-1 remains available in `cost::`.
+        plan.est_iter_s = crate::sim::simulate_plan(profile, &plan).iter_s;
+        let _ = cost::iter_time_s; // Eq-1 kept for analysis/tests
+
+        if best
+            .as_ref()
+            .map(|b| plan.est_iter_s < b.est_iter_s)
+            .unwrap_or(true)
+        {
+            best = Some(plan);
+        }
+        }
+    }
+
+    let mut plan = best.ok_or_else(|| {
+        anyhow!(
+            "no feasible plan: {} GPUs / {:.0} GiB cannot hold {} ({:.0} GiB needed)",
+            cluster.total_gpus(),
+            cluster.total_mem_gib(),
+            model.name,
+            model.min_mem_bytes() / f64::powi(2.0, 30),
+        )
+    })?;
+    plan.planning_s = t0.elapsed().as_secs_f64();
+    Ok(plan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::GpuKind;
+    use crate::modelcfg::ModelCfg;
+
+    fn profile(model: &ModelCfg) -> ProfileDb {
+        ProfileDb::build(model, &[GpuKind::A100, GpuKind::H800, GpuKind::H20], &[1, 2, 4, 8], 1)
+    }
+
+    #[test]
+    fn plans_bert_on_uniform_mixed_cluster() {
+        let model = ModelCfg::bert_large();
+        let cluster = ClusterSpec::from_counts(&[(4, GpuKind::A100), (4, GpuKind::H800)]);
+        let plan = auto_plan(&cluster, &profile(&model), &PlanOptions::default()).unwrap();
+        plan.validate(24).unwrap();
+        assert_eq!(plan.gpu_count(), 8);
+        assert!(plan.est_iter_s > 0.0);
+    }
+
+    #[test]
+    fn plans_gpt3_with_model_parallelism() {
+        let model = ModelCfg::gpt3_6p7b();
+        let cluster = ClusterSpec::from_counts(&[(8, GpuKind::A100), (8, GpuKind::H800)]);
+        let plan = auto_plan(&cluster, &profile(&model), &PlanOptions::default()).unwrap();
+        plan.validate(32).unwrap();
+        // 6.7B can't fit one 80GiB GPU: every group must span ≥2 GPUs
+        for g in &plan.groups {
+            assert!(g.gpu_count() >= 2);
+        }
+    }
+
+    #[test]
+    fn asymmetric_groups_allowed_on_odd_counts() {
+        // 5×A100 + 3×H800 (paper Fig 8 case): TP impossible, groups may
+        // have different pipeline depths.
+        let model = ModelCfg::llama_7b();
+        let cluster = ClusterSpec::from_counts(&[(5, GpuKind::A100), (3, GpuKind::H800)]);
+        let plan = auto_plan(&cluster, &profile(&model), &PlanOptions::default()).unwrap();
+        plan.validate(32).unwrap();
+        assert_eq!(plan.tp_dim, 1);
+        assert_eq!(plan.gpu_count(), 8);
+    }
+
+    #[test]
+    fn infeasible_cluster_errors() {
+        let model = ModelCfg::gpt3_20b();
+        let cluster = ClusterSpec::from_counts(&[(1, GpuKind::A100)]);
+        assert!(auto_plan(&cluster, &profile(&model), &PlanOptions::default()).is_err());
+    }
+
+    #[test]
+    fn force_tp_is_respected() {
+        let model = ModelCfg::gpt3_6p7b();
+        let cluster = ClusterSpec::from_counts(&[(8, GpuKind::H800)]);
+        let plan = auto_plan(
+            &cluster,
+            &profile(&model),
+            &PlanOptions { force_tp: Some(4), ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(plan.tp_dim, 4);
+    }
+
+    #[test]
+    fn planning_time_recorded() {
+        let model = ModelCfg::bert_large();
+        let cluster = ClusterSpec::from_counts(&[(2, GpuKind::A100)]);
+        let plan = auto_plan(&cluster, &profile(&model), &PlanOptions::default()).unwrap();
+        assert!(plan.planning_s > 0.0);
+    }
+}

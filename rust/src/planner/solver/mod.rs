@@ -1,0 +1,33 @@
+//! Exact solver for the device-grouping program (paper Eq 3).
+//!
+//! The paper hands the nonlinear mixed-integer program to SCIP. The
+//! program has a lot of structure the general solver cannot see: GPUs of
+//! one type are interchangeable, so a DP group is fully described by a
+//! *composition* — how many TP entities of each kind it contains — and an
+//! assignment is a partition of the per-kind entity counts into J
+//! compositions. We exploit that directly:
+//!
+//! * outer loop over the number of DP groups J (paper's Σ y_j),
+//! * memoized branch-and-bound over `(remaining counts, groups left)`
+//!   maximizing the minimum effective power `G = power·(1 − ρ)` with
+//!   `ρ = (P−1)/(K_J + P−1)` (Eq 2), under the per-group memory floor
+//!   (constraint 3b) and exact coverage (constraint 3e),
+//! * candidate compositions visited in decreasing-G order so the search
+//!   prunes as soon as `G(c) ≤ best` (the min can never recover), plus an
+//!   optimistic `raw_power/groups_left` bound.
+//!
+//! An LPT greedy ([`lpt_heuristic`]) provides both an initial incumbent
+//! and a fall-back when a caller sets a deadline.
+
+pub mod bnb;
+pub mod lpt;
+
+pub use bnb::{solve, GroupingProblem, GroupingSolution};
+pub use lpt::lpt_heuristic;
+
+/// Per-kind TP-entity description (power and memory already folded by tp).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EntitySpec {
+    pub power: f64,
+    pub mem_gib: f64,
+}

@@ -1,0 +1,293 @@
+//! Plan data model shared by the planner, simulator, real pipeline
+//! executor, checkpoint manager, and benches.
+
+use crate::cluster::{GpuKind, GpuRef};
+use crate::util::json::Json;
+
+/// One pipeline stage inside a DP group: a TP entity (1 or more NVLinked
+/// GPUs of one kind on one node) holding a contiguous span of layers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StagePlan {
+    /// Physical GPUs executing this stage (len == tp degree).
+    pub gpus: Vec<GpuRef>,
+    pub kind: GpuKind,
+    /// First layer index (global, 0-based) held by this stage.
+    pub layer_lo: usize,
+    /// One past the last layer index.
+    pub layer_hi: usize,
+    /// Whether this stage also owns the embedding (stage 0).
+    pub has_embed: bool,
+    /// Whether this stage also owns the LM head + loss (last stage).
+    pub has_head: bool,
+}
+
+impl StagePlan {
+    pub fn n_layers(&self) -> usize {
+        self.layer_hi - self.layer_lo
+    }
+    pub fn tp(&self) -> usize {
+        self.gpus.len()
+    }
+}
+
+/// A DP group: one pipeline over heterogeneous stages, replicating the
+/// full model. Groups may have *different* stage counts (asymmetric PP,
+/// paper Observation 2).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DpGroupPlan {
+    pub stages: Vec<StagePlan>,
+    /// Microbatches this group runs per iteration (1F1B's K).
+    pub microbatches: usize,
+}
+
+impl DpGroupPlan {
+    pub fn pp_depth(&self) -> usize {
+        self.stages.len()
+    }
+    pub fn gpu_count(&self) -> usize {
+        self.stages.iter().map(|s| s.gpus.len()).sum()
+    }
+    /// 1F1B bubble ratio ρ = (P−1)/(K+P−1).
+    pub fn bubble_ratio(&self) -> f64 {
+        let p = self.pp_depth() as f64;
+        let k = self.microbatches as f64;
+        (p - 1.0) / (k + p - 1.0)
+    }
+    /// Raw computing power Σ g_i over member GPUs.
+    pub fn raw_power(&self) -> f64 {
+        self.stages
+            .iter()
+            .map(|s| s.gpus.len() as f64 * s.kind.spec().relative_power)
+            .sum()
+    }
+    /// Paper Eq (2): effective computing power G_j.
+    pub fn effective_power(&self) -> f64 {
+        self.raw_power() * (1.0 - self.bubble_ratio())
+    }
+}
+
+/// A complete 3D-parallel plan.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParallelPlan {
+    pub model_name: String,
+    pub tp_dim: usize,
+    pub groups: Vec<DpGroupPlan>,
+    /// Planner's Eq-1 estimate of per-iteration seconds.
+    pub est_iter_s: f64,
+    /// Wall-clock seconds the planner spent producing this plan.
+    pub planning_s: f64,
+}
+
+impl ParallelPlan {
+    pub fn dp_degree(&self) -> usize {
+        self.groups.len()
+    }
+    pub fn gpu_count(&self) -> usize {
+        self.groups.iter().map(|g| g.gpu_count()).sum()
+    }
+    /// min_j G_j — the solver's z.
+    pub fn min_effective_power(&self) -> f64 {
+        self.groups
+            .iter()
+            .map(|g| g.effective_power())
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Structural sanity: every layer covered exactly once per group,
+    /// embed/head flags on the boundary stages, no GPU reuse.
+    pub fn validate(&self, n_layers: usize) -> anyhow::Result<()> {
+        use std::collections::BTreeSet;
+        let mut seen = BTreeSet::new();
+        anyhow::ensure!(!self.groups.is_empty(), "plan has no DP groups");
+        for (gi, g) in self.groups.iter().enumerate() {
+            anyhow::ensure!(!g.stages.is_empty(), "group {gi} empty");
+            let mut expect = 0usize;
+            for (si, s) in g.stages.iter().enumerate() {
+                anyhow::ensure!(
+                    s.layer_lo == expect,
+                    "group {gi} stage {si}: layers not contiguous ({} != {expect})",
+                    s.layer_lo
+                );
+                anyhow::ensure!(s.layer_hi > s.layer_lo, "group {gi} stage {si}: empty span");
+                anyhow::ensure!(
+                    s.has_embed == (si == 0),
+                    "group {gi} stage {si}: embed flag wrong"
+                );
+                anyhow::ensure!(
+                    s.has_head == (si == g.stages.len() - 1),
+                    "group {gi} stage {si}: head flag wrong"
+                );
+                anyhow::ensure!(!s.gpus.is_empty(), "group {gi} stage {si}: no gpus");
+                for gpu in &s.gpus {
+                    anyhow::ensure!(seen.insert(*gpu), "gpu {gpu:?} assigned twice");
+                }
+                expect = s.layer_hi;
+            }
+            anyhow::ensure!(
+                expect == n_layers,
+                "group {gi} covers {expect} of {n_layers} layers"
+            );
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::str(&self.model_name)),
+            ("tp_dim", Json::num(self.tp_dim as f64)),
+            ("est_iter_s", Json::num(self.est_iter_s)),
+            ("planning_s", Json::num(self.planning_s)),
+            (
+                "groups",
+                Json::Arr(
+                    self.groups
+                        .iter()
+                        .map(|g| {
+                            Json::obj(vec![
+                                ("microbatches", Json::num(g.microbatches as f64)),
+                                (
+                                    "stages",
+                                    Json::Arr(
+                                        g.stages
+                                            .iter()
+                                            .map(|s| {
+                                                Json::obj(vec![
+                                                    ("kind", Json::str(s.kind.name())),
+                                                    ("layers", Json::arr_usize(&[s.layer_lo, s.layer_hi])),
+                                                    (
+                                                        "gpus",
+                                                        Json::Arr(
+                                                            s.gpus
+                                                                .iter()
+                                                                .map(|g| {
+                                                                    Json::arr_usize(&[g.node, g.local])
+                                                                })
+                                                                .collect(),
+                                                        ),
+                                                    ),
+                                                ])
+                                            })
+                                            .collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Compact one-line description, e.g. `tp2 dp2 [H800:32 | A100:16+A100:16]`.
+    pub fn summary(&self) -> String {
+        let gs: Vec<String> = self
+            .groups
+            .iter()
+            .map(|g| {
+                g.stages
+                    .iter()
+                    .map(|s| format!("{}:{}", s.kind, s.n_layers()))
+                    .collect::<Vec<_>>()
+                    .join("+")
+            })
+            .collect();
+        format!("tp{} dp{} [{}]", self.tp_dim, self.dp_degree(), gs.join(" | "))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::GpuKind;
+
+    fn stage(kind: GpuKind, lo: usize, hi: usize, node: usize, first: bool, last: bool) -> StagePlan {
+        StagePlan {
+            gpus: vec![GpuRef { node, local: lo }],
+            kind,
+            layer_lo: lo,
+            layer_hi: hi,
+            has_embed: first,
+            has_head: last,
+        }
+    }
+
+    fn two_group_plan() -> ParallelPlan {
+        ParallelPlan {
+            model_name: "test".into(),
+            tp_dim: 1,
+            groups: vec![
+                DpGroupPlan {
+                    stages: vec![
+                        stage(GpuKind::A100, 0, 2, 0, true, false),
+                        StagePlan {
+                            gpus: vec![GpuRef { node: 0, local: 1 }],
+                            kind: GpuKind::A100,
+                            layer_lo: 2,
+                            layer_hi: 4,
+                            has_embed: false,
+                            has_head: true,
+                        },
+                    ],
+                    microbatches: 8,
+                },
+                DpGroupPlan {
+                    stages: vec![StagePlan {
+                        gpus: vec![GpuRef { node: 1, local: 0 }],
+                        kind: GpuKind::H800,
+                        layer_lo: 0,
+                        layer_hi: 4,
+                        has_embed: true,
+                        has_head: true,
+                    }],
+                    microbatches: 8,
+                },
+            ],
+            est_iter_s: 0.0,
+            planning_s: 0.0,
+        }
+    }
+
+    #[test]
+    fn asymmetric_plan_validates() {
+        two_group_plan().validate(4).unwrap();
+    }
+
+    #[test]
+    fn validate_catches_layer_gap() {
+        let mut p = two_group_plan();
+        p.groups[0].stages[1].layer_lo = 3;
+        assert!(p.validate(4).is_err());
+    }
+
+    #[test]
+    fn validate_catches_gpu_reuse() {
+        let mut p = two_group_plan();
+        p.groups[1].stages[0].gpus = vec![GpuRef { node: 0, local: 0 }];
+        assert!(p.validate(4).is_err());
+    }
+
+    #[test]
+    fn bubble_ratio_formula() {
+        let p = two_group_plan();
+        // P=2, K=8 -> (2-1)/(8+2-1) = 1/9
+        assert!((p.groups[0].bubble_ratio() - 1.0 / 9.0).abs() < 1e-12);
+        // P=1 -> 0
+        assert_eq!(p.groups[1].bubble_ratio(), 0.0);
+    }
+
+    #[test]
+    fn effective_power_penalizes_depth() {
+        let p = two_group_plan();
+        // group0: raw 2.0, eff 2*(8/9); group1: raw 2.0 (H800), eff 2.0
+        assert!(p.groups[0].effective_power() < p.groups[1].effective_power());
+        assert!((p.min_effective_power() - 2.0 * 8.0 / 9.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_and_json() {
+        let p = two_group_plan();
+        assert!(p.summary().contains("dp2"));
+        let j = p.to_json().to_string();
+        assert!(j.contains("H800"));
+    }
+}

@@ -1,0 +1,204 @@
+//! Migration planning between parallelization plans (paper §IV-A/B).
+//!
+//! After a replan, every (layer, TP-shard) unit has an old set of holders
+//! and a new set. AutoHet "tracks the physical locations of model
+//! partitions after each update" — this module diffs the two plans into a
+//! concrete transfer schedule: which units are already in place, which
+//! can be fetched from a surviving peer over RDMA, and which must come
+//! from cloud storage, with the resulting byte volumes and a time
+//! estimate consistent with [`super::timing`].
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::cluster::gpu::Interconnect;
+use crate::modelcfg::ModelCfg;
+use crate::planner::types::ParallelPlan;
+
+/// Where one destination GPU gets one layer from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Source {
+    /// Already resident on the destination node.
+    InPlace,
+    /// Fetched from a surviving holder node over RDMA.
+    Peer(usize),
+    /// No surviving holder: cloud download.
+    Cloud,
+}
+
+/// One planned transfer: layer -> destination node.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Transfer {
+    pub layer: usize,
+    pub dst_node: usize,
+    pub source: Source,
+}
+
+/// The full migration schedule + volume accounting.
+#[derive(Debug, Clone, Default)]
+pub struct MigrationPlan {
+    pub transfers: Vec<Transfer>,
+    pub in_place: usize,
+    pub via_rdma: usize,
+    pub via_cloud: usize,
+}
+
+/// Node set holding each layer under a plan (per DP group, the stage
+/// whose span covers the layer).
+pub fn layer_holders(plan: &ParallelPlan) -> BTreeMap<usize, BTreeSet<usize>> {
+    let mut out: BTreeMap<usize, BTreeSet<usize>> = BTreeMap::new();
+    for g in &plan.groups {
+        for s in &g.stages {
+            for layer in s.layer_lo..s.layer_hi {
+                out.entry(layer).or_default().extend(s.gpus.iter().map(|g| g.node));
+            }
+        }
+    }
+    out
+}
+
+/// Diff `old` -> `new`: a transfer per (layer, destination node) in the
+/// new plan. `surviving(node)` says whether an old holder's storage is
+/// still reachable (false for preempted nodes).
+pub fn plan_migration(
+    old: &ParallelPlan,
+    new: &ParallelPlan,
+    surviving: &dyn Fn(usize) -> bool,
+) -> MigrationPlan {
+    let old_holders = layer_holders(old);
+    let new_holders = layer_holders(new);
+    let mut mp = MigrationPlan::default();
+    for (&layer, dsts) in &new_holders {
+        let olds: Vec<usize> = old_holders
+            .get(&layer)
+            .map(|s| s.iter().copied().filter(|&n| surviving(n)).collect())
+            .unwrap_or_default();
+        for &dst in dsts {
+            let source = if olds.contains(&dst) {
+                mp.in_place += 1;
+                Source::InPlace
+            } else if let Some(&src) = olds.first() {
+                mp.via_rdma += 1;
+                Source::Peer(src)
+            } else {
+                mp.via_cloud += 1;
+                Source::Cloud
+            };
+            mp.transfers.push(Transfer { layer, dst_node: dst, source });
+        }
+    }
+    mp
+}
+
+impl MigrationPlan {
+    /// Byte volumes (per-layer checkpoint = weights + Adam state).
+    pub fn volumes(&self, model: &ModelCfg, tp_dim: usize) -> (f64, f64) {
+        let per_layer = model.ckpt_bytes_layers(1.0) / tp_dim as f64;
+        (
+            self.via_rdma as f64 * per_layer,
+            self.via_cloud as f64 * per_layer,
+        )
+    }
+
+    /// Estimated migration seconds: RDMA transfers parallelize across
+    /// destination nodes; cloud downloads share the front door.
+    pub fn estimate_s(&self, model: &ModelCfg, tp_dim: usize, ic: &Interconnect) -> f64 {
+        let (rdma_bytes, cloud_bytes) = self.volumes(model, tp_dim);
+        let dst_nodes: BTreeSet<usize> =
+            self.transfers.iter().map(|t| t.dst_node).collect();
+        let n = dst_nodes.len().max(1) as f64;
+        rdma_bytes / n / (ic.rdma_gbs * 1e9) + cloud_bytes / (ic.cloud_gbs * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{GpuKind, GpuRef};
+    use crate::planner::types::{DpGroupPlan, StagePlan};
+
+    fn stage(node: usize, lo: usize, hi: usize, last: usize) -> StagePlan {
+        StagePlan {
+            gpus: vec![GpuRef { node, local: 0 }],
+            kind: GpuKind::A100,
+            layer_lo: lo,
+            layer_hi: hi,
+            has_embed: lo == 0,
+            has_head: hi == last,
+        }
+    }
+
+    fn plan(groups: Vec<Vec<(usize, usize, usize)>>, n_layers: usize) -> ParallelPlan {
+        ParallelPlan {
+            model_name: "t".into(),
+            tp_dim: 1,
+            groups: groups
+                .into_iter()
+                .map(|sts| DpGroupPlan {
+                    stages: sts
+                        .into_iter()
+                        .map(|(node, lo, hi)| stage(node, lo, hi, n_layers))
+                        .collect(),
+                    microbatches: 4,
+                })
+                .collect(),
+            est_iter_s: 0.0,
+            planning_s: 0.0,
+        }
+    }
+
+    #[test]
+    fn unchanged_plan_is_all_in_place() {
+        let p = plan(vec![vec![(0, 0, 2), (1, 2, 4)]], 4);
+        let m = plan_migration(&p, &p, &|_| true);
+        assert_eq!(m.via_rdma + m.via_cloud, 0);
+        assert_eq!(m.in_place, 4);
+    }
+
+    #[test]
+    fn shrink_moves_lost_layers_from_peers() {
+        // old: node0 L0-1, node1 L2-3; new: node0 holds all 4 layers.
+        let old = plan(vec![vec![(0, 0, 2), (1, 2, 4)]], 4);
+        let new = plan(vec![vec![(0, 0, 4)]], 4);
+        let m = plan_migration(&old, &new, &|_| true);
+        assert_eq!(m.in_place, 2); // L0-1 already on node0
+        assert_eq!(m.via_rdma, 2); // L2-3 from node1
+        assert_eq!(m.via_cloud, 0);
+        assert!(m
+            .transfers
+            .iter()
+            .any(|t| t.layer == 2 && t.source == Source::Peer(1)));
+    }
+
+    #[test]
+    fn dead_holder_forces_cloud() {
+        let old = plan(vec![vec![(0, 0, 2), (1, 2, 4)]], 4);
+        let new = plan(vec![vec![(0, 0, 4)]], 4);
+        let m = plan_migration(&old, &new, &|n| n != 1); // node1 preempted
+        assert_eq!(m.via_cloud, 2);
+        assert_eq!(m.via_rdma, 0);
+    }
+
+    #[test]
+    fn growth_replicates_to_new_nodes() {
+        // old: node0 alone; new adds a replica on node2.
+        let old = plan(vec![vec![(0, 0, 4)]], 4);
+        let new = plan(vec![vec![(0, 0, 4)], vec![(2, 0, 4)]], 4);
+        let m = plan_migration(&old, &new, &|_| true);
+        assert_eq!(m.in_place, 4);
+        assert_eq!(m.via_rdma, 4); // node2 pulls everything from node0
+    }
+
+    #[test]
+    fn estimate_scales_with_volume() {
+        let old = plan(vec![vec![(0, 0, 4)]], 4);
+        let new = plan(vec![vec![(0, 0, 4)], vec![(2, 0, 4)]], 4);
+        let m = plan_migration(&old, &new, &|_| true);
+        let model = crate::modelcfg::ModelCfg::gpt3_6p7b();
+        let ic = Interconnect::default();
+        let t = m.estimate_s(&model, 1, &ic);
+        assert!(t > 0.0);
+        // cloud path would be much slower for the same volume
+        let m_dead = plan_migration(&old, &new, &|n| n != 0);
+        assert!(m_dead.estimate_s(&model, 1, &ic) > t);
+    }
+}

@@ -1,0 +1,17 @@
+//! Elastic training recovery (paper §IV).
+//!
+//! * [`timing`] — the recovery-time model for the Fig-10 scenarios:
+//!   local-first retrieval (NVMe in parallel per node), RDMA
+//!   redistribution between training nodes, and cloud fetch only for the
+//!   bitmap's cloud-only remainder — vs Varuna's cloud-anchored fetch.
+//! * [`orchestrator`] — the replanning loop: consume a preemption/grant
+//!   event, shrink/grow the cluster, re-run Algorithm 1, and produce a
+//!   migration summary (which layers move where, what must be fetched).
+
+pub mod migration;
+pub mod orchestrator;
+pub mod timing;
+
+pub use migration::{plan_migration, MigrationPlan};
+pub use orchestrator::{ElasticCoordinator, ReplanOutcome};
+pub use timing::{autohet_recovery_s, RecoveryScenario};

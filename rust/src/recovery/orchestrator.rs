@@ -1,0 +1,152 @@
+//! Elastic replanning: react to spot-instance preemptions/grants by
+//! shrinking/growing the cluster and re-running Algorithm 1, then
+//! summarize the migration (the piece the checkpoint manager executes).
+
+use anyhow::Result;
+
+use crate::cluster::{ClusterSpec, GpuKind, PreemptionEvent};
+use crate::modelcfg::ModelCfg;
+use crate::planner::{auto_plan, ParallelPlan, PlanOptions};
+use crate::profile::ProfileDb;
+
+/// Result of handling one availability change.
+#[derive(Debug, Clone)]
+pub struct ReplanOutcome {
+    pub cluster: ClusterSpec,
+    pub plan: Option<ParallelPlan>,
+    /// TP dimension change (old, new) — selects the Fig-6 loading path.
+    pub tp_change: (usize, usize),
+    /// DP group count change.
+    pub dp_change: (usize, usize),
+}
+
+/// Tracks the live cluster + plan and replans on events.
+pub struct ElasticCoordinator {
+    pub model: ModelCfg,
+    pub profile: ProfileDb,
+    pub cluster: ClusterSpec,
+    pub plan: Option<ParallelPlan>,
+    pub opts: PlanOptions,
+    pub replans: usize,
+}
+
+impl ElasticCoordinator {
+    pub fn new(model: ModelCfg, profile: ProfileDb, cluster: ClusterSpec) -> Result<Self> {
+        let opts = PlanOptions::default();
+        let plan = auto_plan(&cluster, &profile, &opts).ok();
+        Ok(ElasticCoordinator { model, profile, cluster, plan, opts, replans: 0 })
+    }
+
+    /// Apply an availability delta for one GPU kind and replan.
+    pub fn handle_event(&mut self, ev: &PreemptionEvent) -> Result<ReplanOutcome> {
+        let old_tp = self.plan.as_ref().map(|p| p.tp_dim).unwrap_or(1);
+        let old_dp = self.plan.as_ref().map(|p| p.dp_degree()).unwrap_or(0);
+
+        let mut nodes = self.cluster.nodes.clone();
+        if ev.delta < 0 {
+            // preempt |delta| GPUs of this kind, last nodes first
+            let mut to_remove = (-ev.delta) as usize;
+            for n in nodes.iter_mut().rev() {
+                if n.kind == ev.kind && to_remove > 0 {
+                    let cut = n.count.min(to_remove);
+                    n.count -= cut;
+                    to_remove -= cut;
+                }
+            }
+            nodes.retain(|n| n.count > 0);
+        } else {
+            // grant: extend an existing node of this kind or add a node
+            let delta = ev.delta as usize;
+            if let Some(n) = nodes.iter_mut().find(|n| n.kind == ev.kind) {
+                n.count += delta;
+            } else {
+                let id = nodes.iter().map(|n| n.node_id).max().map_or(0, |m| m + 1);
+                nodes.push(crate::cluster::NodeSpec { node_id: id, count: delta, kind: ev.kind });
+            }
+        }
+        self.cluster = ClusterSpec { nodes, ..self.cluster.clone() };
+        self.plan = auto_plan(&self.cluster, &self.profile, &self.opts).ok();
+        self.replans += 1;
+
+        let new_tp = self.plan.as_ref().map(|p| p.tp_dim).unwrap_or(1);
+        let new_dp = self.plan.as_ref().map(|p| p.dp_degree()).unwrap_or(0);
+        Ok(ReplanOutcome {
+            cluster: self.cluster.clone(),
+            plan: self.plan.clone(),
+            tp_change: (old_tp, new_tp),
+            dp_change: (old_dp, new_dp),
+        })
+    }
+
+    /// Convenience: preempt `n` GPUs of `kind`.
+    pub fn preempt(&mut self, kind: GpuKind, n: usize) -> Result<ReplanOutcome> {
+        self.handle_event(&PreemptionEvent { at_s: 0.0, kind, delta: -(n as i64) })
+    }
+
+    /// Convenience: grant `n` GPUs of `kind`.
+    pub fn grant(&mut self, kind: GpuKind, n: usize) -> Result<ReplanOutcome> {
+        self.handle_event(&PreemptionEvent { at_s: 0.0, kind, delta: n as i64 })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn coordinator() -> ElasticCoordinator {
+        let model = ModelCfg::bert_large();
+        let profile = ProfileDb::build(
+            &model,
+            &[GpuKind::A100, GpuKind::H800, GpuKind::H20],
+            &[1, 2, 4, 8],
+            1,
+        );
+        let cluster = ClusterSpec::from_counts(&[(4, GpuKind::A100), (4, GpuKind::H800)]);
+        ElasticCoordinator::new(model, profile, cluster).unwrap()
+    }
+
+    #[test]
+    fn preemption_shrinks_and_replans() {
+        let mut c = coordinator();
+        assert!(c.plan.is_some());
+        let out = c.preempt(GpuKind::H800, 4).unwrap();
+        assert_eq!(out.cluster.total_gpus(), 4);
+        let plan = out.plan.unwrap();
+        plan.validate(c.model.n_layers).unwrap();
+        assert!(plan.gpu_count() <= 4);
+        assert_eq!(c.replans, 1);
+    }
+
+    #[test]
+    fn grant_grows_cluster() {
+        let mut c = coordinator();
+        let before_dp = c.plan.as_ref().unwrap().dp_degree();
+        let out = c.grant(GpuKind::H20, 4).unwrap();
+        assert_eq!(out.cluster.total_gpus(), 12);
+        let plan = out.plan.unwrap();
+        assert!(plan.dp_degree() >= before_dp);
+    }
+
+    #[test]
+    fn losing_everything_yields_no_plan() {
+        let mut c = coordinator();
+        c.preempt(GpuKind::A100, 4).unwrap();
+        let out = c.preempt(GpuKind::H800, 4).unwrap();
+        assert!(out.plan.is_none());
+        assert_eq!(out.cluster.total_gpus(), 0);
+    }
+
+    #[test]
+    fn repeated_events_track_dp_changes() {
+        // dp need not move monotonically with capacity (the cost model may
+        // trade DP width for pipeline depth) — but every outcome must be
+        // a valid plan over the surviving GPUs and the change recorded.
+        let mut c = coordinator();
+        let o1 = c.preempt(GpuKind::A100, 2).unwrap();
+        assert_eq!(o1.dp_change.1, o1.plan.as_ref().unwrap().dp_degree());
+        o1.plan.unwrap().validate(c.model.n_layers).unwrap();
+        let o2 = c.grant(GpuKind::A100, 2).unwrap();
+        assert_eq!(o2.dp_change.1, o2.plan.as_ref().unwrap().dp_degree());
+        assert_eq!(o2.cluster.total_gpus(), 8);
+    }
+}

@@ -1,0 +1,123 @@
+//! Recovery-time model (Fig 10).
+//!
+//! AutoHet's accelerated recovery: consult the layer bitmap, load
+//! locally-present checkpoints from NVMe (each node's SSD streams in
+//! parallel), redistribute over RDMA when surviving nodes jointly hold
+//! the full state, and touch the cloud only for units whose every
+//! non-cloud copy died with a preempted node. The paper's Varuna baseline
+//! ([`crate::baselines::varuna`]) instead always pulls from the cloud.
+
+use crate::baselines::varuna::RESTART_OVERHEAD_S;
+use crate::cluster::gpu::Interconnect;
+use crate::modelcfg::ModelCfg;
+
+/// A recovery situation, expressed in bitmap terms.
+#[derive(Debug, Clone)]
+pub struct RecoveryScenario {
+    /// Surviving training nodes that will reload state.
+    pub surviving_nodes: usize,
+    /// Fraction of the checkpoint bytes available on the loading node's
+    /// own tiers (disk/memory).
+    pub local_frac: f64,
+    /// Fraction available on *peer* nodes (fetched over RDMA).
+    pub peer_frac: f64,
+    /// Remainder comes from the cloud: 1 − local − peer.
+    pub dp_groups_new: usize,
+}
+
+impl RecoveryScenario {
+    pub fn cloud_frac(&self) -> f64 {
+        (1.0 - self.local_frac - self.peer_frac).max(0.0)
+    }
+
+    /// Paper scenario A: DP groups fully preempted, survivors hold
+    /// complete replicas locally.
+    pub fn scenario_a(dp_groups_new: usize, surviving_nodes: usize) -> Self {
+        RecoveryScenario { surviving_nodes, local_frac: 1.0, peer_frac: 0.0, dp_groups_new }
+    }
+
+    /// Paper scenario B: a whole node died; part of the state is only in
+    /// the cloud.
+    pub fn scenario_b(local_frac: f64, dp_groups_new: usize, surviving_nodes: usize) -> Self {
+        RecoveryScenario {
+            surviving_nodes,
+            local_frac,
+            peer_frac: 0.0,
+            dp_groups_new,
+        }
+    }
+
+    /// Paper scenario C: capacity *grows*; new nodes pull their state
+    /// from existing nodes over RDMA.
+    pub fn scenario_c(peer_frac: f64, dp_groups_new: usize, surviving_nodes: usize) -> Self {
+        RecoveryScenario {
+            surviving_nodes,
+            local_frac: 1.0 - peer_frac,
+            peer_frac,
+            dp_groups_new,
+        }
+    }
+}
+
+/// AutoHet recovery seconds for a scenario.
+pub fn autohet_recovery_s(model: &ModelCfg, sc: &RecoveryScenario, ic: &Interconnect) -> f64 {
+    let ckpt = model.ckpt_bytes_total();
+    // Local: each surviving node streams its share from NVMe in parallel.
+    let local_bytes_per_node = ckpt * sc.local_frac / sc.surviving_nodes.max(1) as f64;
+    let t_local = local_bytes_per_node / (ic.nvme_gbs * 1e9);
+    // Peer redistribution: RDMA links run in parallel per node pair.
+    let peer_bytes_per_node = ckpt * sc.peer_frac / sc.surviving_nodes.max(1) as f64;
+    let t_peer = peer_bytes_per_node / (ic.rdma_gbs * 1e9)
+        + peer_bytes_per_node / (ic.nvme_gbs * 1e9); // read + send
+    // Cloud remainder: shared front door, volume scales with the number
+    // of DP groups that need the missing pieces.
+    let cloud_bytes = ckpt * sc.cloud_frac() * sc.dp_groups_new.max(1) as f64;
+    let t_cloud = cloud_bytes / (ic.cloud_gbs * 1e9);
+    // Local/peer streams overlap; the cloud tail serializes behind the NIC.
+    t_local.max(t_peer) + t_cloud + RESTART_OVERHEAD_S
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::varuna::varuna_recovery_s;
+
+    #[test]
+    fn scenario_a_much_faster_than_varuna() {
+        // Paper: 4.38× on fully-local recovery.
+        let m = ModelCfg::gpt3_6p7b();
+        let ic = Interconnect::default();
+        let sc = RecoveryScenario::scenario_a(2, 2);
+        let auto = autohet_recovery_s(&m, &sc, &ic);
+        let varuna = varuna_recovery_s(&m, 2, &ic);
+        let speedup = varuna / auto;
+        assert!(speedup > 3.0, "speedup {speedup}");
+    }
+
+    #[test]
+    fn scenario_b_modest_speedup() {
+        // Paper: 1.49× when part must come from the cloud.
+        let m = ModelCfg::gpt3_6p7b();
+        let ic = Interconnect::default();
+        let sc = RecoveryScenario::scenario_b(0.5, 2, 1);
+        let auto = autohet_recovery_s(&m, &sc, &ic);
+        let varuna = varuna_recovery_s(&m, 2, &ic);
+        let speedup = varuna / auto;
+        assert!(speedup > 1.1 && speedup < 3.5, "speedup {speedup}");
+    }
+
+    #[test]
+    fn cloud_frac_clamps() {
+        let sc = RecoveryScenario { surviving_nodes: 1, local_frac: 0.8, peer_frac: 0.4, dp_groups_new: 1 };
+        assert_eq!(sc.cloud_frac(), 0.0);
+    }
+
+    #[test]
+    fn more_survivors_load_faster() {
+        let m = ModelCfg::gpt3_13b();
+        let ic = Interconnect::default();
+        let a = autohet_recovery_s(&m, &RecoveryScenario::scenario_a(2, 1), &ic);
+        let b = autohet_recovery_s(&m, &RecoveryScenario::scenario_a(2, 4), &ic);
+        assert!(b < a);
+    }
+}

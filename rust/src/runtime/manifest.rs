@@ -1,0 +1,194 @@
+//! `manifest.json` loader: artifact IO specs produced by `python/compile/aot.py`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::Json;
+
+/// One tensor's spec in an artifact signature.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub is_i32: bool,
+}
+
+/// One AOT artifact (an HLO-text file + its signature).
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub path: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Model dimensions baked into the artifact set.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ModelDims {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq: usize,
+    pub microbatch: usize,
+    pub n_layers: usize,
+    pub params_count: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub preset: String,
+    pub dims: ModelDims,
+    pub block_sizes: Vec<usize>,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+fn tensor_specs(j: &Json) -> Result<Vec<TensorSpec>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("io spec must be an array"))?
+        .iter()
+        .map(|t| {
+            Ok(TensorSpec {
+                name: t.req("name")?.as_str().unwrap_or_default().to_string(),
+                shape: t
+                    .req("shape")?
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("bad shape"))?
+                    .iter()
+                    .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                    .collect::<Result<_>>()?,
+                is_i32: t.req("dtype")?.as_str() == Some("i32"),
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let j = Json::parse_file(&dir.join("manifest.json"))?;
+        let cfg = j.req("config")?;
+        let need = |k: &str| -> Result<usize> {
+            cfg.req(k)?.as_usize().ok_or_else(|| anyhow!("bad {k}"))
+        };
+        let dims = ModelDims {
+            vocab: need("vocab")?,
+            d_model: need("d_model")?,
+            n_heads: need("n_heads")?,
+            d_ff: need("d_ff")?,
+            seq: need("seq")?,
+            microbatch: need("microbatch")?,
+            n_layers: need("n_layers")?,
+            params_count: need("params_count")?,
+        };
+        let block_sizes = cfg
+            .req("block_sizes")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("bad block_sizes"))?
+            .iter()
+            .filter_map(|v| v.as_usize())
+            .collect();
+        let arts = j.req("artifacts")?;
+        let artifacts = match arts {
+            Json::Obj(kv) => kv
+                .iter()
+                .map(|(name, ent)| {
+                    Ok(ArtifactSpec {
+                        name: name.clone(),
+                        path: dir.join(
+                            ent.req("file")?
+                                .as_str()
+                                .ok_or_else(|| anyhow!("bad file"))?,
+                        ),
+                        inputs: tensor_specs(ent.req("inputs")?)?,
+                        outputs: tensor_specs(ent.req("outputs")?)?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?,
+            _ => return Err(anyhow!("artifacts must be an object")),
+        };
+        Ok(Manifest {
+            preset: j
+                .req("preset")?
+                .as_str()
+                .unwrap_or_default()
+                .to_string(),
+            dims,
+            block_sizes,
+            artifacts,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| anyhow!("artifact `{name}` not in manifest"))
+    }
+
+    /// Greedy binary decomposition of a stage's layer count into available
+    /// block sizes (largest first) — mirrors the paper's Eq 5 and the
+    /// artifact layout.
+    pub fn decompose_layers(&self, n: usize) -> Result<Vec<usize>> {
+        let mut sizes = self.block_sizes.clone();
+        sizes.sort_unstable_by(|a, b| b.cmp(a));
+        let mut out = Vec::new();
+        let mut rem = n;
+        for s in sizes {
+            while rem >= s {
+                out.push(s);
+                rem -= s;
+            }
+        }
+        if rem != 0 {
+            return Err(anyhow!("cannot decompose {n} layers into {:?}", self.block_sizes));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_dir() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny")
+    }
+
+    fn have_artifacts() -> bool {
+        tiny_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_tiny_manifest() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(&tiny_dir()).unwrap();
+        assert_eq!(m.preset, "tiny");
+        assert_eq!(m.dims.d_model, 128);
+        assert!(m.artifact("block2_fwd").is_ok());
+        assert!(m.artifact("nope").is_err());
+        // block2_fwd: 12 params + x in, y + xs out
+        let a = m.artifact("block2_fwd").unwrap();
+        assert_eq!(a.inputs.len(), 13);
+        assert_eq!(a.outputs.len(), 2);
+        assert!(a.path.exists());
+        // tokens are i32
+        let e = m.artifact("embed_fwd").unwrap();
+        assert!(e.inputs.last().unwrap().is_i32);
+    }
+
+    #[test]
+    fn decompose_layers_binary() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(&tiny_dir()).unwrap();
+        assert_eq!(m.decompose_layers(3).unwrap(), vec![2, 1]);
+        assert_eq!(m.decompose_layers(4).unwrap(), vec![4]);
+        assert_eq!(m.decompose_layers(7).unwrap(), vec![4, 2, 1]);
+        assert!(m.decompose_layers(0).unwrap().is_empty());
+    }
+}

@@ -1,0 +1,17 @@
+//! PJRT runtime: load AOT artifacts (HLO text + manifest) and execute
+//! them on the CPU PJRT client. This is the only place the `xla` crate is
+//! touched; Python never runs on this path.
+//!
+//! `PjRtClient` is `Rc`-backed (not `Send`), so device workers are
+//! *logical*: the pipeline executor drives every stage's executable from
+//! one OS thread in 1F1B dependency order. Timing fidelity comes from the
+//! simulator ([`crate::sim`]); this path proves the *numerics* of
+//! asymmetric-PP + layer-wise AllReduce end-to-end.
+
+pub mod engine;
+pub mod manifest;
+pub mod tensor;
+
+pub use engine::Engine;
+pub use manifest::{ArtifactSpec, Manifest, ModelDims, TensorSpec};
+pub use tensor::HostTensor;

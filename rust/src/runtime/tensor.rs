@@ -1,0 +1,159 @@
+//! Host-side tensors moving between the coordinator and PJRT.
+
+use anyhow::{ensure, Result};
+
+/// A dense host tensor (f32 or i32 payload).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Data,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl HostTensor {
+    pub fn zeros(shape: &[usize]) -> HostTensor {
+        HostTensor {
+            shape: shape.to_vec(),
+            data: Data::F32(vec![0.0; shape.iter().product()]),
+        }
+    }
+
+    pub fn from_f32(shape: &[usize], data: Vec<f32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor { shape: shape.to_vec(), data: Data::F32(data) }
+    }
+
+    pub fn from_i32(shape: &[usize], data: Vec<i32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor { shape: shape.to_vec(), data: Data::I32(data) }
+    }
+
+    pub fn scalar_f32(v: f32) -> HostTensor {
+        HostTensor { shape: vec![], data: Data::F32(vec![v]) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn f32s(&self) -> &[f32] {
+        match &self.data {
+            Data::F32(v) => v,
+            Data::I32(_) => panic!("expected f32 tensor"),
+        }
+    }
+
+    pub fn f32s_mut(&mut self) -> &mut [f32] {
+        match &mut self.data {
+            Data::F32(v) => v,
+            Data::I32(_) => panic!("expected f32 tensor"),
+        }
+    }
+
+    pub fn i32s(&self) -> &[i32] {
+        match &self.data {
+            Data::I32(v) => v,
+            Data::F32(_) => panic!("expected i32 tensor"),
+        }
+    }
+
+    /// Slice the leading axis: rows [lo, hi) of a stacked tensor.
+    pub fn slice_axis0(&self, lo: usize, hi: usize) -> Result<HostTensor> {
+        ensure!(!self.shape.is_empty() && hi <= self.shape[0] && lo <= hi, "bad slice");
+        let row: usize = self.shape[1..].iter().product();
+        let mut shape = self.shape.clone();
+        shape[0] = hi - lo;
+        Ok(match &self.data {
+            Data::F32(v) => HostTensor {
+                shape,
+                data: Data::F32(v[lo * row..hi * row].to_vec()),
+            },
+            Data::I32(v) => HostTensor {
+                shape,
+                data: Data::I32(v[lo * row..hi * row].to_vec()),
+            },
+        })
+    }
+
+    /// Concatenate along the leading axis.
+    pub fn concat_axis0(parts: &[&HostTensor]) -> Result<HostTensor> {
+        ensure!(!parts.is_empty(), "empty concat");
+        let tail = &parts[0].shape[1..];
+        let mut shape = parts[0].shape.clone();
+        shape[0] = parts.iter().map(|p| p.shape[0]).sum();
+        for p in parts {
+            ensure!(&p.shape[1..] == tail, "concat shape mismatch");
+        }
+        let mut data = Vec::with_capacity(shape.iter().product());
+        for p in parts {
+            data.extend_from_slice(p.f32s());
+        }
+        Ok(HostTensor { shape, data: Data::F32(data) })
+    }
+
+    /// to XLA literal.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = match &self.data {
+            Data::F32(v) => xla::Literal::vec1(v),
+            Data::I32(v) => xla::Literal::vec1(v),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    /// from XLA literal (dtype inferred).
+    pub fn from_literal(lit: &xla::Literal, shape: &[usize], is_i32: bool) -> Result<HostTensor> {
+        Ok(if is_i32 {
+            HostTensor::from_i32(shape, lit.to_vec::<i32>()?)
+        } else {
+            HostTensor::from_f32(shape, lit.to_vec::<f32>()?)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slice_and_concat_roundtrip() {
+        let t = HostTensor::from_f32(&[4, 3], (0..12).map(|x| x as f32).collect());
+        let a = t.slice_axis0(0, 2).unwrap();
+        let b = t.slice_axis0(2, 4).unwrap();
+        assert_eq!(a.shape, vec![2, 3]);
+        assert_eq!(b.f32s()[0], 6.0);
+        let back = HostTensor::concat_axis0(&[&a, &b]).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = HostTensor::from_f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit, &[2, 2], false).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let t = HostTensor::from_i32(&[3], vec![7, -1, 42]);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit, &[3], true).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn bad_slice_errors() {
+        let t = HostTensor::from_f32(&[2, 2], vec![0.0; 4]);
+        assert!(t.slice_axis0(1, 3).is_err());
+    }
+}

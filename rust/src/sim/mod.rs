@@ -1,0 +1,20 @@
+//! Discrete-event simulator for 3D-parallel training iterations.
+//!
+//! Stands in for the paper's 24-GPU A100/H800/H20 testbed (see DESIGN.md
+//! substitution table). Three parts:
+//!
+//! * [`onef1b`] — an exact event-ordered simulation of the 1F1B schedule
+//!   (dependency recurrence over fwd/bwd ops, per-stage serialization),
+//!   more faithful than the closed-form Eq-1 estimate: it captures
+//!   stragglers inside asymmetric pipelines.
+//! * [`comm`] — ring/hierarchical AllReduce timing, the *layer-wise* ring
+//!   construction for asymmetric DP groups (Observation 2), and the
+//!   asymmetric-TP transpose penalty behind Figure 3 (Observation 1).
+//! * [`runner`] — plan-level simulation producing iteration time,
+//!   tokens/s, bubble ratio and per-GPU utilization for the benches.
+
+pub mod comm;
+pub mod onef1b;
+pub mod runner;
+
+pub use runner::{simulate_plan, IterStats};

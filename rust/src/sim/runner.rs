@@ -1,0 +1,172 @@
+//! Plan-level simulation: run a [`ParallelPlan`] through the 1F1B event
+//! simulator + the communication models and report iteration statistics.
+
+use crate::cluster::gpu::Interconnect;
+use crate::planner::types::{DpGroupPlan, ParallelPlan};
+use crate::profile::ProfileDb;
+
+use super::comm;
+use super::onef1b::{simulate, StageTiming};
+
+/// Simulated iteration statistics.
+#[derive(Debug, Clone)]
+pub struct IterStats {
+    pub iter_s: f64,
+    pub tokens_per_s: f64,
+    /// Slowest group's pipeline makespan (compute phase).
+    pub pipeline_s: f64,
+    /// Gradient-sync tail.
+    pub sync_s: f64,
+    /// Mean idle fraction across all stages of all groups.
+    pub mean_idle_frac: f64,
+    /// Per-group makespans.
+    pub group_s: Vec<f64>,
+}
+
+/// Fixed per-op dispatch overhead (scheduler wakeup, NCCL send/recv
+/// handshake, kernel relaunch) — why very deep pipelines with thin stages
+/// lose to data parallelism in practice.
+pub const DISPATCH_S: f64 = 100e-6;
+
+fn stage_timings(profile: &ProfileDb, g: &DpGroupPlan, ic: &Interconnect) -> Vec<StageTiming> {
+    let m = &profile.model;
+    let act_bytes = 2.0 * (m.microbatch * m.seq * m.hidden) as f64;
+    g.stages
+        .iter()
+        .enumerate()
+        .map(|(si, s)| {
+            let total = profile.stage_time_s(s.kind, s.tp(), s.n_layers());
+            // fwd:bwd = 1:2 of the combined fwd+bwd measurement
+            let fwd = total / 3.0 + DISPATCH_S;
+            let bwd = 2.0 * total / 3.0 + DISPATCH_S;
+            let p2p = if si + 1 < g.stages.len() {
+                let next = &g.stages[si + 1];
+                let bw = if s.gpus[0].node == next.gpus[0].node {
+                    s.kind.spec().nvlink_gbs * 1e9
+                } else {
+                    ic.rdma_gbs * 1e9
+                };
+                act_bytes / bw + ic.rdma_latency_s
+            } else {
+                0.0
+            };
+            StageTiming { fwd_s: fwd, bwd_s: bwd, p2p_s: p2p }
+        })
+        .collect()
+}
+
+/// Simulate one training iteration of `plan`.
+pub fn simulate_plan(profile: &ProfileDb, plan: &ParallelPlan) -> IterStats {
+    let ic = Interconnect::default();
+    let m = &profile.model;
+
+    let mut group_s = Vec::with_capacity(plan.groups.len());
+    let mut idle_sum = 0.0;
+    let mut idle_n = 0usize;
+    for g in &plan.groups {
+        let timings = stage_timings(profile, g, &ic);
+        let sim = simulate(&timings, g.microbatches);
+        group_s.push(sim.makespan_s);
+        for f in &sim.idle_frac {
+            idle_sum += f;
+            idle_n += 1;
+        }
+    }
+    let pipeline_s = group_s.iter().fold(0.0f64, |a, &b| a.max(b));
+
+    // Layer-wise sync across DP groups.
+    let sync_s = if plan.groups.len() > 1 {
+        let holders: Vec<Vec<usize>> = (0..m.n_layers)
+            .map(|layer| {
+                plan.groups
+                    .iter()
+                    .filter_map(|g| {
+                        g.stages
+                            .iter()
+                            .find(|s| s.layer_lo <= layer && layer < s.layer_hi)
+                            .map(|s| s.gpus[0].node)
+                    })
+                    .collect()
+            })
+            .collect();
+        let nvlink = plan.groups[0].stages[0].kind.spec().nvlink_gbs;
+        let lw = comm::layerwise_sync_s(m, plan.tp_dim, &holders, nvlink, &ic);
+        // embeddings + head ride the same inter-node path
+        let emb_bytes =
+            2.0 * (m.embed_params() + (m.hidden * m.vocab) as f64) / plan.tp_dim as f64;
+        lw + comm::ring_allreduce_s(emb_bytes, plan.groups.len(), ic.rdma_gbs, ic.rdma_latency_s)
+    } else {
+        0.0
+    };
+
+    let iter_s = pipeline_s + sync_s;
+    IterStats {
+        iter_s,
+        tokens_per_s: total_tokens(plan, m) / iter_s,
+        pipeline_s,
+        sync_s,
+        mean_idle_frac: if idle_n > 0 { idle_sum / idle_n as f64 } else { 0.0 },
+        group_s,
+    }
+}
+
+/// Tokens processed per iteration across all groups (groups each run
+/// `microbatches` microbatches).
+fn total_tokens(plan: &ParallelPlan, m: &crate::modelcfg::ModelCfg) -> f64 {
+    plan.groups
+        .iter()
+        .map(|g| (g.microbatches * m.microbatch * m.seq) as f64)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{ClusterSpec, GpuKind};
+    use crate::modelcfg::ModelCfg;
+    use crate::planner::{auto_plan, PlanOptions};
+
+    fn profile(model: &ModelCfg) -> ProfileDb {
+        ProfileDb::build(model, &[GpuKind::A100, GpuKind::H800, GpuKind::H20], &[1, 2, 4, 8], 1)
+    }
+
+    #[test]
+    fn simulated_close_to_eq1_estimate() {
+        let model = ModelCfg::gpt3_6p7b();
+        let p = profile(&model);
+        let cluster = ClusterSpec::from_counts(&[(8, GpuKind::A100), (8, GpuKind::H800)]);
+        let plan = auto_plan(&cluster, &p, &PlanOptions::default()).unwrap();
+        let stats = simulate_plan(&p, &plan);
+        // The event sim and the closed form should agree within 2×
+        // (closed form ignores drain asymmetry).
+        let ratio = stats.iter_s / plan.est_iter_s;
+        assert!(ratio > 0.5 && ratio < 2.0, "{ratio}");
+    }
+
+    #[test]
+    fn tokens_accounting() {
+        let model = ModelCfg::bert_large();
+        let p = profile(&model);
+        let cluster = ClusterSpec::from_counts(&[(4, GpuKind::A100)]);
+        let plan = auto_plan(&cluster, &p, &PlanOptions::default()).unwrap();
+        let stats = simulate_plan(&p, &plan);
+        let toks: f64 = plan
+            .groups
+            .iter()
+            .map(|g| (g.microbatches * model.microbatch * model.seq) as f64)
+            .sum();
+        assert!((stats.tokens_per_s * stats.iter_s - toks).abs() / toks < 1e-9);
+    }
+
+    #[test]
+    fn sync_cost_visible_with_multiple_groups() {
+        let model = ModelCfg::bert_large();
+        let p = profile(&model);
+        let cluster = ClusterSpec::from_counts(&[(2, GpuKind::A100), (2, GpuKind::A100)]);
+        let plan = auto_plan(&cluster, &p, &PlanOptions::default()).unwrap();
+        if plan.groups.len() > 1 {
+            let stats = simulate_plan(&p, &plan);
+            assert!(stats.sync_s > 0.0);
+        }
+    }
+}

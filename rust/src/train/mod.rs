@@ -1,0 +1,10 @@
+//! Training substrate for the real (PJRT-backed) path: parameter store,
+//! Adam optimizer, and the synthetic corpus generator.
+
+pub mod data;
+pub mod optimizer;
+pub mod params;
+
+pub use data::MarkovCorpus;
+pub use optimizer::{Adam, AdamConfig};
+pub use params::{ModelParams, BLOCK_PARAM_NAMES};

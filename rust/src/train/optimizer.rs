@@ -1,0 +1,151 @@
+//! Adam optimizer (decoupled per-tensor moments), run by the Rust
+//! coordinator — the optimizer never lives in an artifact so gradient
+//! re-sharding on recovery is a pure data move.
+
+use super::params::ModelParams;
+
+#[derive(Debug, Clone, Copy)]
+pub struct AdamConfig {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    pub grad_clip: Option<f32>,
+}
+
+impl Default for AdamConfig {
+    fn default() -> Self {
+        AdamConfig {
+            lr: 3e-4,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay: 0.0,
+            grad_clip: Some(1.0),
+        }
+    }
+}
+
+/// Adam state: first/second moments mirroring the parameter shapes.
+#[derive(Debug, Clone)]
+pub struct Adam {
+    pub cfg: AdamConfig,
+    pub step: u64,
+    pub m: ModelParams,
+    pub v: ModelParams,
+}
+
+impl Adam {
+    pub fn new(cfg: AdamConfig, params: &ModelParams) -> Adam {
+        Adam { cfg, step: 0, m: params.zeros_like(), v: params.zeros_like() }
+    }
+
+    /// Global gradient-norm clipping; returns the pre-clip norm.
+    pub fn clip_grads(&self, grads: &mut ModelParams) -> f32 {
+        let norm2: f64 = grads
+            .tensors()
+            .iter()
+            .flat_map(|(_, t)| t.f32s().iter().map(|&g| (g as f64) * (g as f64)))
+            .sum();
+        let norm = norm2.sqrt() as f32;
+        if let Some(max) = self.cfg.grad_clip {
+            if norm > max {
+                let scale = max / norm;
+                for (_, t) in grads.tensors_mut() {
+                    for g in t.f32s_mut() {
+                        *g *= scale;
+                    }
+                }
+            }
+        }
+        norm
+    }
+
+    /// One Adam step over every tensor.
+    pub fn update(&mut self, params: &mut ModelParams, grads: &ModelParams) {
+        self.step += 1;
+        let c = self.cfg;
+        let t = self.step as f32;
+        let bc1 = 1.0 - c.beta1.powf(t);
+        let bc2 = 1.0 - c.beta2.powf(t);
+        let pts = params.tensors_mut();
+        let mts = self.m.tensors_mut();
+        let vts = self.v.tensors_mut();
+        let gts = grads.tensors();
+        for (((( _, p), (_, m)), (_, v)), (_, g)) in
+            pts.into_iter().zip(mts).zip(vts).zip(gts)
+        {
+            let (p, m, v, g) = (p.f32s_mut(), m.f32s_mut(), v.f32s_mut(), g.f32s());
+            for i in 0..p.len() {
+                m[i] = c.beta1 * m[i] + (1.0 - c.beta1) * g[i];
+                v[i] = c.beta2 * v[i] + (1.0 - c.beta2) * g[i] * g[i];
+                let mhat = m[i] / bc1;
+                let vhat = v[i] / bc2;
+                p[i] -= c.lr * (mhat / (vhat.sqrt() + c.eps) + c.weight_decay * p[i]);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ModelDims;
+
+    fn dims() -> ModelDims {
+        ModelDims {
+            vocab: 16, d_model: 8, n_heads: 2, d_ff: 16,
+            seq: 4, microbatch: 1, n_layers: 2, params_count: 0,
+        }
+    }
+
+    #[test]
+    fn descends_a_quadratic() {
+        // minimize 0.5·p² per coordinate: grad = p; Adam should shrink all.
+        let d = dims();
+        let mut p = ModelParams::init(&d, 3);
+        let mut adam = Adam::new(
+            AdamConfig { lr: 0.05, grad_clip: None, ..Default::default() },
+            &p,
+        );
+        let norm0: f32 = p.tensors().iter().flat_map(|(_, t)| t.f32s()).map(|x| x * x).sum();
+        for _ in 0..200 {
+            let grads = p.clone(); // grad of 0.5 p² is p
+            adam.update(&mut p, &grads);
+        }
+        let norm1: f32 = p.tensors().iter().flat_map(|(_, t)| t.f32s()).map(|x| x * x).sum();
+        assert!(norm1 < norm0 * 0.05, "{norm0} -> {norm1}");
+    }
+
+    #[test]
+    fn clip_scales_large_gradients() {
+        let d = dims();
+        let p = ModelParams::init(&d, 1);
+        let adam = Adam::new(AdamConfig { grad_clip: Some(1.0), ..Default::default() }, &p);
+        let mut g = p.zeros_like();
+        g.w_out.f32s_mut()[0] = 100.0;
+        let norm = adam.clip_grads(&mut g);
+        assert!((norm - 100.0).abs() < 1e-3);
+        let after: f64 = g
+            .tensors()
+            .iter()
+            .flat_map(|(_, t)| t.f32s().iter().map(|&x| (x as f64) * (x as f64)))
+            .sum();
+        assert!((after.sqrt() - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn identical_updates_keep_replicas_synced() {
+        let d = dims();
+        let mut pa = ModelParams::init(&d, 5);
+        let mut pb = pa.clone();
+        let mut aa = Adam::new(AdamConfig::default(), &pa);
+        let mut ab = Adam::new(AdamConfig::default(), &pb);
+        let mut g = pa.zeros_like();
+        g.tok_emb.f32s_mut().iter_mut().for_each(|x| *x = 0.01);
+        aa.update(&mut pa, &g);
+        ab.update(&mut pb, &g);
+        assert_eq!(pa.max_abs_diff(&pb), 0.0);
+    }
+}

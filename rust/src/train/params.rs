@@ -1,0 +1,202 @@
+//! Full-model parameter store matching the artifact signatures exactly
+//! (see `python/compile/model.py` — embed tables, 12 stacked block
+//! arrays, head). Each DP group owns a replica; pipeline stages feed
+//! layer *slices* of the stacked arrays to the block executables.
+
+use anyhow::Result;
+
+use crate::runtime::{HostTensor, ModelDims};
+use crate::util::rng::Rng;
+
+/// Stacked block-parameter names in artifact input order.
+pub const BLOCK_PARAM_NAMES: [&str; 12] = [
+    "ln1_g", "ln1_b", "wqkv", "bqkv", "wo", "bo", "ln2_g", "ln2_b", "w1", "b1", "w2", "b2",
+];
+
+/// Shape of stacked block param `i` for `l` layers.
+pub fn block_param_shape(dims: &ModelDims, i: usize, l: usize) -> Vec<usize> {
+    let d = dims.d_model;
+    let f = dims.d_ff;
+    match BLOCK_PARAM_NAMES[i] {
+        "ln1_g" | "ln1_b" | "bo" | "ln2_g" | "ln2_b" | "b2" => vec![l, d],
+        "wqkv" => vec![l, d, 3 * d],
+        "bqkv" => vec![l, 3 * d],
+        "wo" => vec![l, d, d],
+        "w1" => vec![l, d, f],
+        "b1" => vec![l, f],
+        "w2" => vec![l, f, d],
+        _ => unreachable!(),
+    }
+}
+
+/// A complete model replica (or a same-shaped gradient accumulator).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelParams {
+    pub tok_emb: HostTensor,
+    pub pos_emb: HostTensor,
+    /// 12 stacked arrays, leading axis = n_layers.
+    pub blocks: Vec<HostTensor>,
+    pub lnf_g: HostTensor,
+    pub lnf_b: HostTensor,
+    pub w_out: HostTensor,
+}
+
+impl ModelParams {
+    /// Gaussian(0, 0.02) init; LN gains 1, biases 0.
+    pub fn init(dims: &ModelDims, seed: u64) -> ModelParams {
+        let mut rng = Rng::new(seed);
+        let d = dims.d_model;
+        let normal = |rng: &mut Rng, shape: &[usize]| {
+            let mut v = vec![0.0f32; shape.iter().product()];
+            rng.fill_normal_f32(&mut v, 0.02);
+            HostTensor::from_f32(shape, v)
+        };
+        let blocks = (0..12)
+            .map(|i| {
+                let shape = block_param_shape(dims, i, dims.n_layers);
+                match BLOCK_PARAM_NAMES[i] {
+                    "ln1_g" | "ln2_g" => HostTensor::from_f32(
+                        &shape,
+                        vec![1.0; shape.iter().product()],
+                    ),
+                    "ln1_b" | "ln2_b" | "bqkv" | "bo" | "b1" | "b2" => {
+                        HostTensor::zeros(&shape)
+                    }
+                    _ => normal(&mut rng, &shape),
+                }
+            })
+            .collect();
+        ModelParams {
+            tok_emb: normal(&mut rng, &[dims.vocab, d]),
+            pos_emb: normal(&mut rng, &[dims.seq, d]),
+            blocks,
+            lnf_g: HostTensor::from_f32(&[d], vec![1.0; d]),
+            lnf_b: HostTensor::zeros(&[d]),
+            w_out: normal(&mut rng, &[d, dims.vocab]),
+        }
+    }
+
+    /// Same shapes, all zeros (gradient accumulators, Adam moments).
+    pub fn zeros_like(&self) -> ModelParams {
+        let z = |t: &HostTensor| HostTensor::zeros(&t.shape);
+        ModelParams {
+            tok_emb: z(&self.tok_emb),
+            pos_emb: z(&self.pos_emb),
+            blocks: self.blocks.iter().map(z).collect(),
+            lnf_g: z(&self.lnf_g),
+            lnf_b: z(&self.lnf_b),
+            w_out: z(&self.w_out),
+        }
+    }
+
+    /// Block params sliced to layer span [lo, hi) — artifact input order.
+    pub fn block_slices(&self, lo: usize, hi: usize) -> Result<Vec<HostTensor>> {
+        self.blocks.iter().map(|b| b.slice_axis0(lo, hi)).collect()
+    }
+
+    /// All tensors with stable names (checkpointing, Adam traversal).
+    pub fn tensors(&self) -> Vec<(String, &HostTensor)> {
+        let mut v = vec![
+            ("tok_emb".to_string(), &self.tok_emb),
+            ("pos_emb".to_string(), &self.pos_emb),
+        ];
+        for (i, b) in self.blocks.iter().enumerate() {
+            v.push((BLOCK_PARAM_NAMES[i].to_string(), b));
+        }
+        v.push(("lnf_g".to_string(), &self.lnf_g));
+        v.push(("lnf_b".to_string(), &self.lnf_b));
+        v.push(("w_out".to_string(), &self.w_out));
+        v
+    }
+
+    pub fn tensors_mut(&mut self) -> Vec<(&'static str, &mut HostTensor)> {
+        let mut v: Vec<(&'static str, &mut HostTensor)> = vec![
+            ("tok_emb", &mut self.tok_emb),
+            ("pos_emb", &mut self.pos_emb),
+        ];
+        for (i, b) in self.blocks.iter_mut().enumerate() {
+            v.push((BLOCK_PARAM_NAMES[i], b));
+        }
+        v.push(("lnf_g", &mut self.lnf_g));
+        v.push(("lnf_b", &mut self.lnf_b));
+        v.push(("w_out", &mut self.w_out));
+        v
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.tensors().iter().map(|(_, t)| t.len()).sum()
+    }
+
+    /// Max |a - b| across all tensors (replica-consistency checks).
+    pub fn max_abs_diff(&self, other: &ModelParams) -> f32 {
+        self.tensors()
+            .iter()
+            .zip(other.tensors())
+            .flat_map(|((_, a), (_, b))| {
+                a.f32s().iter().zip(b.f32s()).map(|(x, y)| (x - y).abs())
+            })
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> ModelDims {
+        ModelDims {
+            vocab: 64,
+            d_model: 16,
+            n_heads: 2,
+            d_ff: 32,
+            seq: 8,
+            microbatch: 1,
+            n_layers: 4,
+            params_count: 0,
+        }
+    }
+
+    #[test]
+    fn init_is_deterministic() {
+        let a = ModelParams::init(&dims(), 7);
+        let b = ModelParams::init(&dims(), 7);
+        assert_eq!(a.max_abs_diff(&b), 0.0);
+        let c = ModelParams::init(&dims(), 8);
+        assert!(a.max_abs_diff(&c) > 0.0);
+    }
+
+    #[test]
+    fn ln_gains_are_one() {
+        let p = ModelParams::init(&dims(), 1);
+        assert!(p.blocks[0].f32s().iter().all(|&x| x == 1.0)); // ln1_g
+        assert!(p.blocks[1].f32s().iter().all(|&x| x == 0.0)); // ln1_b
+        assert!(p.lnf_g.f32s().iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn param_count_matches_formula() {
+        let d = dims();
+        let p = ModelParams::init(&d, 0);
+        // embed + head
+        let emb = d.vocab * d.d_model + d.seq * d.d_model;
+        let head = 2 * d.d_model + d.d_model * d.vocab;
+        // per layer: 2 ln (2d each) + qkv (3d²+3d) + wo (d²+d) + mlp (2df+f+d)
+        let per = 4 * d.d_model
+            + 3 * d.d_model * d.d_model
+            + 3 * d.d_model
+            + d.d_model * d.d_model
+            + d.d_model
+            + 2 * d.d_model * d.d_ff
+            + d.d_ff
+            + d.d_model;
+        assert_eq!(p.num_params(), emb + head + d.n_layers * per);
+    }
+
+    #[test]
+    fn block_slices_have_span_shapes() {
+        let p = ModelParams::init(&dims(), 0);
+        let s = p.block_slices(1, 3).unwrap();
+        assert_eq!(s.len(), 12);
+        assert_eq!(s[2].shape, vec![2, 16, 48]); // wqkv [2, d, 3d]
+    }
+}

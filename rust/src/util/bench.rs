@@ -1,0 +1,125 @@
+//! Minimal measurement harness for the `cargo bench` targets (no
+//! `criterion` in the vendor set): warmup + timed samples, mean/std/p50,
+//! and a fixed-width table printer shared by every figure bench so output
+//! lines diff cleanly against EXPERIMENTS.md.
+
+use std::time::Instant;
+
+use super::stats::{percentile, Summary};
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples_s: Vec<f64>,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub p50_s: f64,
+}
+
+/// Time `f` for `samples` iterations after `warmup` throwaways.
+pub fn time_fn<F: FnMut()>(name: &str, warmup: usize, samples: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut s = Summary::new();
+    let mut xs = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f();
+        let dt = t0.elapsed().as_secs_f64();
+        s.add(dt);
+        xs.push(dt);
+    }
+    BenchResult {
+        name: name.to_string(),
+        mean_s: s.mean(),
+        std_s: s.std(),
+        p50_s: percentile(&xs, 50.0),
+        samples_s: xs,
+    }
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} mean {:>10.4} ms   p50 {:>10.4} ms   std {:>8.4} ms   n={}",
+            self.name,
+            self.mean_s * 1e3,
+            self.p50_s * 1e3,
+            self.std_s * 1e3,
+            self.samples_s.len()
+        )
+    }
+}
+
+/// Fixed-width table printer for figure benches.
+pub struct Table {
+    headers: Vec<String>,
+    widths: Vec<usize>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            widths: headers.iter().map(|h| h.len().max(8)).collect(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        for (w, c) in self.widths.iter_mut().zip(cells) {
+            *w = (*w).max(c.len());
+        }
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self, title: &str) {
+        println!("\n== {title} ==");
+        let line: Vec<String> = self
+            .headers
+            .iter()
+            .zip(&self.widths)
+            .map(|(h, w)| format!("{h:<w$}"))
+            .collect();
+        println!("{}", line.join("  "));
+        println!("{}", "-".repeat(line.join("  ").len()));
+        for r in &self.rows {
+            let line: Vec<String> = r
+                .iter()
+                .zip(&self.widths)
+                .map(|(c, w)| format!("{c:<w$}"))
+                .collect();
+            println!("{}", line.join("  "));
+        }
+    }
+}
+
+/// `fmt_f(x, 2)` — fixed decimals without pulling in format machinery everywhere.
+pub fn f(x: f64, decimals: usize) -> String {
+    format!("{x:.decimals$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_fn_measures() {
+        let r = time_fn("noop", 1, 5, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(r.samples_s.len(), 5);
+        assert!(r.mean_s >= 0.0 && r.mean_s < 0.1);
+    }
+
+    #[test]
+    fn table_tracks_widths() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["longer-cell".into(), "x".into()]);
+        assert!(t.widths[0] >= "longer-cell".len());
+        t.print("test"); // shouldn't panic
+    }
+}

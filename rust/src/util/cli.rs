@@ -1,0 +1,119 @@
+//! Tiny CLI argument parser (no `clap` in the vendor set).
+//!
+//! Supports `subcommand --key value --flag pos1 pos2` with typed getters
+//! and a usage-error path the `autohet` binary surfaces to the user.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+pub const FLAG_SET: &str = "\u{1}"; // marker for value-less flags
+
+impl Args {
+    /// Parse from an iterator of arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(it: I) -> Args {
+        let mut a = Args::default();
+        let mut it = it.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    a.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    a.flags.insert(name.to_string(), v);
+                } else {
+                    a.flags.insert(name.to_string(), FLAG_SET.to_string());
+                }
+            } else if a.subcommand.is_none() && a.positional.is_empty() {
+                a.subcommand = Some(tok);
+            } else {
+                a.positional.push(tok);
+            }
+        }
+        a
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str()).filter(|s| *s != FLAG_SET)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_positionals() {
+        let a = parse("plan cluster.json extra");
+        assert_eq!(a.subcommand.as_deref(), Some("plan"));
+        assert_eq!(a.positional, vec!["cluster.json", "extra"]);
+    }
+
+    #[test]
+    fn key_value_both_styles() {
+        let a = parse("train --steps 10 --model=gpt3_6p7b");
+        assert_eq!(a.get_usize("steps", 0), 10);
+        assert_eq!(a.get("model"), Some("gpt3_6p7b"));
+    }
+
+    #[test]
+    fn bare_flag_then_positional_binds_value() {
+        // `--verbose plan` — value-less only at end or before another --flag
+        let a = parse("run --dry-run --seed 7");
+        assert!(a.has("dry-run"));
+        assert_eq!(a.get("dry-run"), None); // marker, no value
+        assert_eq!(a.get_u64("seed", 0), 7);
+    }
+
+    #[test]
+    fn defaults_kick_in() {
+        let a = parse("bench");
+        assert_eq!(a.get_usize("iters", 5), 5);
+        assert_eq!(a.get_f64("bw", 1.5), 1.5);
+        assert_eq!(a.get_str("out", "x.json"), "x.json");
+    }
+
+    #[test]
+    fn negative_value_binds() {
+        let a = parse("x --delta -3");
+        // "-3" doesn't start with --, binds as value
+        assert_eq!(a.get("delta"), Some("-3"));
+    }
+}

@@ -1,0 +1,16 @@
+//! Self-contained utility substrate.
+//!
+//! The offline vendor set ships only the `xla` crate's dependency closure,
+//! so the conveniences a production coordinator would pull from crates.io
+//! (`serde_json`, `clap`, `rand`, `env_logger`, `criterion`) are built
+//! here from scratch: [`json`] a full JSON parser/serializer, [`rng`] a
+//! SplitMix64/xoshiro PRNG with Gaussian sampling, [`cli`] a flag parser,
+//! [`logging`] a leveled logger, and [`bench`] a measurement harness used
+//! by the `cargo bench` targets.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,186 @@
+//! End-to-end integration over the REAL artifact path: the asymmetric
+//! pipeline executor's gradients must equal the monolith oracle's, DP
+//! replicas must stay bit-identical through layer-wise AllReduce, and
+//! the loss must actually go down.
+//!
+//! All tests skip (with a notice) until `make artifacts` has produced
+//! `artifacts/tiny/`.
+
+use std::path::{Path, PathBuf};
+
+use autohet::pipeline::{ExecTopology, PipelineTrainer};
+use autohet::runtime::{Engine, HostTensor};
+use autohet::train::{AdamConfig, MarkovCorpus, ModelParams};
+
+fn tiny_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny")
+}
+
+fn engine() -> Option<Engine> {
+    if !tiny_dir().join("manifest.json").exists() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return None;
+    }
+    Some(Engine::load(&tiny_dir()).unwrap())
+}
+
+fn batch(engine: &Engine, seed: u64) -> (HostTensor, HostTensor) {
+    let d = engine.manifest.dims;
+    let mut corpus = MarkovCorpus::new(d.vocab, 4, seed);
+    let (toks, tgts) = corpus.next_batch(d.microbatch, d.seq);
+    (
+        HostTensor::from_i32(&[d.microbatch, d.seq], toks),
+        HostTensor::from_i32(&[d.microbatch, d.seq], tgts),
+    )
+}
+
+/// Run the monolith_grad artifact for reference grads.
+fn monolith_grads(
+    e: &Engine,
+    p: &ModelParams,
+    tokens: &HostTensor,
+    targets: &HostTensor,
+) -> (f64, Vec<HostTensor>) {
+    let mut ins: Vec<&HostTensor> = vec![&p.tok_emb, &p.pos_emb];
+    for b in &p.blocks {
+        ins.push(b);
+    }
+    ins.push(&p.lnf_g);
+    ins.push(&p.lnf_b);
+    ins.push(&p.w_out);
+    ins.push(tokens);
+    ins.push(targets);
+    let mut out = e.exec("monolith_grad", &ins).unwrap();
+    let loss = out.remove(0).f32s()[0] as f64;
+    (loss, out)
+}
+
+fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    let mut worst = 0.0f32;
+    for (x, y) in a.iter().zip(b) {
+        worst = worst.max((x - y).abs());
+    }
+    assert!(worst <= tol, "{what}: max abs diff {worst} > {tol}");
+}
+
+#[test]
+fn pipeline_gradients_equal_monolith_for_any_split() {
+    let Some(e) = engine() else { return };
+    let (tokens, targets) = batch(&e, 42);
+
+    for split in [vec![vec![4]], vec![vec![2, 2]], vec![vec![1, 3]], vec![vec![1, 1, 2]]] {
+        let topo = ExecTopology::from_layer_splits(&split);
+        let tr =
+            PipelineTrainer::new(&e, &topo, 1, AdamConfig::default(), 7).unwrap();
+        let (loss, grads) = tr
+            .accumulate_grads(0, &[(tokens.clone(), targets.clone())])
+            .unwrap();
+        let (loss_ref, gref) = monolith_grads(&e, &tr.groups[0].params, &tokens, &targets);
+        assert!((loss - loss_ref).abs() < 1e-4, "loss {loss} vs {loss_ref} ({split:?})");
+        // gref order: d_tok, d_pos, 12 block grads, lnf_g, lnf_b, w_out
+        assert_close(grads.tok_emb.f32s(), gref[0].f32s(), 2e-4, "tok_emb");
+        assert_close(grads.pos_emb.f32s(), gref[1].f32s(), 2e-4, "pos_emb");
+        for i in 0..12 {
+            assert_close(
+                grads.blocks[i].f32s(),
+                gref[2 + i].f32s(),
+                3e-4,
+                &format!("block[{i}] split {split:?}"),
+            );
+        }
+        assert_close(grads.lnf_g.f32s(), gref[14].f32s(), 2e-4, "lnf_g");
+        assert_close(grads.lnf_b.f32s(), gref[15].f32s(), 2e-4, "lnf_b");
+        assert_close(grads.w_out.f32s(), gref[16].f32s(), 2e-4, "w_out");
+    }
+}
+
+#[test]
+fn asymmetric_dp_groups_stay_synced_and_learn() {
+    let Some(e) = engine() else { return };
+    let d = e.manifest.dims;
+    // Asymmetric: group 0 = 2-stage pipeline [2,2]; group 1 = single stage [4]
+    let topo = ExecTopology::from_layer_splits(&[vec![2, 2], vec![4]]);
+    let k = 2;
+    let mut tr = PipelineTrainer::new(
+        &e,
+        &topo,
+        k,
+        AdamConfig { lr: 2e-3, ..Default::default() },
+        1,
+    )
+    .unwrap();
+    let mut corpus = MarkovCorpus::new(d.vocab, 4, 5);
+
+    let mut first = None;
+    let mut last = 0.0;
+    for step in 0..30 {
+        let batches: Vec<Vec<(HostTensor, HostTensor)>> = (0..2)
+            .map(|_| {
+                (0..k)
+                    .map(|_| {
+                        let (t, g) = corpus.next_batch(d.microbatch, d.seq);
+                        (
+                            HostTensor::from_i32(&[d.microbatch, d.seq], t),
+                            HostTensor::from_i32(&[d.microbatch, d.seq], g),
+                        )
+                    })
+                    .collect()
+            })
+            .collect();
+        let stats = tr.step(&batches).unwrap();
+        if step == 0 {
+            first = Some(stats.loss);
+        }
+        last = stats.loss;
+        assert!(tr.replicas_synced(1e-5), "replicas diverged at step {step}");
+    }
+    let first = first.unwrap();
+    assert!(
+        last < first - 0.3,
+        "loss did not drop: {first} -> {last} (floor ln4 ≈ 1.39)"
+    );
+}
+
+#[test]
+fn eval_loss_matches_training_loss_at_start() {
+    let Some(e) = engine() else { return };
+    let topo = ExecTopology::single(e.manifest.dims.n_layers);
+    let tr = PipelineTrainer::new(&e, &topo, 1, AdamConfig::default(), 3).unwrap();
+    let (tokens, targets) = batch(&e, 9);
+    let ev = tr.eval_loss(&[(tokens.clone(), targets.clone())]).unwrap();
+    let (tl, _) = tr.accumulate_grads(0, &[(tokens, targets)]).unwrap();
+    assert!((ev - tl).abs() < 1e-5, "{ev} vs {tl}");
+    // at init, loss ≈ ln(vocab)
+    let expect = (e.manifest.dims.vocab as f64).ln();
+    assert!((ev - expect).abs() < 0.7, "{ev} vs ln(V)={expect}");
+}
+
+#[test]
+fn binary_decomposition_stage_matches_direct_block() {
+    // a 3-layer stage (2+1 blocks) must equal a 1+1+1 chain numerically
+    let Some(e) = engine() else { return };
+    let (tokens, targets) = batch(&e, 11);
+    let t_a = PipelineTrainer::new(
+        &e,
+        &ExecTopology::from_layer_splits(&[vec![3, 1]]),
+        1,
+        AdamConfig::default(),
+        13,
+    )
+    .unwrap();
+    let t_b = PipelineTrainer::new(
+        &e,
+        &ExecTopology::from_layer_splits(&[vec![1, 1, 1, 1]]),
+        1,
+        AdamConfig::default(),
+        13,
+    )
+    .unwrap();
+    let (la, ga) = t_a.accumulate_grads(0, &[(tokens.clone(), targets.clone())]).unwrap();
+    let (lb, gb) = t_b.accumulate_grads(0, &[(tokens, targets)]).unwrap();
+    assert!((la - lb).abs() < 1e-5);
+    for i in 0..12 {
+        assert_close(ga.blocks[i].f32s(), gb.blocks[i].f32s(), 2e-4, "blocks");
+    }
+}

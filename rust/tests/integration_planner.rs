@@ -1,0 +1,119 @@
+//! Planner ↔ simulator integration: AutoHet's plans must beat the
+//! baselines on heterogeneous clusters (the paper's headline claims,
+//! qualitatively), and planning must respect structural invariants.
+
+use autohet::baselines::megatron::plan_megatron;
+use autohet::baselines::whale::plan_whale;
+use autohet::cluster::{ClusterSpec, GpuKind};
+use autohet::modelcfg::ModelCfg;
+use autohet::planner::{auto_plan, PlanOptions};
+use autohet::profile::ProfileDb;
+use autohet::sim::simulate_plan;
+
+fn profile(model: &ModelCfg) -> ProfileDb {
+    ProfileDb::build(model, &[GpuKind::A100, GpuKind::H800, GpuKind::H20], &[1, 2, 4, 8], 1)
+}
+
+fn tps(p: &ProfileDb, plan: &autohet::planner::ParallelPlan) -> f64 {
+    simulate_plan(p, plan).tokens_per_s
+}
+
+#[test]
+fn autohet_beats_megatron_on_gpt3_uniform() {
+    let model = ModelCfg::gpt3_6p7b();
+    let p = profile(&model);
+    for counts in [
+        vec![(4, GpuKind::A100), (4, GpuKind::H800)],
+        vec![(8, GpuKind::A100), (8, GpuKind::H800)],
+        vec![(8, GpuKind::A100), (8, GpuKind::H20)],
+    ] {
+        let cluster = ClusterSpec::from_counts(&counts);
+        let auto = auto_plan(&cluster, &p, &PlanOptions::default()).unwrap();
+        let mega = plan_megatron(&cluster, &p).unwrap();
+        let (ta, tm) = (tps(&p, &auto), tps(&p, &mega));
+        assert!(
+            ta > tm,
+            "{counts:?}: autohet {ta:.0} <= megatron {tm:.0} ({} vs {})",
+            auto.summary(),
+            mega.summary()
+        );
+    }
+}
+
+#[test]
+fn autohet_at_least_matches_whale() {
+    let model = ModelCfg::gpt3_6p7b();
+    let p = profile(&model);
+    let cluster = ClusterSpec::from_counts(&[(8, GpuKind::A100), (8, GpuKind::H800)]);
+    let auto = auto_plan(&cluster, &p, &PlanOptions::default()).unwrap();
+    let whale = plan_whale(&cluster, &p).unwrap();
+    let (ta, tw) = (tps(&p, &auto), tps(&p, &whale));
+    assert!(ta >= 0.95 * tw, "autohet {ta:.0} vs whale {tw:.0}");
+}
+
+#[test]
+fn nonuniform_odd_counts_still_plan() {
+    // paper Fig-8 settings where TP groups cannot form
+    let model = ModelCfg::llama_7b();
+    let p = profile(&model);
+    for counts in [
+        vec![(5, GpuKind::A100), (3, GpuKind::H800)],
+        vec![(3, GpuKind::A100), (5, GpuKind::H800)],
+        vec![(1, GpuKind::A100), (4, GpuKind::H20)],
+        vec![(2, GpuKind::A100), (6, GpuKind::H20)],
+    ] {
+        let cluster = ClusterSpec::from_counts(&counts);
+        let plan = auto_plan(&cluster, &p, &PlanOptions::default())
+            .unwrap_or_else(|e| panic!("{counts:?}: {e}"));
+        plan.validate(model.n_layers).unwrap();
+        assert_eq!(plan.gpu_count(), cluster.total_gpus(), "{counts:?}");
+    }
+}
+
+#[test]
+fn planner_uses_all_gpus_exactly_once() {
+    let model = ModelCfg::bert_large();
+    let p = profile(&model);
+    let cluster = ClusterSpec::paper_testbed();
+    let plan = auto_plan(&cluster, &p, &PlanOptions::default()).unwrap();
+    plan.validate(model.n_layers).unwrap();
+    assert_eq!(plan.gpu_count(), 32);
+}
+
+#[test]
+fn weak_gpus_get_fewer_layers() {
+    // Eq-4's whole point: in a mixed pipeline, A100 stages hold fewer
+    // layers than H800 stages.
+    let model = ModelCfg::gpt3_6p7b();
+    let p = profile(&model);
+    let cluster = ClusterSpec::from_counts(&[(4, GpuKind::A100), (4, GpuKind::H800)]);
+    let plan = auto_plan(&cluster, &p, &PlanOptions::default()).unwrap();
+    for g in &plan.groups {
+        let a100: Vec<usize> = g
+            .stages
+            .iter()
+            .filter(|s| s.kind == GpuKind::A100)
+            .map(|s| s.n_layers())
+            .collect();
+        let h800: Vec<usize> = g
+            .stages
+            .iter()
+            .filter(|s| s.kind == GpuKind::H800)
+            .map(|s| s.n_layers())
+            .collect();
+        if !a100.is_empty() && !h800.is_empty() {
+            let max_a = *a100.iter().max().unwrap();
+            let min_h = *h800.iter().min().unwrap();
+            assert!(max_a <= min_h, "a100 {a100:?} vs h800 {h800:?}");
+        }
+    }
+}
+
+#[test]
+fn planning_time_reasonable_at_16_gpus() {
+    let model = ModelCfg::gpt3_6p7b();
+    let p = profile(&model);
+    let small = ClusterSpec::from_counts(&[(8, GpuKind::A100), (8, GpuKind::H800)]);
+    let t_small = auto_plan(&small, &p, &PlanOptions::default()).unwrap().planning_s;
+    assert!(t_small < 60.0, "16-GPU planning took {t_small}s");
+}

@@ -1,0 +1,189 @@
+//! Property-based tests over the planner + recovery substrate (hand-rolled
+//! generator loop — no proptest in the vendor set; every case prints its
+//! seed so failures are reproducible).
+//!
+//! Invariants:
+//! * any feasible plan is structurally valid and uses every GPU once
+//! * the exact solver never loses to the LPT heuristic
+//! * layer partitions cover the model and respect memory caps
+//! * TP reshard round-trips for every (tp_old, tp_new) pair
+//! * spot traces never leave capacity bounds; events replay exactly
+
+use autohet::checkpoint::shard;
+use autohet::cluster::{ClusterSpec, GpuKind, SpotTrace, TraceConfig};
+use autohet::modelcfg::ModelCfg;
+use autohet::planner::partition::{partition_layers, StageRes};
+use autohet::planner::solver::{lpt_heuristic, solve, EntitySpec, GroupingProblem};
+use autohet::planner::{auto_plan, PlanOptions};
+use autohet::profile::ProfileDb;
+use autohet::runtime::HostTensor;
+use autohet::util::rng::Rng;
+
+const CASES: usize = 40;
+
+fn random_cluster(rng: &mut Rng) -> ClusterSpec {
+    let kinds = [GpuKind::A100, GpuKind::H800, GpuKind::H20];
+    let n_nodes = 1 + rng.below(4);
+    let counts: Vec<(usize, GpuKind)> = (0..n_nodes)
+        .map(|_| (1 + rng.below(8), kinds[rng.below(3)]))
+        .collect();
+    ClusterSpec::from_counts(&counts)
+}
+
+#[test]
+fn any_feasible_plan_is_valid_and_exact_cover() {
+    let model = ModelCfg::bert_large();
+    let profile = ProfileDb::build(
+        &model,
+        &[GpuKind::A100, GpuKind::H800, GpuKind::H20],
+        &[1, 2, 4, 8],
+        3,
+    );
+    let mut rng = Rng::new(0xBEEF);
+    let mut planned = 0;
+    for case in 0..CASES {
+        let cluster = random_cluster(&mut rng);
+        if let Ok(plan) = auto_plan(&cluster, &profile, &PlanOptions::default()) {
+            plan.validate(model.n_layers)
+                .unwrap_or_else(|e| panic!("case {case} ({cluster:?}): {e}"));
+            assert_eq!(
+                plan.gpu_count(),
+                cluster.total_gpus(),
+                "case {case}: not an exact GPU cover"
+            );
+            planned += 1;
+        }
+    }
+    assert!(planned > CASES / 2, "planner failed too often: {planned}/{CASES}");
+}
+
+#[test]
+fn exact_solver_never_below_lpt() {
+    let mut rng = Rng::new(0xCAFE);
+    for case in 0..CASES {
+        let counts = [rng.below(7), rng.below(5), rng.below(5)];
+        if counts.iter().sum::<usize>() == 0 {
+            continue;
+        }
+        let entity = [
+            EntitySpec { power: 1.0, mem_gib: 80.0 },
+            EntitySpec { power: 2.0, mem_gib: 80.0 },
+            EntitySpec { power: 0.5, mem_gib: 100.0 },
+        ];
+        let min_mem = 40.0 + rng.f64() * 120.0;
+        let total_mb = 8 + rng.below(56);
+        let p = GroupingProblem {
+            counts,
+            entity,
+            min_mem_gib: min_mem,
+            microbatches_total: total_mb,
+            deadline: None,
+        };
+        let exact = solve(&p);
+        // compare against LPT at the exact solver's chosen J (and all J)
+        for j in 1..=counts.iter().sum::<usize>() {
+            let k = (total_mb / j).max(1);
+            if let Some((_, lpt_min)) = lpt_heuristic(counts, &entity, min_mem, j, k) {
+                let lpt_obj = j as f64 * lpt_min;
+                let exact_obj = exact.as_ref().map(|s| s.objective).unwrap_or(f64::NEG_INFINITY);
+                assert!(
+                    exact_obj >= lpt_obj - 1e-9,
+                    "case {case}: exact {exact_obj} < lpt {lpt_obj} (j={j}, counts {counts:?}, mem {min_mem:.0})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn partitions_cover_and_respect_memory() {
+    let model = ModelCfg::gpt3_6p7b();
+    let profile = ProfileDb::build(
+        &model,
+        &[GpuKind::A100, GpuKind::H800, GpuKind::H20],
+        &[1, 2, 4, 8],
+        7,
+    );
+    let kinds = [GpuKind::A100, GpuKind::H800, GpuKind::H20];
+    let mut rng = Rng::new(0xF00D);
+    for case in 0..CASES {
+        let p_stages = 2 + rng.below(6);
+        let tp = [1usize, 2, 4, 8][rng.below(4)];
+        let stages: Vec<StageRes> = (0..p_stages)
+            .map(|_| StageRes { kind: kinds[rng.below(3)], tp })
+            .collect();
+        if let Some(layers) = partition_layers(&stages, &profile) {
+            assert_eq!(
+                layers.iter().sum::<usize>(),
+                model.n_layers,
+                "case {case}: cover"
+            );
+            assert!(layers.iter().all(|&l| l >= 1), "case {case}: empty stage");
+            for (i, (&l, s)) in layers.iter().zip(&stages).enumerate() {
+                let cap = s.kind.spec().mem_gib * tp as f64 * f64::powi(2.0, 30) * 0.94;
+                let used = profile.mem_bytes(l, i, p_stages, tp, i == 0 || i == p_stages - 1);
+                assert!(used <= cap, "case {case} stage {i}: {used:.2e} > {cap:.2e}");
+            }
+        }
+    }
+}
+
+#[test]
+fn tp_reshard_roundtrips_all_dims() {
+    let mut rng = Rng::new(0xAB);
+    for name in ["wqkv", "wo", "w1", "b1", "w2", "ln1_g"] {
+        for _ in 0..10 {
+            let d = 8 * (1 + rng.below(3));
+            let full = match name {
+                "wqkv" => rand_t(&mut rng, &[d, 3 * d]),
+                "wo" => rand_t(&mut rng, &[d, d]),
+                "w1" => rand_t(&mut rng, &[d, 4 * d]),
+                "b1" => rand_t(&mut rng, &[4 * d]),
+                "w2" => rand_t(&mut rng, &[4 * d, d]),
+                _ => rand_t(&mut rng, &[d]),
+            };
+            for tp_old in [1usize, 2, 4] {
+                for tp_new in [1usize, 2, 4] {
+                    let olds: Vec<HostTensor> = (0..tp_old)
+                        .map(|s| shard::split_for_tp(name, &full, tp_old, s).unwrap())
+                        .collect();
+                    let refs: Vec<&HostTensor> = olds.iter().collect();
+                    // reshard to tp_new, then reassemble and compare
+                    let news: Vec<HostTensor> = (0..tp_new)
+                        .map(|s| shard::reshard(name, &refs, tp_new, s).unwrap())
+                        .collect();
+                    let nrefs: Vec<&HostTensor> = news.iter().collect();
+                    let back = shard::concat_from_shards(name, &nrefs).unwrap();
+                    assert_eq!(back, full, "{name} tp {tp_old}->{tp_new}");
+                }
+            }
+        }
+    }
+}
+
+fn rand_t(rng: &mut Rng, shape: &[usize]) -> HostTensor {
+    let mut v = vec![0.0f32; shape.iter().product()];
+    rng.fill_normal_f32(&mut v, 1.0);
+    HostTensor::from_f32(shape, v)
+}
+
+#[test]
+fn spot_traces_bounded_and_replayable() {
+    for seed in 0..20u64 {
+        let t = SpotTrace::generate(TraceConfig::default(), seed);
+        for row in &t.avail {
+            for (ki, &(_, cap)) in t.cfg.capacity.iter().enumerate() {
+                assert!(row[ki] <= cap, "seed {seed}");
+            }
+        }
+        // replay events from the first row and land on the last row
+        let mut level: Vec<i64> = t.avail[0].iter().map(|&x| x as i64).collect();
+        for ev in t.events() {
+            let ki = t.kinds.iter().position(|&k| k == ev.kind).unwrap();
+            level[ki] += ev.delta;
+            assert!(level[ki] >= 0, "seed {seed}: negative availability");
+        }
+        let last: Vec<i64> = t.avail.last().unwrap().iter().map(|&x| x as i64).collect();
+        assert_eq!(level, last, "seed {seed}");
+    }
+}
