@@ -8,7 +8,7 @@
 //! `--artifacts artifacts/e2e100m --steps 200` after
 //! `make artifacts PRESET=e2e100m` to train the ~100M-parameter model.
 //! The loss curve lands in `e2e_loss.csv` and is summarized on stdout
-//! (recorded in EXPERIMENTS.md).
+//! (recorded in DESIGN.md).
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example e2e_train -- --steps 120

@@ -7,7 +7,7 @@
 //! ```
 
 use autohet::baselines::{megatron::plan_megatron, whale::plan_whale};
-use autohet::cluster::{ClusterSpec, GpuKind, SpotTrace, TraceConfig};
+use autohet::cluster::{ClusterSpec, GpuCatalog, KindId, SpotTrace, TraceConfig};
 use autohet::modelcfg::ModelCfg;
 use autohet::planner::{auto_plan, PlanOptions};
 use autohet::profile::ProfileDb;
@@ -16,24 +16,21 @@ use autohet::sim::simulate_plan;
 use autohet::util::bench::Table;
 
 fn main() -> anyhow::Result<()> {
+    let cat = GpuCatalog::builtin();
     let model = ModelCfg::llama_7b();
-    let profile = ProfileDb::build(
-        &model,
-        &[GpuKind::A100, GpuKind::H800, GpuKind::H20],
-        &[1, 2, 4, 8],
-        1,
-    );
+    let profile = ProfileDb::build(&model, &cat, &[1, 2, 4, 8], 1);
 
     let mut table = Table::new(&["cluster", "autohet", "megatron", "whale", "plan", "time_s"]);
     for counts in [
-        vec![(4usize, GpuKind::A100), (2, GpuKind::H800)],
-        vec![(5, GpuKind::A100), (3, GpuKind::H800)],
-        vec![(3, GpuKind::A100), (5, GpuKind::H800)],
-        vec![(1, GpuKind::A100), (4, GpuKind::H20)],
-        vec![(8, GpuKind::A100), (8, GpuKind::H800)],
+        vec![(4usize, KindId::A100), (2, KindId::H800)],
+        vec![(5, KindId::A100), (3, KindId::H800)],
+        vec![(3, KindId::A100), (5, KindId::H800)],
+        vec![(1, KindId::A100), (4, KindId::H20)],
+        vec![(8, KindId::A100), (8, KindId::H800)],
     ] {
         let cluster = ClusterSpec::from_counts(&counts);
-        let label: Vec<String> = counts.iter().map(|(n, k)| format!("{n}x{k}")).collect();
+        let label: Vec<String> =
+            counts.iter().map(|(n, k)| format!("{n}x{}", cat.name(*k))).collect();
         let auto = auto_plan(&cluster, &profile, &PlanOptions::default())?;
         let ta = simulate_plan(&profile, &auto).tokens_per_s;
         let tm = plan_megatron(&cluster, &profile)
@@ -47,7 +44,7 @@ fn main() -> anyhow::Result<()> {
             format!("{ta:.0}"),
             format!("{tm:.0}"),
             format!("{tw:.0}"),
-            auto.summary(),
+            auto.summary(&cat),
             format!("{:.2}", auto.planning_s),
         ]);
     }
@@ -59,7 +56,7 @@ fn main() -> anyhow::Result<()> {
         TraceConfig { horizon_s: 12.0 * 3600.0, ..Default::default() },
         7,
     );
-    let cluster = ClusterSpec::from_counts(&[(8, GpuKind::A100), (4, GpuKind::H800)]);
+    let cluster = ClusterSpec::from_counts(&[(8, KindId::A100), (4, KindId::H800)]);
     let mut coord = ElasticCoordinator::new(model.clone(), profile, cluster)?;
     let mut handled = 0;
     for ev in trace.events().into_iter().take(12) {
@@ -70,9 +67,9 @@ fn main() -> anyhow::Result<()> {
                 "t={:>7.0}s {:+3} {:<5} -> {:>2} GPUs, plan {} (dp {} -> {})",
                 ev.at_s,
                 ev.delta,
-                ev.kind.name(),
+                cat.name(ev.kind),
                 out.cluster.total_gpus(),
-                p.summary(),
+                p.summary(&cat),
                 out.dp_change.0,
                 out.dp_change.1
             ),
@@ -80,7 +77,7 @@ fn main() -> anyhow::Result<()> {
                 "t={:>7.0}s {:+3} {:<5} -> {:>2} GPUs: NO FEASIBLE PLAN (training pauses)",
                 ev.at_s,
                 ev.delta,
-                ev.kind.name(),
+                cat.name(ev.kind),
                 out.cluster.total_gpus()
             ),
         }

@@ -6,7 +6,7 @@
 //! ```
 
 use autohet::baselines::{megatron::plan_megatron, whale::plan_whale};
-use autohet::cluster::{ClusterSpec, GpuKind};
+use autohet::cluster::{ClusterSpec, GpuCatalog, KindId};
 use autohet::modelcfg::ModelCfg;
 use autohet::planner::{auto_plan, PlanOptions};
 use autohet::profile::ProfileDb;
@@ -14,7 +14,7 @@ use autohet::sim::simulate_plan;
 
 fn main() -> anyhow::Result<()> {
     // 1. Describe the heterogeneous cluster (the paper's 4×A100 + 4×H800).
-    let cluster = ClusterSpec::from_counts(&[(4, GpuKind::A100), (4, GpuKind::H800)]);
+    let cluster = ClusterSpec::from_counts(&[(4, KindId::A100), (4, KindId::H800)]);
     println!(
         "cluster: {} GPUs, {:.0} GiB HBM, Σg = {:.1}",
         cluster.total_gpus(),
@@ -24,12 +24,7 @@ fn main() -> anyhow::Result<()> {
 
     // 2. Pick a model and profile it (binary-decomposition profiling, Eq 5).
     let model = ModelCfg::gpt3_6p7b();
-    let profile = ProfileDb::build(
-        &model,
-        &[GpuKind::A100, GpuKind::H800, GpuKind::H20],
-        &[1, 2, 4, 8],
-        1,
-    );
+    let profile = ProfileDb::build(&model, &GpuCatalog::builtin(), &[1, 2, 4, 8], 1);
     println!(
         "model: {} ({:.1}B params), profiled {} points (~{:.1} min emulated)",
         model.name,
@@ -40,7 +35,7 @@ fn main() -> anyhow::Result<()> {
 
     // 3. Run Algorithm 1.
     let plan = auto_plan(&cluster, &profile, &PlanOptions::default())?;
-    println!("\nAutoHet plan:   {}", plan.summary());
+    println!("\nAutoHet plan:   {}", plan.summary(&cluster.catalog));
     println!("planned in {:.2}s, Eq-1 estimate {:.3}s/iter", plan.planning_s, plan.est_iter_s);
 
     // 4. Compare in the event simulator.

@@ -4,23 +4,25 @@
 //! motivating statistic: how often homogeneous demand is unsatisfiable
 //! while the heterogeneous pool still has capacity.
 
-use autohet::cluster::{SpotTrace, TraceConfig};
+use autohet::cluster::{GpuCatalog, SpotTrace, TraceConfig};
 use autohet::util::bench::Table;
 
 fn main() {
     let trace = SpotTrace::generate(TraceConfig::default(), 2024);
+    let cat = GpuCatalog::builtin();
 
     // Print the series at 4-hour resolution (Figure-1 shape).
-    let mut t = Table::new(&["hour", "A100", "H800", "H20", "total"]);
+    let mut cols = vec!["hour".to_string()];
+    cols.extend(trace.kinds.iter().map(|&k| cat.name(k).to_string()));
+    cols.push("total".to_string());
+    let col_refs: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&col_refs);
     let per_row = (4.0 * 3600.0 / trace.cfg.step_s) as usize;
     for (i, row) in trace.avail.iter().enumerate().step_by(per_row) {
-        t.row(&[
-            format!("{:.0}", i as f64 * trace.cfg.step_s / 3600.0),
-            row[0].to_string(),
-            row[1].to_string(),
-            row[2].to_string(),
-            row.iter().sum::<usize>().to_string(),
-        ]);
+        let mut cells = vec![format!("{:.0}", i as f64 * trace.cfg.step_s / 3600.0)];
+        cells.extend(row.iter().map(|c| c.to_string()));
+        cells.push(row.iter().sum::<usize>().to_string());
+        t.row(&cells);
     }
     t.print("Fig 1: allocable spot GPUs over 72 h (4-hour samples)");
 

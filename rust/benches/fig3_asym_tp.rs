@@ -7,7 +7,7 @@
 //! configuration; the paper measures degradations of 8–49% growing with
 //! model size.
 
-use autohet::cluster::GpuKind;
+use autohet::cluster::{GpuCatalog, KindId};
 use autohet::modelcfg::ModelCfg;
 use autohet::profile::ProfileDb;
 use autohet::sim::comm::asym_tp_transpose_s;
@@ -20,20 +20,21 @@ fn main() {
         ("7B", ModelCfg::gpt_7b(), "[A100x2, A100x2] vs [A100x4, A100x2]", 4, 2),
         ("10B", ModelCfg::gpt_10b(), "[A100x2, A100x2] vs [A100x4, A100x2]", 4, 2),
     ];
+    let cat = GpuCatalog::builtin();
     let mut t = Table::new(&["model", "configs", "iter_sym(s)", "transpose(s)", "norm-tput", "degradation"]);
     for (name, model, cfg, tp_a, tp_b) in cases {
-        let profile = ProfileDb::build(&model, &[GpuKind::A100], &[1, 2, 4], 1);
+        let profile = ProfileDb::build(&model, &cat, &[1, 2, 4], 1);
         // symmetric iteration: both replicas run the model at their TP,
         // slowest replica paces; DP allreduce follows.
         let k = model.microbatches() / 2;
         let t_rep = profile
-            .stage_time_s(GpuKind::A100, tp_b, model.n_layers)
-            .max(profile.stage_time_s(GpuKind::A100, tp_a, model.n_layers));
+            .stage_time_s(KindId::A100, tp_b, model.n_layers)
+            .max(profile.stage_time_s(KindId::A100, tp_a, model.n_layers));
         let sync = 2.0 * model.total_params() / (50e9); // fp16 grads over RDMA ring(2) factor 1
         let iter_sym = k as f64 * t_rep + sync;
         // asymmetric pays the gradient transpose at every accumulation
         // boundary (per microbatch) — see sim::comm::asym_tp_transpose_s
-        let transpose = k as f64 * asym_tp_transpose_s(&model, GpuKind::A100, tp_a, tp_b);
+        let transpose = k as f64 * asym_tp_transpose_s(&model, cat.get(KindId::A100), tp_a, tp_b);
         let iter_asym = iter_sym + transpose;
         let norm = iter_sym / iter_asym;
         t.row(&[

@@ -6,7 +6,7 @@
 //! 1.53×/1.27× over Megatron/Whale on GPT-3.
 
 use autohet::baselines::{megatron::plan_megatron, whale::plan_whale};
-use autohet::cluster::{ClusterSpec, GpuKind};
+use autohet::cluster::{ClusterSpec, GpuCatalog, KindId};
 use autohet::modelcfg::ModelCfg;
 use autohet::planner::{auto_plan, PlanOptions};
 use autohet::profile::ProfileDb;
@@ -15,17 +15,13 @@ use autohet::util::bench::Table;
 use autohet::util::stats::geomean;
 
 fn main() {
+    let cat = GpuCatalog::builtin();
     let combos = [
-        (GpuKind::H800, GpuKind::A100),
-        (GpuKind::A100, GpuKind::H20),
+        (KindId::H800, KindId::A100),
+        (KindId::A100, KindId::H20),
     ];
     for model in [ModelCfg::bert_large(), ModelCfg::gpt3_6p7b()] {
-        let profile = ProfileDb::build(
-            &model,
-            &[GpuKind::A100, GpuKind::H800, GpuKind::H20],
-            &[1, 2, 4, 8],
-            1,
-        );
+        let profile = ProfileDb::build(&model, &cat, &[1, 2, 4, 8], 1);
         let mut t = Table::new(&[
             "cluster", "megatron", "whale", "autohet", "vs-mega", "vs-whale", "plan",
         ]);
@@ -50,13 +46,13 @@ fn main() {
                     sp_whale.push(ta / tw);
                 }
                 t.row(&[
-                    format!("{per_node}x{ka}+{per_node}x{kb}"),
+                    format!("{per_node}x{}+{per_node}x{}", cat.name(ka), cat.name(kb)),
                     format!("{tm:.0}"),
                     format!("{tw:.0}"),
                     format!("{ta:.0}"),
                     format!("{:.2}x", ta / tm),
                     format!("{:.2}x", ta / tw),
-                    auto.summary(),
+                    auto.summary(&cat),
                 ]);
             }
         }

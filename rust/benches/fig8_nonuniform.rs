@@ -7,7 +7,7 @@
 //! into long pipelines.
 
 use autohet::baselines::{megatron::plan_megatron, whale::plan_whale};
-use autohet::cluster::{ClusterSpec, GpuKind};
+use autohet::cluster::{ClusterSpec, GpuCatalog, KindId};
 use autohet::modelcfg::ModelCfg;
 use autohet::planner::{auto_plan, PlanOptions};
 use autohet::profile::ProfileDb;
@@ -16,32 +16,28 @@ use autohet::util::bench::Table;
 use autohet::util::stats::geomean;
 
 fn main() {
+    let cat = GpuCatalog::builtin();
     let model = ModelCfg::llama_7b();
-    let profile = ProfileDb::build(
-        &model,
-        &[GpuKind::A100, GpuKind::H800, GpuKind::H20],
-        &[1, 2, 4, 8],
-        1,
-    );
+    let profile = ProfileDb::build(&model, &cat, &[1, 2, 4, 8], 1);
 
-    let suites: [(&str, Vec<Vec<(usize, GpuKind)>>, &str); 2] = [
+    let suites: [(&str, Vec<Vec<(usize, KindId)>>, &str); 2] = [
         (
             "H800+A100",
             vec![
-                vec![(4, GpuKind::A100), (2, GpuKind::H800)],
-                vec![(5, GpuKind::A100), (3, GpuKind::H800)],
-                vec![(3, GpuKind::A100), (5, GpuKind::H800)],
-                vec![(6, GpuKind::A100), (2, GpuKind::H800)],
+                vec![(4, KindId::A100), (2, KindId::H800)],
+                vec![(5, KindId::A100), (3, KindId::H800)],
+                vec![(3, KindId::A100), (5, KindId::H800)],
+                vec![(6, KindId::A100), (2, KindId::H800)],
             ],
             "paper avg 1.79x / 1.51x",
         ),
         (
             "A100+H20",
             vec![
-                vec![(1, GpuKind::A100), (4, GpuKind::H20)],
-                vec![(2, GpuKind::A100), (6, GpuKind::H20)],
-                vec![(1, GpuKind::A100), (7, GpuKind::H20)],
-                vec![(3, GpuKind::A100), (5, GpuKind::H20)],
+                vec![(1, KindId::A100), (4, KindId::H20)],
+                vec![(2, KindId::A100), (6, KindId::H20)],
+                vec![(1, KindId::A100), (7, KindId::H20)],
+                vec![(3, KindId::A100), (5, KindId::H20)],
             ],
             "paper avg 1.44x / 1.16x",
         ),
@@ -53,7 +49,8 @@ fn main() {
         let mut sp_w = Vec::new();
         for counts in clusters {
             let cluster = ClusterSpec::from_counts(&counts);
-            let label: Vec<String> = counts.iter().map(|(n, k)| format!("{n}x{k}")).collect();
+            let label: Vec<String> =
+                counts.iter().map(|(n, k)| format!("{n}x{}", cat.name(*k))).collect();
             let Ok(auto) = auto_plan(&cluster, &profile, &PlanOptions::default()) else {
                 continue;
             };
@@ -77,7 +74,7 @@ fn main() {
                 format!("{ta:.0}"),
                 format!("{:.2}x", ta / tm),
                 format!("{:.2}x", ta / tw),
-                auto.summary(),
+                auto.summary(&cat),
             ]);
         }
         t.print(&format!("Fig 8: non-uniform, LLaMA-6.7B, {name} (tokens/s)"));

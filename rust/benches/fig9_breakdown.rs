@@ -5,7 +5,7 @@
 //! Paper (4×A100+4×H800): grouping 1.11×, +mapping 1.16×, +balancing 1.79×.
 
 use autohet::baselines::ablation::{plan_basic_pp, plan_grouping_mapping, plan_grouping_only};
-use autohet::cluster::{ClusterSpec, GpuKind};
+use autohet::cluster::{ClusterSpec, GpuCatalog, KindId};
 use autohet::modelcfg::ModelCfg;
 use autohet::planner::{auto_plan, PlanOptions};
 use autohet::profile::ProfileDb;
@@ -14,14 +14,9 @@ use autohet::util::bench::Table;
 
 fn main() {
     let model = ModelCfg::gpt3_6p7b();
-    let profile = ProfileDb::build(
-        &model,
-        &[GpuKind::A100, GpuKind::H800, GpuKind::H20],
-        &[1, 2, 4, 8],
-        1,
-    );
+    let profile = ProfileDb::build(&model, &GpuCatalog::builtin(), &[1, 2, 4, 8], 1);
     for (a, h) in [(4usize, 4usize), (8, 8)] {
-        let cluster = ClusterSpec::from_counts(&[(a, GpuKind::A100), (h, GpuKind::H800)]);
+        let cluster = ClusterSpec::from_counts(&[(a, KindId::A100), (h, KindId::H800)]);
         let tp = 1; // breakdown isolates the grouping/mapping/balancing modules
         let base = plan_basic_pp(&cluster, &profile, tp).expect("basic pp");
         let t0 = simulate_plan(&profile, &base).tokens_per_s;

@@ -1,8 +1,8 @@
-//! L3 micro-benchmarks for the performance pass (EXPERIMENTS.md section Perf):
+//! L3 micro-benchmarks for the performance pass (DESIGN.md "Planning overhead"):
 //! solver, layer partition DP, 1F1B event sim, ring AllReduce, JSON, and
 //! (when artifacts exist) a real PJRT train step.
 
-use autohet::cluster::{ClusterSpec, GpuKind};
+use autohet::cluster::{ClusterSpec, GpuCatalog, KindId, KindVec};
 use autohet::collective::ring_average;
 use autohet::modelcfg::ModelCfg;
 use autohet::planner::partition::{partition_layers, StageRes};
@@ -15,21 +15,17 @@ use autohet::util::json::Json;
 
 fn main() {
     let model = ModelCfg::gpt3_6p7b();
-    let profile = ProfileDb::build(
-        &model,
-        &[GpuKind::A100, GpuKind::H800, GpuKind::H20],
-        &[1, 2, 4, 8],
-        1,
-    );
+    let cat = GpuCatalog::builtin();
+    let profile = ProfileDb::build(&model, &cat, &[1, 2, 4, 8], 1);
 
     // solver on the 24-GPU instance
     let problem = GroupingProblem {
-        counts: [8, 8, 8],
-        entity: [
+        counts: KindVec::from(vec![8, 8, 8]),
+        entity: KindVec::from(vec![
             EntitySpec { power: 1.0, mem_gib: 80.0 },
             EntitySpec { power: 2.0, mem_gib: 80.0 },
             EntitySpec { power: 0.5, mem_gib: 100.0 },
-        ],
+        ]),
         min_mem_gib: model.min_mem_bytes() / f64::powi(2.0, 30),
         microbatches_total: 64,
         deadline: None,
@@ -39,14 +35,14 @@ fn main() {
     }).report());
 
     // full Algorithm 1
-    let cluster = ClusterSpec::from_counts(&[(8, GpuKind::A100), (8, GpuKind::H800)]);
+    let cluster = ClusterSpec::from_counts(&[(8, KindId::A100), (8, KindId::H800)]);
     println!("{}", time_fn("auto_plan 16 gpus", 1, 5, || {
         std::hint::black_box(auto_plan(&cluster, &profile, &PlanOptions::default()).ok());
     }).report());
 
     // Eq-4 partition DP
     let stages: Vec<StageRes> = (0..8)
-        .map(|i| StageRes { kind: if i < 4 { GpuKind::A100 } else { GpuKind::H800 }, tp: 2 })
+        .map(|i| StageRes { kind: if i < 4 { KindId::A100 } else { KindId::H800 }, tp: 2 })
         .collect();
     println!("{}", time_fn("partition 8 stages x 32 layers", 2, 20, || {
         std::hint::black_box(partition_layers(&stages, &profile));
@@ -67,7 +63,7 @@ fn main() {
 
     // json parse of a plan-sized document
     let plan = auto_plan(&cluster, &profile, &PlanOptions::default()).unwrap();
-    let doc = plan.to_json().to_string_pretty();
+    let doc = plan.to_json(&cat).to_string_pretty();
     println!("{}", time_fn(&format!("json parse {}B plan", doc.len()), 2, 50, || {
         std::hint::black_box(Json::parse(&doc).unwrap());
     }).report());

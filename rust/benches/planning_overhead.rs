@@ -7,7 +7,7 @@
 
 use std::time::Instant;
 
-use autohet::cluster::{ClusterSpec, GpuKind};
+use autohet::cluster::{ClusterSpec, GpuCatalog, KindId};
 use autohet::modelcfg::ModelCfg;
 use autohet::planner::{auto_plan, PlanOptions};
 use autohet::profile::ProfileDb;
@@ -15,39 +15,35 @@ use autohet::util::bench::Table;
 
 fn main() {
     let model = ModelCfg::gpt3_6p7b();
-    let profile = ProfileDb::build(
-        &model,
-        &[GpuKind::A100, GpuKind::H800, GpuKind::H20],
-        &[1, 2, 4, 8],
-        1,
-    );
+    let cat = GpuCatalog::builtin();
+    let profile = ProfileDb::build(&model, &cat, &[1, 2, 4, 8], 1);
 
     let clusters: [(usize, ClusterSpec); 4] = [
-        (16, ClusterSpec::from_counts(&[(8, GpuKind::A100), (8, GpuKind::H800)])),
+        (16, ClusterSpec::from_counts(&[(8, KindId::A100), (8, KindId::H800)])),
         (
             24,
             ClusterSpec::from_counts(&[
-                (8, GpuKind::A100),
-                (8, GpuKind::H800),
-                (8, GpuKind::H20),
+                (8, KindId::A100),
+                (8, KindId::H800),
+                (8, KindId::H20),
             ]),
         ),
         (
             32,
             ClusterSpec::from_counts(&[
-                (8, GpuKind::A100),
-                (8, GpuKind::H800),
-                (8, GpuKind::H20),
-                (8, GpuKind::A100),
+                (8, KindId::A100),
+                (8, KindId::H800),
+                (8, KindId::H20),
+                (8, KindId::A100),
             ]),
         ),
         (
             64,
             ClusterSpec::from_counts(&[
-                (16, GpuKind::A100),
-                (16, GpuKind::H800),
-                (16, GpuKind::H20),
-                (16, GpuKind::A100),
+                (16, KindId::A100),
+                (16, KindId::H800),
+                (16, KindId::H20),
+                (16, KindId::A100),
             ]),
         ),
     ];
@@ -62,7 +58,7 @@ fn main() {
             n.to_string(),
             format!("{dt:.3}"),
             format!("{paper_s:.2}"),
-            plan.map(|p| p.summary()).unwrap_or_else(|e| format!("infeasible: {e}")),
+            plan.map(|p| p.summary(&cat)).unwrap_or_else(|e| format!("infeasible: {e}")),
         ]);
     }
     t.print("Planning overhead vs cluster size (paper section V-B; ours = custom B&B, paper = SCIP)");

@@ -9,7 +9,7 @@
 //! * full AutoHet (grouping + mapping + Eq-4 balancing) is
 //!   [`crate::planner::auto_plan`].
 
-use crate::cluster::{ClusterSpec, GpuKind, GpuRef};
+use crate::cluster::{ClusterSpec, GpuRef, KindId};
 use crate::planner::grouping::group_devices;
 use crate::planner::mapping::map_nodes_and_stages;
 use crate::planner::types::{DpGroupPlan, ParallelPlan, StagePlan};
@@ -17,7 +17,7 @@ use crate::profile::ProfileDb;
 
 use super::megatron::uniform_layers;
 
-fn entities(cluster: &ClusterSpec, tp: usize) -> Vec<(Vec<GpuRef>, GpuKind)> {
+fn entities(cluster: &ClusterSpec, tp: usize) -> Vec<(Vec<GpuRef>, KindId)> {
     let mut out = Vec::new();
     for n in &cluster.nodes {
         for e in 0..n.count / tp {
@@ -89,7 +89,7 @@ pub fn plan_grouping_only(
     // naive: consume entities in node order per group, ignoring placement
     let mut groups = Vec::new();
     for comp in &grouping.compositions {
-        let mut need = *comp;
+        let mut need = comp.clone();
         let mut stages = Vec::new();
         let mut i = 0;
         while i < ents.len() {
@@ -156,12 +156,13 @@ pub fn plan_grouping_mapping(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::GpuCatalog;
     use crate::modelcfg::ModelCfg;
     use crate::planner::{auto_plan, PlanOptions};
     use crate::sim::simulate_plan;
 
     fn profile(model: &ModelCfg) -> ProfileDb {
-        ProfileDb::build(model, &[GpuKind::A100, GpuKind::H800, GpuKind::H20], &[1, 2, 4, 8], 1)
+        ProfileDb::build(model, &GpuCatalog::builtin(), &[1, 2, 4, 8], 1)
     }
 
     #[test]
@@ -169,7 +170,7 @@ mod tests {
         // The Fig-9 monotonicity: basic PP ≤ +grouping ≤ +mapping ≤ full.
         let model = ModelCfg::gpt3_6p7b();
         let p = profile(&model);
-        let cluster = ClusterSpec::from_counts(&[(4, GpuKind::A100), (4, GpuKind::H800)]);
+        let cluster = ClusterSpec::from_counts(&[(4, KindId::A100), (4, KindId::H800)]);
         let tp = 1;
         let t0 = simulate_plan(&p, &plan_basic_pp(&cluster, &p, tp).unwrap()).tokens_per_s;
         let t1 = simulate_plan(&p, &plan_grouping_only(&cluster, &p, tp).unwrap()).tokens_per_s;
@@ -187,7 +188,7 @@ mod tests {
     fn basic_pp_has_single_group() {
         let model = ModelCfg::gpt3_6p7b();
         let p = profile(&model);
-        let cluster = ClusterSpec::from_counts(&[(4, GpuKind::A100), (4, GpuKind::H800)]);
+        let cluster = ClusterSpec::from_counts(&[(4, KindId::A100), (4, KindId::H800)]);
         let plan = plan_basic_pp(&cluster, &p, 1).unwrap();
         assert_eq!(plan.dp_degree(), 1);
         assert_eq!(plan.groups[0].pp_depth(), 8);

@@ -7,14 +7,14 @@
 //! symmetric configuration under the simulator is reported, mirroring
 //! the paper's "we report their best-performing results".
 
-use crate::cluster::{ClusterSpec, GpuRef};
+use crate::cluster::{ClusterSpec, GpuRef, KindId};
 use crate::planner::partition::MEM_HEADROOM;
 use crate::planner::types::{DpGroupPlan, ParallelPlan, StagePlan};
 use crate::profile::ProfileDb;
 use crate::sim::simulate_plan;
 
 /// Entity = tp co-located GPUs; flattened in node order.
-fn entities(cluster: &ClusterSpec, tp: usize) -> Vec<(Vec<GpuRef>, crate::cluster::GpuKind)> {
+fn entities(cluster: &ClusterSpec, tp: usize) -> Vec<(Vec<GpuRef>, KindId)> {
     let mut out = Vec::new();
     for n in &cluster.nodes {
         for e in 0..n.count / tp {
@@ -64,8 +64,10 @@ pub fn symmetric_plan(
         let mut lo = 0usize;
         for (si, &l) in layers.iter().enumerate() {
             let (gpus, kind) = it.next()?;
-            let cap =
-                kind.spec().mem_gib * tp as f64 * f64::powi(2.0, 30) * MEM_HEADROOM;
+            let cap = profile.catalog.get(kind).mem_gib
+                * tp as f64
+                * f64::powi(2.0, 30)
+                * MEM_HEADROOM;
             let with_embed = si == 0 || si == pp - 1;
             if profile.mem_bytes(l, si, pp, tp, with_embed) > cap {
                 return None;
@@ -122,11 +124,11 @@ pub fn plan_megatron(cluster: &ClusterSpec, profile: &ProfileDb) -> Option<Paral
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cluster::GpuKind;
+    use crate::cluster::GpuCatalog;
     use crate::modelcfg::ModelCfg;
 
     fn profile(model: &ModelCfg) -> ProfileDb {
-        ProfileDb::build(model, &[GpuKind::A100, GpuKind::H800, GpuKind::H20], &[1, 2, 4, 8], 1)
+        ProfileDb::build(model, &GpuCatalog::builtin(), &[1, 2, 4, 8], 1)
     }
 
     #[test]
@@ -141,7 +143,7 @@ mod tests {
         // (tp=1, pp=1) — exactly the paper's straggler setup.
         let model = ModelCfg::bert_large();
         let p = profile(&model);
-        let cluster = ClusterSpec::from_counts(&[(4, GpuKind::A100), (4, GpuKind::H800)]);
+        let cluster = ClusterSpec::from_counts(&[(4, KindId::A100), (4, KindId::H800)]);
         let plan = plan_megatron(&cluster, &p).unwrap();
         assert_eq!(plan.groups.iter().map(|g| g.pp_depth()).max().unwrap(), 1);
         assert_eq!(plan.dp_degree(), 8);
@@ -151,7 +153,7 @@ mod tests {
     fn groups_are_symmetric() {
         let model = ModelCfg::gpt3_6p7b();
         let p = profile(&model);
-        let cluster = ClusterSpec::from_counts(&[(8, GpuKind::A100), (8, GpuKind::H800)]);
+        let cluster = ClusterSpec::from_counts(&[(8, KindId::A100), (8, KindId::H800)]);
         let plan = plan_megatron(&cluster, &p).unwrap();
         let d0 = plan.groups[0].pp_depth();
         for g in &plan.groups {
@@ -169,7 +171,7 @@ mod tests {
         // (llama 6.7B) won't fit pp=1, so megatron ends with a deep pipe.
         let model = ModelCfg::llama_7b();
         let p = profile(&model);
-        let cluster = ClusterSpec::from_counts(&[(5, GpuKind::A100), (3, GpuKind::H800)]);
+        let cluster = ClusterSpec::from_counts(&[(5, KindId::A100), (3, KindId::H800)]);
         let plan = plan_megatron(&cluster, &p).unwrap();
         assert!(plan.groups[0].pp_depth() >= 2);
     }
@@ -178,7 +180,7 @@ mod tests {
     fn infeasible_when_too_small() {
         let model = ModelCfg::gpt3_20b();
         let p = profile(&model);
-        let cluster = ClusterSpec::from_counts(&[(1, GpuKind::A100)]);
+        let cluster = ClusterSpec::from_counts(&[(1, KindId::A100)]);
         assert!(plan_megatron(&cluster, &p).is_none());
     }
 }

@@ -4,7 +4,7 @@
 //! pure-DP straggler problem Megatron has on heterogeneous GPUs, but the
 //! *structure* (stage counts, uniform layer split) stays symmetric.
 
-use crate::cluster::ClusterSpec;
+use crate::cluster::{ClusterSpec, GpuCatalog};
 use crate::planner::types::ParallelPlan;
 use crate::profile::ProfileDb;
 use crate::sim::simulate_plan;
@@ -13,8 +13,12 @@ use super::megatron::symmetric_plan;
 
 /// Re-apportion microbatches across groups proportionally to raw power
 /// (largest-remainder method, every group keeps ≥1).
-pub fn rebalance_microbatches(plan: &mut ParallelPlan, total_microbatches: usize) {
-    let powers: Vec<f64> = plan.groups.iter().map(|g| g.raw_power()).collect();
+pub fn rebalance_microbatches(
+    plan: &mut ParallelPlan,
+    cat: &GpuCatalog,
+    total_microbatches: usize,
+) {
+    let powers: Vec<f64> = plan.groups.iter().map(|g| g.raw_power(cat)).collect();
     let total_p: f64 = powers.iter().sum();
     if total_p <= 0.0 {
         return;
@@ -63,7 +67,7 @@ pub fn plan_whale(cluster: &ClusterSpec, profile: &ProfileDb) -> Option<Parallel
         let max_pp = cluster.total_gpus() / tp;
         for pp in 1..=max_pp {
             if let Some(mut plan) = symmetric_plan(cluster, profile, tp, pp) {
-                rebalance_microbatches(&mut plan, model.microbatches());
+                rebalance_microbatches(&mut plan, &profile.catalog, model.microbatches());
                 let stats = simulate_plan(profile, &plan);
                 if best
                     .as_ref()
@@ -81,28 +85,28 @@ pub fn plan_whale(cluster: &ClusterSpec, profile: &ProfileDb) -> Option<Parallel
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cluster::GpuKind;
+    use crate::cluster::KindId;
     use crate::modelcfg::ModelCfg;
     use crate::baselines::megatron::plan_megatron;
 
     fn profile(model: &ModelCfg) -> ProfileDb {
-        ProfileDb::build(model, &[GpuKind::A100, GpuKind::H800, GpuKind::H20], &[1, 2, 4, 8], 1)
+        ProfileDb::build(model, &GpuCatalog::builtin(), &[1, 2, 4, 8], 1)
     }
 
     #[test]
     fn rebalance_gives_strong_groups_more_batches() {
         let model = ModelCfg::bert_large();
         let p = profile(&model);
-        let cluster = ClusterSpec::from_counts(&[(2, GpuKind::A100), (2, GpuKind::H800)]);
+        let cluster = ClusterSpec::from_counts(&[(2, KindId::A100), (2, KindId::H800)]);
         let mut plan = symmetric_plan(&cluster, &p, 1, 1).unwrap();
-        rebalance_microbatches(&mut plan, model.microbatches());
+        rebalance_microbatches(&mut plan, &p.catalog, model.microbatches());
         // H800 replicas should get ~2× the A100 replicas' microbatches
         let (mut a100_k, mut h800_k) = (0, 0);
         for g in &plan.groups {
-            match g.stages[0].kind {
-                GpuKind::A100 => a100_k = g.microbatches,
-                GpuKind::H800 => h800_k = g.microbatches,
-                _ => {}
+            if g.stages[0].kind == KindId::A100 {
+                a100_k = g.microbatches;
+            } else if g.stages[0].kind == KindId::H800 {
+                h800_k = g.microbatches;
             }
         }
         assert!(h800_k > a100_k, "{h800_k} vs {a100_k}");
@@ -116,7 +120,7 @@ mod tests {
         // straggler, beating Megatron's uniform DP.
         let model = ModelCfg::bert_large();
         let p = profile(&model);
-        let cluster = ClusterSpec::from_counts(&[(4, GpuKind::A100), (4, GpuKind::H800)]);
+        let cluster = ClusterSpec::from_counts(&[(4, KindId::A100), (4, KindId::H800)]);
         let mega = plan_megatron(&cluster, &p).unwrap();
         let whale = plan_whale(&cluster, &p).unwrap();
         let t_m = simulate_plan(&p, &mega).tokens_per_s;
@@ -128,7 +132,7 @@ mod tests {
     fn every_group_keeps_at_least_one_microbatch() {
         let model = ModelCfg { global_batch: 4, ..ModelCfg::bert_large() };
         let p = profile(&model);
-        let cluster = ClusterSpec::from_counts(&[(4, GpuKind::A100), (4, GpuKind::H800)]);
+        let cluster = ClusterSpec::from_counts(&[(4, KindId::A100), (4, KindId::H800)]);
         if let Some(plan) = plan_whale(&cluster, &p) {
             for g in &plan.groups {
                 assert!(g.microbatches >= 1);

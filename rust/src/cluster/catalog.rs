@@ -1,0 +1,479 @@
+//! Dynamic GPU catalog: an open, kind-indexed registry of GPU types.
+//!
+//! The paper's planner (Eq 3/4) is formulated over *arbitrary*
+//! heterogeneous GPU types; only its evaluation fixes three parts
+//! (A100/H800/H20). This module keeps that generality: a [`GpuCatalog`]
+//! maps a lightweight dense [`KindId`] to a [`GpuSpec`], with the paper's
+//! three parts as built-in presets and user-defined kinds loadable from
+//! JSON. Every per-kind table in the planner/simulator is a
+//! [`KindVec<T>`] of length `catalog.len()` instead of a `[T; 3]`.
+//!
+//! Calibration of the built-ins follows the paper's setting: "the actual
+//! computing power of H800 is twice that of A100" (§II-D), H20 is a
+//! bandwidth-rich but compute-poor part (~0.5× A100 for training GEMMs),
+//! A100/H800 have 80 GB HBM and H20 100 GB (§V). `relative_power` is the
+//! paper's `g_i` with A100 ≡ 1.0; `flops_tf` carries an absolute scale
+//! for tokens/s estimates (A100 bf16 dense ≈ 312 TFLOPS at ~45 %
+//! achievable MFU). The extra presets (B200, L40S, MI300X) use the same
+//! convention over public spec sheets.
+//!
+//! Invariants:
+//! * `KindId(i)` is the position of the kind inside its catalog — ids are
+//!   only meaningful relative to one catalog and are never reused or
+//!   compacted (kinds cannot be removed).
+//! * [`GpuCatalog::builtin`] always lists A100, H800, H20 at indices
+//!   0, 1, 2 ([`KindId::A100`] etc.), so seed-era plans are reproduced
+//!   exactly.
+//! * Kind names are unique case-insensitively; [`GpuCatalog::lookup`] is
+//!   case-insensitive and errors with the full list of known kinds.
+
+use std::fmt;
+use std::ops::{Deref, DerefMut, Index, IndexMut};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::json::Json;
+
+/// Dense index of a GPU kind within a [`GpuCatalog`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct KindId(pub usize);
+
+impl KindId {
+    /// Index of A100 in [`GpuCatalog::builtin`] (and any catalog
+    /// extending it).
+    pub const A100: KindId = KindId(0);
+    /// Index of H800 in [`GpuCatalog::builtin`].
+    pub const H800: KindId = KindId(1);
+    /// Index of H20 in [`GpuCatalog::builtin`].
+    pub const H20: KindId = KindId(2);
+
+    pub fn index(self) -> usize {
+        self.0
+    }
+}
+
+/// Static description of one GPU model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuSpec {
+    /// Catalog key, e.g. `"A100"`. Unique case-insensitively.
+    pub name: String,
+    /// Paper's g_i, normalized to A100 = 1.0.
+    pub relative_power: f64,
+    /// Achievable dense bf16 TFLOPS for transformer GEMMs (not peak):
+    /// peak × ~0.45 MFU, matching Megatron-style utilization.
+    pub flops_tf: f64,
+    /// HBM capacity in GiB.
+    pub mem_gib: f64,
+    /// Intra-node NVLink (or equivalent) bandwidth, GB/s
+    /// (unidirectional per GPU).
+    pub nvlink_gbs: f64,
+    /// Effective HBM streaming bandwidth, GB/s (~80 % of peak).
+    pub hbm_gbs: f64,
+}
+
+/// Registry of GPU kinds, indexed by [`KindId`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuCatalog {
+    specs: Vec<GpuSpec>,
+}
+
+impl Default for GpuCatalog {
+    fn default() -> Self {
+        GpuCatalog::builtin()
+    }
+}
+
+impl GpuCatalog {
+    /// Catalog with no kinds; populate with [`GpuCatalog::add`].
+    pub fn empty() -> GpuCatalog {
+        GpuCatalog { specs: Vec::new() }
+    }
+
+    /// The paper's three evaluated parts, at the fixed indices
+    /// [`KindId::A100`] = 0, [`KindId::H800`] = 1, [`KindId::H20`] = 2.
+    pub fn builtin() -> GpuCatalog {
+        let mut cat = GpuCatalog::empty();
+        for name in ["A100", "H800", "H20"] {
+            cat.add(GpuCatalog::preset(name).unwrap()).unwrap();
+        }
+        cat
+    }
+
+    /// Built-ins plus every other bundled preset (B200, L40S, MI300X).
+    pub fn extended() -> GpuCatalog {
+        let mut cat = GpuCatalog::builtin();
+        for name in ["B200", "L40S", "MI300X"] {
+            cat.add(GpuCatalog::preset(name).unwrap()).unwrap();
+        }
+        cat
+    }
+
+    /// Bundled spec presets by (case-insensitive) name.
+    pub fn preset(name: &str) -> Option<GpuSpec> {
+        let mk = |name: &str, g, tf, mem, nvl, hbm| GpuSpec {
+            name: name.to_string(),
+            relative_power: g,
+            flops_tf: tf,
+            mem_gib: mem,
+            nvlink_gbs: nvl,
+            hbm_gbs: hbm,
+        };
+        match name.to_ascii_uppercase().as_str() {
+            // paper parts (§II-D / §V)
+            "A100" => Some(mk("A100", 1.0, 140.0, 80.0, 600.0, 1600.0)),
+            "H800" => Some(mk("H800", 2.0, 280.0, 80.0, 400.0, 2700.0)),
+            "H20" => Some(mk("H20", 0.5, 70.0, 100.0, 900.0, 3200.0)),
+            // public-spec calibrations, same A100 ≡ 1.0 convention
+            "B200" => Some(mk("B200", 7.0, 980.0, 192.0, 900.0, 6400.0)),
+            "L40S" => Some(mk("L40S", 0.6, 80.0, 48.0, 64.0, 700.0)),
+            "MI300X" => Some(mk("MI300X", 3.2, 450.0, 192.0, 448.0, 4200.0)),
+            _ => None,
+        }
+    }
+
+    /// Register a kind; returns its [`KindId`]. Errors on a duplicate
+    /// (case-insensitive) name or non-positive power/memory.
+    pub fn add(&mut self, spec: GpuSpec) -> Result<KindId> {
+        if spec.name.is_empty() {
+            bail!("gpu kind name must be non-empty");
+        }
+        if !(spec.relative_power > 0.0) || !(spec.mem_gib > 0.0) {
+            bail!(
+                "gpu kind `{}`: relative_power and mem_gib must be positive",
+                spec.name
+            );
+        }
+        if self
+            .specs
+            .iter()
+            .any(|s| s.name.eq_ignore_ascii_case(&spec.name))
+        {
+            bail!("duplicate gpu kind `{}` in catalog", spec.name);
+        }
+        self.specs.push(spec);
+        Ok(KindId(self.specs.len() - 1))
+    }
+
+    /// Case-insensitive name lookup; the error lists every known kind.
+    pub fn lookup(&self, name: &str) -> Result<KindId> {
+        self.specs
+            .iter()
+            .position(|s| s.name.eq_ignore_ascii_case(name))
+            .map(KindId)
+            .ok_or_else(|| {
+                anyhow!(
+                    "unknown GPU kind `{name}`; known kinds: [{}] \
+                     (extend the catalog via JSON `catalog.kinds` or GpuCatalog::add)",
+                    self.names().join(", ")
+                )
+            })
+    }
+
+    /// Spec of a registered kind. Panics if `id` is not from this catalog.
+    pub fn get(&self, id: KindId) -> &GpuSpec {
+        self.specs.get(id.0).unwrap_or_else(|| {
+            panic!(
+                "KindId({}) out of range for catalog with {} kinds — \
+                 id taken from a different catalog?",
+                id.0,
+                self.specs.len()
+            )
+        })
+    }
+
+    pub fn name(&self, id: KindId) -> &str {
+        &self.get(id).name
+    }
+
+    pub fn len(&self) -> usize {
+        self.specs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    /// Every registered id, in index order.
+    pub fn ids(&self) -> impl Iterator<Item = KindId> {
+        (0..self.specs.len()).map(KindId)
+    }
+
+    pub fn specs(&self) -> &[GpuSpec] {
+        &self.specs
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.specs.iter().map(|s| s.name.as_str()).collect()
+    }
+
+    /// A [`KindVec`] sized for this catalog, filled with `fill`.
+    pub fn kind_vec<T: Clone>(&self, fill: T) -> KindVec<T> {
+        KindVec::new(self.specs.len(), fill)
+    }
+
+    // ---------- JSON ----------
+    //
+    // Schema: `{"kinds": [{"name": "B200", "relative_power": 7.0,
+    //           "flops_tf": 980.0, "mem_gib": 192.0,
+    //           "nvlink_gbs": 900.0, "hbm_gbs": 6400.0}, ...]}`
+    // `flops_tf`, `nvlink_gbs`, `hbm_gbs` are optional; a named bundled
+    // preset may also be referenced as just `{"name": "L40S"}`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![(
+            "kinds",
+            Json::Arr(
+                self.specs
+                    .iter()
+                    .map(|s| {
+                        Json::obj(vec![
+                            ("name", Json::str(&s.name)),
+                            ("relative_power", Json::num(s.relative_power)),
+                            ("flops_tf", Json::num(s.flops_tf)),
+                            ("mem_gib", Json::num(s.mem_gib)),
+                            ("nvlink_gbs", Json::num(s.nvlink_gbs)),
+                            ("hbm_gbs", Json::num(s.hbm_gbs)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        )])
+    }
+
+    pub fn from_json(j: &Json) -> Result<GpuCatalog> {
+        let kinds = j
+            .req("kinds")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("catalog `kinds` must be an array"))?;
+        let mut cat = GpuCatalog::empty();
+        for k in kinds {
+            let name = k
+                .req("name")?
+                .as_str()
+                .ok_or_else(|| anyhow!("catalog kind `name` must be a string"))?;
+            let preset = GpuCatalog::preset(name);
+            let field = |key: &str, fallback: Option<f64>| -> Result<f64> {
+                match k.get(key).and_then(|v| v.as_f64()) {
+                    Some(v) => Ok(v),
+                    None => fallback.ok_or_else(|| {
+                        anyhow!("catalog kind `{name}`: missing numeric field `{key}`")
+                    }),
+                }
+            };
+            let relative_power =
+                field("relative_power", preset.as_ref().map(|p| p.relative_power))?;
+            let spec = GpuSpec {
+                name: name.to_string(),
+                relative_power,
+                // defaults: the preset's value when the name matches one,
+                // else the A100 calibration (140 TF per unit of relative
+                // power, A100-class link and HBM bandwidths)
+                flops_tf: field(
+                    "flops_tf",
+                    Some(preset.as_ref().map_or(140.0 * relative_power, |p| p.flops_tf)),
+                )?,
+                mem_gib: field("mem_gib", preset.as_ref().map(|p| p.mem_gib))?,
+                nvlink_gbs: field(
+                    "nvlink_gbs",
+                    Some(preset.as_ref().map_or(600.0, |p| p.nvlink_gbs)),
+                )?,
+                hbm_gbs: field(
+                    "hbm_gbs",
+                    Some(preset.as_ref().map_or(1600.0, |p| p.hbm_gbs)),
+                )?,
+            };
+            cat.add(spec)?;
+        }
+        if cat.is_empty() {
+            bail!("catalog has no kinds");
+        }
+        Ok(cat)
+    }
+}
+
+impl fmt::Display for GpuCatalog {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}]", self.names().join(", "))
+    }
+}
+
+/// Dense per-kind table: one `T` per kind of a catalog, indexable by
+/// [`KindId`] (and, via `Deref<Target = [T]>`, by plain `usize`).
+/// Replaces the seed's hardcoded `[T; 3]` arrays.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct KindVec<T>(Vec<T>);
+
+impl<T> KindVec<T> {
+    pub fn new(n_kinds: usize, fill: T) -> KindVec<T>
+    where
+        T: Clone,
+    {
+        KindVec(vec![fill; n_kinds])
+    }
+
+    pub fn into_inner(self) -> Vec<T> {
+        self.0
+    }
+}
+
+impl KindVec<usize> {
+    /// Σ over kinds.
+    pub fn total(&self) -> usize {
+        self.0.iter().sum()
+    }
+
+    /// True iff `self[i] <= budget[i]` for every kind.
+    pub fn fits_within(&self, budget: &KindVec<usize>) -> bool {
+        self.0.iter().zip(&budget.0).all(|(&c, &b)| c <= b)
+    }
+
+    /// Elementwise `self - other` (callers guarantee `other` fits).
+    pub fn minus(&self, other: &KindVec<usize>) -> KindVec<usize> {
+        KindVec(
+            self.0
+                .iter()
+                .zip(&other.0)
+                .map(|(&a, &b)| a - b)
+                .collect(),
+        )
+    }
+}
+
+impl<T> From<Vec<T>> for KindVec<T> {
+    fn from(v: Vec<T>) -> KindVec<T> {
+        KindVec(v)
+    }
+}
+
+impl<T> Deref for KindVec<T> {
+    type Target = [T];
+    fn deref(&self) -> &[T] {
+        &self.0
+    }
+}
+
+impl<T> DerefMut for KindVec<T> {
+    fn deref_mut(&mut self) -> &mut [T] {
+        &mut self.0
+    }
+}
+
+impl<T> Index<KindId> for KindVec<T> {
+    type Output = T;
+    fn index(&self, id: KindId) -> &T {
+        &self.0[id.0]
+    }
+}
+
+impl<T> IndexMut<KindId> for KindVec<T> {
+    fn index_mut(&mut self, id: KindId) -> &mut T {
+        &mut self.0[id.0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_matches_paper_calibration() {
+        let cat = GpuCatalog::builtin();
+        assert_eq!(cat.len(), 3);
+        assert_eq!(cat.name(KindId::A100), "A100");
+        assert_eq!(cat.name(KindId::H800), "H800");
+        assert_eq!(cat.name(KindId::H20), "H20");
+        // paper §II-D: H800 is twice A100
+        assert_eq!(
+            cat.get(KindId::H800).relative_power,
+            2.0 * cat.get(KindId::A100).relative_power
+        );
+        assert!(cat.get(KindId::H20).relative_power < cat.get(KindId::A100).relative_power);
+        // paper §V: H20 has more HBM than A100
+        assert!(cat.get(KindId::H20).mem_gib > cat.get(KindId::A100).mem_gib);
+    }
+
+    #[test]
+    fn lookup_round_trips_case_insensitive() {
+        let cat = GpuCatalog::extended();
+        for id in cat.ids() {
+            let name = cat.name(id).to_string();
+            assert_eq!(cat.lookup(&name).unwrap(), id);
+            assert_eq!(cat.lookup(&name.to_ascii_lowercase()).unwrap(), id);
+        }
+        assert_eq!(cat.lookup("a100").unwrap(), KindId::A100);
+        assert_eq!(cat.lookup("mi300x").unwrap(), KindId(5));
+    }
+
+    #[test]
+    fn unknown_kind_error_lists_known_kinds() {
+        let cat = GpuCatalog::builtin();
+        let err = cat.lookup("B300").unwrap_err().to_string();
+        assert!(err.contains("B300"), "{err}");
+        for known in ["A100", "H800", "H20"] {
+            assert!(err.contains(known), "{err} missing {known}");
+        }
+    }
+
+    #[test]
+    fn new_presets_have_sane_specs() {
+        let cat = GpuCatalog::extended();
+        for name in ["B200", "L40S", "MI300X"] {
+            let spec = cat.get(cat.lookup(name).unwrap());
+            assert!(spec.relative_power > 0.0, "{name}");
+            assert!(spec.mem_gib > 0.0 && spec.flops_tf > 0.0, "{name}");
+        }
+        // B200 is the flagship; L40S is the budget part
+        let b200 = cat.get(cat.lookup("B200").unwrap());
+        let l40s = cat.get(cat.lookup("L40S").unwrap());
+        let h800 = cat.get(KindId::H800);
+        assert!(b200.relative_power > h800.relative_power);
+        assert!(l40s.relative_power < 1.0);
+    }
+
+    #[test]
+    fn duplicate_kinds_rejected() {
+        let mut cat = GpuCatalog::builtin();
+        assert!(cat.add(GpuCatalog::preset("A100").unwrap()).is_err());
+        let mut lower = GpuCatalog::preset("H800").unwrap();
+        lower.name = "h800".into();
+        assert!(cat.add(lower).is_err(), "case-insensitive duplicate");
+        let id = cat.add(GpuCatalog::preset("B200").unwrap()).unwrap();
+        assert_eq!(id, KindId(3));
+    }
+
+    #[test]
+    fn json_round_trip_and_defaults() {
+        let cat = GpuCatalog::extended();
+        let j = cat.to_json();
+        let back = GpuCatalog::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(cat, back);
+
+        // minimal user-defined kind: power+mem only, bandwidth defaults
+        let j = Json::parse(
+            r#"{"kinds": [{"name": "X9", "relative_power": 1.5, "mem_gib": 64}]}"#,
+        )
+        .unwrap();
+        let cat = GpuCatalog::from_json(&j).unwrap();
+        let x9 = cat.get(cat.lookup("x9").unwrap());
+        assert_eq!(x9.flops_tf, 210.0); // 140 × power
+        assert_eq!(x9.nvlink_gbs, 600.0);
+
+        // bundled preset referenced by name only pulls the FULL preset
+        let j = Json::parse(r#"{"kinds": [{"name": "L40S"}]}"#).unwrap();
+        let cat = GpuCatalog::from_json(&j).unwrap();
+        assert_eq!(cat.get(KindId(0)), &GpuCatalog::preset("L40S").unwrap());
+    }
+
+    #[test]
+    fn kind_vec_indexing_and_ops() {
+        let cat = GpuCatalog::builtin();
+        let mut v = cat.kind_vec(0usize);
+        v[KindId::H800] = 4;
+        v[0] += 1; // usize indexing via Deref
+        assert_eq!(&*v, &[1, 4, 0]);
+        assert_eq!(v.total(), 5);
+        let w = KindVec::from(vec![1, 1, 0]);
+        assert!(w.fits_within(&v));
+        assert_eq!(v.minus(&w), KindVec::from(vec![0, 3, 0]));
+        assert!(!v.fits_within(&w));
+    }
+}

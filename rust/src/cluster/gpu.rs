@@ -1,97 +1,8 @@
-//! GPU catalog.
+//! Interconnect model shared by the simulator and the cost model.
 //!
-//! Calibration follows the paper's setting: "the actual computing power of
-//! H800 is twice that of A100" (§II-D), H20 is a bandwidth-rich but
-//! compute-poor part (~0.5× A100 for training GEMMs), A100/H800 have 80 GB
-//! HBM and H20 100 GB (§V). `relative_power` is the paper's `g_i` with
-//! A100 ≡ 1.0; `flops_tf` carries an absolute scale for tokens/s
-//! estimates (A100 bf16 dense ≈ 312 TFLOPS at ~45 % achievable MFU).
-
-use std::fmt;
-
-/// The GPU types evaluated in the paper plus a slot for custom parts.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
-pub enum GpuKind {
-    A100,
-    H800,
-    H20,
-}
-
-pub const ALL_KINDS: [GpuKind; 3] = [GpuKind::A100, GpuKind::H800, GpuKind::H20];
-
-/// Static description of one GPU model.
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub struct GpuSpec {
-    pub kind: GpuKind,
-    /// Paper's g_i, normalized to A100 = 1.0.
-    pub relative_power: f64,
-    /// Achievable dense bf16 TFLOPS for transformer GEMMs (not peak):
-    /// peak × ~0.45 MFU, matching Megatron-style utilization.
-    pub flops_tf: f64,
-    /// HBM capacity in GiB.
-    pub mem_gib: f64,
-    /// Intra-node NVLink bandwidth, GB/s (unidirectional per GPU).
-    pub nvlink_gbs: f64,
-}
-
-impl GpuKind {
-    pub fn spec(self) -> GpuSpec {
-        match self {
-            GpuKind::A100 => GpuSpec {
-                kind: self,
-                relative_power: 1.0,
-                flops_tf: 140.0, // 312 peak × 0.45
-                mem_gib: 80.0,
-                nvlink_gbs: 600.0,
-            },
-            GpuKind::H800 => GpuSpec {
-                kind: self,
-                relative_power: 2.0, // paper §II-D: "twice that of A100"
-                flops_tf: 280.0,
-                mem_gib: 80.0,
-                nvlink_gbs: 400.0,
-            },
-            GpuKind::H20 => GpuSpec {
-                kind: self,
-                relative_power: 0.5,
-                flops_tf: 70.0,
-                mem_gib: 100.0, // paper §V: "H20 with 100GB HBM"
-                nvlink_gbs: 900.0,
-            },
-        }
-    }
-
-    pub fn parse(s: &str) -> Option<GpuKind> {
-        match s.to_ascii_uppercase().as_str() {
-            "A100" => Some(GpuKind::A100),
-            "H800" => Some(GpuKind::H800),
-            "H20" => Some(GpuKind::H20),
-            _ => None,
-        }
-    }
-
-    pub fn name(self) -> &'static str {
-        match self {
-            GpuKind::A100 => "A100",
-            GpuKind::H800 => "H800",
-            GpuKind::H20 => "H20",
-        }
-    }
-
-    pub fn index(self) -> usize {
-        match self {
-            GpuKind::A100 => 0,
-            GpuKind::H800 => 1,
-            GpuKind::H20 => 2,
-        }
-    }
-}
-
-impl fmt::Display for GpuKind {
-    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        f.write_str(self.name())
-    }
-}
+//! Per-GPU specs (power, memory, link bandwidths) live in the dynamic
+//! registry in [`super::catalog`]; this module keeps the cluster-wide
+//! fabric description.
 
 /// Interconnect model shared by the simulator and the cost model.
 #[derive(Debug, Clone, Copy)]
@@ -122,26 +33,6 @@ impl Default for Interconnect {
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn paper_power_ratios() {
-        assert_eq!(GpuKind::H800.spec().relative_power, 2.0 * GpuKind::A100.spec().relative_power);
-        assert!(GpuKind::H20.spec().relative_power < GpuKind::A100.spec().relative_power);
-    }
-
-    #[test]
-    fn h20_has_more_memory() {
-        assert!(GpuKind::H20.spec().mem_gib > GpuKind::A100.spec().mem_gib);
-    }
-
-    #[test]
-    fn parse_round_trips() {
-        for k in ALL_KINDS {
-            assert_eq!(GpuKind::parse(k.name()), Some(k));
-        }
-        assert_eq!(GpuKind::parse("a100"), Some(GpuKind::A100));
-        assert_eq!(GpuKind::parse("B200"), None);
-    }
 
     #[test]
     fn interconnect_paper_numbers() {

@@ -1,12 +1,15 @@
-//! Heterogeneous-cluster substrate: the GPU catalog, node specifications
-//! (the paper's `{(node, count, type)}` 3-tuples, §III-B), interconnect
-//! description, and the spot-instance availability trace generator that
-//! stands in for the production cluster behind the paper's Figure 1.
+//! Heterogeneous-cluster substrate: the dynamic GPU catalog, node
+//! specifications (the paper's `{(node, count, type)}` 3-tuples, §III-B),
+//! interconnect description, and the spot-instance availability trace
+//! generator that stands in for the production cluster behind the
+//! paper's Figure 1.
 
+pub mod catalog;
 pub mod gpu;
 pub mod spec;
 pub mod trace;
 
-pub use gpu::{GpuKind, GpuSpec};
+pub use catalog::{GpuCatalog, GpuSpec, KindId, KindVec};
+pub use gpu::Interconnect;
 pub use spec::{ClusterSpec, GpuRef, NodeSpec};
 pub use trace::{PreemptionEvent, SpotTrace, TraceConfig};

@@ -2,7 +2,8 @@
 
 use anyhow::{anyhow, Result};
 
-use super::gpu::{GpuKind, Interconnect, ALL_KINDS};
+use super::catalog::{GpuCatalog, GpuSpec, KindId, KindVec};
+use super::gpu::Interconnect;
 use crate::util::json::Json;
 
 /// One host: `count` GPUs of one `kind`, all NVLinked intra-node.
@@ -10,7 +11,7 @@ use crate::util::json::Json;
 pub struct NodeSpec {
     pub node_id: usize,
     pub count: usize,
-    pub kind: GpuKind,
+    pub kind: KindId,
 }
 
 /// A single physical GPU slot, addressable as (node, local index).
@@ -20,22 +21,44 @@ pub struct GpuRef {
     pub local: usize,
 }
 
-/// The heterogeneous cluster: the planner's input universe.
-#[derive(Debug, Clone, PartialEq, Default)]
+/// The heterogeneous cluster: the planner's input universe. Carries the
+/// [`GpuCatalog`] that gives its [`KindId`]s meaning.
+#[derive(Debug, Clone, PartialEq)]
 pub struct ClusterSpec {
     pub nodes: Vec<NodeSpec>,
+    pub catalog: GpuCatalog,
     pub interconnect_rdma_gbs: f64,
 }
 
+impl Default for ClusterSpec {
+    fn default() -> Self {
+        ClusterSpec {
+            nodes: Vec::new(),
+            catalog: GpuCatalog::builtin(),
+            interconnect_rdma_gbs: Interconnect::default().rdma_gbs,
+        }
+    }
+}
+
 impl ClusterSpec {
-    /// Build from `(count, kind)` pairs, auto-assigning node ids.
-    pub fn from_counts(counts: &[(usize, GpuKind)]) -> ClusterSpec {
+    /// Build from `(count, kind)` pairs over the built-in catalog,
+    /// auto-assigning node ids.
+    pub fn from_counts(counts: &[(usize, KindId)]) -> ClusterSpec {
+        ClusterSpec::from_counts_in(&GpuCatalog::builtin(), counts)
+    }
+
+    /// Build from `(count, kind)` pairs over an explicit catalog.
+    pub fn from_counts_in(catalog: &GpuCatalog, counts: &[(usize, KindId)]) -> ClusterSpec {
+        for &(_, kind) in counts {
+            catalog.get(kind); // panics early on a foreign KindId
+        }
         ClusterSpec {
             nodes: counts
                 .iter()
                 .enumerate()
                 .map(|(i, &(count, kind))| NodeSpec { node_id: i, count, kind })
                 .collect(),
+            catalog: catalog.clone(),
             interconnect_rdma_gbs: Interconnect::default().rdma_gbs,
         }
     }
@@ -43,33 +66,38 @@ impl ClusterSpec {
     /// The paper's testbed: N0/N3 A100×8, N1 H800×8, N2 H20×8.
     pub fn paper_testbed() -> ClusterSpec {
         ClusterSpec::from_counts(&[
-            (8, GpuKind::A100),
-            (8, GpuKind::H800),
-            (8, GpuKind::H20),
-            (8, GpuKind::A100),
+            (8, KindId::A100),
+            (8, KindId::H800),
+            (8, KindId::H20),
+            (8, KindId::A100),
         ])
+    }
+
+    /// Spec of one of this cluster's kinds.
+    pub fn spec_of(&self, kind: KindId) -> &GpuSpec {
+        self.catalog.get(kind)
     }
 
     pub fn total_gpus(&self) -> usize {
         self.nodes.iter().map(|n| n.count).sum()
     }
 
-    /// GPU count per kind, indexed by `GpuKind::index()`.
-    pub fn kind_counts(&self) -> [usize; 3] {
-        let mut c = [0usize; 3];
+    /// GPU count per kind, indexed by [`KindId`].
+    pub fn kind_counts(&self) -> KindVec<usize> {
+        let mut c = self.catalog.kind_vec(0usize);
         for n in &self.nodes {
-            c[n.kind.index()] += n.count;
+            c[n.kind] += n.count;
         }
         c
     }
 
-    pub fn kinds_present(&self) -> Vec<GpuKind> {
+    pub fn kinds_present(&self) -> Vec<KindId> {
         let c = self.kind_counts();
-        ALL_KINDS.iter().copied().filter(|k| c[k.index()] > 0).collect()
+        self.catalog.ids().filter(|&k| c[k] > 0).collect()
     }
 
     /// Enumerate every GPU slot.
-    pub fn gpus(&self) -> Vec<(GpuRef, GpuKind)> {
+    pub fn gpus(&self) -> Vec<(GpuRef, KindId)> {
         let mut out = Vec::with_capacity(self.total_gpus());
         for n in &self.nodes {
             for local in 0..n.count {
@@ -87,7 +115,7 @@ impl ClusterSpec {
     pub fn total_power(&self) -> f64 {
         self.nodes
             .iter()
-            .map(|n| n.count as f64 * n.kind.spec().relative_power)
+            .map(|n| n.count as f64 * self.spec_of(n.kind).relative_power)
             .sum()
     }
 
@@ -95,7 +123,7 @@ impl ClusterSpec {
     pub fn total_mem_gib(&self) -> f64 {
         self.nodes
             .iter()
-            .map(|n| n.count as f64 * n.kind.spec().mem_gib)
+            .map(|n| n.count as f64 * self.spec_of(n.kind).mem_gib)
             .sum()
     }
 
@@ -125,12 +153,13 @@ impl ClusterSpec {
                 nodes.push(NodeSpec { node_id: n.node_id, count: left, kind: n.kind });
             }
         }
-        ClusterSpec { nodes, interconnect_rdma_gbs: self.interconnect_rdma_gbs }
+        ClusterSpec { nodes, ..self.clone() }
     }
 
     // ---------- JSON ----------
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
+            ("catalog", self.catalog.to_json()),
             (
                 "nodes",
                 Json::Arr(
@@ -140,7 +169,7 @@ impl ClusterSpec {
                             Json::obj(vec![
                                 ("node_id", Json::num(n.node_id as f64)),
                                 ("count", Json::num(n.count as f64)),
-                                ("kind", Json::str(n.kind.name())),
+                                ("kind", Json::str(self.catalog.name(n.kind))),
                             ])
                         })
                         .collect(),
@@ -150,7 +179,14 @@ impl ClusterSpec {
         ])
     }
 
+    /// Parse a cluster document. An optional top-level `catalog` object
+    /// (see [`GpuCatalog::from_json`]) defines the kind registry; without
+    /// it, node kinds resolve against the built-in A100/H800/H20 catalog.
     pub fn from_json(j: &Json) -> Result<ClusterSpec> {
+        let catalog = match j.get("catalog") {
+            Some(c) => GpuCatalog::from_json(c)?,
+            None => GpuCatalog::builtin(),
+        };
         let nodes = j
             .req("nodes")?
             .as_arr()
@@ -160,15 +196,15 @@ impl ClusterSpec {
                 Ok(NodeSpec {
                     node_id: n.req("node_id")?.as_usize().ok_or_else(|| anyhow!("bad node_id"))?,
                     count: n.req("count")?.as_usize().ok_or_else(|| anyhow!("bad count"))?,
-                    kind: GpuKind::parse(
+                    kind: catalog.lookup(
                         n.req("kind")?.as_str().ok_or_else(|| anyhow!("bad kind"))?,
-                    )
-                    .ok_or_else(|| anyhow!("unknown gpu kind"))?,
+                    )?,
                 })
             })
             .collect::<Result<Vec<_>>>()?;
         Ok(ClusterSpec {
             nodes,
+            catalog,
             interconnect_rdma_gbs: j
                 .get("rdma_gbs")
                 .and_then(|v| v.as_f64())
@@ -185,22 +221,22 @@ mod tests {
     fn paper_testbed_counts() {
         let c = ClusterSpec::paper_testbed();
         assert_eq!(c.total_gpus(), 32);
-        assert_eq!(c.kind_counts(), [16, 8, 8]);
+        assert_eq!(c.kind_counts(), KindVec::from(vec![16, 8, 8]));
         // total power: 16×1 + 8×2 + 8×0.5 = 36
         assert!((c.total_power() - 36.0).abs() < 1e-9);
     }
 
     #[test]
     fn valid_tp_dims_require_divisibility() {
-        let c = ClusterSpec::from_counts(&[(8, GpuKind::A100), (4, GpuKind::H800)]);
+        let c = ClusterSpec::from_counts(&[(8, KindId::A100), (4, KindId::H800)]);
         assert_eq!(c.valid_tp_dims(), vec![1, 2, 4]);
-        let odd = ClusterSpec::from_counts(&[(5, GpuKind::A100), (3, GpuKind::H800)]);
+        let odd = ClusterSpec::from_counts(&[(5, KindId::A100), (3, KindId::H800)]);
         assert_eq!(odd.valid_tp_dims(), vec![1]); // paper's odd-count case
     }
 
     #[test]
     fn without_drops_preempted() {
-        let c = ClusterSpec::from_counts(&[(4, GpuKind::A100), (4, GpuKind::H20)]);
+        let c = ClusterSpec::from_counts(&[(4, KindId::A100), (4, KindId::H20)]);
         let c2 = c.without(&[
             GpuRef { node: 0, local: 0 },
             GpuRef { node: 0, local: 1 },
@@ -209,7 +245,8 @@ mod tests {
         ]);
         assert_eq!(c2.nodes.len(), 1);
         assert_eq!(c2.total_gpus(), 4);
-        assert_eq!(c2.nodes[0].kind, GpuKind::H20);
+        assert_eq!(c2.nodes[0].kind, KindId::H20);
+        assert_eq!(c2.catalog, c.catalog);
     }
 
     #[test]
@@ -221,11 +258,38 @@ mod tests {
     }
 
     #[test]
+    fn json_with_custom_catalog() {
+        let doc = r#"{
+            "catalog": {"kinds": [
+                {"name": "B200"},
+                {"name": "Z1", "relative_power": 0.8, "mem_gib": 40}
+            ]},
+            "nodes": [
+                {"node_id": 0, "count": 4, "kind": "b200"},
+                {"node_id": 1, "count": 8, "kind": "Z1"}
+            ]
+        }"#;
+        let c = ClusterSpec::from_json(&Json::parse(doc).unwrap()).unwrap();
+        assert_eq!(c.catalog.len(), 2);
+        assert_eq!(c.total_gpus(), 12);
+        assert!((c.total_power() - (4.0 * 7.0 + 8.0 * 0.8)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_unknown_kind_is_diagnosed() {
+        let doc = r#"{"nodes": [{"node_id": 0, "count": 4, "kind": "B300"}]}"#;
+        let err = ClusterSpec::from_json(&Json::parse(doc).unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("B300") && err.contains("A100"), "{err}");
+    }
+
+    #[test]
     fn gpus_enumeration_is_stable() {
-        let c = ClusterSpec::from_counts(&[(2, GpuKind::A100), (1, GpuKind::H800)]);
+        let c = ClusterSpec::from_counts(&[(2, KindId::A100), (1, KindId::H800)]);
         let gs = c.gpus();
         assert_eq!(gs.len(), 3);
         assert_eq!(gs[0].0, GpuRef { node: 0, local: 0 });
-        assert_eq!(gs[2].1, GpuKind::H800);
+        assert_eq!(gs[2].1, KindId::H800);
     }
 }

@@ -7,7 +7,7 @@
 //! and derive *preemption / grant events* from consecutive samples — the
 //! same event stream the elastic-recovery subsystem consumes.
 
-use crate::cluster::gpu::GpuKind;
+use crate::cluster::catalog::KindId;
 use crate::util::rng::Rng;
 
 #[derive(Debug, Clone)]
@@ -16,8 +16,9 @@ pub struct TraceConfig {
     pub step_s: f64,
     /// Trace horizon in seconds (3 days to match Figure 1).
     pub horizon_s: f64,
-    /// Per-type capacity (max allocable GPUs).
-    pub capacity: Vec<(GpuKind, usize)>,
+    /// Per-type capacity (max allocable GPUs). Kinds are ids into the
+    /// catalog the consumer plans against (built-in catalog by default).
+    pub capacity: Vec<(KindId, usize)>,
     /// Mean availability as a fraction of capacity.
     pub mean_frac: f64,
     /// Mean-reversion strength (0..1, higher = snappier).
@@ -33,7 +34,7 @@ impl Default for TraceConfig {
         TraceConfig {
             step_s: 600.0,
             horizon_s: 3.0 * 24.0 * 3600.0,
-            capacity: vec![(GpuKind::A100, 16), (GpuKind::H800, 8), (GpuKind::H20, 8)],
+            capacity: vec![(KindId::A100, 16), (KindId::H800, 8), (KindId::H20, 8)],
             mean_frac: 0.6,
             reversion: 0.15,
             noise_frac: 0.18,
@@ -46,7 +47,7 @@ impl Default for TraceConfig {
 #[derive(Debug, Clone)]
 pub struct SpotTrace {
     pub cfg: TraceConfig,
-    pub kinds: Vec<GpuKind>,
+    pub kinds: Vec<KindId>,
     pub avail: Vec<Vec<usize>>,
 }
 
@@ -54,7 +55,7 @@ pub struct SpotTrace {
 #[derive(Debug, Clone, PartialEq)]
 pub struct PreemptionEvent {
     pub at_s: f64,
-    pub kind: GpuKind,
+    pub kind: KindId,
     /// Negative = GPUs preempted, positive = GPUs granted.
     pub delta: i64,
 }
@@ -63,7 +64,7 @@ impl SpotTrace {
     pub fn generate(cfg: TraceConfig, seed: u64) -> SpotTrace {
         let mut rng = Rng::new(seed);
         let steps = (cfg.horizon_s / cfg.step_s).ceil() as usize;
-        let kinds: Vec<GpuKind> = cfg.capacity.iter().map(|&(k, _)| k).collect();
+        let kinds: Vec<KindId> = cfg.capacity.iter().map(|&(k, _)| k).collect();
         let caps: Vec<f64> = cfg.capacity.iter().map(|&(_, c)| c as f64).collect();
         let mut level: Vec<f64> = caps.iter().map(|c| c * cfg.mean_frac).collect();
         let mut avail = Vec::with_capacity(steps);

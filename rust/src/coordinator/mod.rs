@@ -5,7 +5,7 @@ use std::path::Path;
 
 use anyhow::{anyhow, Result};
 
-use crate::cluster::{ClusterSpec, GpuKind, SpotTrace, TraceConfig};
+use crate::cluster::{ClusterSpec, GpuCatalog, SpotTrace, TraceConfig};
 use crate::log_info;
 use crate::metrics::Recorder;
 use crate::modelcfg::ModelCfg;
@@ -22,6 +22,7 @@ autohet — automatic 3D parallelism for heterogeneous spot-instance GPUs
 
 USAGE:
   autohet plan    [--model NAME] [--cluster FILE|--counts 4xA100,2xH800] [--out FILE]
+                  cluster FILEs may carry a custom GPU catalog (`catalog.kinds`)
   autohet sim     [--model NAME] [--counts ...]       simulate an iteration
   autohet train   [--artifacts DIR] [--steps N] [--groups 2,2|4] [--k N]
                   [--lr F] [--seed N] [--csv FILE]    real PJRT training
@@ -30,16 +31,19 @@ USAGE:
 ";
 
 fn parse_counts(s: &str) -> Result<ClusterSpec> {
-    // "4xA100,2xH800" -> nodes
+    // "4xA100,2xH800" -> nodes; kinds resolve against the extended
+    // catalog (built-ins + bundled presets), with a did-you-mean error
+    // listing every known kind on a miss.
+    let catalog = GpuCatalog::extended();
     let mut counts = Vec::new();
     for part in s.split(',') {
         let (n, k) = part
             .split_once('x')
             .ok_or_else(|| anyhow!("bad counts segment `{part}` (want e.g. 4xA100)"))?;
-        let kind = GpuKind::parse(k).ok_or_else(|| anyhow!("unknown GPU `{k}`"))?;
+        let kind = catalog.lookup(k)?;
         counts.push((n.trim().parse::<usize>()?, kind));
     }
-    Ok(ClusterSpec::from_counts(&counts))
+    Ok(ClusterSpec::from_counts_in(&catalog, &counts))
 }
 
 fn load_cluster(args: &Args) -> Result<ClusterSpec> {
@@ -56,28 +60,23 @@ fn load_model(args: &Args) -> Result<ModelCfg> {
     })
 }
 
-fn build_profile(model: &ModelCfg, seed: u64) -> ProfileDb {
-    ProfileDb::build(
-        model,
-        &[GpuKind::A100, GpuKind::H800, GpuKind::H20],
-        &[1, 2, 4, 8],
-        seed,
-    )
+fn build_profile(model: &ModelCfg, catalog: &GpuCatalog, seed: u64) -> ProfileDb {
+    ProfileDb::build(model, catalog, &[1, 2, 4, 8], seed)
 }
 
 pub fn cmd_plan(args: &Args) -> Result<()> {
     let model = load_model(args)?;
     let cluster = load_cluster(args)?;
-    let profile = build_profile(&model, args.get_u64("seed", 1));
+    let profile = build_profile(&model, &cluster.catalog, args.get_u64("seed", 1));
     let plan = auto_plan(&cluster, &profile, &PlanOptions::default())?;
     let stats = simulate_plan(&profile, &plan);
-    println!("plan: {}", plan.summary());
+    println!("plan: {}", plan.summary(&cluster.catalog));
     println!(
         "est iter {:.3}s | sim iter {:.3}s | sim {:.0} tokens/s | planning {:.2}s",
         plan.est_iter_s, stats.iter_s, stats.tokens_per_s, plan.planning_s
     );
     if let Some(out) = args.get("out") {
-        std::fs::write(out, plan.to_json().to_string_pretty())?;
+        std::fs::write(out, plan.to_json(&cluster.catalog).to_string_pretty())?;
         log_info!("wrote plan to {out}");
     }
     Ok(())
@@ -86,10 +85,10 @@ pub fn cmd_plan(args: &Args) -> Result<()> {
 pub fn cmd_sim(args: &Args) -> Result<()> {
     let model = load_model(args)?;
     let cluster = load_cluster(args)?;
-    let profile = build_profile(&model, args.get_u64("seed", 1));
+    let profile = build_profile(&model, &cluster.catalog, args.get_u64("seed", 1));
     let plan = auto_plan(&cluster, &profile, &PlanOptions::default())?;
     let stats = simulate_plan(&profile, &plan);
-    println!("{}", plan.summary());
+    println!("{}", plan.summary(&cluster.catalog));
     println!(
         "iter {:.4}s  pipeline {:.4}s  sync {:.4}s  idle {:.1}%  tokens/s {:.0}",
         stats.iter_s,
@@ -172,10 +171,13 @@ pub fn cmd_trace(args: &Args) -> Result<()> {
     let hours = args.get_f64("hours", 72.0);
     let cfg = TraceConfig { horizon_s: hours * 3600.0, ..Default::default() };
     let trace = SpotTrace::generate(cfg, args.get_u64("seed", 1));
-    println!("t_hours,A100,H800,H20");
+    let catalog = GpuCatalog::builtin();
+    let names: Vec<&str> = trace.kinds.iter().map(|&k| catalog.name(k)).collect();
+    println!("t_hours,{}", names.join(","));
     for (i, row) in trace.avail.iter().enumerate() {
         let t = i as f64 * trace.cfg.step_s / 3600.0;
-        println!("{t:.2},{},{},{}", row[0], row[1], row[2]);
+        let cells: Vec<String> = row.iter().map(|c| c.to_string()).collect();
+        println!("{t:.2},{}", cells.join(","));
     }
     eprintln!(
         "# homogeneous-feasible(12 GPUs): {:.1}%  heterogeneous: {:.1}%",
@@ -223,11 +225,17 @@ mod tests {
 
     #[test]
     fn parse_counts_ok() {
+        use crate::cluster::KindId;
         let c = parse_counts("4xA100,2xH800").unwrap();
         assert_eq!(c.total_gpus(), 6);
-        assert_eq!(c.nodes[1].kind, GpuKind::H800);
+        assert_eq!(c.nodes[1].kind, KindId::H800);
         assert!(parse_counts("4A100").is_err());
-        assert!(parse_counts("4xB300").is_err());
+        // unknown kinds now carry a did-you-mean diagnostic
+        let err = parse_counts("4xB300").unwrap_err().to_string();
+        assert!(err.contains("B300") && err.contains("A100"), "{err}");
+        // bundled presets beyond the paper's three parts resolve too
+        let c = parse_counts("2xB200,2xl40s").unwrap();
+        assert_eq!(c.total_gpus(), 4);
     }
 
     #[test]

@@ -7,9 +7,13 @@
 //!
 //! The crate is the **L3 Rust coordinator** of a three-layer stack:
 //!
+//! * [`cluster`] — the dynamic GPU catalog (`cluster::catalog`: an open
+//!   `KindId`-indexed registry with the paper's A100/H800/H20 as built-in
+//!   presets plus JSON-defined kinds), node specs, and spot traces.
 //! * [`planner`] — the paper's contribution: effective-computing-power
 //!   maximization (Eq 3), GPU↔node/stage mapping, layer-level model
-//!   partitioning (Eq 4), and the 1F1B cost model (Eq 1).
+//!   partitioning (Eq 4), and the 1F1B cost model (Eq 1) — all
+//!   formulated over arbitrary K-kind catalogs.
 //! * [`sim`] — a discrete-event pipeline + interconnect simulator standing
 //!   in for the paper's 24-GPU A100/H800/H20 testbed.
 //! * [`runtime`] / [`pipeline`] / [`collective`] — *real* training: PJRT
@@ -20,8 +24,8 @@
 //! * [`baselines`] — Megatron-LM, Whale, and Varuna re-implementations
 //!   used by the figure benches.
 //!
-//! See `DESIGN.md` for the per-experiment index and `EXPERIMENTS.md` for
-//! paper-vs-measured results.
+//! See `DESIGN.md` (repo root) for the architecture notes, the GPU
+//! catalog schema, and the per-experiment index.
 
 pub mod util;
 pub mod cluster;

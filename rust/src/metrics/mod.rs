@@ -1,5 +1,5 @@
 //! Training metrics: loss curve recording, throughput accounting, and a
-//! CSV/JSON export the examples and EXPERIMENTS.md use.
+//! CSV/JSON export the examples and DESIGN.md experiment notes use.
 
 use std::time::Instant;
 

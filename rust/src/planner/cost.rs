@@ -8,7 +8,7 @@
 //! GPUs holding that layer across DP groups (Observation 2), riding
 //! NVLink when they are co-located and RDMA otherwise.
 
-use crate::cluster::gpu::Interconnect;
+use crate::cluster::Interconnect;
 use crate::profile::ProfileDb;
 
 use super::types::{DpGroupPlan, ParallelPlan};
@@ -28,7 +28,7 @@ pub fn stage_time(profile: &ProfileDb, g: &DpGroupPlan, si: usize, ic: &Intercon
         let next = &g.stages[si + 1];
         let same_node = s.gpus[0].node == next.gpus[0].node;
         let bw = if same_node {
-            s.kind.spec().nvlink_gbs * 1e9
+            profile.catalog.get(s.kind).nvlink_gbs * 1e9
         } else {
             ic.rdma_gbs * 1e9
         };
@@ -74,7 +74,7 @@ pub fn sync_time(profile: &ProfileDb, plan: &ParallelPlan, ic: &Interconnect) ->
         nodes.dedup();
         let bw = if nodes.len() <= 1 {
             // all replicas of this layer co-located: NVLink ring
-            plan.groups[0].stages[0].kind.spec().nvlink_gbs * 1e9
+            profile.catalog.get(plan.groups[0].stages[0].kind).nvlink_gbs * 1e9
         } else {
             ic.rdma_gbs * 1e9
         };
@@ -105,15 +105,15 @@ pub fn tokens_per_s(profile: &ProfileDb, plan: &ParallelPlan) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cluster::{GpuKind, GpuRef};
+    use crate::cluster::{GpuCatalog, GpuRef, KindId};
     use crate::modelcfg::ModelCfg;
     use crate::planner::types::StagePlan;
 
     fn profile() -> ProfileDb {
-        ProfileDb::build(&ModelCfg::gpt3_6p7b(), &[GpuKind::A100, GpuKind::H800], &[1, 2, 4, 8], 5)
+        ProfileDb::build(&ModelCfg::gpt3_6p7b(), &GpuCatalog::builtin(), &[1, 2, 4, 8], 5)
     }
 
-    fn stage(kind: GpuKind, node: usize, lo: usize, hi: usize, tp: usize) -> StagePlan {
+    fn stage(kind: KindId, node: usize, lo: usize, hi: usize, tp: usize) -> StagePlan {
         StagePlan {
             gpus: (0..tp).map(|i| GpuRef { node, local: i }).collect(),
             kind,
@@ -129,13 +129,13 @@ mod tests {
         let p = profile();
         let ic = Interconnect::default();
         let one = DpGroupPlan {
-            stages: vec![stage(GpuKind::H800, 0, 0, 32, 8)],
+            stages: vec![stage(KindId::H800, 0, 0, 32, 8)],
             microbatches: 8,
         };
         let two = DpGroupPlan {
             stages: vec![
-                stage(GpuKind::H800, 0, 0, 16, 4),
-                stage(GpuKind::H800, 0, 16, 32, 4),
+                stage(KindId::H800, 0, 0, 16, 4),
+                stage(KindId::H800, 0, 16, 32, 4),
             ],
             microbatches: 8,
         };
@@ -150,7 +150,7 @@ mod tests {
             model_name: "gpt3_6p7b".into(),
             tp_dim: 8,
             groups: vec![DpGroupPlan {
-                stages: vec![stage(GpuKind::H800, 0, 0, 32, 8)],
+                stages: vec![stage(KindId::H800, 0, 0, 32, 8)],
                 microbatches: 8,
             }],
             est_iter_s: 0.0,
@@ -168,11 +168,11 @@ mod tests {
             model_name: "gpt3_6p7b".into(),
             tp_dim: 4,
             groups: vec![
-                DpGroupPlan { stages: vec![stage(GpuKind::H800, 0, 0, 32, 4)], microbatches: 4 },
+                DpGroupPlan { stages: vec![stage(KindId::H800, 0, 0, 32, 4)], microbatches: 4 },
                 DpGroupPlan {
                     stages: vec![StagePlan {
                         gpus: (4..8).map(|i| GpuRef { node: node_b, local: i }).collect(),
-                        kind: GpuKind::H800,
+                        kind: KindId::H800,
                         layer_lo: 0,
                         layer_hi: 32,
                         has_embed: true,
@@ -197,7 +197,7 @@ mod tests {
             model_name: "gpt3_6p7b".into(),
             tp_dim: 8,
             groups: vec![DpGroupPlan {
-                stages: vec![stage(GpuKind::H800, 0, 0, 32, 8)],
+                stages: vec![stage(KindId::H800, 0, 0, 32, 8)],
                 microbatches: 64,
             }],
             est_iter_s: 0.0,

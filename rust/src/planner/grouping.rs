@@ -3,9 +3,10 @@
 //! Folds GPUs into TP entities (TP is symmetric and intra-node —
 //! Observation 1), derives each entity's *effective* power from the
 //! profile (so TP's AllReduce overhead is priced in, not assumed linear),
-//! and hands the counts to the exact solver for Eq (3).
+//! and hands the counts to the exact solver for Eq (3). All per-kind
+//! tables are [`KindVec`]s over the cluster's [`GpuCatalog`].
 
-use crate::cluster::{ClusterSpec, GpuKind};
+use crate::cluster::{ClusterSpec, KindVec};
 use crate::modelcfg::ModelCfg;
 use crate::profile::ProfileDb;
 
@@ -15,8 +16,8 @@ use super::solver::{self, EntitySpec, GroupingProblem, GroupingSolution};
 #[derive(Debug, Clone)]
 pub struct Grouping {
     pub tp_dim: usize,
-    /// One composition per DP group: TP entities per GPU kind index.
-    pub compositions: Vec<[usize; 3]>,
+    /// One composition per DP group: TP entities per GPU kind.
+    pub compositions: Vec<KindVec<usize>>,
     /// Microbatches per group per iteration.
     pub k_per_group: usize,
     pub min_g: f64,
@@ -25,12 +26,15 @@ pub struct Grouping {
 }
 
 /// Per-kind TP-entity spec: power scaled by profiled TP efficiency, memory
-/// summed across the entity's GPUs.
-pub fn entity_specs(model: &ModelCfg, profile: &ProfileDb, tp: usize) -> [EntitySpec; 3] {
-    let mut out = [EntitySpec { power: 0.0, mem_gib: 0.0 }; 3];
+/// summed across the entity's GPUs. One entry per kind of the profile's
+/// catalog.
+pub fn entity_specs(model: &ModelCfg, profile: &ProfileDb, tp: usize) -> KindVec<EntitySpec> {
+    let mut out = profile
+        .catalog
+        .kind_vec(EntitySpec { power: 0.0, mem_gib: 0.0 });
     let probe_layers = model.n_layers.next_power_of_two().min(8).max(1);
-    for kind in [GpuKind::A100, GpuKind::H800, GpuKind::H20] {
-        let spec = kind.spec();
+    for kind in profile.catalog.ids() {
+        let spec = profile.catalog.get(kind);
         // TP efficiency: how much faster tp GPUs actually are vs one.
         let eff = if tp == 1 {
             1.0
@@ -38,7 +42,7 @@ pub fn entity_specs(model: &ModelCfg, profile: &ProfileDb, tp: usize) -> [Entity
             profile.stage_time_s(kind, 1, probe_layers)
                 / profile.stage_time_s(kind, tp, probe_layers)
         };
-        out[kind.index()] = EntitySpec {
+        out[kind] = EntitySpec {
             power: spec.relative_power * eff,
             mem_gib: spec.mem_gib * tp as f64,
         };
@@ -48,10 +52,10 @@ pub fn entity_specs(model: &ModelCfg, profile: &ProfileDb, tp: usize) -> [Entity
 
 /// TP-entity counts per kind: each node of kind k with c GPUs yields
 /// floor(c / tp) entities (TP never crosses nodes).
-pub fn entity_counts(cluster: &ClusterSpec, tp: usize) -> [usize; 3] {
-    let mut counts = [0usize; 3];
+pub fn entity_counts(cluster: &ClusterSpec, tp: usize) -> KindVec<usize> {
+    let mut counts = cluster.catalog.kind_vec(0usize);
     for n in &cluster.nodes {
-        counts[n.kind.index()] += n.count / tp;
+        counts[n.kind] += n.count / tp;
     }
     counts
 }
@@ -66,8 +70,9 @@ pub fn group_devices_all(
     deadline: Option<f64>,
     cap: usize,
 ) -> Vec<Grouping> {
+    debug_assert_eq!(cluster.catalog, profile.catalog, "catalog mismatch");
     let counts = entity_counts(cluster, tp_dim);
-    if counts.iter().sum::<usize>() == 0 {
+    if counts.total() == 0 {
         return Vec::new();
     }
     let problem = GroupingProblem {
@@ -102,8 +107,9 @@ pub fn group_devices(
     tp_dim: usize,
     deadline: Option<f64>,
 ) -> Option<Grouping> {
+    debug_assert_eq!(cluster.catalog, profile.catalog, "catalog mismatch");
     let counts = entity_counts(cluster, tp_dim);
-    if counts.iter().sum::<usize>() == 0 {
+    if counts.total() == 0 {
         return None;
     }
     let problem = GroupingProblem {
@@ -129,10 +135,10 @@ pub fn group_devices(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cluster::GpuKind;
+    use crate::cluster::{GpuCatalog, KindId};
 
     fn profile(model: &ModelCfg) -> ProfileDb {
-        ProfileDb::build(model, &[GpuKind::A100, GpuKind::H800, GpuKind::H20], &[1, 2, 4, 8], 1)
+        ProfileDb::build(model, &GpuCatalog::builtin(), &[1, 2, 4, 8], 1)
     }
 
     #[test]
@@ -140,7 +146,7 @@ mod tests {
         // BERT-Large fits on any single GPU -> the solver should carve
         // many DP groups rather than one deep pipeline.
         let model = ModelCfg::bert_large();
-        let cluster = ClusterSpec::from_counts(&[(4, GpuKind::A100), (4, GpuKind::H800)]);
+        let cluster = ClusterSpec::from_counts(&[(4, KindId::A100), (4, KindId::H800)]);
         let p = profile(&model);
         let g = group_devices(&cluster, &model, &p, 1, None).unwrap();
         assert!(g.compositions.len() >= 4, "{:?}", g.compositions);
@@ -150,31 +156,31 @@ mod tests {
     fn gpt3_needs_multi_gpu_groups() {
         // 6.7B needs ~112 GiB of training state: no single 80 GiB GPU group.
         let model = ModelCfg::gpt3_6p7b();
-        let cluster = ClusterSpec::from_counts(&[(4, GpuKind::A100), (4, GpuKind::H800)]);
+        let cluster = ClusterSpec::from_counts(&[(4, KindId::A100), (4, KindId::H800)]);
         let p = profile(&model);
         let g = group_devices(&cluster, &model, &p, 1, None).unwrap();
         for c in &g.compositions {
-            assert!(c.iter().sum::<usize>() >= 2, "{c:?}");
+            assert!(c.total() >= 2, "{c:?}");
         }
     }
 
     #[test]
     fn tp_entities_fold_per_node() {
-        let cluster = ClusterSpec::from_counts(&[(8, GpuKind::A100), (4, GpuKind::H800)]);
-        assert_eq!(entity_counts(&cluster, 2), [4, 2, 0]);
-        assert_eq!(entity_counts(&cluster, 4), [2, 1, 0]);
+        let cluster = ClusterSpec::from_counts(&[(8, KindId::A100), (4, KindId::H800)]);
+        assert_eq!(entity_counts(&cluster, 2), KindVec::from(vec![4, 2, 0]));
+        assert_eq!(entity_counts(&cluster, 4), KindVec::from(vec![2, 1, 0]));
         // odd counts: node contributes floor(c/tp)
-        let odd = ClusterSpec::from_counts(&[(5, GpuKind::A100)]);
-        assert_eq!(entity_counts(&odd, 2), [2, 0, 0]);
+        let odd = ClusterSpec::from_counts(&[(5, KindId::A100)]);
+        assert_eq!(entity_counts(&odd, 2), KindVec::from(vec![2, 0, 0]));
     }
 
     #[test]
-    fn tp_efficiency_below_linear(){
+    fn tp_efficiency_below_linear() {
         let model = ModelCfg::gpt3_6p7b();
         let p = profile(&model);
         let e1 = entity_specs(&model, &p, 1);
         let e2 = entity_specs(&model, &p, 2);
-        let a = GpuKind::A100.index();
+        let a = KindId::A100;
         assert!(e2[a].power > e1[a].power); // tp=2 entity beats one gpu
         assert!(e2[a].power < 2.0 * e1[a].power); // but not 2×
         assert_eq!(e2[a].mem_gib, 160.0);
@@ -185,12 +191,17 @@ mod tests {
         // Fig 8 narrative: 4×A100 + 2×H800 with TP=2 -> H800 entity forms
         // its own group, A100 entities form a 2-stage pipeline group.
         let model = ModelCfg::llama_7b();
-        let cluster = ClusterSpec::from_counts(&[(4, GpuKind::A100), (2, GpuKind::H800)]);
+        let cluster = ClusterSpec::from_counts(&[(4, KindId::A100), (2, KindId::H800)]);
         let p = profile(&model);
         let g = group_devices(&cluster, &model, &p, 2, None).unwrap();
         assert_eq!(g.compositions.len(), 2);
         let mut comps = g.compositions.clone();
         comps.sort();
-        assert_eq!(comps, vec![[0, 1, 0], [2, 0, 0]], "{:?}", g.compositions);
+        assert_eq!(
+            comps,
+            vec![KindVec::from(vec![0, 1, 0]), KindVec::from(vec![2, 0, 0])],
+            "{:?}",
+            g.compositions
+        );
     }
 }

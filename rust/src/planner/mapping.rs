@@ -10,7 +10,7 @@
 //!   stage position, try to take them all from one node so the DP
 //!   AllReduce for those stages rides NVLink instead of RDMA.
 
-use crate::cluster::{ClusterSpec, GpuKind, GpuRef};
+use crate::cluster::{ClusterSpec, GpuRef, KindId};
 
 use super::grouping::Grouping;
 use super::types::{DpGroupPlan, StagePlan};
@@ -19,7 +19,7 @@ use super::types::{DpGroupPlan, StagePlan};
 #[derive(Debug, Clone)]
 struct NodeInv {
     node_id: usize,
-    kind: GpuKind,
+    kind: KindId,
     /// entities still free; entity e occupies locals [e·tp, (e+1)·tp)
     next_entity: usize,
     total_entities: usize,
@@ -54,25 +54,26 @@ pub fn map_nodes_and_stages(cluster: &ClusterSpec, grouping: &Grouping) -> Vec<D
         })
         .collect();
 
-    // Stage sequences: weak kinds first (paper: low-end GPUs to early stages).
-    let mut kind_order: Vec<GpuKind> = [GpuKind::A100, GpuKind::H800, GpuKind::H20]
-        .into_iter()
-        .collect();
-    kind_order.sort_by(|a, b| {
-        a.spec()
+    // Stage sequences: weak kinds first (paper: low-end GPUs to early
+    // stages), over whatever kinds the catalog registers.
+    let mut kind_order: Vec<KindId> = cluster.catalog.ids().collect();
+    kind_order.sort_by(|&a, &b| {
+        cluster
+            .catalog
+            .get(a)
             .relative_power
-            .partial_cmp(&b.spec().relative_power)
+            .partial_cmp(&cluster.catalog.get(b).relative_power)
             .unwrap()
     });
 
     // Build per-group ordered kind lists.
-    let stage_kinds: Vec<Vec<GpuKind>> = grouping
+    let stage_kinds: Vec<Vec<KindId>> = grouping
         .compositions
         .iter()
         .map(|c| {
             let mut v = Vec::new();
             for &k in &kind_order {
-                for _ in 0..c[k.index()] {
+                for _ in 0..c[k] {
                     v.push(k);
                 }
             }
@@ -107,7 +108,8 @@ pub fn map_nodes_and_stages(cluster: &ClusterSpec, grouping: &Grouping) -> Vec<D
                         .position(|n| n.kind == k && n.free() > 0)
                         .unwrap_or_else(|| {
                             panic!(
-                                "mapping: out of {k} entities at stage {pos} (group {idx})"
+                                "mapping: out of {} entities at stage {pos} (group {idx})",
+                                cluster.catalog.name(k)
                             )
                         }),
                 };
@@ -138,12 +140,13 @@ pub fn map_nodes_and_stages(cluster: &ClusterSpec, grouping: &Grouping) -> Vec<D
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::KindVec;
     use crate::planner::grouping::Grouping;
 
     fn grouping(tp: usize, comps: Vec<[usize; 3]>) -> Grouping {
         Grouping {
             tp_dim: tp,
-            compositions: comps,
+            compositions: comps.into_iter().map(|c| KindVec::from(c.to_vec())).collect(),
             k_per_group: 8,
             min_g: 0.0,
             objective: 0.0,
@@ -153,27 +156,27 @@ mod tests {
 
     #[test]
     fn weak_gpus_land_in_early_stages() {
-        let cluster = ClusterSpec::from_counts(&[(2, GpuKind::A100), (2, GpuKind::H800)]);
+        let cluster = ClusterSpec::from_counts(&[(2, KindId::A100), (2, KindId::H800)]);
         let g = grouping(1, vec![[1, 1, 0], [1, 1, 0]]);
         let plans = map_nodes_and_stages(&cluster, &g);
         for p in &plans {
-            assert_eq!(p.stages[0].kind, GpuKind::A100); // weaker first
-            assert_eq!(p.stages[1].kind, GpuKind::H800);
+            assert_eq!(p.stages[0].kind, KindId::A100); // weaker first
+            assert_eq!(p.stages[1].kind, KindId::H800);
             assert!(p.stages[0].has_embed && p.stages[1].has_head);
         }
     }
 
     #[test]
     fn h20_is_weakest_and_goes_first() {
-        let cluster = ClusterSpec::from_counts(&[(1, GpuKind::H20), (1, GpuKind::A100)]);
+        let cluster = ClusterSpec::from_counts(&[(1, KindId::H20), (1, KindId::A100)]);
         let g = grouping(1, vec![[1, 0, 1]]);
         let plans = map_nodes_and_stages(&cluster, &g);
-        assert_eq!(plans[0].stages[0].kind, GpuKind::H20);
+        assert_eq!(plans[0].stages[0].kind, KindId::H20);
     }
 
     #[test]
     fn tp_entities_use_consecutive_locals_on_one_node() {
-        let cluster = ClusterSpec::from_counts(&[(4, GpuKind::A100)]);
+        let cluster = ClusterSpec::from_counts(&[(4, KindId::A100)]);
         let g = grouping(2, vec![[1, 0, 0], [1, 0, 0]]);
         let plans = map_nodes_and_stages(&cluster, &g);
         for p in &plans {
@@ -196,7 +199,7 @@ mod tests {
     fn same_stage_dp_peers_colocate_when_possible() {
         // two groups, each one A100 stage; one node has 2 A100s -> both
         // stage-0 entities should come from that node.
-        let cluster = ClusterSpec::from_counts(&[(2, GpuKind::A100)]);
+        let cluster = ClusterSpec::from_counts(&[(2, KindId::A100)]);
         let g = grouping(1, vec![[1, 0, 0], [1, 0, 0]]);
         let plans = map_nodes_and_stages(&cluster, &g);
         assert_eq!(plans[0].stages[0].gpus[0].node, plans[1].stages[0].gpus[0].node);
@@ -204,7 +207,7 @@ mod tests {
 
     #[test]
     fn asymmetric_group_depths_supported() {
-        let cluster = ClusterSpec::from_counts(&[(2, GpuKind::A100), (1, GpuKind::H800)]);
+        let cluster = ClusterSpec::from_counts(&[(2, KindId::A100), (1, KindId::H800)]);
         let g = grouping(1, vec![[2, 0, 0], [0, 1, 0]]);
         let plans = map_nodes_and_stages(&cluster, &g);
         assert_eq!(plans[0].stages.len(), 2);

@@ -9,13 +9,13 @@
 //! stage is `l_i/g_i`-shaped, and we minimize the profiled stage *time*
 //! directly (which also absorbs TP communication and per-layer overhead).
 
-use crate::cluster::GpuKind;
+use crate::cluster::KindId;
 use crate::profile::ProfileDb;
 
 /// One stage's resources from the partitioner's point of view.
 #[derive(Debug, Clone, Copy)]
 pub struct StageRes {
-    pub kind: GpuKind,
+    pub kind: KindId,
     pub tp: usize,
 }
 
@@ -31,7 +31,7 @@ fn mem_cap_layers(
     p: usize,
     n_layers: usize,
 ) -> usize {
-    let cap = s.kind.spec().mem_gib * s.tp as f64 * f64::powi(2.0, 30) * MEM_HEADROOM;
+    let cap = profile.catalog.get(s.kind).mem_gib * s.tp as f64 * f64::powi(2.0, 30) * MEM_HEADROOM;
     let with_embed = stage == 0 || stage == p - 1; // embed or LM head
     let mut best = 0;
     for l in 1..=n_layers {
@@ -120,15 +120,11 @@ pub fn max_stage_time(stages: &[StageRes], layers: &[usize], profile: &ProfileDb
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::GpuCatalog;
     use crate::modelcfg::ModelCfg;
 
     fn profile() -> ProfileDb {
-        ProfileDb::build(
-            &ModelCfg::gpt3_6p7b(),
-            &[GpuKind::A100, GpuKind::H800, GpuKind::H20],
-            &[1, 2, 4, 8],
-            3,
-        )
+        ProfileDb::build(&ModelCfg::gpt3_6p7b(), &GpuCatalog::builtin(), &[1, 2, 4, 8], 3)
     }
 
     #[test]
@@ -136,8 +132,8 @@ mod tests {
         // A100 + H800 pipeline: H800 (2× power) should get ~2× the layers.
         let p = profile();
         let stages = [
-            StageRes { kind: GpuKind::A100, tp: 8 },
-            StageRes { kind: GpuKind::H800, tp: 8 },
+            StageRes { kind: KindId::A100, tp: 8 },
+            StageRes { kind: KindId::H800, tp: 8 },
         ];
         let l = partition_layers(&stages, &p).unwrap();
         assert_eq!(l.iter().sum::<usize>(), 32);
@@ -148,7 +144,7 @@ mod tests {
     #[test]
     fn homogeneous_split_is_even() {
         let p = profile();
-        let stages = [StageRes { kind: GpuKind::A100, tp: 8 }; 4];
+        let stages = [StageRes { kind: KindId::A100, tp: 8 }; 4];
         let l = partition_layers(&stages, &p).unwrap();
         assert_eq!(l, vec![8, 8, 8, 8]);
     }
@@ -156,8 +152,8 @@ mod tests {
     #[test]
     fn more_stages_than_layers_infeasible() {
         let model = ModelCfg { n_layers: 2, ..ModelCfg::gpt3_6p7b() };
-        let p = ProfileDb::build(&model, &[GpuKind::A100], &[1], 1);
-        let stages = [StageRes { kind: GpuKind::A100, tp: 1 }; 3];
+        let p = ProfileDb::build(&model, &GpuCatalog::builtin(), &[1], 1);
+        let stages = [StageRes { kind: KindId::A100, tp: 1 }; 3];
         assert!(partition_layers(&stages, &p).is_none());
     }
 
@@ -165,7 +161,7 @@ mod tests {
     fn memory_cap_binds_single_small_gpu() {
         // one A100 can't hold 6.7B worth of training state at tp=1
         let p = profile();
-        let stages = [StageRes { kind: GpuKind::A100, tp: 1 }];
+        let stages = [StageRes { kind: KindId::A100, tp: 1 }];
         assert!(partition_layers(&stages, &p).is_none());
     }
 
@@ -173,8 +169,8 @@ mod tests {
     fn minmax_beats_even_split() {
         let p = profile();
         let stages = [
-            StageRes { kind: GpuKind::A100, tp: 8 },
-            StageRes { kind: GpuKind::H800, tp: 8 },
+            StageRes { kind: KindId::A100, tp: 8 },
+            StageRes { kind: KindId::H800, tp: 8 },
         ];
         let l = partition_layers(&stages, &p).unwrap();
         let opt = max_stage_time(&stages, &l, &p);
@@ -186,9 +182,9 @@ mod tests {
     fn every_stage_gets_at_least_one_layer() {
         let p = profile();
         let stages = [
-            StageRes { kind: GpuKind::H20, tp: 8 },
-            StageRes { kind: GpuKind::H800, tp: 8 },
-            StageRes { kind: GpuKind::H800, tp: 8 },
+            StageRes { kind: KindId::H20, tp: 8 },
+            StageRes { kind: KindId::H800, tp: 8 },
+            StageRes { kind: KindId::H800, tp: 8 },
         ];
         let l = partition_layers(&stages, &p).unwrap();
         assert!(l.iter().all(|&x| x >= 1), "{l:?}");

@@ -36,6 +36,12 @@ pub fn auto_plan(
     opts: &PlanOptions,
 ) -> Result<ParallelPlan> {
     let t0 = Instant::now();
+    anyhow::ensure!(
+        cluster.catalog == profile.catalog,
+        "cluster catalog {} does not match profile catalog {}",
+        cluster.catalog,
+        profile.catalog
+    );
     let model = &profile.model;
     let tp_dims: Vec<usize> = match opts.force_tp {
         Some(tp) => vec![tp],
@@ -119,17 +125,17 @@ pub fn auto_plan(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cluster::GpuKind;
+    use crate::cluster::{GpuCatalog, KindId};
     use crate::modelcfg::ModelCfg;
 
     fn profile(model: &ModelCfg) -> ProfileDb {
-        ProfileDb::build(model, &[GpuKind::A100, GpuKind::H800, GpuKind::H20], &[1, 2, 4, 8], 1)
+        ProfileDb::build(model, &GpuCatalog::builtin(), &[1, 2, 4, 8], 1)
     }
 
     #[test]
     fn plans_bert_on_uniform_mixed_cluster() {
         let model = ModelCfg::bert_large();
-        let cluster = ClusterSpec::from_counts(&[(4, GpuKind::A100), (4, GpuKind::H800)]);
+        let cluster = ClusterSpec::from_counts(&[(4, KindId::A100), (4, KindId::H800)]);
         let plan = auto_plan(&cluster, &profile(&model), &PlanOptions::default()).unwrap();
         plan.validate(24).unwrap();
         assert_eq!(plan.gpu_count(), 8);
@@ -139,7 +145,7 @@ mod tests {
     #[test]
     fn plans_gpt3_with_model_parallelism() {
         let model = ModelCfg::gpt3_6p7b();
-        let cluster = ClusterSpec::from_counts(&[(8, GpuKind::A100), (8, GpuKind::H800)]);
+        let cluster = ClusterSpec::from_counts(&[(8, KindId::A100), (8, KindId::H800)]);
         let plan = auto_plan(&cluster, &profile(&model), &PlanOptions::default()).unwrap();
         plan.validate(32).unwrap();
         // 6.7B can't fit one 80GiB GPU: every group must span ≥2 GPUs
@@ -153,7 +159,7 @@ mod tests {
         // 5×A100 + 3×H800 (paper Fig 8 case): TP impossible, groups may
         // have different pipeline depths.
         let model = ModelCfg::llama_7b();
-        let cluster = ClusterSpec::from_counts(&[(5, GpuKind::A100), (3, GpuKind::H800)]);
+        let cluster = ClusterSpec::from_counts(&[(5, KindId::A100), (3, KindId::H800)]);
         let plan = auto_plan(&cluster, &profile(&model), &PlanOptions::default()).unwrap();
         plan.validate(32).unwrap();
         assert_eq!(plan.tp_dim, 1);
@@ -163,14 +169,14 @@ mod tests {
     #[test]
     fn infeasible_cluster_errors() {
         let model = ModelCfg::gpt3_20b();
-        let cluster = ClusterSpec::from_counts(&[(1, GpuKind::A100)]);
+        let cluster = ClusterSpec::from_counts(&[(1, KindId::A100)]);
         assert!(auto_plan(&cluster, &profile(&model), &PlanOptions::default()).is_err());
     }
 
     #[test]
     fn force_tp_is_respected() {
         let model = ModelCfg::gpt3_6p7b();
-        let cluster = ClusterSpec::from_counts(&[(8, GpuKind::H800)]);
+        let cluster = ClusterSpec::from_counts(&[(8, KindId::H800)]);
         let plan = auto_plan(
             &cluster,
             &profile(&model),
@@ -183,7 +189,7 @@ mod tests {
     #[test]
     fn planning_time_recorded() {
         let model = ModelCfg::bert_large();
-        let cluster = ClusterSpec::from_counts(&[(2, GpuKind::A100)]);
+        let cluster = ClusterSpec::from_counts(&[(2, KindId::A100)]);
         let plan = auto_plan(&cluster, &profile(&model), &PlanOptions::default()).unwrap();
         assert!(plan.planning_s > 0.0);
     }

@@ -3,15 +3,19 @@
 use std::collections::HashMap;
 use std::time::Instant;
 
+use crate::cluster::KindVec;
+
 use super::lpt::lpt_heuristic;
 use super::EntitySpec;
 
-/// Grouping instance over ≤3 entity kinds (A100/H800/H20 after TP folding).
+/// Grouping instance over K entity kinds (an arbitrary catalog after TP
+/// folding; the paper's testbed is K = 3).
 #[derive(Debug, Clone)]
 pub struct GroupingProblem {
-    /// TP entities available per kind index.
-    pub counts: [usize; 3],
-    pub entity: [EntitySpec; 3],
+    /// TP entities available per kind.
+    pub counts: KindVec<usize>,
+    /// Per-kind entity description, same length as `counts`.
+    pub entity: KindVec<EntitySpec>,
     /// Constraint (3b): per-group memory floor, GiB (model MIN_mem).
     pub min_mem_gib: f64,
     /// Total microbatches per iteration (global_batch / microbatch); a
@@ -24,7 +28,7 @@ pub struct GroupingProblem {
 #[derive(Debug, Clone, PartialEq)]
 pub struct GroupingSolution {
     /// One composition per DP group: entities of each kind.
-    pub groups: Vec<[usize; 3]>,
+    pub groups: Vec<KindVec<usize>>,
     /// min_j G_j achieved.
     pub min_g: f64,
     /// Paper objective (Σ y_j) · z = J · min_g.
@@ -33,20 +37,25 @@ pub struct GroupingSolution {
     pub heuristic_fallback: bool,
 }
 
-fn key(counts: [usize; 3], j: usize) -> u64 {
-    (counts[0] as u64) | (counts[1] as u64) << 16 | (counts[2] as u64) << 32 | (j as u64) << 48
+/// Memo key: the per-kind remainders plus the groups-left counter.
+fn key(counts: &[usize], j: usize) -> Vec<u16> {
+    counts
+        .iter()
+        .map(|&c| c as u16)
+        .chain(std::iter::once(j as u16))
+        .collect()
 }
 
-pub(crate) fn power(c: [usize; 3], e: &[EntitySpec; 3]) -> f64 {
+pub(crate) fn power(c: &[usize], e: &[EntitySpec]) -> f64 {
     c.iter().zip(e).map(|(&n, s)| n as f64 * s.power).sum()
 }
 
-pub(crate) fn mem(c: [usize; 3], e: &[EntitySpec; 3]) -> f64 {
+pub(crate) fn mem(c: &[usize], e: &[EntitySpec]) -> f64 {
     c.iter().zip(e).map(|(&n, s)| n as f64 * s.mem_gib).sum()
 }
 
 /// Effective power of a composition: Eq (2) with 1F1B ρ.
-pub(crate) fn eff_power(c: [usize; 3], e: &[EntitySpec; 3], k_per_group: usize) -> f64 {
+pub(crate) fn eff_power(c: &[usize], e: &[EntitySpec], k_per_group: usize) -> f64 {
     let p: usize = c.iter().sum();
     if p == 0 {
         return 0.0;
@@ -56,53 +65,53 @@ pub(crate) fn eff_power(c: [usize; 3], e: &[EntitySpec; 3], k_per_group: usize) 
 }
 
 struct Search<'a> {
-    e: &'a [EntitySpec; 3],
+    e: &'a [EntitySpec],
     min_mem: f64,
     k: usize,
-    memo: HashMap<u64, f64>,
+    memo: HashMap<Vec<u16>, f64>,
     /// Candidate compositions, pre-sorted by eff_power desc.
-    comps: Vec<[usize; 3]>,
+    comps: Vec<KindVec<usize>>,
 }
 
 impl<'a> Search<'a> {
     /// Max achievable min-G partitioning `counts` into exactly `j` groups;
     /// `floor` is the best incumbent (prune below it). NEG_INFINITY = infeasible.
-    fn solve(&mut self, counts: [usize; 3], j: usize, floor: f64) -> f64 {
+    fn solve(&mut self, counts: KindVec<usize>, j: usize, floor: f64) -> f64 {
         if j == 1 {
             // last group takes everything left (exact coverage, 3e)
-            let total: usize = counts.iter().sum();
-            if total == 0 || mem(counts, self.e) < self.min_mem {
+            let total = counts.total();
+            if total == 0 || mem(&counts, self.e) < self.min_mem {
                 return f64::NEG_INFINITY;
             }
-            return eff_power(counts, self.e, self.k);
+            return eff_power(&counts, self.e, self.k);
         }
-        let total: usize = counts.iter().sum();
+        let total = counts.total();
         if total < j {
             return f64::NEG_INFINITY; // not enough entities for j nonempty groups
         }
-        let k = key(counts, j);
+        let k = key(&counts, j);
         if let Some(&v) = self.memo.get(&k) {
             return v;
         }
         // Optimistic bound: even with zero bubble, min ≤ raw/j.
-        let ub = power(counts, self.e) / j as f64;
+        let ub = power(&counts, self.e) / j as f64;
         if ub <= floor {
             // NOTE: don't memoize floor-dependent prunes.
             return f64::NEG_INFINITY;
         }
         let mut best = f64::NEG_INFINITY;
-        // clone indices to iterate while mutating self via solve()
+        // iterate by index (not iterator) so solve() can re-borrow self;
+        // no per-candidate clone — `rest` is the only allocation
         for ci in 0..self.comps.len() {
-            let c = self.comps[ci];
-            if c[0] > counts[0] || c[1] > counts[1] || c[2] > counts[2] {
+            if !self.comps[ci].fits_within(&counts) {
                 continue;
             }
-            let g = eff_power(c, self.e, self.k);
+            let g = eff_power(&self.comps[ci], self.e, self.k);
             if g <= best || g <= floor {
                 // comps sorted by g desc: nothing later can beat best
                 break;
             }
-            let rest = [counts[0] - c[0], counts[1] - c[1], counts[2] - c[2]];
+            let rest = counts.minus(&self.comps[ci]);
             let sub = self.solve(rest, j - 1, best.max(floor));
             let v = g.min(sub);
             if v > best {
@@ -122,30 +131,30 @@ impl<'a> Search<'a> {
     /// Reconstruct compositions achieving min-G >= `target` (the optimum
     /// returned by a prior floored solve). Floored re-solves keep the
     /// reconstruction as cheap as the search itself.
-    fn extract(&mut self, mut counts: [usize; 3], mut j: usize, target: f64) -> Vec<[usize; 3]> {
+    fn extract(&mut self, mut counts: KindVec<usize>, mut j: usize, target: f64) -> Vec<KindVec<usize>> {
         let eps = 1e-9;
         let mut out = Vec::with_capacity(j);
         while j > 1 {
             let mut chosen = None;
             for ci in 0..self.comps.len() {
-                let c = self.comps[ci];
-                if c[0] > counts[0] || c[1] > counts[1] || c[2] > counts[2] {
+                if !self.comps[ci].fits_within(&counts) {
                     continue;
                 }
-                let g = eff_power(c, self.e, self.k);
+                let g = eff_power(&self.comps[ci], self.e, self.k);
                 if g < target - eps {
                     break;
                 }
-                let rest = [counts[0] - c[0], counts[1] - c[1], counts[2] - c[2]];
+                let rest = counts.minus(&self.comps[ci]);
                 let sub = self.solve(rest, j - 1, target - eps);
                 if g.min(sub) >= target - eps {
-                    chosen = Some(c);
+                    chosen = Some(ci);
                     break;
                 }
             }
-            let c = chosen.expect("extract: optimum not reproducible");
+            let ci = chosen.expect("extract: optimum not reproducible");
+            let c = self.comps[ci].clone();
+            counts = counts.minus(&c);
             out.push(c);
-            counts = [counts[0] - c[0], counts[1] - c[1], counts[2] - c[2]];
             j -= 1;
         }
         out.push(counts);
@@ -154,31 +163,40 @@ impl<'a> Search<'a> {
 }
 
 /// Enumerate all compositions meeting the memory floor, sorted by
-/// effective power (desc).
+/// effective power (desc). Generalizes the seed's fixed 3-deep nested
+/// loops to K kinds with an odometer whose *last* kind digit spins
+/// fastest — the same visit order, so tie-breaking is unchanged.
 fn candidate_comps(
-    counts: [usize; 3],
-    e: &[EntitySpec; 3],
+    counts: &KindVec<usize>,
+    e: &[EntitySpec],
     min_mem: f64,
     k: usize,
-) -> Vec<[usize; 3]> {
+) -> Vec<KindVec<usize>> {
+    let kdim = counts.len();
     let mut out = Vec::new();
-    for c0 in 0..=counts[0] {
-        for c1 in 0..=counts[1] {
-            for c2 in 0..=counts[2] {
-                let c = [c0, c1, c2];
-                let n: usize = c.iter().sum();
-                if n == 0 {
-                    continue;
-                }
-                if mem(c, e) + 1e-9 >= min_mem {
-                    out.push(c);
-                }
+    let mut cur = vec![0usize; kdim];
+    'odometer: loop {
+        let n: usize = cur.iter().sum();
+        if n > 0 && mem(&cur, e) + 1e-9 >= min_mem {
+            out.push(KindVec::from(cur.clone()));
+        }
+        // advance: last digit fastest (matches the seed's loop nesting)
+        let mut i = kdim;
+        loop {
+            if i == 0 {
+                break 'odometer;
             }
+            if cur[i - 1] < counts[i - 1] {
+                cur[i - 1] += 1;
+                break;
+            }
+            cur[i - 1] = 0;
+            i -= 1;
         }
     }
     out.sort_by(|a, b| {
-        eff_power(*b, e, k)
-            .partial_cmp(&eff_power(*a, e, k))
+        eff_power(b, e, k)
+            .partial_cmp(&eff_power(a, e, k))
             .unwrap()
     });
     out
@@ -216,11 +234,16 @@ pub fn solve(p: &GroupingProblem) -> Option<GroupingSolution> {
 
 /// One Eq-3 solution per feasible J (unsorted).
 fn all_solutions(p: &GroupingProblem) -> Vec<GroupingSolution> {
-    let total: usize = p.counts.iter().sum();
+    assert_eq!(
+        p.counts.len(),
+        p.entity.len(),
+        "counts/entity kind dimensions differ"
+    );
+    let total = p.counts.total();
     if total == 0 {
         return Vec::new();
     }
-    let total_mem = mem(p.counts, &p.entity);
+    let total_mem = mem(&p.counts, &p.entity);
     // J can't exceed memory-feasible group count or entity count,
     // and each group needs ≥1 microbatch.
     let max_j = if p.min_mem_gib > 0.0 {
@@ -241,12 +264,13 @@ fn all_solutions(p: &GroupingProblem) -> Vec<GroupingSolution> {
     // runs only on the most promising J values (ordered by LPT score),
     // seeded with the LPT result as incumbent so the first prune already
     // has a strong floor. Large instances (64+ entities) dropped from
-    // ~7 min of exhaustive per-J search to seconds (see EXPERIMENTS.md).
+    // ~7 min of exhaustive per-J search to seconds (see DESIGN.md
+    // "Planning overhead").
     const EXACT_J_BUDGET: usize = 10;
-    let mut lpt: Vec<(usize, Option<(Vec<[usize; 3]>, f64)>)> = (1..=max_j)
+    let mut lpt: Vec<(usize, Option<(Vec<KindVec<usize>>, f64)>)> = (1..=max_j)
         .map(|j| {
             let k = (p.microbatches_total / j).max(1);
-            (j, lpt_heuristic(p.counts, &p.entity, p.min_mem_gib, j, k))
+            (j, lpt_heuristic(&p.counts, &p.entity, p.min_mem_gib, j, k))
         })
         .collect();
     lpt.sort_by(|a, b| {
@@ -265,11 +289,11 @@ fn all_solutions(p: &GroupingProblem) -> Vec<GroupingSolution> {
         // Exact search is worthwhile (and tractable) on small/medium
         // instances; at 64+ entities the composition space explodes and
         // the LPT assignment with floored verification is the practical
-        // optimum (documented in EXPERIMENTS.md "Planning overhead").
+        // optimum (documented in DESIGN.md "Planning overhead").
         let run_exact = rank < EXACT_J_BUDGET && !over_deadline && total <= 26;
         let mut fell_back = !run_exact;
         let sol = if run_exact {
-            let comps = candidate_comps(p.counts, &p.entity, p.min_mem_gib, k_per_group);
+            let comps = candidate_comps(&p.counts, &p.entity, p.min_mem_gib, k_per_group);
             if comps.is_empty() {
                 None
             } else {
@@ -286,9 +310,9 @@ fn all_solutions(p: &GroupingProblem) -> Vec<GroupingSolution> {
                     .as_ref()
                     .map(|(_, g)| g - 1e-9)
                     .unwrap_or(f64::NEG_INFINITY);
-                let v = s.solve(p.counts, j, floor);
+                let v = s.solve(p.counts.clone(), j, floor);
                 if v.is_finite() && lpt_sol.as_ref().map(|(_, g)| v > *g).unwrap_or(true) {
-                    Some((s.extract(p.counts, j, v), v))
+                    Some((s.extract(p.counts.clone(), j, v), v))
                 } else {
                     fell_back = lpt_sol.is_some();
                     lpt_sol
@@ -318,12 +342,20 @@ mod tests {
         EntitySpec { power, mem_gib: mem }
     }
 
+    fn paper_entities() -> KindVec<EntitySpec> {
+        KindVec::from(vec![ent(1.0, 80.0), ent(2.0, 80.0), ent(0.5, 100.0)])
+    }
+
+    fn kv(c: [usize; 3]) -> KindVec<usize> {
+        KindVec::from(c.to_vec())
+    }
+
     /// 2×A100 + 1×H800, model fits one GPU: the paper's Fig-2 toy setup.
     #[test]
     fn toy_a100x2_h800() {
         let p = GroupingProblem {
-            counts: [2, 1, 0],
-            entity: [ent(1.0, 80.0), ent(2.0, 80.0), ent(0.5, 100.0)],
+            counts: kv([2, 1, 0]),
+            entity: paper_entities(),
             min_mem_gib: 60.0,
             microbatches_total: 16,
             deadline: None,
@@ -333,7 +365,7 @@ mod tests {
         assert_eq!(s.groups.len(), 2);
         let mut gs = s.groups.clone();
         gs.sort();
-        assert_eq!(gs, vec![[0, 1, 0], [2, 0, 0]]);
+        assert_eq!(gs, vec![kv([0, 1, 0]), kv([2, 0, 0])]);
         // G(A100 pair, K=8): 2·(1 − 1/9) = 16/9; G(H800) = 2
         assert!((s.min_g - 16.0 / 9.0).abs() < 1e-9, "{}", s.min_g);
     }
@@ -342,8 +374,8 @@ mod tests {
     fn memory_floor_forces_merging() {
         // each entity 80 GiB, model needs 150 GiB -> groups need ≥2 entities
         let p = GroupingProblem {
-            counts: [4, 0, 0],
-            entity: [ent(1.0, 80.0), ent(2.0, 80.0), ent(0.5, 100.0)],
+            counts: kv([4, 0, 0]),
+            entity: paper_entities(),
             min_mem_gib: 150.0,
             microbatches_total: 16,
             deadline: None,
@@ -351,15 +383,15 @@ mod tests {
         let s = solve(&p).unwrap();
         assert_eq!(s.groups.len(), 2);
         for g in &s.groups {
-            assert!(g.iter().sum::<usize>() >= 2);
+            assert!(g.total() >= 2);
         }
     }
 
     #[test]
     fn exact_coverage_every_entity_used() {
         let p = GroupingProblem {
-            counts: [5, 3, 0],
-            entity: [ent(1.0, 80.0), ent(2.0, 80.0), ent(0.5, 100.0)],
+            counts: kv([5, 3, 0]),
+            entity: paper_entities(),
             min_mem_gib: 100.0,
             microbatches_total: 32,
             deadline: None,
@@ -377,22 +409,22 @@ mod tests {
     #[test]
     fn single_entity_cluster() {
         let p = GroupingProblem {
-            counts: [1, 0, 0],
-            entity: [ent(1.0, 80.0), ent(2.0, 80.0), ent(0.5, 100.0)],
+            counts: kv([1, 0, 0]),
+            entity: paper_entities(),
             min_mem_gib: 50.0,
             microbatches_total: 8,
             deadline: None,
         };
         let s = solve(&p).unwrap();
-        assert_eq!(s.groups, vec![[1, 0, 0]]);
+        assert_eq!(s.groups, vec![kv([1, 0, 0])]);
         assert_eq!(s.objective, s.min_g);
     }
 
     #[test]
     fn infeasible_when_memory_short() {
         let p = GroupingProblem {
-            counts: [1, 0, 0],
-            entity: [ent(1.0, 80.0), ent(2.0, 80.0), ent(0.5, 100.0)],
+            counts: kv([1, 0, 0]),
+            entity: paper_entities(),
             min_mem_gib: 500.0,
             microbatches_total: 8,
             deadline: None,
@@ -404,12 +436,12 @@ mod tests {
     fn matches_brute_force_small() {
         // exhaustive check on a small instance: enumerate ALL partitions
         // of 3 A100 + 2 H800 into any J and verify the solver's optimum.
-        let e = [ent(1.0, 80.0), ent(2.0, 80.0), ent(0.5, 100.0)];
+        let e = paper_entities();
         let min_mem = 70.0;
         let total_mb = 12usize;
         let p = GroupingProblem {
-            counts: [3, 2, 0],
-            entity: e,
+            counts: kv([3, 2, 0]),
+            entity: e.clone(),
             min_mem_gib: min_mem,
             microbatches_total: total_mb,
             deadline: None,
@@ -417,23 +449,23 @@ mod tests {
         let s = solve(&p).unwrap();
 
         // brute force
-        fn partitions(counts: [usize; 3], j: usize, e: &[EntitySpec; 3], mm: f64, k: usize) -> f64 {
+        fn partitions(counts: [usize; 3], j: usize, e: &[EntitySpec], mm: f64, k: usize) -> f64 {
             if j == 1 {
-                if counts.iter().sum::<usize>() == 0 || mem(counts, e) < mm {
+                if counts.iter().sum::<usize>() == 0 || mem(&counts, e) < mm {
                     return f64::NEG_INFINITY;
                 }
-                return eff_power(counts, e, k);
+                return eff_power(&counts, e, k);
             }
             let mut best = f64::NEG_INFINITY;
             for c0 in 0..=counts[0] {
                 for c1 in 0..=counts[1] {
                     for c2 in 0..=counts[2] {
                         let c = [c0, c1, c2];
-                        if c.iter().sum::<usize>() == 0 || mem(c, e) < mm {
+                        if c.iter().sum::<usize>() == 0 || mem(&c, e) < mm {
                             continue;
                         }
                         let rest = [counts[0] - c0, counts[1] - c1, counts[2] - c2];
-                        let v = eff_power(c, e, k)
+                        let v = eff_power(&c, e, k)
                             .min(partitions(rest, j - 1, e, mm, k));
                         best = best.max(v);
                     }
@@ -451,10 +483,40 @@ mod tests {
     }
 
     #[test]
+    fn five_kind_catalog_solves() {
+        // K is no longer fixed at 3: a 5-kind instance must solve with
+        // exact coverage across all kinds.
+        let e = KindVec::from(vec![
+            ent(1.0, 80.0),
+            ent(2.0, 80.0),
+            ent(0.5, 100.0),
+            ent(7.0, 192.0),
+            ent(0.6, 48.0),
+        ]);
+        let p = GroupingProblem {
+            counts: KindVec::from(vec![2, 1, 1, 1, 2]),
+            entity: e,
+            min_mem_gib: 60.0,
+            microbatches_total: 32,
+            deadline: None,
+        };
+        let s = solve(&p).unwrap();
+        let mut used = vec![0usize; 5];
+        for g in &s.groups {
+            assert_eq!(g.len(), 5);
+            for i in 0..5 {
+                used[i] += g[i];
+            }
+        }
+        assert_eq!(used, vec![2, 1, 1, 1, 2]);
+        assert!(s.min_g > 0.0);
+    }
+
+    #[test]
     fn deadline_falls_back_to_heuristic() {
         let p = GroupingProblem {
-            counts: [20, 20, 20],
-            entity: [ent(1.0, 80.0), ent(2.0, 80.0), ent(0.5, 100.0)],
+            counts: kv([20, 20, 20]),
+            entity: paper_entities(),
             min_mem_gib: 80.0,
             microbatches_total: 64,
             deadline: Some(0.0), // immediately over budget

@@ -5,38 +5,41 @@
 //! next entity to the currently-weakest group, then patch memory-floor
 //! violations by stealing from the strongest groups.
 
+use crate::cluster::KindVec;
+
 use super::bnb::{eff_power, mem};
 use super::EntitySpec;
 
 /// Greedy J-group partition. Returns (compositions, min effective power).
 pub fn lpt_heuristic(
-    counts: [usize; 3],
-    e: &[EntitySpec; 3],
+    counts: &KindVec<usize>,
+    e: &[EntitySpec],
     min_mem_gib: f64,
     j: usize,
     k_per_group: usize,
-) -> Option<(Vec<[usize; 3]>, f64)> {
-    let total: usize = counts.iter().sum();
+) -> Option<(Vec<KindVec<usize>>, f64)> {
+    let kdim = counts.len();
+    let total = counts.total();
     if total < j || j == 0 {
         return None;
     }
     // expand entities, strongest first
     let mut ents: Vec<usize> = Vec::with_capacity(total);
-    for kind in 0..3 {
+    for kind in 0..kdim {
         ents.extend(std::iter::repeat(kind).take(counts[kind]));
     }
     ents.sort_by(|&a, &b| e[b].power.partial_cmp(&e[a].power).unwrap());
 
-    let mut groups = vec![[0usize; 3]; j];
+    let mut groups = vec![KindVec::new(kdim, 0usize); j];
     for &kind in &ents {
         // weakest group by raw power (ties: fewest entities)
         let gi = (0..j)
             .min_by(|&a, &b| {
-                let pa: f64 = raw(groups[a], e);
-                let pb: f64 = raw(groups[b], e);
+                let pa: f64 = raw(&groups[a], e);
+                let pb: f64 = raw(&groups[b], e);
                 pa.partial_cmp(&pb)
                     .unwrap()
-                    .then(size(groups[a]).cmp(&size(groups[b])))
+                    .then(groups[a].total().cmp(&groups[b].total()))
             })
             .unwrap();
         groups[gi][kind] += 1;
@@ -45,37 +48,33 @@ pub fn lpt_heuristic(
     // Patch memory violations: move entities from the most memory-rich
     // group into violators (bounded passes).
     for _ in 0..total {
-        let Some(bad) = (0..j).find(|&gi| mem(groups[gi], e) + 1e-9 < min_mem_gib) else {
+        let Some(bad) = (0..j).find(|&gi| mem(&groups[gi], e) + 1e-9 < min_mem_gib) else {
             break;
         };
         let donor = (0..j)
-            .filter(|&gi| gi != bad && size(groups[gi]) > 1)
+            .filter(|&gi| gi != bad && groups[gi].total() > 1)
             .max_by(|&a, &b| {
-                mem(groups[a], e).partial_cmp(&mem(groups[b], e)).unwrap()
+                mem(&groups[a], e).partial_cmp(&mem(&groups[b], e)).unwrap()
             })?;
         // move the smallest-power entity kind present in donor
-        let kind = (0..3)
+        let kind = (0..kdim)
             .filter(|&kk| groups[donor][kk] > 0)
             .min_by(|&a, &b| e[a].power.partial_cmp(&e[b].power).unwrap())?;
         groups[donor][kind] -= 1;
         groups[bad][kind] += 1;
     }
-    if (0..j).any(|gi| mem(groups[gi], e) + 1e-9 < min_mem_gib || size(groups[gi]) == 0) {
+    if (0..j).any(|gi| mem(&groups[gi], e) + 1e-9 < min_mem_gib || groups[gi].total() == 0) {
         return None;
     }
     let min_g = groups
         .iter()
-        .map(|&g| eff_power(g, e, k_per_group))
+        .map(|g| eff_power(g, e, k_per_group))
         .fold(f64::INFINITY, f64::min);
     Some((groups, min_g))
 }
 
-fn raw(c: [usize; 3], e: &[EntitySpec; 3]) -> f64 {
+fn raw(c: &[usize], e: &[EntitySpec]) -> f64 {
     c.iter().zip(e).map(|(&n, s)| n as f64 * s.power).sum()
-}
-
-fn size(c: [usize; 3]) -> usize {
-    c.iter().sum()
 }
 
 #[cfg(test)]
@@ -86,14 +85,22 @@ mod tests {
         EntitySpec { power, mem_gib: mem }
     }
 
+    fn paper_entities() -> Vec<EntitySpec> {
+        vec![ent(1.0, 80.0), ent(2.0, 80.0), ent(0.5, 100.0)]
+    }
+
+    fn kv(c: [usize; 3]) -> KindVec<usize> {
+        KindVec::from(c.to_vec())
+    }
+
     #[test]
     fn balances_two_groups() {
-        let e = [ent(1.0, 80.0), ent(2.0, 80.0), ent(0.5, 100.0)];
-        let (gs, min_g) = lpt_heuristic([4, 2, 0], &e, 60.0, 2, 8).unwrap();
+        let e = paper_entities();
+        let (gs, min_g) = lpt_heuristic(&kv([4, 2, 0]), &e, 60.0, 2, 8).unwrap();
         assert_eq!(gs.len(), 2);
         // raw powers should be equal: each group gets 1 H800 + 2 A100
         for g in &gs {
-            assert_eq!(*g, [2, 1, 0]);
+            assert_eq!(*g, kv([2, 1, 0]));
         }
         assert!(min_g > 0.0);
     }
@@ -101,17 +108,33 @@ mod tests {
     #[test]
     fn memory_patching_moves_entities() {
         // 3 entities of 80 GiB, floor 150 -> 1 group of 3 is the only option
-        let e = [ent(1.0, 80.0), ent(2.0, 80.0), ent(0.5, 100.0)];
-        assert!(lpt_heuristic([3, 0, 0], &e, 150.0, 3, 8).is_none());
-        let (gs, _) = lpt_heuristic([4, 0, 0], &e, 150.0, 2, 8).unwrap();
+        let e = paper_entities();
+        assert!(lpt_heuristic(&kv([3, 0, 0]), &e, 150.0, 3, 8).is_none());
+        let (gs, _) = lpt_heuristic(&kv([4, 0, 0]), &e, 150.0, 2, 8).unwrap();
         for g in &gs {
-            assert!(mem(*g, &e) >= 150.0);
+            assert!(mem(g, &e) >= 150.0);
         }
     }
 
     #[test]
     fn too_few_entities_is_none() {
-        let e = [ent(1.0, 80.0), ent(2.0, 80.0), ent(0.5, 100.0)];
-        assert!(lpt_heuristic([1, 0, 0], &e, 10.0, 2, 8).is_none());
+        let e = paper_entities();
+        assert!(lpt_heuristic(&kv([1, 0, 0]), &e, 10.0, 2, 8).is_none());
+    }
+
+    #[test]
+    fn arbitrary_kind_count_supported() {
+        let e = vec![ent(1.0, 80.0), ent(2.0, 80.0), ent(0.5, 100.0), ent(4.0, 96.0)];
+        let counts = KindVec::from(vec![2, 2, 2, 2]);
+        let (gs, min_g) = lpt_heuristic(&counts, &e, 60.0, 4, 8).unwrap();
+        assert_eq!(gs.len(), 4);
+        let mut used = vec![0usize; 4];
+        for g in &gs {
+            for i in 0..4 {
+                used[i] += g[i];
+            }
+        }
+        assert_eq!(used, vec![2, 2, 2, 2]);
+        assert!(min_g > 0.0);
     }
 }

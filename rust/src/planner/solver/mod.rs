@@ -5,7 +5,10 @@
 //! one type are interchangeable, so a DP group is fully described by a
 //! *composition* — how many TP entities of each kind it contains — and an
 //! assignment is a partition of the per-kind entity counts into J
-//! compositions. We exploit that directly:
+//! compositions. Compositions are [`crate::cluster::KindVec`]s over an
+//! arbitrary GPU catalog (the paper's testbed is the 3-kind built-in
+//! catalog; nothing here is specialized to K = 3). We exploit the
+//! structure directly:
 //!
 //! * outer loop over the number of DP groups J (paper's Σ y_j),
 //! * memoized branch-and-bound over `(remaining counts, groups left)`

@@ -1,7 +1,11 @@
 //! Plan data model shared by the planner, simulator, real pipeline
 //! executor, checkpoint manager, and benches.
+//!
+//! Stages carry [`KindId`]s; anything that needs a spec or a display name
+//! resolves them against the [`GpuCatalog`] the plan was produced with
+//! (carried by the `ClusterSpec`/`ProfileDb` the caller already holds).
 
-use crate::cluster::{GpuKind, GpuRef};
+use crate::cluster::{GpuCatalog, GpuRef, KindId};
 use crate::util::json::Json;
 
 /// One pipeline stage inside a DP group: a TP entity (1 or more NVLinked
@@ -10,7 +14,7 @@ use crate::util::json::Json;
 pub struct StagePlan {
     /// Physical GPUs executing this stage (len == tp degree).
     pub gpus: Vec<GpuRef>,
-    pub kind: GpuKind,
+    pub kind: KindId,
     /// First layer index (global, 0-based) held by this stage.
     pub layer_lo: usize,
     /// One past the last layer index.
@@ -54,15 +58,15 @@ impl DpGroupPlan {
         (p - 1.0) / (k + p - 1.0)
     }
     /// Raw computing power Σ g_i over member GPUs.
-    pub fn raw_power(&self) -> f64 {
+    pub fn raw_power(&self, cat: &GpuCatalog) -> f64 {
         self.stages
             .iter()
-            .map(|s| s.gpus.len() as f64 * s.kind.spec().relative_power)
+            .map(|s| s.gpus.len() as f64 * cat.get(s.kind).relative_power)
             .sum()
     }
     /// Paper Eq (2): effective computing power G_j.
-    pub fn effective_power(&self) -> f64 {
-        self.raw_power() * (1.0 - self.bubble_ratio())
+    pub fn effective_power(&self, cat: &GpuCatalog) -> f64 {
+        self.raw_power(cat) * (1.0 - self.bubble_ratio())
     }
 }
 
@@ -86,10 +90,10 @@ impl ParallelPlan {
         self.groups.iter().map(|g| g.gpu_count()).sum()
     }
     /// min_j G_j — the solver's z.
-    pub fn min_effective_power(&self) -> f64 {
+    pub fn min_effective_power(&self, cat: &GpuCatalog) -> f64 {
         self.groups
             .iter()
-            .map(|g| g.effective_power())
+            .map(|g| g.effective_power(cat))
             .fold(f64::INFINITY, f64::min)
     }
 
@@ -131,7 +135,7 @@ impl ParallelPlan {
         Ok(())
     }
 
-    pub fn to_json(&self) -> Json {
+    pub fn to_json(&self, cat: &GpuCatalog) -> Json {
         Json::obj(vec![
             ("model", Json::str(&self.model_name)),
             ("tp_dim", Json::num(self.tp_dim as f64)),
@@ -152,7 +156,7 @@ impl ParallelPlan {
                                             .iter()
                                             .map(|s| {
                                                 Json::obj(vec![
-                                                    ("kind", Json::str(s.kind.name())),
+                                                    ("kind", Json::str(cat.name(s.kind))),
                                                     ("layers", Json::arr_usize(&[s.layer_lo, s.layer_hi])),
                                                     (
                                                         "gpus",
@@ -179,14 +183,14 @@ impl ParallelPlan {
     }
 
     /// Compact one-line description, e.g. `tp2 dp2 [H800:32 | A100:16+A100:16]`.
-    pub fn summary(&self) -> String {
+    pub fn summary(&self, cat: &GpuCatalog) -> String {
         let gs: Vec<String> = self
             .groups
             .iter()
             .map(|g| {
                 g.stages
                     .iter()
-                    .map(|s| format!("{}:{}", s.kind, s.n_layers()))
+                    .map(|s| format!("{}:{}", cat.name(s.kind), s.n_layers()))
                     .collect::<Vec<_>>()
                     .join("+")
             })
@@ -198,9 +202,9 @@ impl ParallelPlan {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cluster::GpuKind;
+    use crate::cluster::KindId;
 
-    fn stage(kind: GpuKind, lo: usize, hi: usize, node: usize, first: bool, last: bool) -> StagePlan {
+    fn stage(kind: KindId, lo: usize, hi: usize, node: usize, first: bool, last: bool) -> StagePlan {
         StagePlan {
             gpus: vec![GpuRef { node, local: lo }],
             kind,
@@ -218,10 +222,10 @@ mod tests {
             groups: vec![
                 DpGroupPlan {
                     stages: vec![
-                        stage(GpuKind::A100, 0, 2, 0, true, false),
+                        stage(KindId::A100, 0, 2, 0, true, false),
                         StagePlan {
                             gpus: vec![GpuRef { node: 0, local: 1 }],
-                            kind: GpuKind::A100,
+                            kind: KindId::A100,
                             layer_lo: 2,
                             layer_hi: 4,
                             has_embed: false,
@@ -233,7 +237,7 @@ mod tests {
                 DpGroupPlan {
                     stages: vec![StagePlan {
                         gpus: vec![GpuRef { node: 1, local: 0 }],
-                        kind: GpuKind::H800,
+                        kind: KindId::H800,
                         layer_lo: 0,
                         layer_hi: 4,
                         has_embed: true,
@@ -277,17 +281,19 @@ mod tests {
 
     #[test]
     fn effective_power_penalizes_depth() {
+        let cat = GpuCatalog::builtin();
         let p = two_group_plan();
         // group0: raw 2.0, eff 2*(8/9); group1: raw 2.0 (H800), eff 2.0
-        assert!(p.groups[0].effective_power() < p.groups[1].effective_power());
-        assert!((p.min_effective_power() - 2.0 * 8.0 / 9.0).abs() < 1e-9);
+        assert!(p.groups[0].effective_power(&cat) < p.groups[1].effective_power(&cat));
+        assert!((p.min_effective_power(&cat) - 2.0 * 8.0 / 9.0).abs() < 1e-9);
     }
 
     #[test]
     fn summary_and_json() {
+        let cat = GpuCatalog::builtin();
         let p = two_group_plan();
-        assert!(p.summary().contains("dp2"));
-        let j = p.to_json().to_string();
+        assert!(p.summary(&cat).contains("dp2"));
+        let j = p.to_json(&cat).to_string();
         assert!(j.contains("H800"));
     }
 }

@@ -14,22 +14,28 @@
 //! * **Memory profiling** — measure a single layer per TP dimension and
 //!   scale linearly with layer count.
 //!
+//! The profile sweeps *every* kind of its [`GpuCatalog`] — the catalog is
+//! carried inside the `ProfileDb` so every downstream consumer (planner,
+//! simulator, baselines) resolves [`KindId`]s against the same registry.
+//!
 //! [`ProfileDb::profiling_cost_s`] accounts the emulated wall-clock cost
 //! of the profile sweep, reproducing the §V-B overhead table.
 
 use std::collections::BTreeMap;
 
-use crate::cluster::gpu::GpuKind;
+use crate::cluster::catalog::{GpuCatalog, KindId};
 use crate::modelcfg::ModelCfg;
 use crate::util::rng::Rng;
 
 /// Profile key: (GPU kind, TP degree, 2^i layers).
-pub type Key = (GpuKind, usize, usize);
+pub type Key = (KindId, usize, usize);
 
-/// Measured profile points + the model config they were taken against.
+/// Measured profile points + the model config and GPU catalog they were
+/// taken against.
 #[derive(Debug, Clone)]
 pub struct ProfileDb {
     pub model: ModelCfg,
+    pub catalog: GpuCatalog,
     /// Per-microbatch fwd+bwd seconds for 2^i layers.
     table: BTreeMap<Key, f64>,
     /// Per-layer activation stash bytes per microbatch, per TP degree.
@@ -47,17 +53,24 @@ const SETUP_S: f64 = 14.0; // process launch + NCCL-equivalent init per point
 
 impl ProfileDb {
     /// "Measure" (analytic model + noise) all power-of-two layer counts up
-    /// to the model's layer total, for every (kind, tp) combination.
-    pub fn build(model: &ModelCfg, kinds: &[GpuKind], tp_dims: &[usize], seed: u64) -> ProfileDb {
+    /// to the model's layer total, for every (kind, tp) combination of
+    /// the catalog.
+    pub fn build(
+        model: &ModelCfg,
+        catalog: &GpuCatalog,
+        tp_dims: &[usize],
+        seed: u64,
+    ) -> ProfileDb {
         let mut db = ProfileDb {
             model: model.clone(),
+            catalog: catalog.clone(),
             table: BTreeMap::new(),
             mem_per_layer: BTreeMap::new(),
             noise_rel: 0.002,
             seed,
         };
         let mut rng = Rng::new(seed ^ 0xC0FFEE);
-        for &kind in kinds {
+        for kind in catalog.ids() {
             for &tp in tp_dims {
                 let mut l = 1usize;
                 while l <= model.n_layers.next_power_of_two() {
@@ -79,8 +92,8 @@ impl ProfileDb {
     /// real profiling would measure). Includes a mild super-linear kernel
     /// launch/fragmentation term so binary decomposition has realistic
     /// (small, positive) error.
-    pub fn true_stage_time_s(&self, kind: GpuKind, tp: usize, l: usize) -> f64 {
-        let spec = kind.spec();
+    pub fn true_stage_time_s(&self, kind: KindId, tp: usize, l: usize) -> f64 {
+        let spec = self.catalog.get(kind);
         let flops = self.model.fwdbwd_flops_layers(l) / tp as f64;
         let compute = flops / (spec.flops_tf * 1e12);
         // TP introduces 2 AllReduces per layer fwd (+2 bwd) over NVLink.
@@ -105,7 +118,7 @@ impl ProfileDb {
     }
 
     /// Eq (5): estimate `n` layers from the power-of-two measurements.
-    pub fn stage_time_s(&self, kind: GpuKind, tp: usize, n: usize) -> f64 {
+    pub fn stage_time_s(&self, kind: KindId, tp: usize, n: usize) -> f64 {
         if n == 0 {
             return 0.0;
         }
@@ -159,19 +172,14 @@ mod tests {
     use super::*;
 
     fn db() -> ProfileDb {
-        ProfileDb::build(
-            &ModelCfg::gpt3_6p7b(),
-            &[GpuKind::A100, GpuKind::H800],
-            &[1, 2],
-            7,
-        )
+        ProfileDb::build(&ModelCfg::gpt3_6p7b(), &GpuCatalog::builtin(), &[1, 2], 7)
     }
 
     #[test]
     fn h800_is_about_twice_a100() {
         let d = db();
-        let a = d.stage_time_s(GpuKind::A100, 1, 8);
-        let h = d.stage_time_s(GpuKind::H800, 1, 8);
+        let a = d.stage_time_s(KindId::A100, 1, 8);
+        let h = d.stage_time_s(KindId::H800, 1, 8);
         let ratio = a / h;
         assert!(ratio > 1.8 && ratio < 2.2, "{ratio}");
     }
@@ -182,8 +190,8 @@ mod tests {
         // negligible error". Check every n up to 32.
         let d = db();
         for n in 1..=32 {
-            let est = d.stage_time_s(GpuKind::A100, 1, n);
-            let truth = d.true_stage_time_s(GpuKind::A100, 1, n);
+            let est = d.stage_time_s(KindId::A100, 1, n);
+            let truth = d.true_stage_time_s(KindId::A100, 1, n);
             let err = (est - truth).abs() / truth;
             assert!(err < 0.06, "n={n}: err {err}");
         }
@@ -192,8 +200,8 @@ mod tests {
     #[test]
     fn tp_reduces_time_but_sublinearly() {
         let d = db();
-        let t1 = d.stage_time_s(GpuKind::A100, 1, 8);
-        let t2 = d.stage_time_s(GpuKind::A100, 2, 8);
+        let t1 = d.stage_time_s(KindId::A100, 1, 8);
+        let t2 = d.stage_time_s(KindId::A100, 2, 8);
         assert!(t2 < t1);
         assert!(t2 > t1 / 2.0); // comm overhead makes it sub-linear
     }
@@ -203,7 +211,7 @@ mod tests {
         let d = db();
         let mut prev = 0.0;
         for n in 1..=16 {
-            let t = d.stage_time_s(GpuKind::H800, 1, n);
+            let t = d.stage_time_s(KindId::H800, 1, n);
             assert!(t > prev);
             prev = t;
         }
@@ -212,18 +220,24 @@ mod tests {
     #[test]
     fn profiling_cost_in_paper_band() {
         // Paper §V-B: 11.9–15.4 minutes for the full sweep on 3 kinds.
-        let d = ProfileDb::build(
-            &ModelCfg::gpt3_6p7b(),
-            &[GpuKind::A100, GpuKind::H800, GpuKind::H20],
-            &[1, 2, 4, 8],
-            1,
-        );
+        let d = ProfileDb::build(&ModelCfg::gpt3_6p7b(), &GpuCatalog::builtin(), &[1, 2, 4, 8], 1);
         let minutes = d.profiling_cost_s() / 60.0;
         assert!(minutes > 5.0 && minutes < 30.0, "{minutes} min");
     }
 
     #[test]
+    fn custom_kind_is_profiled() {
+        // an extended catalog produces timings for every kind, scaled by power
+        let cat = GpuCatalog::extended();
+        let d = ProfileDb::build(&ModelCfg::gpt3_6p7b(), &cat, &[1, 2], 3);
+        let b200 = cat.lookup("B200").unwrap();
+        let t_b200 = d.stage_time_s(b200, 1, 8);
+        let t_a100 = d.stage_time_s(KindId::A100, 1, 8);
+        assert!(t_b200 < t_a100, "{t_b200} vs {t_a100}");
+    }
+
+    #[test]
     fn zero_layers_is_free() {
-        assert_eq!(db().stage_time_s(GpuKind::A100, 1, 0), 0.0);
+        assert_eq!(db().stage_time_s(KindId::A100, 1, 0), 0.0);
     }
 }

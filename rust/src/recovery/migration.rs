@@ -10,7 +10,7 @@
 
 use std::collections::{BTreeMap, BTreeSet};
 
-use crate::cluster::gpu::Interconnect;
+use crate::cluster::Interconnect;
 use crate::modelcfg::ModelCfg;
 use crate::planner::types::ParallelPlan;
 
@@ -113,13 +113,13 @@ impl MigrationPlan {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cluster::{GpuKind, GpuRef};
+    use crate::cluster::{GpuRef, KindId};
     use crate::planner::types::{DpGroupPlan, StagePlan};
 
     fn stage(node: usize, lo: usize, hi: usize, last: usize) -> StagePlan {
         StagePlan {
             gpus: vec![GpuRef { node, local: 0 }],
-            kind: GpuKind::A100,
+            kind: KindId::A100,
             layer_lo: lo,
             layer_hi: hi,
             has_embed: lo == 0,

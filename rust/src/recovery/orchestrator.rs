@@ -4,7 +4,7 @@
 
 use anyhow::Result;
 
-use crate::cluster::{ClusterSpec, GpuKind, PreemptionEvent};
+use crate::cluster::{ClusterSpec, KindId, PreemptionEvent};
 use crate::modelcfg::ModelCfg;
 use crate::planner::{auto_plan, ParallelPlan, PlanOptions};
 use crate::profile::ProfileDb;
@@ -39,6 +39,12 @@ impl ElasticCoordinator {
 
     /// Apply an availability delta for one GPU kind and replan.
     pub fn handle_event(&mut self, ev: &PreemptionEvent) -> Result<ReplanOutcome> {
+        anyhow::ensure!(
+            ev.kind.index() < self.cluster.catalog.len(),
+            "event kind KindId({}) is not in the cluster catalog {}",
+            ev.kind.index(),
+            self.cluster.catalog
+        );
         let old_tp = self.plan.as_ref().map(|p| p.tp_dim).unwrap_or(1);
         let old_dp = self.plan.as_ref().map(|p| p.dp_degree()).unwrap_or(0);
 
@@ -79,12 +85,12 @@ impl ElasticCoordinator {
     }
 
     /// Convenience: preempt `n` GPUs of `kind`.
-    pub fn preempt(&mut self, kind: GpuKind, n: usize) -> Result<ReplanOutcome> {
+    pub fn preempt(&mut self, kind: KindId, n: usize) -> Result<ReplanOutcome> {
         self.handle_event(&PreemptionEvent { at_s: 0.0, kind, delta: -(n as i64) })
     }
 
     /// Convenience: grant `n` GPUs of `kind`.
-    pub fn grant(&mut self, kind: GpuKind, n: usize) -> Result<ReplanOutcome> {
+    pub fn grant(&mut self, kind: KindId, n: usize) -> Result<ReplanOutcome> {
         self.handle_event(&PreemptionEvent { at_s: 0.0, kind, delta: n as i64 })
     }
 }
@@ -97,11 +103,11 @@ mod tests {
         let model = ModelCfg::bert_large();
         let profile = ProfileDb::build(
             &model,
-            &[GpuKind::A100, GpuKind::H800, GpuKind::H20],
+            &crate::cluster::GpuCatalog::builtin(),
             &[1, 2, 4, 8],
             1,
         );
-        let cluster = ClusterSpec::from_counts(&[(4, GpuKind::A100), (4, GpuKind::H800)]);
+        let cluster = ClusterSpec::from_counts(&[(4, KindId::A100), (4, KindId::H800)]);
         ElasticCoordinator::new(model, profile, cluster).unwrap()
     }
 
@@ -109,7 +115,7 @@ mod tests {
     fn preemption_shrinks_and_replans() {
         let mut c = coordinator();
         assert!(c.plan.is_some());
-        let out = c.preempt(GpuKind::H800, 4).unwrap();
+        let out = c.preempt(KindId::H800, 4).unwrap();
         assert_eq!(out.cluster.total_gpus(), 4);
         let plan = out.plan.unwrap();
         plan.validate(c.model.n_layers).unwrap();
@@ -121,17 +127,26 @@ mod tests {
     fn grant_grows_cluster() {
         let mut c = coordinator();
         let before_dp = c.plan.as_ref().unwrap().dp_degree();
-        let out = c.grant(GpuKind::H20, 4).unwrap();
+        let out = c.grant(KindId::H20, 4).unwrap();
         assert_eq!(out.cluster.total_gpus(), 12);
         let plan = out.plan.unwrap();
         assert!(plan.dp_degree() >= before_dp);
     }
 
     #[test]
+    fn foreign_kind_event_is_rejected() {
+        // a KindId outside the cluster's catalog must error with a
+        // diagnostic, not index-panic deep inside the planner
+        let mut c = coordinator();
+        let err = c.grant(KindId(7), 4).unwrap_err().to_string();
+        assert!(err.contains("KindId(7)") && err.contains("A100"), "{err}");
+    }
+
+    #[test]
     fn losing_everything_yields_no_plan() {
         let mut c = coordinator();
-        c.preempt(GpuKind::A100, 4).unwrap();
-        let out = c.preempt(GpuKind::H800, 4).unwrap();
+        c.preempt(KindId::A100, 4).unwrap();
+        let out = c.preempt(KindId::H800, 4).unwrap();
         assert!(out.plan.is_none());
         assert_eq!(out.cluster.total_gpus(), 0);
     }
@@ -142,10 +157,10 @@ mod tests {
         // trade DP width for pipeline depth) — but every outcome must be
         // a valid plan over the surviving GPUs and the change recorded.
         let mut c = coordinator();
-        let o1 = c.preempt(GpuKind::A100, 2).unwrap();
+        let o1 = c.preempt(KindId::A100, 2).unwrap();
         assert_eq!(o1.dp_change.1, o1.plan.as_ref().unwrap().dp_degree());
         o1.plan.unwrap().validate(c.model.n_layers).unwrap();
-        let o2 = c.grant(GpuKind::A100, 2).unwrap();
+        let o2 = c.grant(KindId::A100, 2).unwrap();
         assert_eq!(o2.dp_change.1, o2.plan.as_ref().unwrap().dp_degree());
         assert_eq!(o2.cluster.total_gpus(), 8);
     }

@@ -2,7 +2,7 @@
 //! asymmetric DP groups (Observation 2), and the asymmetric-TP transpose
 //! penalty (Observation 1 / Figure 3).
 
-use crate::cluster::gpu::{GpuKind, Interconnect};
+use crate::cluster::{GpuSpec, Interconnect};
 use crate::modelcfg::ModelCfg;
 
 /// Classic ring AllReduce: 2(n−1)/n passes over the payload.
@@ -95,26 +95,17 @@ pub fn gpu_granular_sync_s(
 /// a strided gather/scatter through HBM runs ~10× below streaming
 /// bandwidth, plus the temporary doubles allocator traffic — which is
 /// why the measured degradation reaches 49% and grows with model size.
-pub fn asym_tp_transpose_s(model: &ModelCfg, kind: GpuKind, tp_a: usize, tp_b: usize) -> f64 {
+pub fn asym_tp_transpose_s(model: &ModelCfg, gpu: &GpuSpec, tp_a: usize, tp_b: usize) -> f64 {
     if tp_a == tp_b {
         return 0.0;
     }
     // Column-sharded halves of every matmul parameter must be re-laid-out.
     let affected = model.n_layers as f64 * model.params_per_layer() * 0.5;
     let bytes = 2.0 * affected; // fp16 grads
-    let hbm_gbs = effective_hbm_gbs(kind);
     let strided_penalty = 10.0; // eager strided copy vs streaming
-    // read + write of the mismatched side + temporary materialization
-    2.0 * bytes * strided_penalty / (hbm_gbs * 1e9)
-}
-
-/// Effective HBM streaming bandwidth (GB/s) per GPU kind.
-pub fn effective_hbm_gbs(kind: GpuKind) -> f64 {
-    match kind {
-        GpuKind::A100 => 1600.0, // 2.0 TB/s peak, ~80% streaming
-        GpuKind::H800 => 2700.0,
-        GpuKind::H20 => 3200.0,
-    }
+    // read + write of the mismatched side + temporary materialization;
+    // `gpu.hbm_gbs` is the effective HBM streaming bandwidth (~80% of peak)
+    2.0 * bytes * strided_penalty / (gpu.hbm_gbs * 1e9)
 }
 
 #[cfg(test)]
@@ -165,10 +156,12 @@ mod tests {
 
     #[test]
     fn transpose_penalty_grows_with_model() {
-        let small = asym_tp_transpose_s(&ModelCfg::gpt_2b(), GpuKind::A100, 2, 1);
-        let big = asym_tp_transpose_s(&ModelCfg::gpt_10b(), GpuKind::A100, 2, 1);
+        let cat = crate::cluster::GpuCatalog::builtin();
+        let a100 = cat.get(crate::cluster::KindId::A100);
+        let small = asym_tp_transpose_s(&ModelCfg::gpt_2b(), a100, 2, 1);
+        let big = asym_tp_transpose_s(&ModelCfg::gpt_10b(), a100, 2, 1);
         assert!(big > 3.0 * small, "{small} vs {big}");
         // symmetric TP has no penalty
-        assert_eq!(asym_tp_transpose_s(&ModelCfg::gpt_2b(), GpuKind::A100, 2, 2), 0.0);
+        assert_eq!(asym_tp_transpose_s(&ModelCfg::gpt_2b(), a100, 2, 2), 0.0);
     }
 }

@@ -1,7 +1,7 @@
 //! Plan-level simulation: run a [`ParallelPlan`] through the 1F1B event
 //! simulator + the communication models and report iteration statistics.
 
-use crate::cluster::gpu::Interconnect;
+use crate::cluster::Interconnect;
 use crate::planner::types::{DpGroupPlan, ParallelPlan};
 use crate::profile::ProfileDb;
 
@@ -42,7 +42,7 @@ fn stage_timings(profile: &ProfileDb, g: &DpGroupPlan, ic: &Interconnect) -> Vec
             let p2p = if si + 1 < g.stages.len() {
                 let next = &g.stages[si + 1];
                 let bw = if s.gpus[0].node == next.gpus[0].node {
-                    s.kind.spec().nvlink_gbs * 1e9
+                    profile.catalog.get(s.kind).nvlink_gbs * 1e9
                 } else {
                     ic.rdma_gbs * 1e9
                 };
@@ -89,7 +89,7 @@ pub fn simulate_plan(profile: &ProfileDb, plan: &ParallelPlan) -> IterStats {
                     .collect()
             })
             .collect();
-        let nvlink = plan.groups[0].stages[0].kind.spec().nvlink_gbs;
+        let nvlink = profile.catalog.get(plan.groups[0].stages[0].kind).nvlink_gbs;
         let lw = comm::layerwise_sync_s(m, plan.tp_dim, &holders, nvlink, &ic);
         // embeddings + head ride the same inter-node path
         let emb_bytes =
@@ -122,19 +122,19 @@ fn total_tokens(plan: &ParallelPlan, m: &crate::modelcfg::ModelCfg) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cluster::{ClusterSpec, GpuKind};
+    use crate::cluster::{ClusterSpec, GpuCatalog, KindId};
     use crate::modelcfg::ModelCfg;
     use crate::planner::{auto_plan, PlanOptions};
 
     fn profile(model: &ModelCfg) -> ProfileDb {
-        ProfileDb::build(model, &[GpuKind::A100, GpuKind::H800, GpuKind::H20], &[1, 2, 4, 8], 1)
+        ProfileDb::build(model, &GpuCatalog::builtin(), &[1, 2, 4, 8], 1)
     }
 
     #[test]
     fn simulated_close_to_eq1_estimate() {
         let model = ModelCfg::gpt3_6p7b();
         let p = profile(&model);
-        let cluster = ClusterSpec::from_counts(&[(8, GpuKind::A100), (8, GpuKind::H800)]);
+        let cluster = ClusterSpec::from_counts(&[(8, KindId::A100), (8, KindId::H800)]);
         let plan = auto_plan(&cluster, &p, &PlanOptions::default()).unwrap();
         let stats = simulate_plan(&p, &plan);
         // The event sim and the closed form should agree within 2×
@@ -147,7 +147,7 @@ mod tests {
     fn tokens_accounting() {
         let model = ModelCfg::bert_large();
         let p = profile(&model);
-        let cluster = ClusterSpec::from_counts(&[(4, GpuKind::A100)]);
+        let cluster = ClusterSpec::from_counts(&[(4, KindId::A100)]);
         let plan = auto_plan(&cluster, &p, &PlanOptions::default()).unwrap();
         let stats = simulate_plan(&p, &plan);
         let toks: f64 = plan
@@ -162,7 +162,7 @@ mod tests {
     fn sync_cost_visible_with_multiple_groups() {
         let model = ModelCfg::bert_large();
         let p = profile(&model);
-        let cluster = ClusterSpec::from_counts(&[(2, GpuKind::A100), (2, GpuKind::A100)]);
+        let cluster = ClusterSpec::from_counts(&[(2, KindId::A100), (2, KindId::A100)]);
         let plan = auto_plan(&cluster, &p, &PlanOptions::default()).unwrap();
         if plan.groups.len() > 1 {
             let stats = simulate_plan(&p, &plan);

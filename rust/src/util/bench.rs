@@ -1,7 +1,7 @@
 //! Minimal measurement harness for the `cargo bench` targets (no
 //! `criterion` in the vendor set): warmup + timed samples, mean/std/p50,
 //! and a fixed-width table printer shared by every figure bench so output
-//! lines diff cleanly against EXPERIMENTS.md.
+//! lines diff cleanly against DESIGN.md's experiment notes.
 
 use std::time::Instant;
 

@@ -4,14 +4,14 @@
 
 use autohet::baselines::megatron::plan_megatron;
 use autohet::baselines::whale::plan_whale;
-use autohet::cluster::{ClusterSpec, GpuKind};
+use autohet::cluster::{ClusterSpec, GpuCatalog, KindId};
 use autohet::modelcfg::ModelCfg;
 use autohet::planner::{auto_plan, PlanOptions};
 use autohet::profile::ProfileDb;
 use autohet::sim::simulate_plan;
 
 fn profile(model: &ModelCfg) -> ProfileDb {
-    ProfileDb::build(model, &[GpuKind::A100, GpuKind::H800, GpuKind::H20], &[1, 2, 4, 8], 1)
+    ProfileDb::build(model, &GpuCatalog::builtin(), &[1, 2, 4, 8], 1)
 }
 
 fn tps(p: &ProfileDb, plan: &autohet::planner::ParallelPlan) -> f64 {
@@ -23,9 +23,9 @@ fn autohet_beats_megatron_on_gpt3_uniform() {
     let model = ModelCfg::gpt3_6p7b();
     let p = profile(&model);
     for counts in [
-        vec![(4, GpuKind::A100), (4, GpuKind::H800)],
-        vec![(8, GpuKind::A100), (8, GpuKind::H800)],
-        vec![(8, GpuKind::A100), (8, GpuKind::H20)],
+        vec![(4, KindId::A100), (4, KindId::H800)],
+        vec![(8, KindId::A100), (8, KindId::H800)],
+        vec![(8, KindId::A100), (8, KindId::H20)],
     ] {
         let cluster = ClusterSpec::from_counts(&counts);
         let auto = auto_plan(&cluster, &p, &PlanOptions::default()).unwrap();
@@ -34,8 +34,8 @@ fn autohet_beats_megatron_on_gpt3_uniform() {
         assert!(
             ta > tm,
             "{counts:?}: autohet {ta:.0} <= megatron {tm:.0} ({} vs {})",
-            auto.summary(),
-            mega.summary()
+            auto.summary(&p.catalog),
+            mega.summary(&p.catalog)
         );
     }
 }
@@ -44,7 +44,7 @@ fn autohet_beats_megatron_on_gpt3_uniform() {
 fn autohet_at_least_matches_whale() {
     let model = ModelCfg::gpt3_6p7b();
     let p = profile(&model);
-    let cluster = ClusterSpec::from_counts(&[(8, GpuKind::A100), (8, GpuKind::H800)]);
+    let cluster = ClusterSpec::from_counts(&[(8, KindId::A100), (8, KindId::H800)]);
     let auto = auto_plan(&cluster, &p, &PlanOptions::default()).unwrap();
     let whale = plan_whale(&cluster, &p).unwrap();
     let (ta, tw) = (tps(&p, &auto), tps(&p, &whale));
@@ -57,10 +57,10 @@ fn nonuniform_odd_counts_still_plan() {
     let model = ModelCfg::llama_7b();
     let p = profile(&model);
     for counts in [
-        vec![(5, GpuKind::A100), (3, GpuKind::H800)],
-        vec![(3, GpuKind::A100), (5, GpuKind::H800)],
-        vec![(1, GpuKind::A100), (4, GpuKind::H20)],
-        vec![(2, GpuKind::A100), (6, GpuKind::H20)],
+        vec![(5, KindId::A100), (3, KindId::H800)],
+        vec![(3, KindId::A100), (5, KindId::H800)],
+        vec![(1, KindId::A100), (4, KindId::H20)],
+        vec![(2, KindId::A100), (6, KindId::H20)],
     ] {
         let cluster = ClusterSpec::from_counts(&counts);
         let plan = auto_plan(&cluster, &p, &PlanOptions::default())
@@ -86,19 +86,19 @@ fn weak_gpus_get_fewer_layers() {
     // layers than H800 stages.
     let model = ModelCfg::gpt3_6p7b();
     let p = profile(&model);
-    let cluster = ClusterSpec::from_counts(&[(4, GpuKind::A100), (4, GpuKind::H800)]);
+    let cluster = ClusterSpec::from_counts(&[(4, KindId::A100), (4, KindId::H800)]);
     let plan = auto_plan(&cluster, &p, &PlanOptions::default()).unwrap();
     for g in &plan.groups {
         let a100: Vec<usize> = g
             .stages
             .iter()
-            .filter(|s| s.kind == GpuKind::A100)
+            .filter(|s| s.kind == KindId::A100)
             .map(|s| s.n_layers())
             .collect();
         let h800: Vec<usize> = g
             .stages
             .iter()
-            .filter(|s| s.kind == GpuKind::H800)
+            .filter(|s| s.kind == KindId::H800)
             .map(|s| s.n_layers())
             .collect();
         if !a100.is_empty() && !h800.is_empty() {
@@ -113,7 +113,7 @@ fn weak_gpus_get_fewer_layers() {
 fn planning_time_reasonable_at_16_gpus() {
     let model = ModelCfg::gpt3_6p7b();
     let p = profile(&model);
-    let small = ClusterSpec::from_counts(&[(8, GpuKind::A100), (8, GpuKind::H800)]);
+    let small = ClusterSpec::from_counts(&[(8, KindId::A100), (8, KindId::H800)]);
     let t_small = auto_plan(&small, &p, &PlanOptions::default()).unwrap().planning_s;
     assert!(t_small < 60.0, "16-GPU planning took {t_small}s");
 }

@@ -4,13 +4,16 @@
 //!
 //! Invariants:
 //! * any feasible plan is structurally valid and uses every GPU once
-//! * the exact solver never loses to the LPT heuristic
+//! * the exact solver never loses to the LPT heuristic (any kind count)
 //! * layer partitions cover the model and respect memory caps
+//! * on *randomized catalogs of 2–6 kinds*: every group meets the model
+//!   memory floor, no TP entity crosses a node, and the Eq-3 objective is
+//!   monotone when a device of the strongest kind is added
 //! * TP reshard round-trips for every (tp_old, tp_new) pair
 //! * spot traces never leave capacity bounds; events replay exactly
 
 use autohet::checkpoint::shard;
-use autohet::cluster::{ClusterSpec, GpuKind, SpotTrace, TraceConfig};
+use autohet::cluster::{ClusterSpec, GpuCatalog, GpuSpec, KindId, KindVec, SpotTrace, TraceConfig};
 use autohet::modelcfg::ModelCfg;
 use autohet::planner::partition::{partition_layers, StageRes};
 use autohet::planner::solver::{lpt_heuristic, solve, EntitySpec, GroupingProblem};
@@ -22,23 +25,37 @@ use autohet::util::rng::Rng;
 const CASES: usize = 40;
 
 fn random_cluster(rng: &mut Rng) -> ClusterSpec {
-    let kinds = [GpuKind::A100, GpuKind::H800, GpuKind::H20];
+    let kinds = [KindId::A100, KindId::H800, KindId::H20];
     let n_nodes = 1 + rng.below(4);
-    let counts: Vec<(usize, GpuKind)> = (0..n_nodes)
+    let counts: Vec<(usize, KindId)> = (0..n_nodes)
         .map(|_| (1 + rng.below(8), kinds[rng.below(3)]))
         .collect();
     ClusterSpec::from_counts(&counts)
 }
 
+/// Random catalog of 2–6 kinds with bounded power/memory ratios.
+fn random_catalog(rng: &mut Rng) -> GpuCatalog {
+    let k = 2 + rng.below(5);
+    let mut cat = GpuCatalog::empty();
+    for i in 0..k {
+        let power = 0.5 + rng.f64() * 3.5; // g_i ∈ [0.5, 4.0)
+        cat.add(GpuSpec {
+            name: format!("G{i}"),
+            relative_power: power,
+            flops_tf: 140.0 * power,
+            mem_gib: 48.0 + rng.f64() * 144.0, // [48, 192) GiB
+            nvlink_gbs: 400.0 + rng.f64() * 500.0,
+            hbm_gbs: 1600.0,
+        })
+        .unwrap();
+    }
+    cat
+}
+
 #[test]
 fn any_feasible_plan_is_valid_and_exact_cover() {
     let model = ModelCfg::bert_large();
-    let profile = ProfileDb::build(
-        &model,
-        &[GpuKind::A100, GpuKind::H800, GpuKind::H20],
-        &[1, 2, 4, 8],
-        3,
-    );
+    let profile = ProfileDb::build(&model, &GpuCatalog::builtin(), &[1, 2, 4, 8], 3);
     let mut rng = Rng::new(0xBEEF);
     let mut planned = 0;
     for case in 0..CASES {
@@ -58,32 +75,136 @@ fn any_feasible_plan_is_valid_and_exact_cover() {
 }
 
 #[test]
+fn randomized_catalog_plans_respect_memory_and_locality() {
+    // The catalog invariants on arbitrary 2–6-kind fleets: every DP
+    // group's aggregate memory covers the model floor (Eq 3b), and no TP
+    // entity (stage) spans two nodes (§III-C).
+    let model = ModelCfg::bert_large();
+    let min_mem_gib = model.min_mem_bytes() / f64::powi(2.0, 30);
+    let mut rng = Rng::new(0xD1CE);
+    let mut planned = 0;
+    for case in 0..CASES {
+        let cat = random_catalog(&mut rng);
+        let n_nodes = 1 + rng.below(4);
+        let counts: Vec<(usize, KindId)> = (0..n_nodes)
+            .map(|_| (1 + rng.below(6), KindId(rng.below(cat.len()))))
+            .collect();
+        let cluster = ClusterSpec::from_counts_in(&cat, &counts);
+        let profile = ProfileDb::build(&model, &cat, &[1, 2, 4, 8], case as u64);
+        let Ok(plan) = auto_plan(&cluster, &profile, &PlanOptions::default()) else {
+            continue;
+        };
+        planned += 1;
+        plan.validate(model.n_layers)
+            .unwrap_or_else(|e| panic!("case {case} ({cluster:?}): {e}"));
+        assert_eq!(plan.gpu_count(), cluster.total_gpus(), "case {case}");
+        for (gi, g) in plan.groups.iter().enumerate() {
+            let group_mem: f64 = g
+                .stages
+                .iter()
+                .map(|s| s.gpus.len() as f64 * cat.get(s.kind).mem_gib)
+                .sum();
+            assert!(
+                group_mem + 1e-9 >= min_mem_gib,
+                "case {case} group {gi}: {group_mem:.0} GiB < floor {min_mem_gib:.0}"
+            );
+            for (si, s) in g.stages.iter().enumerate() {
+                assert!(
+                    s.gpus.iter().all(|r| r.node == s.gpus[0].node),
+                    "case {case} group {gi} stage {si}: TP entity crosses nodes"
+                );
+                let node = cluster.node(s.gpus[0].node).unwrap();
+                assert_eq!(s.kind, node.kind, "case {case}: stage kind != node kind");
+            }
+        }
+    }
+    assert!(planned > CASES / 2, "planner failed too often: {planned}/{CASES}");
+}
+
+#[test]
+fn objective_monotone_when_adding_strongest_device() {
+    // Adding one entity of the strongest kind can never lower the Eq-3
+    // objective: the incumbent J can absorb it into its weakest group.
+    // (Generous microbatch counts keep the bubble delta second-order;
+    // adding a *weak* straggler can legitimately hurt under exact
+    // coverage, so only the strongest kind carries this guarantee.)
+    let mut rng = Rng::new(0x5EED5);
+    for case in 0..CASES {
+        let cat = random_catalog(&mut rng);
+        let kdim = cat.len();
+        let mut counts = KindVec::new(kdim, 0usize);
+        for i in 0..kdim {
+            counts[i] = rng.below(3);
+        }
+        if counts.total() == 0 || counts.total() > 9 {
+            continue; // keep the exact solver in play for every J
+        }
+        let entity: KindVec<EntitySpec> = KindVec::from(
+            cat.specs()
+                .iter()
+                .map(|s| EntitySpec { power: s.relative_power, mem_gib: s.mem_gib })
+                .collect::<Vec<_>>(),
+        );
+        let strongest = (0..kdim)
+            .max_by(|&a, &b| entity[a].power.partial_cmp(&entity[b].power).unwrap())
+            .unwrap();
+        let problem = GroupingProblem {
+            counts: counts.clone(),
+            entity: entity.clone(),
+            min_mem_gib: 40.0, // below every entity's memory: singletons ok
+            microbatches_total: 64,
+            deadline: None,
+        };
+        let before = solve(&problem).map(|s| s.objective);
+        let mut grown = counts.clone();
+        grown[strongest] += 1;
+        let after = solve(&GroupingProblem { counts: grown, ..problem })
+            .map(|s| s.objective)
+            .unwrap_or_else(|| panic!("case {case}: growing made instance infeasible"));
+        if let Some(before) = before {
+            assert!(
+                after >= before - 1e-9,
+                "case {case}: objective fell {before} -> {after} ({counts:?} +G{strongest})"
+            );
+        }
+    }
+}
+
+#[test]
 fn exact_solver_never_below_lpt() {
+    // Random kind counts (2–6) and per-kind entity specs: the exact B&B
+    // must match or beat the LPT greedy at every feasible J.
     let mut rng = Rng::new(0xCAFE);
     for case in 0..CASES {
-        let counts = [rng.below(7), rng.below(5), rng.below(5)];
-        if counts.iter().sum::<usize>() == 0 {
+        let cat = random_catalog(&mut rng);
+        let kdim = cat.len();
+        let mut counts = KindVec::new(kdim, 0usize);
+        for i in 0..kdim {
+            counts[i] = rng.below(5);
+        }
+        if counts.total() == 0 {
             continue;
         }
-        let entity = [
-            EntitySpec { power: 1.0, mem_gib: 80.0 },
-            EntitySpec { power: 2.0, mem_gib: 80.0 },
-            EntitySpec { power: 0.5, mem_gib: 100.0 },
-        ];
+        let entity: KindVec<EntitySpec> = KindVec::from(
+            cat.specs()
+                .iter()
+                .map(|s| EntitySpec { power: s.relative_power, mem_gib: s.mem_gib })
+                .collect::<Vec<_>>(),
+        );
         let min_mem = 40.0 + rng.f64() * 120.0;
         let total_mb = 8 + rng.below(56);
         let p = GroupingProblem {
-            counts,
-            entity,
+            counts: counts.clone(),
+            entity: entity.clone(),
             min_mem_gib: min_mem,
             microbatches_total: total_mb,
             deadline: None,
         };
         let exact = solve(&p);
-        // compare against LPT at the exact solver's chosen J (and all J)
-        for j in 1..=counts.iter().sum::<usize>() {
+        // compare against LPT at every J
+        for j in 1..=counts.total() {
             let k = (total_mb / j).max(1);
-            if let Some((_, lpt_min)) = lpt_heuristic(counts, &entity, min_mem, j, k) {
+            if let Some((_, lpt_min)) = lpt_heuristic(&counts, &entity, min_mem, j, k) {
                 let lpt_obj = j as f64 * lpt_min;
                 let exact_obj = exact.as_ref().map(|s| s.objective).unwrap_or(f64::NEG_INFINITY);
                 assert!(
@@ -98,13 +219,8 @@ fn exact_solver_never_below_lpt() {
 #[test]
 fn partitions_cover_and_respect_memory() {
     let model = ModelCfg::gpt3_6p7b();
-    let profile = ProfileDb::build(
-        &model,
-        &[GpuKind::A100, GpuKind::H800, GpuKind::H20],
-        &[1, 2, 4, 8],
-        7,
-    );
-    let kinds = [GpuKind::A100, GpuKind::H800, GpuKind::H20];
+    let profile = ProfileDb::build(&model, &GpuCatalog::builtin(), &[1, 2, 4, 8], 7);
+    let kinds = [KindId::A100, KindId::H800, KindId::H20];
     let mut rng = Rng::new(0xF00D);
     for case in 0..CASES {
         let p_stages = 2 + rng.below(6);
@@ -120,7 +236,7 @@ fn partitions_cover_and_respect_memory() {
             );
             assert!(layers.iter().all(|&l| l >= 1), "case {case}: empty stage");
             for (i, (&l, s)) in layers.iter().zip(&stages).enumerate() {
-                let cap = s.kind.spec().mem_gib * tp as f64 * f64::powi(2.0, 30) * 0.94;
+                let cap = profile.catalog.get(s.kind).mem_gib * tp as f64 * f64::powi(2.0, 30) * 0.94;
                 let used = profile.mem_bytes(l, i, p_stages, tp, i == 0 || i == p_stages - 1);
                 assert!(used <= cap, "case {case} stage {i}: {used:.2e} > {cap:.2e}");
             }
