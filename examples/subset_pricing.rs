@@ -1,0 +1,77 @@
+//! Price-aware device-subset planning on a spot fleet with a straggler
+//! kind: the subset planner benches the weak part when that wins, and
+//! the cost objective reports what each plan pays per token.
+//!
+//! ```sh
+//! cargo run --release --example subset_pricing
+//! ```
+//!
+//! The fleet is 4×A100 plus one very weak (but cheap) "P4" spot part.
+//! Eq-3's exact coverage must place the P4 in some DP group, dragging
+//! the whole iteration; benching it is both faster *and* cheaper per
+//! token. See `docs/PLANNER.md` for the hand-worked version.
+
+use autohet::cluster::{ClusterSpec, GpuCatalog, GpuSpec, KindId};
+use autohet::modelcfg::ModelCfg;
+use autohet::planner::{plan_choice, PlanOptions, ScoredPlan};
+use autohet::profile::ProfileDb;
+use autohet::util::bench::Table;
+
+fn row(table: &mut Table, label: &str, s: &ScoredPlan, cat: &GpuCatalog) {
+    // benched is in TP entities; render GPU counts (entities × tp_dim)
+    let benched: Vec<String> = cat
+        .ids()
+        .filter(|&k| s.benched[k] > 0)
+        .map(|k| format!("{}x{}", s.benched[k] * s.plan.tp_dim, cat.name(k)))
+        .collect();
+    table.row(&[
+        label.to_string(),
+        s.plan.summary(cat),
+        if benched.is_empty() { "-".to_string() } else { benched.join(",") },
+        format!("{:.3}", s.plan.est_iter_s),
+        format!("{:.3}", s.eq1_iter_s),
+        format!("{:.2}", s.price_per_hour),
+        format!("{:.6}", s.cost_per_iter_usd),
+        format!("{:.0}", s.tokens_per_usd),
+    ]);
+}
+
+fn main() -> anyhow::Result<()> {
+    // Catalog: the paper's A100 plus a pathologically weak spot part.
+    let mut cat = GpuCatalog::builtin();
+    cat.add(GpuSpec {
+        name: "P4".into(),
+        relative_power: 0.02,
+        flops_tf: 2.8,
+        mem_gib: 80.0,
+        nvlink_gbs: 300.0,
+        hbm_gbs: 900.0,
+        price_per_hour: 0.2,
+        rdma_nics: 1,
+    })?;
+    let p4 = cat.lookup("P4")?;
+    let cluster = ClusterSpec::from_counts_in(&cat, &[(4, KindId::A100), (1, p4)]);
+    let model = ModelCfg::bert_large();
+    let profile = ProfileDb::build(&model, &cat, &[1, 2, 4, 8], 1);
+
+    let mut table = Table::new(&[
+        "planner", "plan", "benched", "sim_s", "eq1_s", "$/h", "$/iter", "tok/$",
+    ]);
+
+    // Paper semantics: every device must be placed.
+    let all = plan_choice(&cluster, &profile, &PlanOptions::default())?;
+    row(&mut table, "all-devices", &all.fastest, &cat);
+
+    // Subset planning: the straggler may be benched.
+    let opts = PlanOptions { bench: true, ..Default::default() };
+    let choice = plan_choice(&cluster, &profile, &opts)?;
+    row(&mut table, "subset (time)", &choice.fastest, &cat);
+    row(&mut table, "subset (cost)", &choice.cheapest, &cat);
+
+    table.print("BERT-Large on 4xA100 + 1xP4 straggler (simulated)");
+
+    let speedup = all.fastest.plan.est_iter_s / choice.fastest.plan.est_iter_s;
+    let savings = 100.0 * (1.0 - choice.cheapest.cost_per_iter_usd / all.fastest.cost_per_iter_usd);
+    println!("\nbenching the straggler: {speedup:.2}x faster, {savings:.1}% cheaper per iteration");
+    Ok(())
+}

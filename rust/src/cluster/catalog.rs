@@ -17,6 +17,12 @@
 //! achievable MFU). The extra presets (B200, L40S, MI300X) use the same
 //! convention over public spec sheets.
 //!
+//! Beyond raw capability, every kind carries two fleet-economics fields
+//! used by the price-aware planner (see `docs/PLANNER.md`):
+//! `price_per_hour` (spot $/hr per GPU, consumed by the planner's
+//! cost-per-iteration objective) and `rdma_nics` (RDMA NICs per node of
+//! that kind, consumed by the inter-node gradient-sync model).
+//!
 //! Invariants:
 //! * `KindId(i)` is the position of the kind inside its catalog — ids are
 //!   only meaningful relative to one catalog and are never reused or
@@ -26,6 +32,34 @@
 //!   exactly.
 //! * Kind names are unique case-insensitively; [`GpuCatalog::lookup`] is
 //!   case-insensitive and errors with the full list of known kinds.
+//!
+//! The JSON schema (the same document `ClusterSpec::from_json` embeds
+//! under `catalog`) is pinned by this doctest, so the documented shape
+//! cannot drift from the parser:
+//!
+//! ```
+//! use autohet::cluster::GpuCatalog;
+//! use autohet::util::json::Json;
+//!
+//! let doc = r#"{"kinds": [
+//!     {"name": "H800"},
+//!     {"name": "Custom-XL", "relative_power": 3.0, "mem_gib": 128,
+//!      "flops_tf": 420.0, "nvlink_gbs": 600.0, "hbm_gbs": 4000.0,
+//!      "price_per_hour": 2.4, "rdma_nics": 4}
+//! ]}"#;
+//! let cat = GpuCatalog::from_json(&Json::parse(doc).unwrap()).unwrap();
+//! assert_eq!(cat.len(), 2);
+//!
+//! // A bundled preset referenced by name alone pulls its full spec.
+//! let h800 = cat.get(cat.lookup("h800").unwrap());
+//! assert_eq!(h800.relative_power, 2.0);
+//!
+//! // Custom kinds: `relative_power` and `mem_gib` are required, the
+//! // bandwidth and economics fields are optional with derived defaults.
+//! let xl = cat.get(cat.lookup("custom-xl").unwrap());
+//! assert!((xl.price_per_hour - 2.4).abs() < 1e-12);
+//! assert_eq!(xl.rdma_nics, 4);
+//! ```
 
 use std::fmt;
 use std::ops::{Deref, DerefMut, Index, IndexMut};
@@ -69,6 +103,14 @@ pub struct GpuSpec {
     pub nvlink_gbs: f64,
     /// Effective HBM streaming bandwidth, GB/s (~80 % of peak).
     pub hbm_gbs: f64,
+    /// Spot-market rental price per GPU, USD per hour. Drives the
+    /// planner's cost-per-iteration objective; benched GPUs are assumed
+    /// released back to the market and stop billing.
+    pub price_per_hour: f64,
+    /// RDMA NICs per node of this kind (≥ 1). Inter-node gradient rings
+    /// spread across the NICs of the nodes they touch, so a kind with
+    /// more NICs drains its layer-wise AllReduce traffic faster.
+    pub rdma_nics: usize,
 }
 
 /// Registry of GPU kinds, indexed by [`KindId`].
@@ -110,23 +152,28 @@ impl GpuCatalog {
 
     /// Bundled spec presets by (case-insensitive) name.
     pub fn preset(name: &str) -> Option<GpuSpec> {
-        let mk = |name: &str, g, tf, mem, nvl, hbm| GpuSpec {
+        let mk = |name: &str, g, tf, mem, nvl, hbm, usd, nics| GpuSpec {
             name: name.to_string(),
             relative_power: g,
             flops_tf: tf,
             mem_gib: mem,
             nvlink_gbs: nvl,
             hbm_gbs: hbm,
+            price_per_hour: usd,
+            rdma_nics: nics,
         };
         match name.to_ascii_uppercase().as_str() {
-            // paper parts (§II-D / §V)
-            "A100" => Some(mk("A100", 1.0, 140.0, 80.0, 600.0, 1600.0)),
-            "H800" => Some(mk("H800", 2.0, 280.0, 80.0, 400.0, 2700.0)),
-            "H20" => Some(mk("H20", 0.5, 70.0, 100.0, 900.0, 3200.0)),
-            // public-spec calibrations, same A100 ≡ 1.0 convention
-            "B200" => Some(mk("B200", 7.0, 980.0, 192.0, 900.0, 6400.0)),
-            "L40S" => Some(mk("L40S", 0.6, 80.0, 48.0, 64.0, 700.0)),
-            "MI300X" => Some(mk("MI300X", 3.2, 450.0, 192.0, 448.0, 4200.0)),
+            // paper parts (§II-D / §V); single 400 Gbps RoCEv2 NIC per
+            // node on the testbed, spot prices from typical CN-region
+            // spot listings (A100-anchored)
+            "A100" => Some(mk("A100", 1.0, 140.0, 80.0, 600.0, 1600.0, 1.2, 1)),
+            "H800" => Some(mk("H800", 2.0, 280.0, 80.0, 400.0, 2700.0, 2.5, 1)),
+            "H20" => Some(mk("H20", 0.5, 70.0, 100.0, 900.0, 3200.0, 0.9, 1)),
+            // public-spec calibrations, same A100 ≡ 1.0 convention; the
+            // HGX-class parts ship 8 NICs per node
+            "B200" => Some(mk("B200", 7.0, 980.0, 192.0, 900.0, 6400.0, 6.0, 8)),
+            "L40S" => Some(mk("L40S", 0.6, 80.0, 48.0, 64.0, 700.0, 0.5, 1)),
+            "MI300X" => Some(mk("MI300X", 3.2, 450.0, 192.0, 448.0, 4200.0, 3.0, 8)),
             _ => None,
         }
     }
@@ -142,6 +189,12 @@ impl GpuCatalog {
                 "gpu kind `{}`: relative_power and mem_gib must be positive",
                 spec.name
             );
+        }
+        if !(spec.price_per_hour >= 0.0) {
+            bail!("gpu kind `{}`: price_per_hour must be non-negative", spec.name);
+        }
+        if spec.rdma_nics == 0 {
+            bail!("gpu kind `{}`: rdma_nics must be >= 1", spec.name);
         }
         if self
             .specs
@@ -215,9 +268,12 @@ impl GpuCatalog {
     //
     // Schema: `{"kinds": [{"name": "B200", "relative_power": 7.0,
     //           "flops_tf": 980.0, "mem_gib": 192.0,
-    //           "nvlink_gbs": 900.0, "hbm_gbs": 6400.0}, ...]}`
-    // `flops_tf`, `nvlink_gbs`, `hbm_gbs` are optional; a named bundled
-    // preset may also be referenced as just `{"name": "L40S"}`.
+    //           "nvlink_gbs": 900.0, "hbm_gbs": 6400.0,
+    //           "price_per_hour": 6.0, "rdma_nics": 8}, ...]}`
+    // `flops_tf`, `nvlink_gbs`, `hbm_gbs`, `price_per_hour`, and
+    // `rdma_nics` are optional; a named bundled preset may also be
+    // referenced as just `{"name": "L40S"}`. The schema is pinned by the
+    // module-level doctest above.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![(
             "kinds",
@@ -232,6 +288,8 @@ impl GpuCatalog {
                             ("mem_gib", Json::num(s.mem_gib)),
                             ("nvlink_gbs", Json::num(s.nvlink_gbs)),
                             ("hbm_gbs", Json::num(s.hbm_gbs)),
+                            ("price_per_hour", Json::num(s.price_per_hour)),
+                            ("rdma_nics", Json::num(s.rdma_nics as f64)),
                         ])
                     })
                     .collect(),
@@ -280,6 +338,21 @@ impl GpuCatalog {
                     "hbm_gbs",
                     Some(preset.as_ref().map_or(1600.0, |p| p.hbm_gbs)),
                 )?,
+                // economics defaults: the preset's numbers when the name
+                // matches one, else A100-anchored pricing (1.2 $/hr per
+                // unit of relative power) and a single RDMA NIC
+                price_per_hour: field(
+                    "price_per_hour",
+                    Some(
+                        preset
+                            .as_ref()
+                            .map_or(1.2 * relative_power, |p| p.price_per_hour),
+                    ),
+                )?,
+                rdma_nics: match k.get("rdma_nics").and_then(|v| v.as_usize()) {
+                    Some(n) => n,
+                    None => preset.as_ref().map_or(1, |p| p.rdma_nics),
+                },
             };
             cat.add(spec)?;
         }
@@ -456,11 +529,39 @@ mod tests {
         let x9 = cat.get(cat.lookup("x9").unwrap());
         assert_eq!(x9.flops_tf, 210.0); // 140 × power
         assert_eq!(x9.nvlink_gbs, 600.0);
+        assert!((x9.price_per_hour - 1.8).abs() < 1e-12); // 1.2 × power
+        assert_eq!(x9.rdma_nics, 1);
 
         // bundled preset referenced by name only pulls the FULL preset
         let j = Json::parse(r#"{"kinds": [{"name": "L40S"}]}"#).unwrap();
         let cat = GpuCatalog::from_json(&j).unwrap();
         assert_eq!(cat.get(KindId(0)), &GpuCatalog::preset("L40S").unwrap());
+    }
+
+    #[test]
+    fn presets_carry_economics_fields() {
+        let cat = GpuCatalog::extended();
+        for id in cat.ids() {
+            let s = cat.get(id);
+            assert!(s.price_per_hour > 0.0, "{}", s.name);
+            assert!(s.rdma_nics >= 1, "{}", s.name);
+        }
+        // H800 rents above A100; H20 is the compute-poor discount part
+        assert!(
+            cat.get(KindId::H800).price_per_hour > cat.get(KindId::A100).price_per_hour
+        );
+        assert!(
+            cat.get(KindId::H20).price_per_hour < cat.get(KindId::A100).price_per_hour
+        );
+        // invalid economics are rejected at registration
+        let mut bad = GpuCatalog::preset("A100").unwrap();
+        bad.name = "A100-free".into();
+        bad.rdma_nics = 0;
+        assert!(GpuCatalog::empty().add(bad).is_err());
+        let mut neg = GpuCatalog::preset("A100").unwrap();
+        neg.name = "A100-neg".into();
+        neg.price_per_hour = -0.1;
+        assert!(GpuCatalog::empty().add(neg).is_err());
     }
 
     #[test]

@@ -5,12 +5,12 @@ use std::path::Path;
 
 use anyhow::{anyhow, Result};
 
-use crate::cluster::{ClusterSpec, GpuCatalog, SpotTrace, TraceConfig};
+use crate::cluster::{ClusterSpec, GpuCatalog, KindVec, SpotTrace, TraceConfig};
 use crate::log_info;
 use crate::metrics::Recorder;
 use crate::modelcfg::ModelCfg;
 use crate::pipeline::{ExecTopology, PipelineTrainer};
-use crate::planner::{auto_plan, PlanOptions};
+use crate::planner::{auto_plan, plan_choice, Objective, PlanOptions, ScoredPlan};
 use crate::profile::ProfileDb;
 use crate::runtime::{Engine, HostTensor};
 use crate::sim::simulate_plan;
@@ -21,8 +21,12 @@ pub const USAGE: &str = "\
 autohet — automatic 3D parallelism for heterogeneous spot-instance GPUs
 
 USAGE:
-  autohet plan    [--model NAME] [--cluster FILE|--counts 4xA100,2xH800] [--out FILE]
-                  cluster FILEs may carry a custom GPU catalog (`catalog.kinds`)
+  autohet plan    [--model NAME] [--cluster FILE|--counts 4xA100,2xH800]
+                  [--objective time|cost] [--no-bench] [--out FILE]
+                  cluster FILEs may carry a custom GPU catalog (`catalog.kinds`,
+                  incl. per-kind `price_per_hour` / `rdma_nics`); `--objective
+                  cost` picks the cheapest-per-token plan, `--no-bench` forces
+                  the paper's use-every-device grouping
   autohet sim     [--model NAME] [--counts ...]       simulate an iteration
   autohet train   [--artifacts DIR] [--steps N] [--groups 2,2|4] [--k N]
                   [--lr F] [--seed N] [--csv FILE]    real PJRT training
@@ -64,19 +68,58 @@ fn build_profile(model: &ModelCfg, catalog: &GpuCatalog, seed: u64) -> ProfileDb
     ProfileDb::build(model, catalog, &[1, 2, 4, 8], seed)
 }
 
+/// Render one scored candidate for the CLI.
+fn print_scored(tag: &str, s: &ScoredPlan, catalog: &GpuCatalog) {
+    println!("{tag}: {}", s.plan.summary(catalog));
+    if s.benched.total() > 0 {
+        println!(
+            "  benched: {} (released, not billed)",
+            fmt_benched(&s.benched, s.plan.tp_dim, catalog)
+        );
+    }
+    println!(
+        "  sim iter {:.3}s | eq1 iter {:.3}s | fleet ${:.2}/h | ${:.6}/iter | {:.0} tokens/$",
+        s.plan.est_iter_s, s.eq1_iter_s, s.price_per_hour, s.cost_per_iter_usd, s.tokens_per_usd
+    );
+}
+
+/// `2xH20,1xL40S`-style rendering of a benched vector in **GPUs** (the
+/// solver benches TP entities of `tp` GPUs each; the CLI speaks the same
+/// GPU-count units as `--counts`).
+fn fmt_benched(benched: &KindVec<usize>, tp: usize, catalog: &GpuCatalog) -> String {
+    catalog
+        .ids()
+        .filter(|&k| benched[k] > 0)
+        .map(|k| format!("{}x{}", benched[k] * tp, catalog.name(k)))
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
 pub fn cmd_plan(args: &Args) -> Result<()> {
     let model = load_model(args)?;
     let cluster = load_cluster(args)?;
     let profile = build_profile(&model, &cluster.catalog, args.get_u64("seed", 1));
-    let plan = auto_plan(&cluster, &profile, &PlanOptions::default())?;
-    let stats = simulate_plan(&profile, &plan);
-    println!("plan: {}", plan.summary(&cluster.catalog));
-    println!(
-        "est iter {:.3}s | sim iter {:.3}s | sim {:.0} tokens/s | planning {:.2}s",
-        plan.est_iter_s, stats.iter_s, stats.tokens_per_s, plan.planning_s
-    );
+    let objective: Objective = args.get_str("objective", "time").parse()?;
+    let opts = PlanOptions { bench: !args.has("no-bench"), ..Default::default() };
+    let choice = plan_choice(&cluster, &profile, &opts)?;
+    let pick = choice.pick(objective);
+    print_scored("plan", pick, &cluster.catalog);
+    println!("planning {:.2}s", pick.plan.planning_s);
+    // When the two objectives disagree, show what the road not taken
+    // would have bought.
+    let other = choice.pick(match objective {
+        Objective::Time => Objective::Cost,
+        Objective::Cost => Objective::Time,
+    });
+    if other.plan != pick.plan {
+        let tag = match objective {
+            Objective::Time => "cheapest-per-token alternative",
+            Objective::Cost => "fastest alternative",
+        };
+        print_scored(tag, other, &cluster.catalog);
+    }
     if let Some(out) = args.get("out") {
-        std::fs::write(out, plan.to_json(&cluster.catalog).to_string_pretty())?;
+        std::fs::write(out, pick.plan.to_json(&cluster.catalog).to_string_pretty())?;
         log_info!("wrote plan to {out}");
     }
     Ok(())
@@ -248,5 +291,28 @@ mod tests {
     #[test]
     fn models_cmd_runs() {
         cmd_models().unwrap();
+    }
+
+    #[test]
+    fn benched_vector_formats_in_gpus() {
+        use crate::cluster::KindId;
+        let cat = GpuCatalog::builtin();
+        let mut v = cat.kind_vec(0usize);
+        v[KindId::H20] = 2;
+        assert_eq!(fmt_benched(&v, 1, &cat), "2xH20");
+        v[KindId::A100] = 1;
+        assert_eq!(fmt_benched(&v, 1, &cat), "1xA100,2xH20");
+        // entities × tp = GPUs: one benched tp-4 entity is 4 idle GPUs
+        assert_eq!(fmt_benched(&v, 4, &cat), "4xA100,8xH20");
+    }
+
+    #[test]
+    fn objective_flag_parses_with_default() {
+        let args = Args::parse(["plan".to_string()]);
+        let obj: Objective = args.get_str("objective", "time").parse().unwrap();
+        assert_eq!(obj, Objective::Time);
+        let args = Args::parse(["plan".into(), "--objective".into(), "cost".into()]);
+        let obj: Objective = args.get_str("objective", "time").parse().unwrap();
+        assert_eq!(obj, Objective::Cost);
     }
 }

@@ -13,7 +13,10 @@
 //! * [`planner`] — the paper's contribution: effective-computing-power
 //!   maximization (Eq 3), GPU↔node/stage mapping, layer-level model
 //!   partitioning (Eq 4), and the 1F1B cost model (Eq 1) — all
-//!   formulated over arbitrary K-kind catalogs.
+//!   formulated over arbitrary K-kind catalogs, with device-*subset*
+//!   selection (straggler benching) and a price objective
+//!   ($/iteration, tokens/$) on top; `docs/PLANNER.md` is the worked
+//!   walkthrough.
 //! * [`sim`] — a discrete-event pipeline + interconnect simulator standing
 //!   in for the paper's 24-GPU A100/H800/H20 testbed.
 //! * [`runtime`] / [`pipeline`] / [`collective`] — *real* training: PJRT

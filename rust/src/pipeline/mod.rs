@@ -1,6 +1,7 @@
 //! The real asymmetric 1F1B pipeline executor.
 //!
-//! Drives the AOT-compiled stage executables over a [`ParallelPlan`]-shaped
+//! Drives the AOT-compiled stage executables over a
+//! [`ParallelPlan`](crate::planner::ParallelPlan)-shaped
 //! topology: each DP group is a pipeline of stages holding contiguous
 //! layer spans (spans may *differ* across groups — asymmetric PP); a
 //! stage of `n` layers chains pre-compiled blocks of 2^i layers (the

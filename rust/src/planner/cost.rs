@@ -7,8 +7,16 @@
 //! *layer granularity* — each layer's AllReduce ring spans exactly the
 //! GPUs holding that layer across DP groups (Observation 2), riding
 //! NVLink when they are co-located and RDMA otherwise.
+//!
+//! Alongside the time objective, this module prices plans in dollars:
+//! [`plan_price_per_hour`] sums the per-kind spot `price_per_hour` over
+//! the GPUs a plan actually uses, and [`cost_per_iter_usd`] /
+//! [`plan_tokens_per_iter`] turn that into the $/iteration and tokens/$
+//! numbers the planner's cost objective ranks by (`docs/PLANNER.md`
+//! walks through the arithmetic).
 
-use crate::cluster::Interconnect;
+use crate::cluster::{GpuCatalog, Interconnect};
+use crate::modelcfg::ModelCfg;
 use crate::profile::ProfileDb;
 
 use super::types::{DpGroupPlan, ParallelPlan};
@@ -102,6 +110,30 @@ pub fn tokens_per_s(profile: &ProfileDb, plan: &ParallelPlan) -> f64 {
     profile.model.tokens_per_iter() / iter_time_s(profile, plan)
 }
 
+/// Fleet cost of the GPUs a plan actually uses, USD per hour: per-kind
+/// spot `price_per_hour` × GPUs on stages. Benched entities and TP-fold
+/// remainder GPUs are assumed released back to the spot market and do
+/// not bill.
+pub fn plan_price_per_hour(cat: &GpuCatalog, plan: &ParallelPlan) -> f64 {
+    plan.price_per_hour(cat)
+}
+
+/// Dollars one iteration costs at `iter_s` seconds per iteration on a
+/// fleet billing `price_per_hour` dollars per hour.
+pub fn cost_per_iter_usd(price_per_hour: f64, iter_s: f64) -> f64 {
+    price_per_hour / 3600.0 * iter_s
+}
+
+/// Tokens processed per iteration across all groups. Asymmetric plans
+/// may round microbatches per group, so this sums the per-group counts
+/// rather than assuming the model's nominal global batch.
+pub fn plan_tokens_per_iter(model: &ModelCfg, plan: &ParallelPlan) -> f64 {
+    plan.groups
+        .iter()
+        .map(|g| (g.microbatches * model.microbatch * model.seq) as f64)
+        .sum()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -187,6 +219,30 @@ mod tests {
         let same = sync_time(&p, &mk(0), &ic);
         let cross = sync_time(&p, &mk(1), &ic);
         assert!(same < cross, "{same} vs {cross}");
+    }
+
+    #[test]
+    fn pricing_counts_only_used_gpus() {
+        let cat = GpuCatalog::builtin();
+        let plan = ParallelPlan {
+            model_name: "gpt3_6p7b".into(),
+            tp_dim: 4,
+            groups: vec![
+                DpGroupPlan { stages: vec![stage(KindId::H800, 0, 0, 32, 4)], microbatches: 4 },
+                DpGroupPlan { stages: vec![stage(KindId::A100, 1, 0, 32, 4)], microbatches: 4 },
+            ],
+            est_iter_s: 0.0,
+            planning_s: 0.0,
+        };
+        let hourly = plan_price_per_hour(&cat, &plan);
+        let expect = 4.0 * cat.get(KindId::H800).price_per_hour
+            + 4.0 * cat.get(KindId::A100).price_per_hour;
+        assert!((hourly - expect).abs() < 1e-12, "{hourly} vs {expect}");
+        // 1 hour of iterations at 1 s/iter costs exactly the hourly rate
+        assert!((cost_per_iter_usd(hourly, 1.0) * 3600.0 - hourly).abs() < 1e-9);
+        let m = ModelCfg::gpt3_6p7b();
+        let toks = plan_tokens_per_iter(&m, &plan);
+        assert_eq!(toks, (8 * m.microbatch * m.seq) as f64);
     }
 
     #[test]

@@ -4,7 +4,14 @@
 //! Observation 1), derives each entity's *effective* power from the
 //! profile (so TP's AllReduce overhead is priced in, not assumed linear),
 //! and hands the counts to the exact solver for Eq (3). All per-kind
-//! tables are [`KindVec`]s over the cluster's [`GpuCatalog`].
+//! tables are [`KindVec`]s over the cluster's
+//! [`GpuCatalog`](crate::cluster::GpuCatalog).
+//!
+//! With benching enabled ([`group_devices_all`]'s `bench` flag), the
+//! candidate list also carries device-*subset* groupings from
+//! [`solver::bnb::solve_subsets`]: plans that deliberately leave
+//! straggler entities unused when that raises the Eq-3 objective. The
+//! walkthrough in `docs/PLANNER.md` steps through both paths.
 
 use crate::cluster::{ClusterSpec, KindVec};
 use crate::modelcfg::ModelCfg;
@@ -23,6 +30,9 @@ pub struct Grouping {
     pub min_g: f64,
     pub objective: f64,
     pub heuristic_fallback: bool,
+    /// TP entities per kind deliberately left unused (device-subset
+    /// planning); all zeros on the paper's exact-coverage path.
+    pub benched: KindVec<usize>,
 }
 
 /// Per-kind TP-entity spec: power scaled by profiled TP efficiency, memory
@@ -61,7 +71,10 @@ pub fn entity_counts(cluster: &ClusterSpec, tp: usize) -> KindVec<usize> {
 }
 
 /// All promising groupings for one TP dimension (one per feasible J,
-/// best objective first, capped) — Algorithm 1's `Plans` list.
+/// best objective first, capped) — Algorithm 1's `Plans` list. With
+/// `bench` set, device-subset groupings (entities deliberately left
+/// unused) are appended after the exact-coverage candidates, so the
+/// candidate set is a strict superset of the all-devices planner's.
 pub fn group_devices_all(
     cluster: &ClusterSpec,
     model: &ModelCfg,
@@ -69,12 +82,14 @@ pub fn group_devices_all(
     tp_dim: usize,
     deadline: Option<f64>,
     cap: usize,
+    bench: bool,
 ) -> Vec<Grouping> {
     debug_assert_eq!(cluster.catalog, profile.catalog, "catalog mismatch");
     let counts = entity_counts(cluster, tp_dim);
     if counts.total() == 0 {
         return Vec::new();
     }
+    let kdim = counts.len();
     let problem = GroupingProblem {
         counts,
         entity: entity_specs(model, profile, tp_dim),
@@ -82,21 +97,43 @@ pub fn group_devices_all(
         microbatches_total: model.microbatches(),
         deadline,
     };
-    solver::bnb::solve_all(&problem)
+    let mut out: Vec<Grouping> = solver::bnb::solve_all(&problem)
         .into_iter()
         .take(cap)
-        .map(|s| {
-            let j = s.groups.len();
-            Grouping {
-                tp_dim,
-                compositions: s.groups,
-                k_per_group: (model.microbatches() / j).max(1),
-                min_g: s.min_g,
-                objective: s.objective,
-                heuristic_fallback: s.heuristic_fallback,
-            }
-        })
-        .collect()
+        .map(|s| from_solution(tp_dim, model, s, KindVec::new(kdim, 0)))
+        .collect();
+    if bench {
+        // The exact-coverage pass above already found the all-devices
+        // optimum; seeding the subset DFS with it tightens pruning and
+        // we only keep genuinely-benched groupings from this pass.
+        let incumbent = out.first().map(|g| g.objective);
+        out.extend(
+            solver::bnb::solve_subsets(&problem, incumbent)
+                .into_iter()
+                .filter(|s| s.benched.total() > 0)
+                .take(cap)
+                .map(|s| from_solution(tp_dim, model, s.solution, s.benched)),
+        );
+    }
+    out
+}
+
+fn from_solution(
+    tp_dim: usize,
+    model: &ModelCfg,
+    s: GroupingSolution,
+    benched: KindVec<usize>,
+) -> Grouping {
+    let j = s.groups.len();
+    Grouping {
+        tp_dim,
+        compositions: s.groups,
+        k_per_group: (model.microbatches() / j).max(1),
+        min_g: s.min_g,
+        objective: s.objective,
+        heuristic_fallback: s.heuristic_fallback,
+        benched,
+    }
 }
 
 /// Run device grouping for one TP dimension.
@@ -112,6 +149,7 @@ pub fn group_devices(
     if counts.total() == 0 {
         return None;
     }
+    let kdim = counts.len();
     let problem = GroupingProblem {
         counts,
         entity: entity_specs(model, profile, tp_dim),
@@ -119,17 +157,8 @@ pub fn group_devices(
         microbatches_total: model.microbatches(),
         deadline,
     };
-    let GroupingSolution { groups, min_g, objective, heuristic_fallback } =
-        solver::solve(&problem)?;
-    let j = groups.len();
-    Some(Grouping {
-        tp_dim,
-        compositions: groups,
-        k_per_group: (model.microbatches() / j).max(1),
-        min_g,
-        objective,
-        heuristic_fallback,
-    })
+    let solution = solver::solve(&problem)?;
+    Some(from_solution(tp_dim, model, solution, KindVec::new(kdim, 0)))
 }
 
 #[cfg(test)]

@@ -151,6 +151,7 @@ mod tests {
             min_g: 0.0,
             objective: 0.0,
             heuristic_fallback: false,
+            benched: KindVec::new(3, 0),
         }
     }
 
@@ -203,6 +204,21 @@ mod tests {
         let g = grouping(1, vec![[1, 0, 0], [1, 0, 0]]);
         let plans = map_nodes_and_stages(&cluster, &g);
         assert_eq!(plans[0].stages[0].gpus[0].node, plans[1].stages[0].gpus[0].node);
+    }
+
+    #[test]
+    fn benched_entities_stay_unallocated() {
+        // Subset groupings only list used entities in their compositions;
+        // the mapper must leave the benched ones in inventory untouched.
+        let cluster = ClusterSpec::from_counts(&[(2, KindId::A100), (1, KindId::H20)]);
+        let mut g = grouping(1, vec![[2, 0, 0]]);
+        g.benched = KindVec::from(vec![0, 0, 1]);
+        let plans = map_nodes_and_stages(&cluster, &g);
+        let used: usize = plans.iter().map(|p| p.gpu_count()).sum();
+        assert_eq!(used, 2);
+        assert!(plans
+            .iter()
+            .all(|p| p.stages.iter().all(|s| s.kind != KindId::H20)));
     }
 
     #[test]

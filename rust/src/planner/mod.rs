@@ -15,6 +15,17 @@
 //!
 //! [`plan::auto_plan`] is Algorithm 1: iterate valid TP dims, group, map,
 //! partition, estimate cost (Eq 1), pick the argmin.
+//!
+//! Two price-aware extensions ride on the same loop (worked through in
+//! `docs/PLANNER.md`):
+//!
+//! * **Device-subset selection** (`PlanOptions::bench`): Eq 3's
+//!   exact-coverage constraint is relaxed so a straggler kind can be
+//!   benched when using it would drag the max–min objective down
+//!   ([`solver::solve_subsets`]).
+//! * **Dollar objective**: every candidate is priced with the catalog's
+//!   per-kind spot `price_per_hour`; [`plan::plan_choice`] reports both
+//!   the fastest and the cheapest-per-token plan ([`PlanChoice`]).
 
 pub mod cost;
 pub mod grouping;
@@ -24,5 +35,5 @@ pub mod plan;
 pub mod solver;
 pub mod types;
 
-pub use plan::{auto_plan, PlanOptions};
+pub use plan::{auto_plan, plan_choice, Objective, PlanChoice, PlanOptions, ScoredPlan};
 pub use types::{DpGroupPlan, ParallelPlan, StagePlan};

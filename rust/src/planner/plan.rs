@@ -7,12 +7,19 @@
 //!     layers    <- balanceWorkload per group   (partition.rs, Eq 4)
 //!     keep plan with min Cost (Eq 1)           (cost.rs)
 //! ```
+//!
+//! Two entry points share the loop: [`auto_plan`] returns the fastest
+//! plan (the paper's objective), while [`plan_choice`] scores every
+//! candidate on both wall-clock and dollars and reports the fastest
+//! *and* the cheapest-per-token plan ([`PlanChoice`]), optionally over
+//! benched device subsets (`PlanOptions::bench`). `docs/PLANNER.md`
+//! walks the whole pipeline on the paper's 4×A100 + 2×H800 example.
 
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::cluster::ClusterSpec;
+use crate::cluster::{ClusterSpec, KindVec};
 use crate::profile::ProfileDb;
 
 use super::cost;
@@ -27,14 +34,87 @@ pub struct PlanOptions {
     pub solver_deadline_s: Option<f64>,
     /// Restrict to one TP dim (ablations / baselines).
     pub force_tp: Option<usize>,
+    /// Allow the Eq-3 stage to bench (leave unused) straggler entities.
+    /// Off by default: the paper's formulation places every device, and
+    /// the all-devices path stays bit-identical to the seed planner.
+    pub bench: bool,
 }
 
-/// Produce the best plan for a cluster+model, Algorithm 1.
+/// What the planner optimizes when picking among scored candidates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Objective {
+    /// Minimize simulated per-iteration wall-clock (the paper's goal).
+    Time,
+    /// Maximize training tokens per dollar of spot spend.
+    Cost,
+}
+
+impl std::str::FromStr for Objective {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Objective> {
+        match s.to_ascii_lowercase().as_str() {
+            "time" => Ok(Objective::Time),
+            "cost" => Ok(Objective::Cost),
+            other => Err(anyhow!("unknown objective `{other}` (want `time` or `cost`)")),
+        }
+    }
+}
+
+/// One fully materialized candidate plan with every score the planner
+/// tracks. `plan.est_iter_s` carries the event-sim estimate (the
+/// arbiter); `eq1_iter_s` is the paper's closed-form Eq-1 estimate,
+/// exposed for analysis next to it.
+#[derive(Debug, Clone)]
+pub struct ScoredPlan {
+    pub plan: ParallelPlan,
+    /// Eq-1 closed-form per-iteration estimate, seconds.
+    pub eq1_iter_s: f64,
+    /// TP entities per kind the grouping benched (at `plan.tp_dim`).
+    pub benched: KindVec<usize>,
+    /// Spot cost of the GPUs the plan uses, USD/hour.
+    pub price_per_hour: f64,
+    /// Dollars per training iteration (sim estimate × hourly rate).
+    pub cost_per_iter_usd: f64,
+    /// Training tokens bought per dollar.
+    pub tokens_per_usd: f64,
+}
+
+/// The planner's verdict under both objectives. `fastest` is what
+/// [`auto_plan`] would return; `cheapest` maximizes tokens per dollar
+/// (on priced spot fleets the two often disagree — benching a slow,
+/// expensive kind can cut $/token while costing a little wall-clock).
+#[derive(Debug, Clone)]
+pub struct PlanChoice {
+    pub fastest: ScoredPlan,
+    pub cheapest: ScoredPlan,
+}
+
+impl PlanChoice {
+    /// The scored plan a given objective selects.
+    pub fn pick(&self, objective: Objective) -> &ScoredPlan {
+        match objective {
+            Objective::Time => &self.fastest,
+            Objective::Cost => &self.cheapest,
+        }
+    }
+}
+
+/// Produce the best (fastest) plan for a cluster+model, Algorithm 1.
 pub fn auto_plan(
     cluster: &ClusterSpec,
     profile: &ProfileDb,
     opts: &PlanOptions,
 ) -> Result<ParallelPlan> {
+    Ok(plan_choice(cluster, profile, opts)?.fastest.plan)
+}
+
+/// Run Algorithm 1 and report the winner under *both* objectives.
+pub fn plan_choice(
+    cluster: &ClusterSpec,
+    profile: &ProfileDb,
+    opts: &PlanOptions,
+) -> Result<PlanChoice> {
     let t0 = Instant::now();
     anyhow::ensure!(
         cluster.catalog == profile.catalog,
@@ -43,73 +123,8 @@ pub fn auto_plan(
         profile.catalog
     );
     let model = &profile.model;
-    let tp_dims: Vec<usize> = match opts.force_tp {
-        Some(tp) => vec![tp],
-        None => cluster.valid_tp_dims(),
-    };
-
-    let mut best: Option<ParallelPlan> = None;
-    for tp in tp_dims {
-        // Algorithm 1 keeps several promising grouping plans per TP dim
-        // ("Plans <- append(plan)"); the cost estimator arbitrates.
-        let candidates =
-            grouping::group_devices_all(cluster, model, profile, tp, opts.solver_deadline_s, 6);
-        for grouping in candidates {
-        let mut groups = map_nodes_and_stages(cluster, &grouping);
-
-        // balanceWorkload: Eq-4 layer partition per group
-        let mut feasible = true;
-        for g in groups.iter_mut() {
-            let res: Vec<StageRes> = g
-                .stages
-                .iter()
-                .map(|s| StageRes { kind: s.kind, tp: s.tp() })
-                .collect();
-            match partition_layers(&res, profile) {
-                Some(layers) => {
-                    let mut lo = 0;
-                    for (s, l) in g.stages.iter_mut().zip(&layers) {
-                        s.layer_lo = lo;
-                        s.layer_hi = lo + l;
-                        lo += l;
-                    }
-                }
-                None => {
-                    feasible = false;
-                    break;
-                }
-            }
-        }
-        if !feasible {
-            continue;
-        }
-
-        let mut plan = ParallelPlan {
-            model_name: model.name.clone(),
-            tp_dim: tp,
-            groups,
-            est_iter_s: 0.0,
-            planning_s: 0.0,
-        };
-        plan.validate(model.n_layers)?;
-        // Algorithm 1 line 13: Cost(P) — "estimates the iteration times
-        // and selects the optimal plan". The 1F1B event simulation is the
-        // estimator (it captures heterogeneous-drain effects the Eq-1
-        // closed form misses); Eq-1 remains available in `cost::`.
-        plan.est_iter_s = crate::sim::simulate_plan(profile, &plan).iter_s;
-        let _ = cost::iter_time_s; // Eq-1 kept for analysis/tests
-
-        if best
-            .as_ref()
-            .map(|b| plan.est_iter_s < b.est_iter_s)
-            .unwrap_or(true)
-        {
-            best = Some(plan);
-        }
-        }
-    }
-
-    let mut plan = best.ok_or_else(|| {
+    let cands = scored_candidates(cluster, profile, opts)?;
+    let no_plan = || {
         anyhow!(
             "no feasible plan: {} GPUs / {:.0} GiB cannot hold {} ({:.0} GiB needed)",
             cluster.total_gpus(),
@@ -117,9 +132,132 @@ pub fn auto_plan(
             model.name,
             model.min_mem_bytes() / f64::powi(2.0, 30),
         )
-    })?;
-    plan.planning_s = t0.elapsed().as_secs_f64();
-    Ok(plan)
+    };
+    // Strict comparisons, first-wins ties: with `bench` off this is the
+    // seed planner's exact selection rule.
+    let fastest = cands
+        .iter()
+        .enumerate()
+        .fold(None::<usize>, |best, (i, c)| match best {
+            Some(b) if cands[b].plan.est_iter_s <= c.plan.est_iter_s => Some(b),
+            _ => Some(i),
+        })
+        .ok_or_else(no_plan)?;
+    // Cheapest ties (e.g. an all-zero-price fleet, where every candidate
+    // scores infinite tokens/$) break toward the faster plan.
+    let cheapest = cands
+        .iter()
+        .enumerate()
+        .fold(None::<usize>, |best, (i, c)| match best {
+            Some(b)
+                if c.tokens_per_usd > cands[b].tokens_per_usd
+                    || (c.tokens_per_usd == cands[b].tokens_per_usd
+                        && c.plan.est_iter_s < cands[b].plan.est_iter_s) =>
+            {
+                Some(i)
+            }
+            Some(b) => Some(b),
+            None => Some(i),
+        })
+        .ok_or_else(no_plan)?;
+    let planning_s = t0.elapsed().as_secs_f64();
+    let mut fastest = cands[fastest].clone();
+    let mut cheapest = cands[cheapest].clone();
+    fastest.plan.planning_s = planning_s;
+    cheapest.plan.planning_s = planning_s;
+    Ok(PlanChoice { fastest, cheapest })
+}
+
+/// Materialize and score every candidate grouping: map, partition,
+/// validate, simulate (arbiter), and price.
+fn scored_candidates(
+    cluster: &ClusterSpec,
+    profile: &ProfileDb,
+    opts: &PlanOptions,
+) -> Result<Vec<ScoredPlan>> {
+    let model = &profile.model;
+    let tp_dims: Vec<usize> = match opts.force_tp {
+        Some(tp) => vec![tp],
+        None => cluster.valid_tp_dims(),
+    };
+
+    let mut out = Vec::new();
+    for tp in tp_dims {
+        // Algorithm 1 keeps several promising grouping plans per TP dim
+        // ("Plans <- append(plan)"); the cost estimator arbitrates.
+        let candidates = grouping::group_devices_all(
+            cluster,
+            model,
+            profile,
+            tp,
+            opts.solver_deadline_s,
+            6,
+            opts.bench,
+        );
+        for grouping in candidates {
+            let mut groups = map_nodes_and_stages(cluster, &grouping);
+
+            // balanceWorkload: Eq-4 layer partition per group
+            let mut feasible = true;
+            for g in groups.iter_mut() {
+                let res: Vec<StageRes> = g
+                    .stages
+                    .iter()
+                    .map(|s| StageRes { kind: s.kind, tp: s.tp() })
+                    .collect();
+                match partition_layers(&res, profile) {
+                    Some(layers) => {
+                        let mut lo = 0;
+                        for (s, l) in g.stages.iter_mut().zip(&layers) {
+                            s.layer_lo = lo;
+                            s.layer_hi = lo + l;
+                            lo += l;
+                        }
+                    }
+                    None => {
+                        feasible = false;
+                        break;
+                    }
+                }
+            }
+            if !feasible {
+                continue;
+            }
+
+            let mut plan = ParallelPlan {
+                model_name: model.name.clone(),
+                tp_dim: tp,
+                groups,
+                est_iter_s: 0.0,
+                planning_s: 0.0,
+            };
+            plan.validate(model.n_layers)?;
+            // Algorithm 1 line 13: Cost(P) — "estimates the iteration
+            // times and selects the optimal plan". The 1F1B event
+            // simulation is the arbiter (it captures heterogeneous-drain
+            // effects the Eq-1 closed form misses); Eq-1 rides along on
+            // every scored candidate.
+            plan.est_iter_s = crate::sim::simulate_plan(profile, &plan).iter_s;
+            let eq1_iter_s = cost::iter_time_s(profile, &plan);
+            let price_per_hour = cost::plan_price_per_hour(&profile.catalog, &plan);
+            let cost_per_iter_usd = cost::cost_per_iter_usd(price_per_hour, plan.est_iter_s);
+            let tokens = cost::plan_tokens_per_iter(model, &plan);
+            let tokens_per_usd = if cost_per_iter_usd > 0.0 {
+                tokens / cost_per_iter_usd
+            } else {
+                f64::INFINITY
+            };
+            out.push(ScoredPlan {
+                plan,
+                eq1_iter_s,
+                benched: grouping.benched,
+                price_per_hour,
+                cost_per_iter_usd,
+                tokens_per_usd,
+            });
+        }
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -184,6 +322,47 @@ mod tests {
         )
         .unwrap();
         assert_eq!(plan.tp_dim, 4);
+    }
+
+    #[test]
+    fn plan_choice_scores_both_objectives() {
+        let model = ModelCfg::bert_large();
+        let p = profile(&model);
+        let cluster = ClusterSpec::from_counts(&[(4, KindId::A100), (4, KindId::H800)]);
+        let choice = plan_choice(&cluster, &p, &PlanOptions::default()).unwrap();
+        let f = &choice.fastest;
+        assert!(f.plan.est_iter_s > 0.0);
+        assert!(f.eq1_iter_s > 0.0, "Eq-1 estimate must be exposed");
+        assert!(f.price_per_hour > 0.0 && f.cost_per_iter_usd > 0.0);
+        assert!(f.tokens_per_usd.is_finite() && f.tokens_per_usd > 0.0);
+        // cheapest maximizes tokens/$; fastest minimizes sim iter time
+        assert!(choice.cheapest.tokens_per_usd >= f.tokens_per_usd - 1e-9);
+        assert!(f.plan.est_iter_s <= choice.cheapest.plan.est_iter_s + 1e-12);
+        assert_eq!(f.benched.total(), 0, "default options never bench");
+        // auto_plan is exactly the time pick
+        let cat = GpuCatalog::builtin();
+        let auto = auto_plan(&cluster, &p, &PlanOptions::default()).unwrap();
+        assert_eq!(auto.summary(&cat), choice.pick(Objective::Time).plan.summary(&cat));
+    }
+
+    #[test]
+    fn bench_option_never_slower() {
+        // Benching enlarges the candidate set, so the fastest plan can
+        // only improve (or stay identical) relative to exact coverage.
+        let model = ModelCfg::bert_large();
+        let p = profile(&model);
+        let cluster = ClusterSpec::from_counts(&[(4, KindId::A100), (2, KindId::H800)]);
+        let plain = auto_plan(&cluster, &p, &PlanOptions::default()).unwrap();
+        let benched =
+            auto_plan(&cluster, &p, &PlanOptions { bench: true, ..Default::default() }).unwrap();
+        assert!(benched.est_iter_s <= plain.est_iter_s + 1e-12);
+    }
+
+    #[test]
+    fn objective_parses() {
+        assert_eq!("time".parse::<Objective>().unwrap(), Objective::Time);
+        assert_eq!("COST".parse::<Objective>().unwrap(), Objective::Cost);
+        assert!("fast".parse::<Objective>().is_err());
     }
 
     #[test]

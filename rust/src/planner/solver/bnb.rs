@@ -1,4 +1,8 @@
-//! Memoized branch-and-bound for max–min effective power (Eq 3).
+//! Memoized branch-and-bound for max–min effective power (Eq 3), plus
+//! the device-*subset* extension: [`solve_subsets`] relaxes the paper's
+//! exact-coverage constraint (3e) so a straggler kind can be benched
+//! (left unused) when that raises the objective. See `docs/PLANNER.md`
+//! for a worked example of both.
 
 use std::collections::HashMap;
 use std::time::Instant;
@@ -230,6 +234,129 @@ pub fn solve(p: &GroupingProblem) -> Option<GroupingSolution> {
         }
     }
     best
+}
+
+/// Eq (3) solved over a device *subset*: the grouping over the kept
+/// entities plus the per-kind counts deliberately left unused.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SubsetSolution {
+    /// Best grouping over `counts − benched`.
+    pub solution: GroupingSolution,
+    /// TP entities per kind left off the plan.
+    pub benched: KindVec<usize>,
+}
+
+/// Cap on full Eq-3 solves during subset enumeration. The upper-bound
+/// prune usually cuts the space to a handful of solves; the budget is a
+/// backstop for adversarial instances (many kinds, near-equal powers).
+const SUBSET_SOLVE_BUDGET: usize = 128;
+
+/// Solve Eq (3) over every device subset worth considering: enumerate
+/// benching `0..=n_k` entities of each kind, solving the all-devices
+/// instance first (the fast path — its objective becomes the incumbent)
+/// and pruning any bench prefix whose kept raw power cannot beat the
+/// incumbent. Because `J · min_g ≤ Σ_j G_j ≤ Σ kept raw power`, and
+/// benching more only lowers kept power, the prune is exact: the result
+/// always contains the all-devices solution when one is feasible, so the
+/// best subset is never worse than exact coverage.
+///
+/// `incumbent` optionally seeds the prune floor with an objective the
+/// caller already computed (e.g. [`solve_all`]'s best): subtrees that
+/// cannot beat it are cut from the first digit on. Note a seed *equal*
+/// to the kept raw power of the full fleet prunes the zero-bench leaf
+/// itself — callers that pass an incumbent must already hold the
+/// all-devices solution.
+///
+/// Returns one entry per solved (feasible) subset, best objective first;
+/// ties prefer fewer benched entities, keeping the all-devices plan the
+/// default when benching buys nothing.
+pub fn solve_subsets(p: &GroupingProblem, incumbent: Option<f64>) -> Vec<SubsetSolution> {
+    let mut search = SubsetSearch {
+        p,
+        t0: Instant::now(),
+        best_obj: incumbent.unwrap_or(f64::NEG_INFINITY),
+        solves: 0,
+        out: Vec::new(),
+    };
+    let mut bench = KindVec::new(p.counts.len(), 0usize);
+    search.dfs(0, &mut bench);
+    let mut out = search.out;
+    out.sort_by(|a, b| {
+        b.solution
+            .objective
+            .partial_cmp(&a.solution.objective)
+            .unwrap()
+            .then(a.benched.total().cmp(&b.benched.total()))
+    });
+    out
+}
+
+struct SubsetSearch<'a> {
+    p: &'a GroupingProblem,
+    t0: Instant,
+    best_obj: f64,
+    solves: usize,
+    out: Vec<SubsetSolution>,
+}
+
+impl<'a> SubsetSearch<'a> {
+    /// Raw power of the entities a completed `bench` prefix can still
+    /// keep (digits past the prefix are optimistically fully kept).
+    fn kept_power(&self, bench: &KindVec<usize>) -> f64 {
+        self.p
+            .counts
+            .iter()
+            .zip(bench.iter())
+            .zip(self.p.entity.iter())
+            .map(|((&c, &b), e)| (c - b) as f64 * e.power)
+            .sum()
+    }
+
+    fn over_budget(&self) -> bool {
+        if self.solves >= SUBSET_SOLVE_BUDGET {
+            return true;
+        }
+        // Past the caller's deadline keep only the all-devices result.
+        self.solves > 0
+            && self
+                .p
+                .deadline
+                .map(|d| self.t0.elapsed().as_secs_f64() > d)
+                .unwrap_or(false)
+    }
+
+    /// DFS over per-kind bench counts; the last kind's digit spins
+    /// fastest, mirroring the composition odometer's visit order.
+    fn dfs(&mut self, ki: usize, bench: &mut KindVec<usize>) {
+        if self.over_budget() {
+            return;
+        }
+        if ki == self.p.counts.len() {
+            let kept = self.p.counts.minus(bench);
+            if kept.total() == 0 {
+                return;
+            }
+            self.solves += 1;
+            let sub = GroupingProblem { counts: kept, ..self.p.clone() };
+            if let Some(sol) = solve(&sub) {
+                if sol.objective > self.best_obj {
+                    self.best_obj = sol.objective;
+                }
+                self.out.push(SubsetSolution { solution: sol, benched: bench.clone() });
+            }
+            return;
+        }
+        for bk in 0..=self.p.counts[ki] {
+            bench[ki] = bk;
+            // Raising bk only lowers kept power, so once the optimistic
+            // bound falls to the incumbent the whole tail is pruned.
+            if self.kept_power(bench) <= self.best_obj + 1e-12 {
+                break;
+            }
+            self.dfs(ki + 1, bench);
+        }
+        bench[ki] = 0;
+    }
 }
 
 /// One Eq-3 solution per feasible J (unsorted).
@@ -510,6 +637,53 @@ mod tests {
         }
         assert_eq!(used, vec![2, 1, 1, 1, 2]);
         assert!(s.min_g > 0.0);
+    }
+
+    #[test]
+    fn subset_keeps_all_devices_when_benching_buys_nothing() {
+        // Homogeneous fleet: no straggler, so the top subset solution is
+        // the zero-bench one and it matches the exact-coverage optimum.
+        let p = GroupingProblem {
+            counts: kv([4, 0, 0]),
+            entity: paper_entities(),
+            min_mem_gib: 60.0,
+            microbatches_total: 16,
+            deadline: None,
+        };
+        let all = solve(&p).unwrap();
+        let subs = solve_subsets(&p, None);
+        let best = &subs[0];
+        assert_eq!(best.benched, kv([0, 0, 0]));
+        assert!((best.solution.objective - all.objective).abs() < 1e-12);
+    }
+
+    #[test]
+    fn subset_benches_weak_straggler() {
+        // 2 strong + 1 very weak entity: exact coverage must place the
+        // weak one (dragging min G); benching it lifts the objective.
+        let entity = KindVec::from(vec![ent(1.0, 80.0), ent(0.1, 80.0)]);
+        let p = GroupingProblem {
+            counts: KindVec::from(vec![2, 1]),
+            entity,
+            min_mem_gib: 60.0,
+            microbatches_total: 8,
+            deadline: None,
+        };
+        // all-devices optimum: {A}, {A, W} at J=2, K=4:
+        // min G = 1.1 · (1 − 1/5) = 0.88, objective 1.76
+        let all = solve(&p).unwrap();
+        assert!((all.objective - 1.76).abs() < 1e-9, "{}", all.objective);
+        // benching W frees two singleton groups: objective 2 · 1.0 = 2.0
+        let subs = solve_subsets(&p, None);
+        let best = &subs[0];
+        assert_eq!(best.benched, KindVec::from(vec![0, 1]));
+        assert!((best.solution.objective - 2.0).abs() < 1e-9);
+        assert!(best.solution.min_g > all.min_g);
+        // the all-devices solution is still in the candidate list
+        assert!(subs
+            .iter()
+            .any(|s| s.benched.total() == 0
+                && (s.solution.objective - all.objective).abs() < 1e-12));
     }
 
     #[test]

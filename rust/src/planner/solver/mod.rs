@@ -21,11 +21,16 @@
 //!
 //! An LPT greedy ([`lpt_heuristic`]) provides both an initial incumbent
 //! and a fall-back when a caller sets a deadline.
+//!
+//! [`solve`] keeps the paper's exact-coverage constraint (3e);
+//! [`solve_subsets`] relaxes it, enumerating benched device subsets so a
+//! straggler kind need not drag the max–min objective down (see
+//! `docs/PLANNER.md` for the walkthrough).
 
 pub mod bnb;
 pub mod lpt;
 
-pub use bnb::{solve, GroupingProblem, GroupingSolution};
+pub use bnb::{solve, solve_subsets, GroupingProblem, GroupingSolution, SubsetSolution};
 pub use lpt::lpt_heuristic;
 
 /// Per-kind TP-entity description (power and memory already folded by tp).

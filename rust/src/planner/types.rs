@@ -97,6 +97,17 @@ impl ParallelPlan {
             .fold(f64::INFINITY, f64::min)
     }
 
+    /// Spot cost of the GPUs this plan actually uses, USD per hour
+    /// (per-kind `price_per_hour` summed over stage GPUs; benched
+    /// devices don't bill).
+    pub fn price_per_hour(&self, cat: &GpuCatalog) -> f64 {
+        self.groups
+            .iter()
+            .flat_map(|g| &g.stages)
+            .map(|s| s.gpus.len() as f64 * cat.get(s.kind).price_per_hour)
+            .sum()
+    }
+
     /// Structural sanity: every layer covered exactly once per group,
     /// embed/head flags on the boundary stages, no GPU reuse.
     pub fn validate(&self, n_layers: usize) -> anyhow::Result<()> {
@@ -286,6 +297,15 @@ mod tests {
         // group0: raw 2.0, eff 2*(8/9); group1: raw 2.0 (H800), eff 2.0
         assert!(p.groups[0].effective_power(&cat) < p.groups[1].effective_power(&cat));
         assert!((p.min_effective_power(&cat) - 2.0 * 8.0 / 9.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn price_sums_used_gpus() {
+        let cat = GpuCatalog::builtin();
+        let p = two_group_plan();
+        let expect = 2.0 * cat.get(KindId::A100).price_per_hour
+            + cat.get(KindId::H800).price_per_hour;
+        assert!((p.price_per_hour(&cat) - expect).abs() < 1e-12);
     }
 
     #[test]

@@ -19,16 +19,24 @@ pub fn ring_allreduce_s(bytes: f64, n: usize, bw_gbs: f64, latency_s: f64) -> f6
 /// `layer_holders[l]` = node ids of the holders; rings sharing no nodes
 /// run in parallel, so the returned time bins rings by bottleneck link
 /// and takes link-level serialization into account.
+///
+/// `rdma_nics` is the RDMA NIC count of the most NIC-poor node kind the
+/// rings touch (per-kind `rdma_nics` in the GPU catalog): node-crossing
+/// rings serialize on the NICs, so a fleet with `n` NICs per node drains
+/// its inter-node rings up to `n`× faster. The paper's testbed is the
+/// single-NIC case (`rdma_nics = 1`), which reproduces the seed model
+/// exactly.
 pub fn layerwise_sync_s(
     model: &ModelCfg,
     tp_dim: usize,
     layer_holders: &[Vec<usize>],
     nvlink_gbs: f64,
+    rdma_nics: usize,
     ic: &Interconnect,
 ) -> f64 {
     let grad_bytes = 2.0 * model.params_per_layer() / tp_dim as f64;
     let mut intra = 0.0; // rings entirely within one node (NVLink)
-    let mut inter = 0.0; // rings crossing nodes (share the RDMA NIC)
+    let mut inter = 0.0; // rings crossing nodes (share the RDMA NICs)
     for holders in layer_holders {
         let n = holders.len();
         if n < 2 {
@@ -43,7 +51,9 @@ pub fn layerwise_sync_s(
             inter += ring_allreduce_s(grad_bytes, n, ic.rdma_gbs, ic.rdma_latency_s);
         }
     }
-    // NVLink rings overlap with the NIC-bound rings; NIC rings serialize.
+    // Node-crossing rings spread across the available NICs (idealized
+    // balance); NVLink rings overlap with whatever NIC traffic remains.
+    let inter = inter / rdma_nics.max(1) as f64;
     inter + intra.max(0.0).min(inter.max(intra))
 }
 
@@ -136,9 +146,25 @@ mod tests {
         let ic = Interconnect::default();
         let same: Vec<Vec<usize>> = (0..32).map(|_| vec![0, 0]).collect();
         let cross: Vec<Vec<usize>> = (0..32).map(|_| vec![0, 1]).collect();
-        let a = layerwise_sync_s(&m, 1, &same, 600.0, &ic);
-        let b = layerwise_sync_s(&m, 1, &cross, 600.0, &ic);
+        let a = layerwise_sync_s(&m, 1, &same, 600.0, 1, &ic);
+        let b = layerwise_sync_s(&m, 1, &cross, 600.0, 1, &ic);
         assert!(a < b, "{a} vs {b}");
+    }
+
+    #[test]
+    fn more_nics_drain_inter_node_rings_faster() {
+        let m = ModelCfg::gpt3_6p7b();
+        let ic = Interconnect::default();
+        let cross: Vec<Vec<usize>> = (0..32).map(|_| vec![0, 1]).collect();
+        let one = layerwise_sync_s(&m, 1, &cross, 600.0, 1, &ic);
+        let eight = layerwise_sync_s(&m, 1, &cross, 600.0, 8, &ic);
+        assert!(eight < one, "{eight} vs {one}");
+        // intra-node (NVLink) rings don't touch the NICs at all
+        let same: Vec<Vec<usize>> = (0..32).map(|_| vec![0, 0]).collect();
+        assert_eq!(
+            layerwise_sync_s(&m, 1, &same, 600.0, 1, &ic),
+            layerwise_sync_s(&m, 1, &same, 600.0, 8, &ic)
+        );
     }
 
     #[test]
@@ -149,7 +175,7 @@ mod tests {
         let ic = Interconnect::default();
         // group A: 2 stages of 16; group B: 1 stage of 32 (asymmetric PP)
         let holders: Vec<Vec<usize>> = (0..32).map(|l| vec![l / 16, 2]).collect();
-        let lw = layerwise_sync_s(&m, 1, &holders, 600.0, &ic);
+        let lw = layerwise_sync_s(&m, 1, &holders, 600.0, 1, &ic);
         let gg = gpu_granular_sync_s(&m, 1, &[vec![16, 16], vec![32]], &ic, 1600.0);
         assert!(lw < gg, "layerwise {lw} vs gpu-granular {gg}");
     }

@@ -90,7 +90,30 @@ pub fn simulate_plan(profile: &ProfileDb, plan: &ParallelPlan) -> IterStats {
             })
             .collect();
         let nvlink = profile.catalog.get(plan.groups[0].stages[0].kind).nvlink_gbs;
-        let lw = comm::layerwise_sync_s(m, plan.tp_dim, &holders, nvlink, &ic);
+        // Node-crossing rings drain over the RDMA NICs of the nodes they
+        // touch; the most NIC-poor node on any *multi-node* ring is the
+        // bottleneck (kinds whose rings stay intra-node don't count).
+        let mut node_nics = std::collections::BTreeMap::new();
+        for s in plan.groups.iter().flat_map(|g| &g.stages) {
+            let n = profile.catalog.get(s.kind).rdma_nics;
+            node_nics
+                .entry(s.gpus[0].node)
+                .and_modify(|v| *v = (*v).min(n))
+                .or_insert(n);
+        }
+        let nics = holders
+            .iter()
+            .filter(|h| {
+                let mut uniq = (*h).clone();
+                uniq.sort_unstable();
+                uniq.dedup();
+                uniq.len() > 1
+            })
+            .flat_map(|h| h.iter())
+            .filter_map(|n| node_nics.get(n).copied())
+            .min()
+            .unwrap_or(1);
+        let lw = comm::layerwise_sync_s(m, plan.tp_dim, &holders, nvlink, nics, &ic);
         // embeddings + head ride the same inter-node path
         let emb_bytes =
             2.0 * (m.embed_params() + (m.hidden * m.vocab) as f64) / plan.tp_dim as f64;
@@ -102,21 +125,12 @@ pub fn simulate_plan(profile: &ProfileDb, plan: &ParallelPlan) -> IterStats {
     let iter_s = pipeline_s + sync_s;
     IterStats {
         iter_s,
-        tokens_per_s: total_tokens(plan, m) / iter_s,
+        tokens_per_s: crate::planner::cost::plan_tokens_per_iter(m, plan) / iter_s,
         pipeline_s,
         sync_s,
         mean_idle_frac: if idle_n > 0 { idle_sum / idle_n as f64 } else { 0.0 },
         group_s,
     }
-}
-
-/// Tokens processed per iteration across all groups (groups each run
-/// `microbatches` microbatches).
-fn total_tokens(plan: &ParallelPlan, m: &crate::modelcfg::ModelCfg) -> f64 {
-    plan.groups
-        .iter()
-        .map(|g| (g.microbatches * m.microbatch * m.seq) as f64)
-        .sum()
 }
 
 #[cfg(test)]

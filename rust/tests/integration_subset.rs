@@ -1,0 +1,143 @@
+//! Device-subset (straggler-benching) planning and the price-aware
+//! objectives, end to end: on a fleet with a deliberately weak kind the
+//! planner must bench it — Eq-3's exact coverage would otherwise force
+//! the straggler into some DP group and drag the max–min objective (and
+//! the simulated iteration time) down. `docs/PLANNER.md` walks through
+//! the same scenario by hand.
+
+use autohet::cluster::{ClusterSpec, GpuCatalog, GpuSpec, KindId, KindVec};
+use autohet::modelcfg::ModelCfg;
+use autohet::planner::solver::{solve, solve_subsets, EntitySpec, GroupingProblem};
+use autohet::planner::{auto_plan, plan_choice, Objective, PlanOptions};
+use autohet::profile::ProfileDb;
+use autohet::sim::simulate_plan;
+
+/// Built-in catalog plus a pathologically weak (and cheap) spot part.
+fn straggler_catalog() -> GpuCatalog {
+    let mut cat = GpuCatalog::builtin();
+    cat.add(GpuSpec {
+        name: "P4".into(),
+        relative_power: 0.02,
+        flops_tf: 2.8,
+        mem_gib: 80.0,
+        nvlink_gbs: 300.0,
+        hbm_gbs: 900.0,
+        price_per_hour: 0.2,
+        rdma_nics: 1,
+    })
+    .unwrap();
+    cat
+}
+
+fn straggler_fixture() -> (ClusterSpec, ProfileDb, ModelCfg) {
+    let cat = straggler_catalog();
+    let p4 = cat.lookup("P4").unwrap();
+    let cluster = ClusterSpec::from_counts_in(&cat, &[(4, KindId::A100), (1, p4)]);
+    let model = ModelCfg::bert_large();
+    let profile = ProfileDb::build(&model, &cat, &[1, 2, 4, 8], 1);
+    (cluster, profile, model)
+}
+
+#[test]
+fn benching_straggler_lifts_eq3_min_power() {
+    // Hand-checkable instance: 2 strong entities (g = 1.0) + 1 straggler
+    // (g = 0.1), memory floor met by any singleton, 8 microbatches.
+    let entity = KindVec::from(vec![
+        EntitySpec { power: 1.0, mem_gib: 80.0 },
+        EntitySpec { power: 0.1, mem_gib: 80.0 },
+    ]);
+    let p = GroupingProblem {
+        counts: KindVec::from(vec![2, 1]),
+        entity,
+        min_mem_gib: 60.0,
+        microbatches_total: 8,
+        deadline: None,
+    };
+    // Exact coverage: best is {A}, {A, W} at J=2 (K=4), where the mixed
+    // group's G = 1.1 · (1 − 1/5) = 0.88 → objective 1.76.
+    let all = solve(&p).unwrap();
+    assert!((all.objective - 1.76).abs() < 1e-9, "{}", all.objective);
+    assert!((all.min_g - 0.88).abs() < 1e-9, "{}", all.min_g);
+    // Benching the straggler frees two bubble-less singleton groups:
+    // min G = 1.0, objective 2 · 1.0 = 2.0 — strictly better.
+    let subs = solve_subsets(&p, None);
+    let best = &subs[0];
+    assert_eq!(best.benched, KindVec::from(vec![0, 1]));
+    assert!((best.solution.objective - 2.0).abs() < 1e-9);
+    assert!(best.solution.min_g > all.min_g);
+}
+
+#[test]
+fn benching_beats_all_devices_end_to_end() {
+    let (cluster, profile, model) = straggler_fixture();
+    let all = auto_plan(&cluster, &profile, &PlanOptions::default()).unwrap();
+    let benched = auto_plan(
+        &cluster,
+        &profile,
+        &PlanOptions { bench: true, ..Default::default() },
+    )
+    .unwrap();
+    benched.validate(model.n_layers).unwrap();
+    // exact coverage is forced to place the straggler...
+    assert_eq!(all.gpu_count(), cluster.total_gpus());
+    // ...while the subset planner benches ≥ 1 entity and wins on time
+    assert!(
+        benched.gpu_count() < cluster.total_gpus(),
+        "expected benching, got {}",
+        benched.summary(&profile.catalog)
+    );
+    let (ta, tb) = (
+        simulate_plan(&profile, &all).iter_s,
+        simulate_plan(&profile, &benched).iter_s,
+    );
+    assert!(tb < ta, "benched {tb}s should beat all-devices {ta}s");
+}
+
+#[test]
+fn plan_choice_prices_both_objectives() {
+    let (cluster, profile, _) = straggler_fixture();
+    let opts = PlanOptions { bench: true, ..Default::default() };
+    let choice = plan_choice(&cluster, &profile, &opts).unwrap();
+    let (f, c) = (&choice.fastest, &choice.cheapest);
+    // the straggler fleet benches under the time objective too
+    assert!(f.benched.total() >= 1, "fastest should bench the P4");
+    // fastest minimizes sim iter time; cheapest maximizes tokens/$
+    assert!(f.plan.est_iter_s <= c.plan.est_iter_s + 1e-12);
+    assert!(c.tokens_per_usd >= f.tokens_per_usd - 1e-9);
+    // $/iteration accounting uses per-kind price_per_hour of used GPUs
+    assert!(f.price_per_hour > 0.0);
+    assert!(
+        (f.cost_per_iter_usd - f.price_per_hour / 3600.0 * f.plan.est_iter_s).abs() < 1e-12
+    );
+    assert!(f.eq1_iter_s > 0.0, "Eq-1 estimate is exposed per candidate");
+    // objective picking is stable
+    assert_eq!(choice.pick(Objective::Time).plan, f.plan);
+    assert_eq!(choice.pick(Objective::Cost).plan, c.plan);
+}
+
+#[test]
+fn subset_planner_never_worse_on_healthy_fleets() {
+    // No straggler: benching must not cost anything — the candidate set
+    // is a superset, so the fastest plan is at least as fast.
+    let cat = GpuCatalog::builtin();
+    let model = ModelCfg::llama_7b();
+    let profile = ProfileDb::build(&model, &cat, &[1, 2, 4, 8], 1);
+    for counts in [
+        vec![(4usize, KindId::A100), (2, KindId::H800)],
+        vec![(5, KindId::A100), (3, KindId::H800)],
+        vec![(2, KindId::A100), (6, KindId::H20)],
+    ] {
+        let cluster = ClusterSpec::from_counts(&counts);
+        let plain = auto_plan(&cluster, &profile, &PlanOptions::default()).unwrap();
+        let benched = auto_plan(
+            &cluster,
+            &profile,
+            &PlanOptions { bench: true, ..Default::default() },
+        )
+        .unwrap();
+        assert!(
+            benched.est_iter_s <= plain.est_iter_s + 1e-12,
+            "{counts:?}: bench made the plan slower"
+        );
+    }
+}

@@ -5,6 +5,8 @@
 //! Invariants:
 //! * any feasible plan is structurally valid and uses every GPU once
 //! * the exact solver never loses to the LPT heuristic (any kind count)
+//! * the device-subset solver never loses to the all-devices solver, and
+//!   its solutions' used+benched counts always reconcile
 //! * layer partitions cover the model and respect memory caps
 //! * on *randomized catalogs of 2–6 kinds*: every group meets the model
 //!   memory floor, no TP entity crosses a node, and the Eq-3 objective is
@@ -16,7 +18,7 @@ use autohet::checkpoint::shard;
 use autohet::cluster::{ClusterSpec, GpuCatalog, GpuSpec, KindId, KindVec, SpotTrace, TraceConfig};
 use autohet::modelcfg::ModelCfg;
 use autohet::planner::partition::{partition_layers, StageRes};
-use autohet::planner::solver::{lpt_heuristic, solve, EntitySpec, GroupingProblem};
+use autohet::planner::solver::{lpt_heuristic, solve, solve_subsets, EntitySpec, GroupingProblem};
 use autohet::planner::{auto_plan, PlanOptions};
 use autohet::profile::ProfileDb;
 use autohet::runtime::HostTensor;
@@ -46,6 +48,10 @@ fn random_catalog(rng: &mut Rng) -> GpuCatalog {
             mem_gib: 48.0 + rng.f64() * 144.0, // [48, 192) GiB
             nvlink_gbs: 400.0 + rng.f64() * 500.0,
             hbm_gbs: 1600.0,
+            // deterministic so the rng stream (and thus every seeded
+            // case below) stays identical to the pre-economics suite
+            price_per_hour: 1.2 * power,
+            rdma_nics: 1 + i % 8,
         })
         .unwrap();
     }
@@ -213,6 +219,75 @@ fn exact_solver_never_below_lpt() {
                 );
             }
         }
+    }
+}
+
+#[test]
+fn subset_solver_never_below_all_devices() {
+    // Relaxing exact coverage can only help: the subset enumeration
+    // always contains the zero-bench (all-devices) solution, so its best
+    // objective dominates `solve`'s. Used + benched must reconcile with
+    // the instance counts for every returned subset.
+    let mut rng = Rng::new(0x5B5E7);
+    for case in 0..CASES {
+        let cat = random_catalog(&mut rng);
+        let kdim = cat.len();
+        let mut counts = KindVec::new(kdim, 0usize);
+        for i in 0..kdim {
+            counts[i] = rng.below(3);
+        }
+        if counts.total() == 0 || counts.total() > 8 {
+            continue; // keep the exact solver in play for every subset
+        }
+        let entity: KindVec<EntitySpec> = KindVec::from(
+            cat.specs()
+                .iter()
+                .map(|s| EntitySpec { power: s.relative_power, mem_gib: s.mem_gib })
+                .collect::<Vec<_>>(),
+        );
+        let p = GroupingProblem {
+            counts: counts.clone(),
+            entity,
+            min_mem_gib: 40.0 + rng.f64() * 80.0,
+            microbatches_total: 8 + rng.below(56),
+            deadline: None,
+        };
+        let all = solve(&p);
+        let subs = solve_subsets(&p, None);
+        for s in &subs {
+            assert!(s.benched.fits_within(&counts), "case {case}");
+            let mut used = KindVec::new(kdim, 0usize);
+            for g in &s.solution.groups {
+                for i in 0..kdim {
+                    used[i] += g[i];
+                }
+            }
+            for i in 0..kdim {
+                assert_eq!(
+                    used[i] + s.benched[i],
+                    counts[i],
+                    "case {case}: kind {i} used+benched != available"
+                );
+            }
+        }
+        let Some(all) = all else {
+            continue; // all-devices infeasible; nothing to dominate
+        };
+        let best = subs
+            .first()
+            .unwrap_or_else(|| panic!("case {case}: all-devices feasible but no subsets"));
+        assert!(
+            best.solution.objective >= all.objective - 1e-9,
+            "case {case}: subset {} < all-devices {} ({counts:?})",
+            best.solution.objective,
+            all.objective
+        );
+        // the zero-bench solution itself must be in the list, unpruned
+        assert!(
+            subs.iter().any(|s| s.benched.total() == 0
+                && (s.solution.objective - all.objective).abs() < 1e-12),
+            "case {case}: all-devices solution missing from subset list"
+        );
     }
 }
 
