@@ -64,14 +64,16 @@ fn main() -> anyhow::Result<()> {
         handled += 1;
         match &out.plan {
             Some(p) => println!(
-                "t={:>7.0}s {:+3} {:<5} -> {:>2} GPUs, plan {} (dp {} -> {})",
+                "t={:>7.0}s {:+3} {:<5} -> {:>2} GPUs [{}] plan {} (dp {} -> {}, migration {:.0}s)",
                 ev.at_s,
                 ev.delta,
                 cat.name(ev.kind),
                 out.cluster.total_gpus(),
+                out.decision,
                 p.summary(&cat),
                 out.dp_change.0,
-                out.dp_change.1
+                out.dp_change.1,
+                out.migration_s
             ),
             None => println!(
                 "t={:>7.0}s {:+3} {:<5} -> {:>2} GPUs: NO FEASIBLE PLAN (training pauses)",
@@ -82,6 +84,10 @@ fn main() -> anyhow::Result<()> {
             ),
         }
     }
-    println!("handled {handled} availability events, {} replans", coord.replans);
+    println!(
+        "handled {handled} availability events: {} migrations taken, {} held by the \
+         amortization rule, {} unchanged (see `autohet replay` for the full engine)",
+        coord.replans, coord.holds, coord.unchanged
+    );
     Ok(())
 }

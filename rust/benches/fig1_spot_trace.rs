@@ -38,8 +38,28 @@ fn main() {
         ]);
     }
     s.print("Fig 1 (implication): feasibility of homogeneous vs mixed allocation");
+
+    // the spot-market extension: per-kind price track statistics
+    let mut p = Table::new(&["kind", "preset $/h", "mean $/h", "min", "max"]);
+    for (ki, &k) in trace.kinds.iter().enumerate() {
+        let series: Vec<f64> = trace.prices.iter().map(|r| r[ki]).collect();
+        let mean = series.iter().sum::<f64>() / series.len() as f64;
+        let min = series.iter().copied().fold(f64::INFINITY, f64::min);
+        let max = series.iter().copied().fold(0.0f64, f64::max);
+        p.row(&[
+            cat.name(k).to_string(),
+            format!("{:.2}", trace.cfg.base_price_of(k)),
+            format!("{mean:.2}"),
+            format!("{min:.2}"),
+            format!("{max:.2}"),
+        ]);
+    }
+    p.print("Spot price track (mean-reverting, spikes on availability crashes)");
+
     println!(
-        "\n{} availability change events over the horizon (preemptions + grants)",
-        trace.events().len()
+        "\n{} availability change events over the horizon (preemptions + grants), \
+         {} batched market events at a 5% price threshold",
+        trace.events().len(),
+        trace.market_events(0.05).len()
     );
 }

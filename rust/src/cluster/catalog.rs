@@ -264,6 +264,29 @@ impl GpuCatalog {
         KindVec::new(self.specs.len(), fill)
     }
 
+    /// Clone of this catalog with each kind's `price_per_hour` replaced
+    /// by `prices[kind]` (clamped non-negative). Kinds, ids, and every
+    /// capability field are untouched, so [`KindId`]s minted against
+    /// `self` stay valid — the spot-market repricing hook the elastic
+    /// coordinator uses to score plans at *current* prices.
+    pub fn with_prices(&self, prices: &[f64]) -> GpuCatalog {
+        assert_eq!(
+            prices.len(),
+            self.specs.len(),
+            "with_prices: {} prices for a {}-kind catalog",
+            prices.len(),
+            self.specs.len()
+        );
+        GpuCatalog {
+            specs: self
+                .specs
+                .iter()
+                .zip(prices)
+                .map(|(s, &p)| GpuSpec { price_per_hour: p.max(0.0), ..s.clone() })
+                .collect(),
+        }
+    }
+
     // ---------- JSON ----------
     //
     // Schema: `{"kinds": [{"name": "B200", "relative_power": 7.0,
@@ -562,6 +585,25 @@ mod tests {
         neg.name = "A100-neg".into();
         neg.price_per_hour = -0.1;
         assert!(GpuCatalog::empty().add(neg).is_err());
+    }
+
+    #[test]
+    fn with_prices_replaces_only_prices() {
+        let cat = GpuCatalog::builtin();
+        let repriced = cat.with_prices(&[2.4, 1.0, -0.5]);
+        assert_eq!(repriced.len(), 3);
+        assert_eq!(repriced.get(KindId::A100).price_per_hour, 2.4);
+        assert_eq!(repriced.get(KindId::H800).price_per_hour, 1.0);
+        assert_eq!(repriced.get(KindId::H20).price_per_hour, 0.0); // clamped
+        // capability fields untouched
+        for id in cat.ids() {
+            assert_eq!(repriced.get(id).relative_power, cat.get(id).relative_power);
+            assert_eq!(repriced.get(id).name, cat.get(id).name);
+            assert_eq!(repriced.get(id).rdma_nics, cat.get(id).rdma_nics);
+        }
+        // identity repricing round-trips to an equal catalog
+        let prices: Vec<f64> = cat.specs().iter().map(|s| s.price_per_hour).collect();
+        assert_eq!(cat.with_prices(&prices), cat);
     }
 
     #[test]

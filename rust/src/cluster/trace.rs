@@ -1,4 +1,4 @@
-//! Spot-instance availability traces (Figure 1 substrate).
+//! Spot-market traces: availability (Figure 1 substrate) + price dynamics.
 //!
 //! The paper motivates heterogeneous training with a 3-day trace of
 //! allocable GPUs per type from a production cluster. We generate
@@ -6,8 +6,21 @@
 //! Ornstein-Uhlenbeck-style) process per GPU type plus demand spikes,
 //! and derive *preemption / grant events* from consecutive samples — the
 //! same event stream the elastic-recovery subsystem consumes.
+//!
+//! On top of availability, every trace carries a **price track**: a
+//! per-kind spot $/hr series mean-reverting around the catalog's preset
+//! [`crate::cluster::GpuSpec::price_per_hour`], with price spikes
+//! correlated with availability crashes (high-priority demand both grabs
+//! the pool *and* bids the spot price up). Availability and prices merge
+//! into one [`MarketEvent`] stream — same-step deltas batched per step —
+//! which `recovery::replay` drives through the elastic coordinator.
+//!
+//! The availability series for a given `(TraceConfig, seed)` is drawn
+//! exactly as in the seed implementation (prices come from an
+//! independent RNG stream), so pre-price traces reproduce bit-identically.
 
-use crate::cluster::catalog::KindId;
+use crate::cluster::catalog::{GpuCatalog, KindId};
+use crate::cluster::spec::ClusterSpec;
 use crate::util::rng::Rng;
 
 #[derive(Debug, Clone)]
@@ -27,28 +40,94 @@ pub struct TraceConfig {
     pub noise_frac: f64,
     /// Probability per step of a demand spike (availability crash).
     pub spike_prob: f64,
+    /// Per-kind spot $/hr the price track reverts to, keyed by
+    /// [`KindId`] (NOT positional, so overriding `capacity` alone keeps
+    /// the anchors attached to the right kinds). Kinds with no entry
+    /// fall back to 1.2 $/hr (the A100 anchor).
+    pub base_price_per_hour: Vec<(KindId, f64)>,
+    /// Mean-reversion strength of the price multiplier (0..1).
+    pub price_reversion: f64,
+    /// Per-step price noise (std of the multiplier increment).
+    pub price_noise: f64,
+    /// Multiplier applied to a kind's price on its demand-spike steps
+    /// (spot prices surge exactly when availability crashes).
+    pub spike_price_mult: f64,
 }
 
 impl Default for TraceConfig {
     fn default() -> Self {
+        let cat = GpuCatalog::builtin();
+        let capacity = vec![(KindId::A100, 16), (KindId::H800, 8), (KindId::H20, 8)];
+        let base_price_per_hour = capacity
+            .iter()
+            .map(|&(k, _)| (k, cat.get(k).price_per_hour))
+            .collect();
         TraceConfig {
             step_s: 600.0,
             horizon_s: 3.0 * 24.0 * 3600.0,
-            capacity: vec![(KindId::A100, 16), (KindId::H800, 8), (KindId::H20, 8)],
+            capacity,
             mean_frac: 0.6,
             reversion: 0.15,
             noise_frac: 0.18,
             spike_prob: 0.02,
+            base_price_per_hour,
+            price_reversion: 0.1,
+            price_noise: 0.04,
+            spike_price_mult: 1.8,
         }
     }
 }
 
-/// Availability over time: `avail[t][k]` = allocable GPUs of type-k at step t.
+impl TraceConfig {
+    /// A config whose capacity and price anchors cover *every* kind of an
+    /// arbitrary (possibly JSON-defined) catalog, `capacity_per_kind`
+    /// GPUs each. All dynamics parameters keep their defaults.
+    pub fn from_catalog(catalog: &GpuCatalog, capacity_per_kind: usize) -> TraceConfig {
+        let capacity: Vec<(KindId, usize)> =
+            catalog.ids().map(|k| (k, capacity_per_kind)).collect();
+        let base_price_per_hour = capacity
+            .iter()
+            .map(|&(k, _)| (k, catalog.get(k).price_per_hour))
+            .collect();
+        TraceConfig { capacity, base_price_per_hour, ..Default::default() }
+    }
+
+    /// A config whose per-kind capacity matches a cluster's current GPU
+    /// counts (kinds with zero GPUs are skipped) and whose price anchors
+    /// come from the cluster's catalog — the `replay` CLI entry point.
+    pub fn from_cluster(cluster: &ClusterSpec) -> TraceConfig {
+        let counts = cluster.kind_counts();
+        let capacity: Vec<(KindId, usize)> = cluster
+            .catalog
+            .ids()
+            .filter(|&k| counts[k] > 0)
+            .map(|k| (k, counts[k]))
+            .collect();
+        let base_price_per_hour = capacity
+            .iter()
+            .map(|&(k, _)| (k, cluster.catalog.get(k).price_per_hour))
+            .collect();
+        TraceConfig { capacity, base_price_per_hour, ..Default::default() }
+    }
+
+    /// The $/hr anchor a kind's price track reverts to (1.2, the A100
+    /// anchor, for kinds without an explicit entry).
+    pub fn base_price_of(&self, kind: KindId) -> f64 {
+        self.base_price_per_hour
+            .iter()
+            .find(|&&(k, _)| k == kind)
+            .map_or(1.2, |&(_, p)| p)
+    }
+}
+
+/// Availability + price over time: `avail[t][k]` = allocable GPUs of
+/// type-k at step t, `prices[t][k]` = spot $/hr of type-k at step t.
 #[derive(Debug, Clone)]
 pub struct SpotTrace {
     pub cfg: TraceConfig,
     pub kinds: Vec<KindId>,
     pub avail: Vec<Vec<usize>>,
+    pub prices: Vec<Vec<f64>>,
 }
 
 /// A change event derived from the trace.
@@ -60,61 +139,168 @@ pub struct PreemptionEvent {
     pub delta: i64,
 }
 
+/// One *batched* market step: every availability delta of the step plus
+/// the post-step price snapshot, so a consumer replans once per step
+/// instead of once per (kind, step).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MarketEvent {
+    pub at_s: f64,
+    /// Same-step availability deltas, one entry per kind that moved
+    /// (negative = preempted, positive = granted).
+    pub deltas: Vec<(KindId, i64)>,
+    /// Post-step spot $/hr per kind the trace covers.
+    pub prices: Vec<(KindId, f64)>,
+    /// Largest relative price move vs the previously *emitted* event.
+    pub max_price_move: f64,
+}
+
+impl MarketEvent {
+    /// Net availability delta across kinds (handy for display).
+    pub fn net_delta(&self) -> i64 {
+        self.deltas.iter().map(|&(_, d)| d).sum()
+    }
+}
+
 impl SpotTrace {
     pub fn generate(cfg: TraceConfig, seed: u64) -> SpotTrace {
         let mut rng = Rng::new(seed);
-        let steps = (cfg.horizon_s / cfg.step_s).ceil() as usize;
+        // A sub-step horizon still yields one sample (the old
+        // `ceil as usize` produced an empty trace and `at()` underflowed).
+        let steps = ((cfg.horizon_s / cfg.step_s).ceil() as usize).max(1);
         let kinds: Vec<KindId> = cfg.capacity.iter().map(|&(k, _)| k).collect();
         let caps: Vec<f64> = cfg.capacity.iter().map(|&(_, c)| c as f64).collect();
         let mut level: Vec<f64> = caps.iter().map(|c| c * cfg.mean_frac).collect();
         let mut avail = Vec::with_capacity(steps);
+        // Demand-spike flags recorded per (step, kind) so the price track
+        // can correlate its surges without touching the availability RNG
+        // stream (availability stays bit-identical to pre-price traces).
+        let mut spiked: Vec<Vec<bool>> = Vec::with_capacity(steps);
         for _ in 0..steps {
+            let mut spike_row = vec![false; kinds.len()];
             let row: Vec<usize> = level
                 .iter_mut()
                 .zip(&caps)
-                .map(|(l, &cap)| {
+                .enumerate()
+                .map(|(ki, (l, &cap))| {
                     let mean = cap * cfg.mean_frac;
                     // AR(1): pull toward the mean, add noise.
                     *l += cfg.reversion * (mean - *l) + rng.normal(0.0, cfg.noise_frac * cap);
                     // Demand spike: high-priority jobs grab most of the pool.
                     if rng.f64() < cfg.spike_prob {
                         *l *= rng.f64() * 0.5;
+                        spike_row[ki] = true;
                     }
                     *l = l.clamp(0.0, cap);
                     l.round() as usize
                 })
                 .collect();
             avail.push(row);
+            spiked.push(spike_row);
         }
-        SpotTrace { cfg, kinds, avail }
+
+        // Price track: an independent RNG stream drives a mean-reverting
+        // multiplier around each kind's base price; demand-spike steps
+        // multiply the price up (then the AR(1) pull decays it back).
+        let mut price_rng = Rng::new(seed ^ 0x9E37_79B9_7F4A_7C15);
+        let bases: Vec<f64> = kinds.iter().map(|&k| cfg.base_price_of(k)).collect();
+        let mut mult: Vec<f64> = vec![1.0; kinds.len()];
+        let mut prices = Vec::with_capacity(steps);
+        for spike_row in &spiked {
+            let row: Vec<f64> = mult
+                .iter_mut()
+                .enumerate()
+                .map(|(ki, m)| {
+                    *m += cfg.price_reversion * (1.0 - *m)
+                        + price_rng.normal(0.0, cfg.price_noise);
+                    if spike_row[ki] {
+                        *m *= cfg.spike_price_mult;
+                    }
+                    *m = m.clamp(0.25, 4.0);
+                    (bases[ki] * *m).max(0.01)
+                })
+                .collect();
+            prices.push(row);
+        }
+        SpotTrace { cfg, kinds, avail, prices }
     }
 
     pub fn steps(&self) -> usize {
         self.avail.len()
     }
 
+    /// Effective horizon covered by the samples, seconds.
+    pub fn covered_s(&self) -> f64 {
+        self.avail.len() as f64 * self.cfg.step_s
+    }
+
     /// Availability at a wall-clock time.
     pub fn at(&self, t_s: f64) -> &[usize] {
-        let idx = ((t_s / self.cfg.step_s) as usize).min(self.avail.len() - 1);
+        let idx = ((t_s / self.cfg.step_s) as usize).min(self.avail.len().saturating_sub(1));
         &self.avail[idx]
     }
 
-    /// Derive grant/preempt events from consecutive samples.
-    pub fn events(&self) -> Vec<PreemptionEvent> {
+    /// Spot $/hr per kind at a wall-clock time.
+    pub fn price_at(&self, t_s: f64) -> &[f64] {
+        let idx = ((t_s / self.cfg.step_s) as usize).min(self.prices.len().saturating_sub(1));
+        &self.prices[idx]
+    }
+
+    /// The unified market stream: one [`MarketEvent`] per step that has
+    /// any availability delta, or whose largest relative price move since
+    /// the last emitted event reaches `price_rel_threshold`. Pass
+    /// `f64::INFINITY` for availability-only events.
+    pub fn market_events(&self, price_rel_threshold: f64) -> Vec<MarketEvent> {
         let mut out = Vec::new();
+        if self.avail.is_empty() {
+            return out;
+        }
+        let mut ref_prices = self.prices[0].clone();
         for t in 1..self.avail.len() {
-            for (ki, &kind) in self.kinds.iter().enumerate() {
-                let delta = self.avail[t][ki] as i64 - self.avail[t - 1][ki] as i64;
-                if delta != 0 {
-                    out.push(PreemptionEvent {
-                        at_s: t as f64 * self.cfg.step_s,
-                        kind,
-                        delta,
-                    });
-                }
+            let deltas: Vec<(KindId, i64)> = self
+                .kinds
+                .iter()
+                .enumerate()
+                .filter_map(|(ki, &kind)| {
+                    let d = self.avail[t][ki] as i64 - self.avail[t - 1][ki] as i64;
+                    (d != 0).then_some((kind, d))
+                })
+                .collect();
+            let max_price_move = self.prices[t]
+                .iter()
+                .zip(&ref_prices)
+                .map(|(&p, &r)| if r > 0.0 { (p / r - 1.0).abs() } else { 0.0 })
+                .fold(0.0f64, f64::max);
+            if !deltas.is_empty() || max_price_move >= price_rel_threshold {
+                ref_prices = self.prices[t].clone();
+                out.push(MarketEvent {
+                    at_s: t as f64 * self.cfg.step_s,
+                    deltas,
+                    prices: self
+                        .kinds
+                        .iter()
+                        .enumerate()
+                        .map(|(ki, &kind)| (kind, self.prices[t][ki]))
+                        .collect(),
+                    max_price_move,
+                });
             }
         }
         out
+    }
+
+    /// Derive grant/preempt events from consecutive samples. Flat shim
+    /// over [`SpotTrace::market_events`]: one event per (kind, step) with
+    /// a delta, in step order — N replans where one suffices; the replay
+    /// engine consumes the batched stream instead.
+    pub fn events(&self) -> Vec<PreemptionEvent> {
+        self.market_events(f64::INFINITY)
+            .into_iter()
+            .flat_map(|ev| {
+                ev.deltas
+                    .into_iter()
+                    .map(move |(kind, delta)| PreemptionEvent { at_s: ev.at_s, kind, delta })
+            })
+            .collect()
     }
 
     /// Fraction of steps where *homogeneous* demand of `need` GPUs of any
@@ -149,6 +335,7 @@ mod tests {
         let a = SpotTrace::generate(TraceConfig::default(), 1);
         let b = SpotTrace::generate(TraceConfig::default(), 1);
         assert_eq!(a.avail, b.avail);
+        assert_eq!(a.prices, b.prices);
     }
 
     #[test]
@@ -190,5 +377,117 @@ mod tests {
         }
         let last: Vec<i64> = t.avail.last().unwrap().iter().map(|&x| x as i64).collect();
         assert_eq!(level, last);
+    }
+
+    #[test]
+    fn market_events_batch_same_step_deltas() {
+        let t = SpotTrace::generate(TraceConfig::default(), 5);
+        let batched = t.market_events(f64::INFINITY);
+        // one event per step: strictly increasing timestamps
+        for w in batched.windows(2) {
+            assert!(w[0].at_s < w[1].at_s);
+        }
+        // the flat shim carries exactly the batched deltas, in order
+        let flat: Vec<PreemptionEvent> = batched
+            .iter()
+            .flat_map(|ev| {
+                ev.deltas
+                    .iter()
+                    .map(|&(kind, delta)| PreemptionEvent { at_s: ev.at_s, kind, delta })
+            })
+            .collect();
+        assert_eq!(flat, t.events());
+        // batching reduces the event count whenever two kinds move together
+        assert!(batched.len() <= flat.len());
+        assert!(batched.iter().all(|ev| !ev.deltas.is_empty()));
+    }
+
+    #[test]
+    fn sub_step_horizon_yields_one_sample() {
+        // horizon shorter than one step used to underflow `avail.len()-1`
+        let cfg = TraceConfig { horizon_s: 0.0, ..Default::default() };
+        let t = SpotTrace::generate(cfg, 6);
+        assert_eq!(t.steps(), 1);
+        assert_eq!(t.at(0.0).len(), 3);
+        assert_eq!(t.at(1e9).len(), 3); // far past the end clamps
+        assert_eq!(t.price_at(1e9).len(), 3);
+        assert!(t.events().is_empty());
+    }
+
+    #[test]
+    fn prices_positive_and_anchored() {
+        let t = SpotTrace::generate(TraceConfig::default(), 7);
+        assert_eq!(t.prices.len(), t.avail.len());
+        for (ki, &kind) in t.kinds.iter().enumerate() {
+            let base = t.cfg.base_price_of(kind);
+            let mut sum = 0.0;
+            for row in &t.prices {
+                assert!(row[ki] > 0.0);
+                sum += row[ki];
+            }
+            let mean = sum / t.prices.len() as f64;
+            // mean-reverting around the preset: spikes push the long-run
+            // mean a little above base, never to the clamp extremes
+            assert!(mean > 0.5 * base && mean < 2.0 * base, "kind {ki}: {mean} vs {base}");
+        }
+    }
+
+    #[test]
+    fn capacity_override_keeps_anchors_keyed_by_kind() {
+        // overriding capacity alone must NOT shuffle price anchors onto
+        // the wrong kinds (they are keyed by KindId, not position)
+        let cfg = TraceConfig { capacity: vec![(KindId::H20, 8)], ..Default::default() };
+        assert_eq!(cfg.base_price_of(KindId::H20), 0.9); // H20 preset, not A100's 1.2
+        let t = SpotTrace::generate(cfg, 13);
+        let mean: f64 = t.prices.iter().map(|r| r[0]).sum::<f64>() / t.prices.len() as f64;
+        assert!(mean > 0.45 && mean < 1.8, "H20 track anchored wrong: {mean}");
+        // a kind with no entry at all falls back to the A100 anchor
+        let empty = TraceConfig { base_price_per_hour: vec![], ..Default::default() };
+        assert_eq!(empty.base_price_of(KindId::H800), 1.2);
+    }
+
+    #[test]
+    fn price_spikes_follow_availability_crashes() {
+        // With noise off, the multiplier only moves on spike steps (up)
+        // and reversion steps (monotonically back toward base).
+        let cfg = TraceConfig { price_noise: 0.0, spike_prob: 0.08, ..Default::default() };
+        let t = SpotTrace::generate(cfg, 11);
+        let (mut toward, mut away) = (0usize, 0usize);
+        for ki in 0..t.kinds.len() {
+            let base = t.cfg.base_price_of(t.kinds[ki]);
+            for w in t.prices.windows(2) {
+                let (d0, d1) = ((w[0][ki] - base).abs(), (w[1][ki] - base).abs());
+                if d1 > d0 + 1e-12 {
+                    away += 1; // spike step
+                } else {
+                    toward += 1; // reversion step (or already at base)
+                }
+            }
+        }
+        assert!(away > 0, "no price spikes in a spiky trace");
+        assert!(toward > 3 * away, "prices do not revert: {toward} toward vs {away} away");
+    }
+
+    #[test]
+    fn from_catalog_covers_every_kind() {
+        let cat = GpuCatalog::extended();
+        let cfg = TraceConfig::from_catalog(&cat, 6);
+        assert_eq!(cfg.capacity.len(), cat.len());
+        assert_eq!(cfg.base_price_per_hour.len(), cat.len());
+        for (i, &(k, cap)) in cfg.capacity.iter().enumerate() {
+            assert_eq!(k, KindId(i));
+            assert_eq!(cap, 6);
+            assert_eq!(cfg.base_price_of(k), cat.get(k).price_per_hour);
+        }
+        let t = SpotTrace::generate(cfg, 9);
+        assert_eq!(t.kinds.len(), cat.len());
+    }
+
+    #[test]
+    fn from_cluster_matches_counts() {
+        let cluster = ClusterSpec::from_counts(&[(8, KindId::A100), (4, KindId::H20)]);
+        let cfg = TraceConfig::from_cluster(&cluster);
+        assert_eq!(cfg.capacity, vec![(KindId::A100, 8), (KindId::H20, 4)]);
+        assert_eq!(cfg.base_price_per_hour.len(), 2);
     }
 }

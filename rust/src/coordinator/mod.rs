@@ -12,6 +12,7 @@ use crate::modelcfg::ModelCfg;
 use crate::pipeline::{ExecTopology, PipelineTrainer};
 use crate::planner::{auto_plan, plan_choice, Objective, PlanOptions, ScoredPlan};
 use crate::profile::ProfileDb;
+use crate::recovery::{replay, ReplanPolicy, ReplayConfig, ReplayReport};
 use crate::runtime::{Engine, HostTensor};
 use crate::sim::simulate_plan;
 use crate::train::{AdamConfig, MarkovCorpus};
@@ -30,7 +31,15 @@ USAGE:
   autohet sim     [--model NAME] [--counts ...]       simulate an iteration
   autohet train   [--artifacts DIR] [--steps N] [--groups 2,2|4] [--k N]
                   [--lr F] [--seed N] [--csv FILE]    real PJRT training
-  autohet trace   [--hours H] [--seed N]              spot availability trace
+  autohet trace   [--hours H] [--seed N]              spot availability + price trace
+  autohet replay  [--model NAME] [--cluster FILE|--counts ...] [--hours H]
+                  [--objective time|cost] [--amortize-h H] [--greedy]
+                  [--gpus-per-node N] [--seed N] [--csv FILE]
+                  replay a generated spot-market trace (per-kind capacity =
+                  the given cluster counts) through the elastic coordinator;
+                  amortized replanning by default, `--greedy` replans on
+                  every delta like the seed coordinator, `--csv` dumps the
+                  per-event decision log
   autohet models                                      list model presets
 ";
 
@@ -216,17 +225,86 @@ pub fn cmd_trace(args: &Args) -> Result<()> {
     let trace = SpotTrace::generate(cfg, args.get_u64("seed", 1));
     let catalog = GpuCatalog::builtin();
     let names: Vec<&str> = trace.kinds.iter().map(|&k| catalog.name(k)).collect();
-    println!("t_hours,{}", names.join(","));
+    let price_names: Vec<String> = names.iter().map(|n| format!("usd_{n}")).collect();
+    println!("t_hours,{},{}", names.join(","), price_names.join(","));
     for (i, row) in trace.avail.iter().enumerate() {
         let t = i as f64 * trace.cfg.step_s / 3600.0;
         let cells: Vec<String> = row.iter().map(|c| c.to_string()).collect();
-        println!("{t:.2},{}", cells.join(","));
+        let prices: Vec<String> = trace.prices[i].iter().map(|p| format!("{p:.3}")).collect();
+        println!("{t:.2},{},{}", cells.join(","), prices.join(","));
     }
     eprintln!(
-        "# homogeneous-feasible(12 GPUs): {:.1}%  heterogeneous: {:.1}%",
+        "# homogeneous-feasible(12 GPUs): {:.1}%  heterogeneous: {:.1}%  market events: {}",
         100.0 * trace.homogeneous_feasible_frac(12),
-        100.0 * trace.heterogeneous_feasible_frac(12)
+        100.0 * trace.heterogeneous_feasible_frac(12),
+        trace.market_events(0.05).len()
     );
+    Ok(())
+}
+
+/// One-line replay summary for the CLI.
+fn print_replay(tag: &str, r: &ReplayReport) {
+    println!(
+        "{tag}: {:.2e} tokens | ${:.2} | {:.0} tokens/$ | train {:.1}h, migration {:.1}min, \
+         paused {:.1}h | {} switches, {} holds, {} unchanged over {} events",
+        r.tokens,
+        r.usd,
+        r.tokens_per_usd(),
+        r.train_s / 3600.0,
+        r.downtime_s / 60.0,
+        r.paused_s / 3600.0,
+        r.switches,
+        r.holds,
+        r.unchanged,
+        r.events
+    );
+}
+
+pub fn cmd_replay(args: &Args) -> Result<()> {
+    let model = load_model(args)?;
+    let cluster = load_cluster(args)?;
+    let profile = build_profile(&model, &cluster.catalog, args.get_u64("seed", 1));
+    let objective: Objective = args.get_str("objective", "time").parse()?;
+    let hours = args.get_f64("hours", 24.0);
+    let amortize_h = args.get_f64("amortize-h", 6.0);
+    let seed = args.get_u64("seed", 1);
+
+    let mut tc = TraceConfig::from_cluster(&cluster);
+    tc.horizon_s = hours * 3600.0;
+    let trace = SpotTrace::generate(tc, seed);
+
+    let amortized = ReplanPolicy::Amortized {
+        horizon_s: amortize_h * 3600.0,
+        min_rel_gain: 0.02,
+    };
+    let policy = if args.has("greedy") { ReplanPolicy::Greedy } else { amortized };
+    let cfg = ReplayConfig {
+        objective,
+        policy,
+        gpus_per_node: args.get_usize("gpus-per-node", 8),
+        ..Default::default()
+    };
+    log_info!(
+        "replaying {hours:.0}h spot trace (seed {seed}) for {} on {} GPUs, objective {}",
+        model.name,
+        cluster.total_gpus(),
+        args.get_str("objective", "time"),
+    );
+    let report = replay(&profile, &trace, &cfg)?;
+    print_replay(if args.has("greedy") { "greedy" } else { "amortized" }, &report);
+
+    // the counterfactual policy on the identical trace
+    let other_cfg = ReplayConfig {
+        policy: if args.has("greedy") { amortized } else { ReplanPolicy::Greedy },
+        ..cfg.clone()
+    };
+    let other = replay(&profile, &trace, &other_cfg)?;
+    print_replay(if args.has("greedy") { "amortized (counterfactual)" } else { "greedy (counterfactual)" }, &other);
+
+    if let Some(csv) = args.get("csv") {
+        std::fs::write(csv, report.to_csv())?;
+        log_info!("wrote per-event decision log to {csv}");
+    }
     Ok(())
 }
 
@@ -254,6 +332,7 @@ pub fn run(args: Args) -> Result<()> {
         Some("sim") => cmd_sim(&args),
         Some("train") => cmd_train(&args),
         Some("trace") => cmd_trace(&args),
+        Some("replay") => cmd_replay(&args),
         Some("models") => cmd_models(),
         _ => {
             print!("{USAGE}");

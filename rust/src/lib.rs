@@ -23,7 +23,10 @@
 //!   CPU executables AOT-compiled from JAX/Pallas (see `python/compile/`)
 //!   driven by an asymmetric 1F1B executor with layer-wise AllReduce.
 //! * [`checkpoint`] / [`recovery`] — layer-wise checkpoints, the layer
-//!   bitmap, tiered storage, and elastic recovery on preemption.
+//!   bitmap, tiered storage, and elastic recovery on preemption — plus
+//!   the spot-market replay engine (`recovery::replay`): price-dynamic
+//!   traces driven through a migration-cost-aware replanning loop
+//!   (`docs/ELASTICITY.md`).
 //! * [`baselines`] — Megatron-LM, Whale, and Varuna re-implementations
 //!   used by the figure benches.
 //!

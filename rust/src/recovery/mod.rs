@@ -1,17 +1,29 @@
-//! Elastic training recovery (paper §IV).
+//! Elastic training recovery (paper §IV) + the spot-market replay engine.
 //!
 //! * [`timing`] — the recovery-time model for the Fig-10 scenarios:
 //!   local-first retrieval (NVMe in parallel per node), RDMA
 //!   redistribution between training nodes, and cloud fetch only for the
 //!   bitmap's cloud-only remainder — vs Varuna's cloud-anchored fetch.
-//! * [`orchestrator`] — the replanning loop: consume a preemption/grant
-//!   event, shrink/grow the cluster, re-run Algorithm 1, and produce a
-//!   migration summary (which layers move where, what must be fetched).
+//! * [`migration`] — diff two plans into a concrete transfer schedule
+//!   (in-place / RDMA-from-peer / cloud) with volume accounting.
+//! * [`orchestrator`] — the replanning loop: consume a batched
+//!   [`crate::cluster::MarketEvent`] (availability deltas + spot price
+//!   moves), score candidate plans at *current* prices, and migrate only
+//!   when the projected gain amortizes the migration downtime
+//!   ([`ReplanPolicy`] — greedy vs amortized hysteresis).
+//! * [`replay`](mod@replay) — drive a whole [`crate::cluster::SpotTrace`]
+//!   through the coordinator and account tokens, dollars, downtime, and
+//!   replans taken vs skipped ([`ReplayReport`]); the scenario engine
+//!   behind the greedy-vs-amortized comparisons (`docs/ELASTICITY.md`).
 
 pub mod migration;
 pub mod orchestrator;
+pub mod replay;
 pub mod timing;
 
 pub use migration::{plan_migration, MigrationPlan};
-pub use orchestrator::{ElasticCoordinator, ReplanOutcome};
+pub use orchestrator::{
+    ElasticCoordinator, ReplanConfig, ReplanDecision, ReplanOutcome, ReplanPolicy,
+};
+pub use replay::{replay, ReplayConfig, ReplayReport, ReplayRow};
 pub use timing::{autohet_recovery_s, RecoveryScenario};

@@ -1,15 +1,102 @@
-//! Elastic replanning: react to spot-instance preemptions/grants by
-//! shrinking/growing the cluster and re-running Algorithm 1, then
-//! summarize the migration (the piece the checkpoint manager executes).
+//! Elastic replanning: react to spot-market events (preemptions, grants,
+//! price moves) by replanning — but only *migrate* when the switch is
+//! worth its downtime.
+//!
+//! The seed coordinator replanned on every availability delta
+//! unconditionally, ignoring both what the migration costs and what the
+//! new plan is worth. This version closes that loop: each [`MarketEvent`]
+//! is scored with `planner::plan_choice` **at current spot prices** (the
+//! catalog is repriced via [`GpuCatalog::with_prices`]), the switch cost
+//! is estimated from `recovery::migration::plan_migration` volumes fed
+//! through the `recovery::timing` local-first model, and the plan only
+//! changes when the projected gain (tokens or tokens/$, per the
+//! configured [`Objective`]) amortizes the migration downtime within a
+//! configurable horizon ([`ReplanPolicy::Amortized`] — the hysteresis).
+//! Preemptions that kill GPUs the running plan uses force a migration
+//! regardless; `docs/ELASTICITY.md` walks the decision rule.
+
+use std::collections::BTreeSet;
+use std::fmt;
 
 use anyhow::Result;
 
-use crate::cluster::{ClusterSpec, KindId, PreemptionEvent};
+use crate::cluster::{
+    ClusterSpec, GpuCatalog, Interconnect, KindId, KindVec, MarketEvent, NodeSpec,
+    PreemptionEvent,
+};
 use crate::modelcfg::ModelCfg;
-use crate::planner::{auto_plan, ParallelPlan, PlanOptions};
+use crate::planner::cost::plan_tokens_per_iter;
+use crate::planner::{plan_choice, Objective, ParallelPlan, PlanOptions};
 use crate::profile::ProfileDb;
 
-/// Result of handling one availability change.
+use super::migration::plan_migration;
+use super::timing::{autohet_recovery_s, RecoveryScenario};
+
+/// When does an event actually trigger a migration?
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ReplanPolicy {
+    /// Adopt the replanned candidate on every event that changes the
+    /// plan, ignoring migration cost (the seed coordinator's behavior).
+    Greedy,
+    /// Switch only when the projected gain amortizes the migration
+    /// downtime within `horizon_s`, with a `min_rel_gain` hysteresis
+    /// floor so marginal blips never trigger a migration.
+    Amortized { horizon_s: f64, min_rel_gain: f64 },
+}
+
+impl Default for ReplanPolicy {
+    fn default() -> Self {
+        ReplanPolicy::Amortized { horizon_s: 6.0 * 3600.0, min_rel_gain: 0.02 }
+    }
+}
+
+/// Coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct ReplanConfig {
+    /// What a "better" plan means (wall-clock vs tokens per dollar).
+    pub objective: Objective,
+    pub policy: ReplanPolicy,
+    pub opts: PlanOptions,
+    /// Physical host size: capacity grants materialize as fresh nodes of
+    /// at most this many GPUs (a spot grant is new instances — it cannot
+    /// densify a half-preempted host into an impossible super-node).
+    pub gpus_per_node: usize,
+}
+
+impl Default for ReplanConfig {
+    fn default() -> Self {
+        ReplanConfig {
+            objective: Objective::Time,
+            policy: ReplanPolicy::default(),
+            opts: PlanOptions::default(),
+            gpus_per_node: 8,
+        }
+    }
+}
+
+/// What the coordinator did with one event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplanDecision {
+    /// Current plan retained (the candidate was identical, or not worth
+    /// its migration downtime).
+    Kept,
+    /// Migrated to the candidate plan.
+    Switched,
+    /// No feasible plan on the surviving fleet; training pauses.
+    Paused,
+}
+
+impl fmt::Display for ReplanDecision {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            ReplanDecision::Kept => "kept",
+            ReplanDecision::Switched => "switched",
+            ReplanDecision::Paused => "paused",
+        })
+    }
+}
+
+/// Decision record for one handled event.
 #[derive(Debug, Clone)]
 pub struct ReplanOutcome {
     pub cluster: ClusterSpec,
@@ -18,80 +105,449 @@ pub struct ReplanOutcome {
     pub tp_change: (usize, usize),
     /// DP group count change.
     pub dp_change: (usize, usize),
+    pub decision: ReplanDecision,
+    /// True when the event left no choice (the running plan died with the
+    /// preempted GPUs, training paused, or training resumed from a pause).
+    pub forced: bool,
+    /// Human-readable rationale for the decision.
+    pub reason: String,
+    /// Migration downtime charged by this event, seconds (0 when kept).
+    pub migration_s: f64,
+    /// Projected time for the gain to repay the downtime (voluntary
+    /// switches and holds; `None` on forced transitions).
+    pub payback_s: Option<f64>,
+    /// $/hr of the GPUs the active plan uses, at current spot prices.
+    pub price_per_hour: f64,
 }
 
-/// Tracks the live cluster + plan and replans on events.
+/// Tracks the live cluster + plan + spot prices, and replans on events.
 pub struct ElasticCoordinator {
     pub model: ModelCfg,
     pub profile: ProfileDb,
     pub cluster: ClusterSpec,
     pub plan: Option<ParallelPlan>,
-    pub opts: PlanOptions,
+    pub cfg: ReplanConfig,
+    /// Current per-kind spot $/hr (starts at the catalog presets, updated
+    /// by every [`MarketEvent`] price snapshot).
+    pub prices: KindVec<f64>,
+    /// Wall-clock of the last handled event, seconds.
+    pub now_s: f64,
+    /// Migrations actually taken (plan adopted).
     pub replans: usize,
+    /// Events where the amortization rule deliberately declined a
+    /// *changed* candidate (hysteresis engagements).
+    pub holds: usize,
+    /// Events where the candidate was identical to the running plan
+    /// (kept under every policy, no rule involved).
+    pub unchanged: usize,
+    /// Next node id for granted nodes. Monotonic across the whole run so
+    /// a dead node's id is never reused — otherwise a same-event
+    /// preempt+grant could resurrect the dead node as a "surviving"
+    /// checkpoint holder in the migration cost model.
+    next_node_id: usize,
+}
+
+/// Migration-worthiness verdict for a voluntary (non-forced) candidate.
+struct Verdict {
+    switch: bool,
+    migration_s: f64,
+    payback_s: Option<f64>,
+    reason: String,
+}
+
+/// Every GPU slot the plan references still exists (node alive, local
+/// index within the surviving count, kind unchanged).
+fn plan_fits(plan: &ParallelPlan, cluster: &ClusterSpec) -> bool {
+    plan.groups.iter().flat_map(|g| &g.stages).all(|s| {
+        s.gpus.iter().all(|g| {
+            cluster
+                .node(g.node)
+                .is_some_and(|n| n.kind == s.kind && g.local < n.count)
+        })
+    })
+}
+
+/// Same parallelization (TP dim + exact stage/GPU layout); estimate
+/// fields are ignored so re-planning noise cannot fake a "new" plan.
+fn same_topology(a: &ParallelPlan, b: &ParallelPlan) -> bool {
+    a.tp_dim == b.tp_dim && a.groups == b.groups
+}
+
+/// Distinct nodes a plan runs on.
+fn plan_node_count(plan: &ParallelPlan) -> usize {
+    let nodes: BTreeSet<usize> = plan
+        .groups
+        .iter()
+        .flat_map(|g| &g.stages)
+        .flat_map(|s| &s.gpus)
+        .map(|g| g.node)
+        .collect();
+    nodes.len().max(1)
+}
+
+/// `tokens / usd` with the planner's division conventions (shared with
+/// [`super::replay::ReplayReport::tokens_per_usd`]).
+pub(crate) fn per_usd(tokens: f64, usd: f64) -> f64 {
+    if usd > 0.0 {
+        tokens / usd
+    } else if tokens > 0.0 {
+        f64::INFINITY
+    } else {
+        0.0
+    }
 }
 
 impl ElasticCoordinator {
     pub fn new(model: ModelCfg, profile: ProfileDb, cluster: ClusterSpec) -> Result<Self> {
-        let opts = PlanOptions::default();
-        let plan = auto_plan(&cluster, &profile, &opts).ok();
-        Ok(ElasticCoordinator { model, profile, cluster, plan, opts, replans: 0 })
+        ElasticCoordinator::new_with(model, profile, cluster, ReplanConfig::default())
     }
 
-    /// Apply an availability delta for one GPU kind and replan.
-    pub fn handle_event(&mut self, ev: &PreemptionEvent) -> Result<ReplanOutcome> {
-        anyhow::ensure!(
-            ev.kind.index() < self.cluster.catalog.len(),
-            "event kind KindId({}) is not in the cluster catalog {}",
-            ev.kind.index(),
-            self.cluster.catalog
+    pub fn new_with(
+        model: ModelCfg,
+        profile: ProfileDb,
+        cluster: ClusterSpec,
+        cfg: ReplanConfig,
+    ) -> Result<Self> {
+        let prices = KindVec::from(
+            profile.catalog.specs().iter().map(|s| s.price_per_hour).collect::<Vec<_>>(),
         );
-        let old_tp = self.plan.as_ref().map(|p| p.tp_dim).unwrap_or(1);
-        let old_dp = self.plan.as_ref().map(|p| p.dp_degree()).unwrap_or(0);
+        let plan = plan_choice(&cluster, &profile, &cfg.opts)
+            .ok()
+            .map(|c| c.pick(cfg.objective).plan.clone());
+        let next_node_id = cluster.nodes.iter().map(|n| n.node_id).max().map_or(0, |m| m + 1);
+        Ok(ElasticCoordinator {
+            model,
+            profile,
+            cluster,
+            plan,
+            cfg,
+            prices,
+            now_s: 0.0,
+            replans: 0,
+            holds: 0,
+            unchanged: 0,
+            next_node_id,
+        })
+    }
+
+    /// The catalog with `price_per_hour` set to the *current* spot prices
+    /// (capability fields untouched, [`KindId`]s stay valid).
+    pub fn repriced_catalog(&self) -> GpuCatalog {
+        self.profile.catalog.with_prices(&self.prices)
+    }
+
+    /// $/hr of the GPUs the active plan uses, at current spot prices.
+    pub fn current_price_per_hour(&self) -> f64 {
+        let cat = self.repriced_catalog();
+        self.plan.as_ref().map_or(0.0, |p| p.price_per_hour(&cat))
+    }
+
+    /// Overwrite the current spot prices and re-pick the active plan at
+    /// them, charging no migration — for seeding a run's *opening* state
+    /// (e.g. a trace whose step-0 sample already deviates from the
+    /// catalog presets) before any event has fired. Mid-run price moves
+    /// belong in [`ElasticCoordinator::handle_market_event`], which
+    /// weighs the switch cost.
+    pub fn reprice(&mut self, prices: &[(KindId, f64)]) -> Result<()> {
+        for &(kind, _) in prices {
+            anyhow::ensure!(
+                kind.index() < self.cluster.catalog.len(),
+                "price kind KindId({}) is not in the cluster catalog {}",
+                kind.index(),
+                self.cluster.catalog
+            );
+        }
+        for &(kind, price) in prices {
+            self.prices[kind] = price.max(0.0);
+        }
+        let cat = self.repriced_catalog();
+        let mut cluster = self.cluster.clone();
+        cluster.catalog = cat.clone();
+        let mut profile = self.profile.clone();
+        profile.catalog = cat;
+        self.plan = plan_choice(&cluster, &profile, &self.cfg.opts)
+            .ok()
+            .map(|c| c.pick(self.cfg.objective).plan.clone());
+        Ok(())
+    }
+
+    /// Handle one batched market step: update prices, apply availability
+    /// deltas, and run the migration-cost-aware replanning rule.
+    pub fn handle_market_event(&mut self, ev: &MarketEvent) -> Result<ReplanOutcome> {
+        for kind in ev
+            .deltas
+            .iter()
+            .map(|&(k, _)| k)
+            .chain(ev.prices.iter().map(|&(k, _)| k))
+        {
+            anyhow::ensure!(
+                kind.index() < self.cluster.catalog.len(),
+                "event kind KindId({}) is not in the cluster catalog {}",
+                kind.index(),
+                self.cluster.catalog
+            );
+        }
+        self.now_s = ev.at_s;
+        for &(kind, price) in &ev.prices {
+            self.prices[kind] = price.max(0.0);
+        }
 
         let mut nodes = self.cluster.nodes.clone();
-        if ev.delta < 0 {
-            // preempt |delta| GPUs of this kind, last nodes first
-            let mut to_remove = (-ev.delta) as usize;
-            for n in nodes.iter_mut().rev() {
-                if n.kind == ev.kind && to_remove > 0 {
-                    let cut = n.count.min(to_remove);
-                    n.count -= cut;
-                    to_remove -= cut;
+        for &(kind, delta) in &ev.deltas {
+            if delta < 0 {
+                // preempt |delta| GPUs of this kind, last nodes first
+                let mut to_remove = (-delta) as usize;
+                for n in nodes.iter_mut().rev() {
+                    if n.kind == kind && to_remove > 0 {
+                        let cut = n.count.min(to_remove);
+                        n.count -= cut;
+                        to_remove -= cut;
+                    }
                 }
-            }
-            nodes.retain(|n| n.count > 0);
-        } else {
-            // grant: extend an existing node of this kind or add a node
-            let delta = ev.delta as usize;
-            if let Some(n) = nodes.iter_mut().find(|n| n.kind == ev.kind) {
-                n.count += delta;
+                nodes.retain(|n| n.count > 0);
             } else {
-                let id = nodes.iter().map(|n| n.node_id).max().map_or(0, |m| m + 1);
-                nodes.push(crate::cluster::NodeSpec { node_id: id, count: delta, kind: ev.kind });
+                // grant: fresh correctly-sized nodes (never pile GPUs onto
+                // an existing host past its physical size), with ids that
+                // never reuse a dead node's
+                let mut remaining = delta as usize;
+                let node_size = self.cfg.gpus_per_node.max(1);
+                while remaining > 0 {
+                    let take = remaining.min(node_size);
+                    nodes.push(NodeSpec { node_id: self.next_node_id, count: take, kind });
+                    self.next_node_id += 1;
+                    remaining -= take;
+                }
             }
         }
         self.cluster = ClusterSpec { nodes, ..self.cluster.clone() };
-        self.plan = auto_plan(&self.cluster, &self.profile, &self.opts).ok();
-        self.replans += 1;
+        self.decide()
+    }
+
+    /// Apply an availability delta for one GPU kind (flat-event shim over
+    /// [`ElasticCoordinator::handle_market_event`], prices unchanged).
+    pub fn handle_event(&mut self, ev: &PreemptionEvent) -> Result<ReplanOutcome> {
+        self.handle_market_event(&MarketEvent {
+            at_s: ev.at_s,
+            deltas: vec![(ev.kind, ev.delta)],
+            prices: Vec::new(),
+            max_price_move: 0.0,
+        })
+    }
+
+    /// Convenience: preempt `n` GPUs of `kind` at wall-clock `at_s`.
+    pub fn preempt(&mut self, kind: KindId, n: usize, at_s: f64) -> Result<ReplanOutcome> {
+        self.handle_event(&PreemptionEvent { at_s, kind, delta: -(n as i64) })
+    }
+
+    /// Convenience: grant `n` GPUs of `kind` at wall-clock `at_s`.
+    pub fn grant(&mut self, kind: KindId, n: usize, at_s: f64) -> Result<ReplanOutcome> {
+        self.handle_event(&PreemptionEvent { at_s, kind, delta: n as i64 })
+    }
+
+    /// Switch downtime estimate: diff the plans into transfer volumes
+    /// (`plan_migration`), then price local-first retrieval vs RDMA vs
+    /// cloud with the Fig-10 timing model.
+    pub fn migration_downtime_s(&self, old: &ParallelPlan, new: &ParallelPlan) -> f64 {
+        let surviving = |node: usize| self.cluster.node(node).is_some();
+        let mp = plan_migration(old, new, &surviving);
+        let total = (mp.in_place + mp.via_rdma + mp.via_cloud).max(1) as f64;
+        let sc = RecoveryScenario {
+            surviving_nodes: plan_node_count(new),
+            local_frac: mp.in_place as f64 / total,
+            peer_frac: mp.via_rdma as f64 / total,
+            dp_groups_new: new.dp_degree(),
+        };
+        autohet_recovery_s(&self.model, &sc, &Interconnect::default())
+    }
+
+    /// Training throughput a plan sustains (tokens/s at the sim estimate).
+    fn plan_tps(&self, plan: &ParallelPlan) -> f64 {
+        if plan.est_iter_s > 0.0 {
+            plan_tokens_per_iter(&self.model, plan) / plan.est_iter_s
+        } else {
+            0.0
+        }
+    }
+
+    /// The amortization rule for a voluntary switch (`cur` still runs).
+    fn weigh(&self, cur: &ParallelPlan, cand: &ParallelPlan, cat: &GpuCatalog) -> Verdict {
+        let t_m = self.migration_downtime_s(cur, cand);
+        let (horizon_s, min_rel_gain) = match self.cfg.policy {
+            ReplanPolicy::Greedy => {
+                return Verdict {
+                    switch: true,
+                    migration_s: t_m,
+                    payback_s: None,
+                    reason: format!(
+                        "greedy: adopted the replanned candidate (migration {t_m:.0}s)"
+                    ),
+                };
+            }
+            ReplanPolicy::Amortized { horizon_s, min_rel_gain } => {
+                (horizon_s.max(0.0), min_rel_gain)
+            }
+        };
+        let cur_tps = self.plan_tps(cur);
+        let cand_tps = self.plan_tps(cand);
+        let (stay_score, switch_score, payback_s) = match self.cfg.objective {
+            Objective::Time => {
+                // tokens trained over the horizon, downtime included
+                let stay = horizon_s * cur_tps;
+                let switch = (horizon_s - t_m).max(0.0) * cand_tps;
+                let payback = if cand_tps > cur_tps {
+                    t_m * cand_tps / (cand_tps - cur_tps)
+                } else {
+                    f64::INFINITY
+                };
+                (stay, switch, payback)
+            }
+            Objective::Cost => {
+                // tokens per dollar over the horizon: migration loses
+                // tokens while the (new) fleet keeps billing
+                let cur_price = cur.price_per_hour(cat);
+                let cand_price = cand.price_per_hour(cat);
+                let stay = per_usd(horizon_s * cur_tps, horizon_s / 3600.0 * cur_price);
+                let switch = per_usd(
+                    (horizon_s - t_m).max(0.0) * cand_tps,
+                    horizon_s / 3600.0 * cand_price,
+                );
+                let stay_rate = per_usd(3600.0 * cur_tps, cur_price);
+                let switch_rate = per_usd(3600.0 * cand_tps, cand_price);
+                let payback = if switch_rate > stay_rate {
+                    let r = if switch_rate.is_finite() { stay_rate / switch_rate } else { 0.0 };
+                    t_m / (1.0 - r)
+                } else {
+                    f64::INFINITY
+                };
+                (stay, switch, payback)
+            }
+        };
+        if switch_score > stay_score * (1.0 + min_rel_gain) {
+            Verdict {
+                switch: true,
+                migration_s: t_m,
+                payback_s: Some(payback_s),
+                reason: format!(
+                    "gain amortizes migration {t_m:.0}s within {:.1}h (payback ≈ {payback_s:.0}s)",
+                    horizon_s / 3600.0
+                ),
+            }
+        } else {
+            Verdict {
+                switch: false,
+                migration_s: 0.0,
+                payback_s: Some(payback_s),
+                reason: format!(
+                    "held: candidate does not amortize migration {t_m:.0}s within {:.1}h",
+                    horizon_s / 3600.0
+                ),
+            }
+        }
+    }
+
+    /// Score candidates at current prices and apply the decision rule.
+    fn decide(&mut self) -> Result<ReplanOutcome> {
+        let old_plan = self.plan.clone();
+        let old_tp = old_plan.as_ref().map(|p| p.tp_dim).unwrap_or(1);
+        let old_dp = old_plan.as_ref().map(|p| p.dp_degree()).unwrap_or(0);
+
+        // One repriced catalog threaded through both the cluster and the
+        // profile, so plan_choice's catalog guard sees a consistent world.
+        let cat = self.repriced_catalog();
+        let mut cluster = self.cluster.clone();
+        cluster.catalog = cat.clone();
+        let mut profile = self.profile.clone();
+        profile.catalog = cat.clone();
+        let cand = plan_choice(&cluster, &profile, &self.cfg.opts)
+            .ok()
+            .map(|c| c.pick(self.cfg.objective).clone());
+
+        let (decision, forced, reason, migration_s, payback_s) = match (&old_plan, cand) {
+            (_, None) => {
+                self.plan = None;
+                (
+                    ReplanDecision::Paused,
+                    true,
+                    format!(
+                        "no feasible plan on {} GPUs; training paused",
+                        self.cluster.total_gpus()
+                    ),
+                    0.0,
+                    None,
+                )
+            }
+            (None, Some(cand)) => {
+                // resuming from a pause: nothing is resident, restore the
+                // full state from cloud storage
+                let sc = RecoveryScenario {
+                    surviving_nodes: plan_node_count(&cand.plan),
+                    local_frac: 0.0,
+                    peer_frac: 0.0,
+                    dp_groups_new: cand.plan.dp_degree(),
+                };
+                let t_m = autohet_recovery_s(&self.model, &sc, &Interconnect::default());
+                self.plan = Some(cand.plan);
+                self.replans += 1;
+                (
+                    ReplanDecision::Switched,
+                    true,
+                    format!("resumed from pause via cloud restore ({t_m:.0}s)"),
+                    t_m,
+                    None,
+                )
+            }
+            (Some(cur), Some(cand)) => {
+                if !plan_fits(cur, &self.cluster) {
+                    let t_m = self.migration_downtime_s(cur, &cand.plan);
+                    self.plan = Some(cand.plan);
+                    self.replans += 1;
+                    (
+                        ReplanDecision::Switched,
+                        true,
+                        format!(
+                            "preemption invalidated the running plan; migrated ({t_m:.0}s)"
+                        ),
+                        t_m,
+                        None,
+                    )
+                } else if same_topology(cur, &cand.plan) {
+                    self.unchanged += 1;
+                    (
+                        ReplanDecision::Kept,
+                        false,
+                        "candidate identical to the running plan".to_string(),
+                        0.0,
+                        None,
+                    )
+                } else {
+                    let vd = self.weigh(cur, &cand.plan, &cat);
+                    if vd.switch {
+                        self.plan = Some(cand.plan);
+                        self.replans += 1;
+                        (ReplanDecision::Switched, false, vd.reason, vd.migration_s, vd.payback_s)
+                    } else {
+                        self.holds += 1;
+                        (ReplanDecision::Kept, false, vd.reason, 0.0, vd.payback_s)
+                    }
+                }
+            }
+        };
 
         let new_tp = self.plan.as_ref().map(|p| p.tp_dim).unwrap_or(1);
         let new_dp = self.plan.as_ref().map(|p| p.dp_degree()).unwrap_or(0);
+        let price_per_hour = self.plan.as_ref().map_or(0.0, |p| p.price_per_hour(&cat));
         Ok(ReplanOutcome {
             cluster: self.cluster.clone(),
             plan: self.plan.clone(),
             tp_change: (old_tp, new_tp),
             dp_change: (old_dp, new_dp),
+            decision,
+            forced,
+            reason,
+            migration_s,
+            payback_s,
+            price_per_hour,
         })
-    }
-
-    /// Convenience: preempt `n` GPUs of `kind`.
-    pub fn preempt(&mut self, kind: KindId, n: usize) -> Result<ReplanOutcome> {
-        self.handle_event(&PreemptionEvent { at_s: 0.0, kind, delta: -(n as i64) })
-    }
-
-    /// Convenience: grant `n` GPUs of `kind`.
-    pub fn grant(&mut self, kind: KindId, n: usize) -> Result<ReplanOutcome> {
-        self.handle_event(&PreemptionEvent { at_s: 0.0, kind, delta: n as i64 })
     }
 }
 
@@ -99,15 +555,15 @@ impl ElasticCoordinator {
 mod tests {
     use super::*;
 
-    fn coordinator() -> ElasticCoordinator {
+    fn parts() -> (ModelCfg, ProfileDb, ClusterSpec) {
         let model = ModelCfg::bert_large();
-        let profile = ProfileDb::build(
-            &model,
-            &crate::cluster::GpuCatalog::builtin(),
-            &[1, 2, 4, 8],
-            1,
-        );
+        let profile = ProfileDb::build(&model, &GpuCatalog::builtin(), &[1, 2, 4, 8], 1);
         let cluster = ClusterSpec::from_counts(&[(4, KindId::A100), (4, KindId::H800)]);
+        (model, profile, cluster)
+    }
+
+    fn coordinator() -> ElasticCoordinator {
+        let (model, profile, cluster) = parts();
         ElasticCoordinator::new(model, profile, cluster).unwrap()
     }
 
@@ -115,19 +571,20 @@ mod tests {
     fn preemption_shrinks_and_replans() {
         let mut c = coordinator();
         assert!(c.plan.is_some());
-        let out = c.preempt(KindId::H800, 4).unwrap();
+        let out = c.preempt(KindId::H800, 4, 600.0).unwrap();
         assert_eq!(out.cluster.total_gpus(), 4);
         let plan = out.plan.unwrap();
         plan.validate(c.model.n_layers).unwrap();
         assert!(plan.gpu_count() <= 4);
         assert_eq!(c.replans, 1);
+        assert_eq!(c.now_s, 600.0);
     }
 
     #[test]
     fn grant_grows_cluster() {
         let mut c = coordinator();
         let before_dp = c.plan.as_ref().unwrap().dp_degree();
-        let out = c.grant(KindId::H20, 4).unwrap();
+        let out = c.grant(KindId::H20, 4, 600.0).unwrap();
         assert_eq!(out.cluster.total_gpus(), 12);
         let plan = out.plan.unwrap();
         assert!(plan.dp_degree() >= before_dp);
@@ -138,17 +595,32 @@ mod tests {
         // a KindId outside the cluster's catalog must error with a
         // diagnostic, not index-panic deep inside the planner
         let mut c = coordinator();
-        let err = c.grant(KindId(7), 4).unwrap_err().to_string();
+        let err = c.grant(KindId(7), 4, 0.0).unwrap_err().to_string();
         assert!(err.contains("KindId(7)") && err.contains("A100"), "{err}");
     }
 
     #[test]
     fn losing_everything_yields_no_plan() {
         let mut c = coordinator();
-        c.preempt(KindId::A100, 4).unwrap();
-        let out = c.preempt(KindId::H800, 4).unwrap();
+        c.preempt(KindId::A100, 4, 600.0).unwrap();
+        let out = c.preempt(KindId::H800, 4, 1200.0).unwrap();
         assert!(out.plan.is_none());
         assert_eq!(out.cluster.total_gpus(), 0);
+        assert_eq!(out.decision, ReplanDecision::Paused);
+        assert_eq!(out.price_per_hour, 0.0);
+    }
+
+    #[test]
+    fn grant_after_total_loss_resumes_from_cloud() {
+        let mut c = coordinator();
+        c.preempt(KindId::A100, 4, 600.0).unwrap();
+        c.preempt(KindId::H800, 4, 1200.0).unwrap();
+        let out = c.grant(KindId::A100, 4, 1800.0).unwrap();
+        assert_eq!(out.decision, ReplanDecision::Switched);
+        assert!(out.forced);
+        assert!(out.migration_s > 0.0, "cloud restore takes time");
+        assert!(out.plan.is_some());
+        assert!(out.reason.contains("cloud"), "{}", out.reason);
     }
 
     #[test]
@@ -157,11 +629,110 @@ mod tests {
         // trade DP width for pipeline depth) — but every outcome must be
         // a valid plan over the surviving GPUs and the change recorded.
         let mut c = coordinator();
-        let o1 = c.preempt(KindId::A100, 2).unwrap();
+        let o1 = c.preempt(KindId::A100, 2, 600.0).unwrap();
         assert_eq!(o1.dp_change.1, o1.plan.as_ref().unwrap().dp_degree());
         o1.plan.unwrap().validate(c.model.n_layers).unwrap();
-        let o2 = c.grant(KindId::A100, 2).unwrap();
+        let o2 = c.grant(KindId::A100, 2, 1200.0).unwrap();
         assert_eq!(o2.dp_change.1, o2.plan.as_ref().unwrap().dp_degree());
         assert_eq!(o2.cluster.total_gpus(), 8);
+    }
+
+    #[test]
+    fn grants_split_into_physical_nodes() {
+        // a 10-GPU grant must arrive as 8 + 2, never one 14-GPU node
+        let mut c = coordinator();
+        let out = c.grant(KindId::H20, 10, 600.0).unwrap();
+        assert_eq!(out.cluster.total_gpus(), 18);
+        for n in &out.cluster.nodes {
+            assert!(n.count <= c.cfg.gpus_per_node, "impossible node: {n:?}");
+        }
+        let h20_nodes: Vec<usize> = out
+            .cluster
+            .nodes
+            .iter()
+            .filter(|n| n.kind == KindId::H20)
+            .map(|n| n.count)
+            .collect();
+        assert_eq!(h20_nodes, vec![8, 2]);
+    }
+
+    #[test]
+    fn same_event_preempt_and_grant_never_reuses_node_ids() {
+        // node1 (4xH800) dies and 4xH20 arrive in the same market step:
+        // the fresh node must NOT take the dead node's id, or the
+        // migration cost model would treat the dead node's checkpoint
+        // storage as still reachable
+        let mut c = coordinator();
+        let out = c
+            .handle_market_event(&MarketEvent {
+                at_s: 600.0,
+                deltas: vec![(KindId::H800, -4), (KindId::H20, 4)],
+                prices: vec![],
+                max_price_move: 0.0,
+            })
+            .unwrap();
+        assert_eq!(out.cluster.total_gpus(), 8);
+        assert!(out.cluster.node(1).is_none(), "dead node resurrected: {:?}", out.cluster.nodes);
+        assert!(out
+            .cluster
+            .nodes
+            .iter()
+            .any(|n| n.kind == KindId::H20 && n.node_id == 2));
+    }
+
+    #[test]
+    fn marginal_price_blip_is_held() {
+        // hysteresis: a 1 % price move cannot be worth a migration
+        let (model, profile, cluster) = parts();
+        let cfg = ReplanConfig { objective: Objective::Cost, ..Default::default() };
+        let mut c = ElasticCoordinator::new_with(model, profile, cluster, cfg).unwrap();
+        let before = c.plan.clone().unwrap();
+        let h800 = c.profile.catalog.get(KindId::H800).price_per_hour;
+        let out = c
+            .handle_market_event(&MarketEvent {
+                at_s: 600.0,
+                deltas: vec![],
+                prices: vec![(KindId::H800, h800 * 1.01)],
+                max_price_move: 0.01,
+            })
+            .unwrap();
+        assert_eq!(out.decision, ReplanDecision::Kept);
+        assert_eq!(out.migration_s, 0.0);
+        let after = out.plan.unwrap();
+        assert!(same_topology(&before, &after), "plan churned on a 1% blip");
+        // kept either because the candidate was identical or because the
+        // amortization rule declined it — never migrated
+        assert_eq!(c.holds + c.unchanged, 1);
+        assert_eq!(c.replans, 0);
+        // the price update itself is tracked
+        assert!((c.prices[KindId::H800] - h800 * 1.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn large_availability_loss_still_migrates() {
+        // hysteresis must never hold a plan whose GPUs are gone
+        let mut c = coordinator();
+        let out = c.preempt(KindId::H800, 4, 1200.0).unwrap();
+        assert_eq!(out.decision, ReplanDecision::Switched);
+        assert!(out.forced);
+        assert!(out.migration_s > 0.0);
+        assert_eq!(c.replans, 1);
+        assert_eq!(c.holds, 0);
+    }
+
+    #[test]
+    fn greedy_policy_always_adopts_changed_candidates() {
+        let (model, profile, cluster) = parts();
+        let cfg = ReplanConfig { policy: ReplanPolicy::Greedy, ..Default::default() };
+        let mut c = ElasticCoordinator::new_with(model, profile, cluster, cfg).unwrap();
+        // forced path identical under greedy
+        let out = c.preempt(KindId::H800, 4, 600.0).unwrap();
+        assert_eq!(out.decision, ReplanDecision::Switched);
+        // a grant that changes the candidate is adopted without weighing
+        let out = c.grant(KindId::H800, 4, 1200.0).unwrap();
+        if let Some(p) = &out.plan {
+            p.validate(c.model.n_layers).unwrap();
+        }
+        assert!(out.decision == ReplanDecision::Switched || out.reason.contains("identical"));
     }
 }

@@ -1,0 +1,107 @@
+//! Property tests: spot-market trace generation over *arbitrary*
+//! (JSON-defined) GPU catalogs. For random 2–6-kind catalogs,
+//! `TraceConfig::from_catalog` must produce traces whose per-kind
+//! availability stays within capacity and whose price track stays
+//! positive and mean-reverts toward each kind's preset `price_per_hour`.
+
+use autohet::cluster::{GpuCatalog, SpotTrace, TraceConfig};
+use autohet::util::json::Json;
+use autohet::util::rng::Rng;
+
+/// A random 2–6-kind catalog built through the JSON path (the same door
+/// user-defined fleets come through).
+fn random_catalog(rng: &mut Rng) -> GpuCatalog {
+    let n = 2 + rng.below(5); // 2..=6 kinds
+    let kinds: Vec<String> = (0..n)
+        .map(|i| {
+            format!(
+                r#"{{"name": "K{i}", "relative_power": {:.2}, "mem_gib": {}, "price_per_hour": {:.2}}}"#,
+                0.5 + rng.f64() * 3.5,
+                40 + rng.below(120),
+                0.4 + rng.f64() * 7.0
+            )
+        })
+        .collect();
+    let doc = format!(r#"{{"kinds": [{}]}}"#, kinds.join(","));
+    GpuCatalog::from_json(&Json::parse(&doc).unwrap()).unwrap()
+}
+
+#[test]
+fn arbitrary_catalog_traces_bounded_and_priced() {
+    let mut rng = Rng::new(0xA11C_A7);
+    for case in 0..15u64 {
+        let cat = random_catalog(&mut rng);
+        let cap = 4 + rng.below(12);
+        let cfg = TraceConfig::from_catalog(&cat, cap);
+        assert_eq!(cfg.capacity.len(), cat.len(), "case {case}");
+        assert_eq!(cfg.base_price_per_hour.len(), cat.len(), "case {case}");
+        let trace = SpotTrace::generate(cfg, case);
+
+        assert_eq!(trace.kinds.len(), cat.len(), "case {case}");
+        assert_eq!(trace.prices.len(), trace.avail.len(), "case {case}");
+        for (t, row) in trace.avail.iter().enumerate() {
+            for (ki, &(_, kcap)) in trace.cfg.capacity.iter().enumerate() {
+                assert!(row[ki] <= kcap, "case {case} step {t}: over capacity");
+                assert!(trace.prices[t][ki] > 0.0, "case {case} step {t}: price not positive");
+            }
+        }
+
+        // the price track reverts toward the preset: its long-run mean
+        // stays anchored near base (demand spikes push it slightly above,
+        // never toward the multiplier clamps)
+        for ki in 0..cat.len() {
+            let base = cat.specs()[ki].price_per_hour;
+            let mean: f64 =
+                trace.prices.iter().map(|r| r[ki]).sum::<f64>() / trace.prices.len() as f64;
+            assert!(
+                mean > 0.5 * base && mean < 2.0 * base,
+                "case {case} kind {ki}: mean price {mean:.3} drifted from preset {base:.3}"
+            );
+        }
+
+        // batched market events replay into the final availability row
+        let mut level: Vec<i64> = trace.avail[0].iter().map(|&x| x as i64).collect();
+        for ev in trace.market_events(f64::INFINITY) {
+            for (kind, delta) in ev.deltas {
+                let ki = trace.kinds.iter().position(|&k| k == kind).unwrap();
+                level[ki] += delta;
+                assert!(level[ki] >= 0, "case {case}: negative availability");
+            }
+            assert_eq!(ev.prices.len(), trace.kinds.len(), "case {case}");
+        }
+        let last: Vec<i64> = trace.avail.last().unwrap().iter().map(|&x| x as i64).collect();
+        assert_eq!(level, last, "case {case}");
+    }
+}
+
+#[test]
+fn price_reversion_dominates_on_arbitrary_catalogs() {
+    // With noise off, every non-spike step must pull the price strictly
+    // toward its preset anchor; spikes (the only away-moves) are rare.
+    let mut rng = Rng::new(0x5EED);
+    for case in 0..8u64 {
+        let cat = random_catalog(&mut rng);
+        let cfg = TraceConfig {
+            price_noise: 0.0,
+            spike_prob: 0.05,
+            ..TraceConfig::from_catalog(&cat, 8)
+        };
+        let trace = SpotTrace::generate(cfg, 100 + case);
+        let (mut toward, mut away) = (0usize, 0usize);
+        for ki in 0..trace.kinds.len() {
+            let base = trace.cfg.base_price_of(trace.kinds[ki]);
+            for w in trace.prices.windows(2) {
+                let (d0, d1) = ((w[0][ki] - base).abs(), (w[1][ki] - base).abs());
+                if d1 > d0 + 1e-12 {
+                    away += 1;
+                } else {
+                    toward += 1;
+                }
+            }
+        }
+        assert!(
+            toward > 3 * away,
+            "case {case}: prices not reverting ({toward} toward vs {away} away)"
+        );
+    }
+}
