@@ -1,0 +1,105 @@
+//! Elastic-training enactment demo: a seeded spot-market trace is
+//! replayed for its decision log, then **enacted** on the real PJRT
+//! training path — real optimizer steps per market segment, layer-wise
+//! checkpoint save/load through the tiered store on every replan, and a
+//! final loss-level comparison against the uninterrupted baseline run
+//! with identical seeds.
+//!
+//! ```sh
+//! cd python && python -m compile.aot --preset tiny --out-dir ../rust/artifacts
+//! cargo run --release --example elastic_train -- --hours 2
+//! ```
+//!
+//! Prints a SKIP notice and exits cleanly when the AOT artifacts are
+//! absent, so it can ride in CI next to the artifact-free demos.
+
+use std::path::Path;
+
+use autohet::cluster::{GpuCatalog, SpotTrace, TraceConfig};
+use autohet::modelcfg::ModelCfg;
+use autohet::profile::ProfileDb;
+use autohet::recovery::{baseline_train, enact, replay, EnactConfig};
+use autohet::runtime::Engine;
+use autohet::util::bench::Table;
+use autohet::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let dir = args.get_str("artifacts", "artifacts/tiny");
+    if !Path::new(dir).join("manifest.json").exists() {
+        println!("SKIP: no AOT artifacts at `{dir}`; generate them with");
+        println!("  cd python && python -m compile.aot --preset tiny --out-dir ../rust/artifacts");
+        return Ok(());
+    }
+    let engine = Engine::load(Path::new(dir))?;
+    let seed = args.get_u64("seed", 7);
+    let hours = args.get_f64("hours", 2.0);
+
+    let cat = GpuCatalog::builtin();
+    let model = ModelCfg::bert_large();
+    let profile = ProfileDb::build(&model, &cat, &[1, 2, 4, 8], 1);
+    let tc = TraceConfig {
+        horizon_s: hours * 3600.0,
+        step_s: 900.0,
+        ..TraceConfig::from_catalog(&cat, 6)
+    };
+    let trace = SpotTrace::generate(tc, seed);
+
+    let ckpt_dir = std::env::temp_dir().join(format!(
+        "autohet-elastic-train-{}-{seed}",
+        std::process::id()
+    ));
+    let cfg = EnactConfig {
+        steps_per_event: args.get_usize("steps-per-event", 4),
+        seed,
+        ckpt_dir,
+        ..Default::default()
+    };
+
+    let log = replay(&profile, &trace, &cfg.replay)?;
+    println!(
+        "decision log: {} events over {hours:.1}h (seed {seed}) — {} switches, {} holds\n",
+        log.events, log.switches, log.holds
+    );
+
+    let report = enact(&engine, &profile, &trace, &cfg)?;
+    let mut t = Table::new(&[
+        "t_h", "decision", "gpus", "steps", "loss", "save_B", "load_B", "cloud_frac", "fig10_s",
+    ]);
+    for r in &report.rows {
+        let load = r.load.clone().unwrap_or_default();
+        t.row(&[
+            format!("{:.2}", r.at_s / 3600.0),
+            format!("{}{}", r.decision, if r.forced { "*" } else { "" }),
+            r.gpus.to_string(),
+            r.steps_run.to_string(),
+            format!("{:.4}", r.loss_before),
+            r.save.bytes_local.to_string(),
+            load.total_bytes().to_string(),
+            format!("{:.2}", r.cloud_frac),
+            format!("{:.0}", r.timing_model_s),
+        ]);
+    }
+    t.print("Enacted market events (decisions taken on the REAL training path)");
+
+    let dims = engine.manifest.dims;
+    let (base_losses, base_eval) =
+        baseline_train(&engine, &[vec![dims.n_layers]], report.steps, &cfg)?;
+    println!("\ndecision log matches replay: {}", report.matches_decision_log(&log));
+    println!(
+        "enacted:  {} steps | final train {:.4} | eval {:.4} | replicas synced: {}",
+        report.steps, report.final_train_loss, report.final_eval_loss, report.replicas_synced
+    );
+    println!(
+        "baseline: {} steps | final train {:.4} | eval {:.4} | Δeval {:+.4}",
+        base_losses.len(),
+        base_losses.last().copied().unwrap_or(f64::NAN),
+        base_eval,
+        report.final_eval_loss - base_eval
+    );
+    anyhow::ensure!(
+        report.matches_decision_log(&log),
+        "enactment diverged from the replay decision log"
+    );
+    Ok(())
+}

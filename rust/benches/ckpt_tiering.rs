@@ -1,0 +1,101 @@
+//! Checkpoint-tier micro-bench: real `save_full` / `load_full` wall time
+//! and bandwidth-model (simulated) time across TP shard dimensions and
+//! the three retrieval paths the enactment layer exercises — all-local,
+//! peer-RDMA, and dead-node cloud fill. Artifact-free: the replica is a
+//! synthetic `ModelParams`, only the checkpoint stack runs.
+//!
+//! ```sh
+//! cargo bench --bench ckpt_tiering
+//! ```
+
+use std::time::Instant;
+
+use autohet::checkpoint::CheckpointManager;
+use autohet::runtime::ModelDims;
+use autohet::train::{Adam, AdamConfig, ModelParams};
+use autohet::util::bench::Table;
+
+fn dims() -> ModelDims {
+    // enactment-scale replica: ~a few MB so the bench stays sub-second
+    ModelDims {
+        vocab: 512,
+        d_model: 128,
+        n_heads: 4,
+        d_ff: 512,
+        seq: 64,
+        microbatch: 1,
+        n_layers: 8,
+        params_count: 0,
+    }
+}
+
+fn tmp(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "ah-ckpt-bench-{tag}-{}-{}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn main() {
+    let d = dims();
+    let params = ModelParams::init(&d, 7);
+    let adam = Adam::new(AdamConfig::default(), &params);
+    println!(
+        "replica: {} params (~{:.1} MB with Adam moments), {} layers\n",
+        params.num_params(),
+        params.num_params() as f64 * 3.0 * 4.0 / 1e6,
+        d.n_layers
+    );
+
+    let mut t = Table::new(&[
+        "tp", "path", "save_ms", "save_sim_s", "load_ms", "load_sim_s", "local_B", "rdma_B",
+        "cloud_B",
+    ]);
+    for tp in [1usize, 2, 4] {
+        for (path, load_node, kill_node0) in [
+            ("local", 0usize, false),
+            ("peer-rdma", 1, false),
+            ("cloud-fill", 1, true),
+        ] {
+            let mut mgr = CheckpointManager::new(&tmp(&format!("{tp}-{path}"))).unwrap();
+            let t0 = Instant::now();
+            // layers alternate between two nodes so every path has work
+            let save = mgr
+                .save_full(1, &params, Some(&adam), tp, &|l| if l < d.n_layers / 2 { 0 } else { 1 })
+                .unwrap();
+            let save_ms = t0.elapsed().as_secs_f64() * 1e3;
+            if kill_node0 {
+                // node 0 is reclaimed: its tiers vanish, and the volatile
+                // memory of every rescheduled container is wiped too
+                mgr.bitmap.drop_node(0);
+                mgr.bitmap.drop_node_memory(1);
+                mgr.store.wipe_memory();
+            }
+            let mut out = ModelParams::init(&d, 99);
+            let mut out_adam = Adam::new(AdamConfig::default(), &out);
+            let t1 = Instant::now();
+            let load = mgr.load_full(&mut out, Some(&mut out_adam), load_node).unwrap();
+            let load_ms = t1.elapsed().as_secs_f64() * 1e3;
+            assert_eq!(out.max_abs_diff(&params), 0.0, "lossy roundtrip");
+            t.row(&[
+                tp.to_string(),
+                path.to_string(),
+                format!("{save_ms:.1}"),
+                format!("{:.3}", save.sim_local_s + save.sim_cloud_s),
+                format!("{load_ms:.1}"),
+                format!("{:.3}", load.sim_s),
+                (load.bytes_memory + load.bytes_disk).to_string(),
+                load.bytes_rdma.to_string(),
+                load.bytes_cloud.to_string(),
+            ]);
+        }
+    }
+    t.print("Checkpoint tiering: save/load across TP dims and retrieval paths");
+    println!("\ncloud-fill rows fetch only the dead node's bitmap complement from the cloud.");
+}

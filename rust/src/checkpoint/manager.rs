@@ -37,6 +37,23 @@ impl LoadReport {
     pub fn total_bytes(&self) -> u64 {
         self.bytes_memory + self.bytes_disk + self.bytes_rdma + self.bytes_cloud
     }
+
+    /// `(local, peer, cloud)` byte fractions — the measured counters in
+    /// exactly the shape [`crate::recovery::timing::RecoveryScenario`]
+    /// takes, so a real load can be cross-priced by the Fig-10 model.
+    /// All zeros when nothing was loaded.
+    pub fn fractions(&self) -> (f64, f64, f64) {
+        let total = self.total_bytes();
+        if total == 0 {
+            return (0.0, 0.0, 0.0);
+        }
+        let t = total as f64;
+        (
+            (self.bytes_memory + self.bytes_disk) as f64 / t,
+            self.bytes_rdma as f64 / t,
+            self.bytes_cloud as f64 / t,
+        )
+    }
 }
 
 pub struct CheckpointManager {
@@ -139,6 +156,19 @@ impl CheckpointManager {
         tp_dim: usize,
         node_of_layer: &dyn Fn(usize) -> usize,
     ) -> Result<SaveReport> {
+        // Evict the superseded checkpoint's memory + local-disk copies:
+        // only the latest step is ever loadable (the bitmap is reset
+        // below), so without eviction a long elastic run accumulates
+        // every dead replica in process RAM. Cloud replicas are retained
+        // (object-store history).
+        let old_step = self.bitmap.step;
+        if old_step != step {
+            for key in self.bitmap.keys() {
+                let skey = key.storage_key(old_step);
+                self.store.delete(StorageTier::CpuMemory, &skey)?;
+                self.store.delete(StorageTier::LocalDisk, &skey)?;
+            }
+        }
         self.bitmap = LayerBitmap::new(step);
         let n_layers = params.blocks[0].shape[0];
         let mut report = SaveReport::default();
@@ -396,6 +426,26 @@ mod tests {
         let rep = mgr.load_full(&mut out, None, 1).unwrap();
         assert_eq!(out.max_abs_diff(&params), 0.0);
         assert!(rep.bytes_rdma > 0);
+        assert_eq!(rep.bytes_cloud, 0);
+    }
+
+    #[test]
+    fn new_save_evicts_superseded_local_copies() {
+        let d = dims();
+        let params = ModelParams::init(&d, 4);
+        let mut mgr = CheckpointManager::new(&tmp()).unwrap();
+        mgr.save_full(1, &params, None, 1, &|_| 0).unwrap();
+        let old_key = CkptKey::layer(0, 0, 1).storage_key(1);
+        assert!(mgr.store.exists(StorageTier::CpuMemory, &old_key));
+        mgr.save_full(2, &params, None, 1, &|_| 0).unwrap();
+        // step-1 copies are gone from the bounded tiers…
+        assert!(!mgr.store.exists(StorageTier::CpuMemory, &old_key));
+        assert!(!mgr.store.exists(StorageTier::LocalDisk, &old_key));
+        // …but the cloud retains history, and the latest step still loads
+        assert!(mgr.store.exists(StorageTier::Cloud, &old_key));
+        let mut out = ModelParams::init(&d, 9);
+        let rep = mgr.load_full(&mut out, None, 0).unwrap();
+        assert_eq!(out.max_abs_diff(&params), 0.0);
         assert_eq!(rep.bytes_cloud, 0);
     }
 

@@ -24,5 +24,5 @@ pub mod shard;
 pub mod store;
 
 pub use bitmap::{CkptKey, LayerBitmap, Location};
-pub use manager::CheckpointManager;
+pub use manager::{CheckpointManager, LoadReport, SaveReport};
 pub use store::{StorageTier, TieredStore};

@@ -106,6 +106,23 @@ impl TieredStore {
         Ok((bytes, r))
     }
 
+    /// Drop one unit from a tier (checkpoint eviction). Missing keys are
+    /// a no-op; no transfer time is charged (deletes are metadata ops).
+    pub fn delete(&mut self, tier: StorageTier, key: &str) -> Result<()> {
+        match tier {
+            StorageTier::CpuMemory => {
+                self.mem.remove(key);
+            }
+            _ => {
+                let p = self.path(tier, key);
+                if p.exists() {
+                    std::fs::remove_file(p)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
     pub fn exists(&self, tier: StorageTier, key: &str) -> bool {
         match tier {
             StorageTier::CpuMemory => self.mem.contains_key(key),

@@ -1,7 +1,7 @@
 //! The leader process: CLI subcommands wiring the planner, simulator,
 //! real trainer, and recovery together. This is the binary a user runs.
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, Result};
 
@@ -12,7 +12,9 @@ use crate::modelcfg::ModelCfg;
 use crate::pipeline::{ExecTopology, PipelineTrainer};
 use crate::planner::{auto_plan, plan_choice, Objective, PlanOptions, ScoredPlan};
 use crate::profile::ProfileDb;
-use crate::recovery::{replay, ReplanPolicy, ReplayConfig, ReplayReport};
+use crate::recovery::{
+    baseline_train, enact, replay, EnactConfig, ReplanPolicy, ReplayConfig, ReplayReport,
+};
 use crate::runtime::{Engine, HostTensor};
 use crate::sim::simulate_plan;
 use crate::train::{AdamConfig, MarkovCorpus};
@@ -40,6 +42,17 @@ USAGE:
                   amortized replanning by default, `--greedy` replans on
                   every delta like the seed coordinator, `--csv` dumps the
                   per-event decision log
+  autohet enact   [--model NAME] [--cluster FILE|--counts ...] [--hours H]
+                  [--objective time|cost] [--amortize-h H] [--greedy]
+                  [--gpus-per-node N] [--seed N] [--steps-per-event N]
+                  [--k N] [--max-groups N] [--ckpt-dir DIR]
+                  [--artifacts DIR] [--csv FILE] [--loss-csv FILE]
+                  ENACT the replay decision log on the real training
+                  path: real optimizer steps per market segment,
+                  layer-wise checkpoint save/load through the tiered
+                  store on every replan, real loss curve + byte
+                  counters; compares against the uninterrupted baseline
+                  (needs AOT artifacts — see python/compile/aot.py)
   autohet models                                      list model presets
 ";
 
@@ -263,29 +276,13 @@ fn print_replay(tag: &str, r: &ReplayReport) {
 pub fn cmd_replay(args: &Args) -> Result<()> {
     let model = load_model(args)?;
     let cluster = load_cluster(args)?;
-    let profile = build_profile(&model, &cluster.catalog, args.get_u64("seed", 1));
-    let objective: Objective = args.get_str("objective", "time").parse()?;
-    let hours = args.get_f64("hours", 24.0);
-    let amortize_h = args.get_f64("amortize-h", 6.0);
     let seed = args.get_u64("seed", 1);
+    let profile = build_profile(&model, &cluster.catalog, seed);
+    let (trace, cfg) = market_setup(args, &cluster, 24.0)?;
 
-    let mut tc = TraceConfig::from_cluster(&cluster);
-    tc.horizon_s = hours * 3600.0;
-    let trace = SpotTrace::generate(tc, seed);
-
-    let amortized = ReplanPolicy::Amortized {
-        horizon_s: amortize_h * 3600.0,
-        min_rel_gain: 0.02,
-    };
-    let policy = if args.has("greedy") { ReplanPolicy::Greedy } else { amortized };
-    let cfg = ReplayConfig {
-        objective,
-        policy,
-        gpus_per_node: args.get_usize("gpus-per-node", 8),
-        ..Default::default()
-    };
     log_info!(
-        "replaying {hours:.0}h spot trace (seed {seed}) for {} on {} GPUs, objective {}",
+        "replaying {:.0}h spot trace (seed {seed}) for {} on {} GPUs, objective {}",
+        args.get_f64("hours", 24.0),
         model.name,
         cluster.total_gpus(),
         args.get_str("objective", "time"),
@@ -294,16 +291,158 @@ pub fn cmd_replay(args: &Args) -> Result<()> {
     print_replay(if args.has("greedy") { "greedy" } else { "amortized" }, &report);
 
     // the counterfactual policy on the identical trace
-    let other_cfg = ReplayConfig {
-        policy: if args.has("greedy") { amortized } else { ReplanPolicy::Greedy },
-        ..cfg.clone()
+    let other_policy = match cfg.policy {
+        ReplanPolicy::Greedy => ReplanPolicy::Amortized {
+            horizon_s: args.get_f64("amortize-h", 6.0) * 3600.0,
+            min_rel_gain: 0.02,
+        },
+        ReplanPolicy::Amortized { .. } => ReplanPolicy::Greedy,
     };
+    let other_cfg = ReplayConfig { policy: other_policy, ..cfg.clone() };
     let other = replay(&profile, &trace, &other_cfg)?;
     print_replay(if args.has("greedy") { "amortized (counterfactual)" } else { "greedy (counterfactual)" }, &other);
 
     if let Some(csv) = args.get("csv") {
         std::fs::write(csv, report.to_csv())?;
         log_info!("wrote per-event decision log to {csv}");
+    }
+    Ok(())
+}
+
+/// Shared by `cmd_replay` and `cmd_enact`: trace + policy from the same
+/// flags, so the enactment provably follows the replay decision log.
+/// Only the `--hours` default differs (replay sweeps days cheaply, an
+/// enactment runs real training steps).
+fn market_setup(
+    args: &Args,
+    cluster: &ClusterSpec,
+    default_hours: f64,
+) -> Result<(SpotTrace, ReplayConfig)> {
+    let objective: Objective = args.get_str("objective", "time").parse()?;
+    let hours = args.get_f64("hours", default_hours);
+    let amortize_h = args.get_f64("amortize-h", 6.0);
+    let seed = args.get_u64("seed", 1);
+    let mut tc = TraceConfig::from_cluster(cluster);
+    tc.horizon_s = hours * 3600.0;
+    let trace = SpotTrace::generate(tc, seed);
+    let policy = if args.has("greedy") {
+        ReplanPolicy::Greedy
+    } else {
+        ReplanPolicy::Amortized { horizon_s: amortize_h * 3600.0, min_rel_gain: 0.02 }
+    };
+    let rcfg = ReplayConfig {
+        objective,
+        policy,
+        gpus_per_node: args.get_usize("gpus-per-node", 8),
+        ..Default::default()
+    };
+    Ok((trace, rcfg))
+}
+
+pub fn cmd_enact(args: &Args) -> Result<()> {
+    let dir = args.get_str("artifacts", "artifacts/tiny");
+    if !Path::new(dir).join("manifest.json").exists() {
+        anyhow::bail!(
+            "no AOT artifacts at `{dir}` — generate them first:\n  \
+             cd python && python -m compile.aot --preset tiny --out-dir ../rust/artifacts"
+        );
+    }
+    let engine = Engine::load(Path::new(dir))?;
+    let model = load_model(args)?;
+    let cluster = load_cluster(args)?;
+    let seed = args.get_u64("seed", 1);
+    let profile = build_profile(&model, &cluster.catalog, seed);
+    let (trace, rcfg) = market_setup(args, &cluster, 2.0)?;
+
+    let mut ecfg = EnactConfig {
+        replay: rcfg.clone(),
+        steps_per_event: args.get_usize("steps-per-event", 4),
+        k_per_group: args.get_usize("k", 2),
+        max_groups: args.get_usize("max-groups", 4),
+        seed,
+        ..Default::default()
+    };
+    if let Some(d) = args.get("ckpt-dir") {
+        ecfg.ckpt_dir = PathBuf::from(d);
+    }
+
+    // the analytical decision log the enactment must follow
+    let log = replay(&profile, &trace, &rcfg)?;
+    print_replay("replay (decision log)", &log);
+    log_info!(
+        "enacting {} market events on preset `{}` ({} steps/event, k={})",
+        log.events,
+        engine.manifest.preset,
+        ecfg.steps_per_event,
+        ecfg.k_per_group
+    );
+
+    let report = enact(&engine, &profile, &trace, &ecfg)?;
+    for r in &report.rows {
+        let load = r.load.clone().unwrap_or_default();
+        println!(
+            "[{:>6.2}h] {:<8} {}{:>2} gpus | steps {:>3} loss {:>7.4} | saved {:>8} B \
+             | loaded {:>8} B (local {:.0}% rdma {:.0}% cloud {:.0}%, fig10 {:.0}s) | {}",
+            r.at_s / 3600.0,
+            r.decision,
+            if r.forced { "forced " } else { "" },
+            r.gpus,
+            r.steps_run,
+            r.loss_before,
+            r.save.bytes_local,
+            load.total_bytes(),
+            100.0 * r.local_frac,
+            100.0 * r.peer_frac,
+            100.0 * r.cloud_frac,
+            r.timing_model_s,
+            r.reason
+        );
+    }
+
+    // the elastic-equivalence oracle: same seeds, no interruptions
+    let dims = engine.manifest.dims;
+    let (base_losses, base_eval) =
+        baseline_train(&engine, &[vec![dims.n_layers]], report.steps, &ecfg)?;
+    println!("\n== enactment summary ==");
+    println!(
+        "decision log matches replay: {}",
+        report.matches_decision_log(&log)
+    );
+    println!(
+        "enacted:   {} real steps | final train loss {:.4} | eval {:.4} | replicas synced: {}",
+        report.steps, report.final_train_loss, report.final_eval_loss, report.replicas_synced
+    );
+    println!(
+        "baseline:  {} real steps | final train loss {:.4} | eval {:.4} (uninterrupted)",
+        base_losses.len(),
+        base_losses.last().copied().unwrap_or(f64::NAN),
+        base_eval
+    );
+    println!(
+        "Δeval {:+.4} | {} switches, {} pauses | ckpt saved {} B local + {} B cloud, \
+         loaded {} B local / {} B rdma / {} B cloud | save {:.2}s wall ({:.1}s sim), \
+         load {:.2}s wall ({:.1}s sim)",
+        report.final_eval_loss - base_eval,
+        report.switches,
+        report.pauses,
+        report.bytes_saved_local,
+        report.bytes_saved_cloud,
+        report.bytes_loaded_local,
+        report.bytes_loaded_rdma,
+        report.bytes_loaded_cloud,
+        report.save_wall_s,
+        report.save_sim_s,
+        report.load_wall_s,
+        report.load_sim_s
+    );
+
+    if let Some(csv) = args.get("csv") {
+        std::fs::write(csv, report.to_csv())?;
+        log_info!("wrote per-event enactment log to {csv}");
+    }
+    if let Some(csv) = args.get("loss-csv") {
+        std::fs::write(csv, report.loss_csv())?;
+        log_info!("wrote real loss curve to {csv}");
     }
     Ok(())
 }
@@ -333,6 +472,7 @@ pub fn run(args: Args) -> Result<()> {
         Some("train") => cmd_train(&args),
         Some("trace") => cmd_trace(&args),
         Some("replay") => cmd_replay(&args),
+        Some("enact") => cmd_enact(&args),
         Some("models") => cmd_models(),
         _ => {
             print!("{USAGE}");

@@ -19,11 +19,19 @@
 //! Scheduling/timing fidelity lives in [`crate::sim`]; this module is the
 //! numerics path (its gradients are tested against the monolith oracle).
 
-use anyhow::{ensure, Result};
+use anyhow::{anyhow, ensure, Result};
 
 use crate::collective;
 use crate::runtime::{Engine, HostTensor};
 use crate::train::{Adam, AdamConfig, ModelParams};
+
+/// Pop the next output of artifact `op`, failing with the op name (not a
+/// panic mid-step) when the engine returned fewer tensors than this
+/// executor expects — e.g. under a hand-edited or truncated manifest.
+fn pop_out(out: &mut Vec<HostTensor>, op: &str) -> Result<HostTensor> {
+    out.pop()
+        .ok_or_else(|| anyhow!("artifact `{op}`: engine returned too few outputs"))
+}
 
 /// A stage in the executor: a contiguous layer span.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -125,6 +133,29 @@ impl<'e> PipelineTrainer<'e> {
         Ok(PipelineTrainer { engine, groups, k_per_group })
     }
 
+    /// Rebuild a trainer over a *new* topology from restored state (the
+    /// elastic enactment path): every DP group starts from the same
+    /// checkpointed replica + Adam moments instead of a fresh init.
+    pub fn from_state(
+        engine: &'e Engine,
+        topology: &ExecTopology,
+        k_per_group: usize,
+        params: &ModelParams,
+        adam: &Adam,
+    ) -> Result<PipelineTrainer<'e>> {
+        topology.validate(engine.manifest.dims.n_layers)?;
+        let groups = topology
+            .groups
+            .iter()
+            .map(|stages| GroupState {
+                stages: stages.clone(),
+                params: params.clone(),
+                adam: adam.clone(),
+            })
+            .collect();
+        Ok(PipelineTrainer { engine, groups, k_per_group })
+    }
+
     /// Forward one microbatch through one group; returns (loss, grads).
     fn group_fwd_bwd(
         &self,
@@ -137,9 +168,10 @@ impl<'e> PipelineTrainer<'e> {
         let man = &eng.manifest;
 
         // ---- forward ----
-        let mut x = eng
-            .exec("embed_fwd", &[&g.params.tok_emb, &g.params.pos_emb, tokens])?
-            .remove(0);
+        let mut x = pop_out(
+            &mut eng.exec("embed_fwd", &[&g.params.tok_emb, &g.params.pos_emb, tokens])?,
+            "embed_fwd",
+        )?;
         // per stage, per block: (lo, hi, stash)
         let mut stashes: Vec<(usize, usize, HostTensor)> = Vec::new();
         for s in &g.stages {
@@ -152,9 +184,10 @@ impl<'e> PipelineTrainer<'e> {
                 let slices = g.params.block_slices(lo, hi)?;
                 let mut ins: Vec<&HostTensor> = slices.iter().collect();
                 ins.push(&x);
-                let mut out = eng.exec(&format!("block{bsz}_fwd"), &ins)?;
-                let xs = out.pop().unwrap();
-                x = out.pop().unwrap();
+                let op = format!("block{bsz}_fwd");
+                let mut out = eng.exec(&op, &ins)?;
+                let xs = pop_out(&mut out, &op)?;
+                x = pop_out(&mut out, &op)?;
                 stashes.push((lo, hi, xs));
             }
         }
@@ -164,11 +197,11 @@ impl<'e> PipelineTrainer<'e> {
             "head_fwd_bwd",
             &[&g.params.lnf_g, &g.params.lnf_b, &g.params.w_out, &x, targets],
         )?;
-        let d_w_out = out.pop().unwrap();
-        let d_lnf_b = out.pop().unwrap();
-        let d_lnf_g = out.pop().unwrap();
-        let mut dx = out.pop().unwrap();
-        let loss = out.pop().unwrap().f32s()[0] as f64;
+        let d_w_out = pop_out(&mut out, "head_fwd_bwd")?;
+        let d_lnf_b = pop_out(&mut out, "head_fwd_bwd")?;
+        let d_lnf_g = pop_out(&mut out, "head_fwd_bwd")?;
+        let mut dx = pop_out(&mut out, "head_fwd_bwd")?;
+        let loss = pop_out(&mut out, "head_fwd_bwd")?.f32s()[0] as f64;
         acc(&mut grads.w_out, &d_w_out);
         acc(&mut grads.lnf_b, &d_lnf_b);
         acc(&mut grads.lnf_g, &d_lnf_g);
@@ -180,10 +213,12 @@ impl<'e> PipelineTrainer<'e> {
             let mut ins: Vec<&HostTensor> = slices.iter().collect();
             ins.push(xs);
             ins.push(&dx);
-            let mut out = eng.exec(&format!("block{bsz}_bwd"), &ins)?;
+            let op = format!("block{bsz}_bwd");
+            let mut out = eng.exec(&op, &ins)?;
             // outputs: dx, then 12 stacked grads for [lo, hi)
+            ensure!(!out.is_empty(), "artifact `{op}`: engine returned no outputs");
             let dparams = out.split_off(1);
-            dx = out.pop().unwrap();
+            dx = pop_out(&mut out, &op)?;
             for (i, dp) in dparams.iter().enumerate() {
                 acc_rows(&mut grads.blocks[i], dp, *lo);
             }
@@ -191,8 +226,8 @@ impl<'e> PipelineTrainer<'e> {
 
         // ---- embedding bwd ----
         let mut out = eng.exec("embed_bwd", &[tokens, &dx])?;
-        let d_pos = out.pop().unwrap();
-        let d_tok = out.pop().unwrap();
+        let d_pos = pop_out(&mut out, "embed_bwd")?;
+        let d_tok = pop_out(&mut out, "embed_bwd")?;
         acc(&mut grads.tok_emb, &d_tok);
         acc(&mut grads.pos_emb, &d_pos);
 
@@ -326,19 +361,22 @@ impl<'e> PipelineTrainer<'e> {
         let man = &self.engine.manifest;
         let mut total = 0.0;
         for (tokens, targets) in batches {
-            let mut x = self
-                .engine
-                .exec("embed_fwd", &[&g.params.tok_emb, &g.params.pos_emb, tokens])?
-                .remove(0);
+            let mut x = pop_out(
+                &mut self
+                    .engine
+                    .exec("embed_fwd", &[&g.params.tok_emb, &g.params.pos_emb, tokens])?,
+                "embed_fwd",
+            )?;
             let mut lo = 0usize;
             for s in &g.stages {
                 for bsz in man.decompose_layers(s.layer_hi - s.layer_lo)? {
                     let slices = g.params.block_slices(lo, lo + bsz)?;
                     let mut ins: Vec<&HostTensor> = slices.iter().collect();
                     ins.push(&x);
-                    let mut out = self.engine.exec(&format!("block{bsz}_fwd"), &ins)?;
-                    out.pop();
-                    x = out.pop().unwrap();
+                    let op = format!("block{bsz}_fwd");
+                    let mut out = self.engine.exec(&op, &ins)?;
+                    out.pop(); // activation stash, unused in eval
+                    x = pop_out(&mut out, &op)?;
                     lo += bsz;
                 }
             }
@@ -346,7 +384,10 @@ impl<'e> PipelineTrainer<'e> {
                 "head_fwd",
                 &[&g.params.lnf_g, &g.params.lnf_b, &g.params.w_out, &x, targets],
             )?;
-            total += out[0].f32s()[0] as f64;
+            let loss = out
+                .first()
+                .ok_or_else(|| anyhow!("artifact `head_fwd`: engine returned no outputs"))?;
+            total += loss.f32s()[0] as f64;
         }
         Ok(total / batches.len().max(1) as f64)
     }

@@ -1,0 +1,715 @@
+//! Elastic-training **enactment**: execute a spot-market decision log on
+//! the *real* stack.
+//!
+//! [`replay`](mod@super::replay) proves *which* plans the elastic
+//! coordinator picks under churn, but scores them with the analytic
+//! timing model only. This
+//! module closes the loop the ROADMAP called for: the same
+//! [`SpotTrace`] is driven through the same [`ElasticCoordinator`]
+//! (taking the **identical decision log** — see
+//! [`EnactReport::matches_decision_log`]), and every kept / switched /
+//! paused segment is *enacted* on the PJRT training path:
+//!
+//! * each interval between market events runs real optimizer steps on a
+//!   [`PipelineTrainer`] whose [`ExecTopology`] mirrors the active plan's
+//!   stage partition ([`engine_splits`] rescales the plan's layer spans
+//!   onto the artifact model's layer count);
+//! * at every event the replica is checkpointed layer-wise through
+//!   [`CheckpointManager::save_full`] with the plan's node placement, so
+//!   the tiered store holds *real bytes* exactly where the plan put them;
+//! * a migration rebuilds the trainer from [`CheckpointManager::load_full`]
+//!   with local-first retrieval — resharding when the checkpoint TP shape
+//!   differs, and touching the cloud **only** for units whose every
+//!   non-cloud copy died with a preempted node (the bitmap complement);
+//! * the measured byte fractions of each load are fed back into the
+//!   Fig-10 [`RecoveryScenario`] so the real transfer can be cross-priced
+//!   by the paper's timing model (`timing_model_s` per event).
+//!
+//! The result is an [`EnactReport`]: a [`super::replay::ReplayRow`]-shaped
+//! decision trail extended with real loss curves, per-event checkpoint
+//! byte counters, and save/load wall times — an end-to-end, loss-level
+//! regression oracle for every future planner or recovery change
+//! (`docs/ELASTICITY.md` § Enactment).
+//!
+//! Needs AOT artifacts (`python/compile/aot.py`); everything else in the
+//! elastic stack stays artifact-free.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::checkpoint::{CheckpointManager, CkptKey, LoadReport, SaveReport};
+use crate::cluster::{Interconnect, SpotTrace};
+use crate::pipeline::{ExecTopology, PipelineTrainer};
+use crate::planner::ParallelPlan;
+use crate::profile::ProfileDb;
+use crate::runtime::{Engine, HostTensor, ModelDims};
+use crate::train::{Adam, AdamConfig, MarkovCorpus, ModelParams};
+
+use super::orchestrator::{ElasticCoordinator, ReplanConfig, ReplanDecision};
+use super::replay::{opening_cluster, opening_prices, ReplayConfig, ReplayReport};
+use super::timing::{autohet_recovery_s, RecoveryScenario};
+
+/// How a decision log is enacted on the real training path.
+#[derive(Debug, Clone)]
+pub struct EnactConfig {
+    /// Trace-driving knobs (objective, policy, node size, threshold) —
+    /// must equal the [`super::replay::replay`] config for the decision
+    /// logs to line up.
+    pub replay: ReplayConfig,
+    /// Real optimizer steps run per inter-event interval (and for the
+    /// tail after the last event).
+    pub steps_per_event: usize,
+    /// Microbatches per DP group per step (1F1B's K, executor-level).
+    pub k_per_group: usize,
+    /// Cap on enacted DP replicas: the plan's first
+    /// `min(dp_degree, max_groups)` groups are materialized (each is a
+    /// full model replica; the cap bounds memory and wall time).
+    pub max_groups: usize,
+    pub adam: AdamConfig,
+    /// Seeds the replica init and the synthetic corpus; two runs with
+    /// identical config + trace produce bit-identical loss curves.
+    pub seed: u64,
+    /// Root of the tiered checkpoint store (local + cloud file trees).
+    pub ckpt_dir: PathBuf,
+}
+
+impl Default for EnactConfig {
+    fn default() -> Self {
+        EnactConfig {
+            replay: ReplayConfig::default(),
+            steps_per_event: 4,
+            k_per_group: 2,
+            max_groups: 4,
+            adam: AdamConfig { lr: 2e-3, ..Default::default() },
+            seed: 7,
+            ckpt_dir: std::env::temp_dir().join(format!("autohet-enact-{}", std::process::id())),
+        }
+    }
+}
+
+/// One enacted market event: the [`super::replay::ReplayRow`] decision
+/// fields extended with what the real stack measured.
+#[derive(Debug, Clone)]
+pub struct EnactRow {
+    pub at_s: f64,
+    pub decision: ReplanDecision,
+    pub forced: bool,
+    /// GPUs available in the market fleet after the event.
+    pub gpus: usize,
+    /// Active plan's simulated iteration seconds (0 when paused).
+    pub iter_s: f64,
+    /// Active fleet $/hr at current spot prices (0 when paused).
+    pub price_per_hour: f64,
+    /// Analytic migration downtime the coordinator charged.
+    pub migration_s: f64,
+    /// Real optimizer steps run in the interval before this event.
+    pub steps_run: usize,
+    /// Last real train loss before the event (NaN while paused).
+    pub loss_before: f64,
+    /// DP degree of the plan after the event (0 when paused).
+    pub dp_groups: usize,
+    /// Replicas actually materialized (≤ `max_groups`).
+    pub enacted_groups: usize,
+    /// Layer-wise checkpoint written at the event instant.
+    pub save: SaveReport,
+    pub save_wall_s: f64,
+    /// Real restore behind a switch (None on kept/paused events).
+    pub load: Option<LoadReport>,
+    pub load_wall_s: f64,
+    /// Measured byte fractions of the load (local / RDMA-peer / cloud).
+    pub local_frac: f64,
+    pub peer_frac: f64,
+    pub cloud_frac: f64,
+    /// Fig-10 model seconds for *these measured fractions* — the real
+    /// byte counters fed through [`autohet_recovery_s`].
+    pub timing_model_s: f64,
+    pub reason: String,
+}
+
+/// Aggregate accounting of one enacted run.
+#[derive(Debug, Clone, Default)]
+pub struct EnactReport {
+    /// Real optimizer steps run across all intervals.
+    pub steps: usize,
+    /// Per-step mean train loss, in step order (the real loss curve).
+    pub losses: Vec<f64>,
+    pub final_train_loss: f64,
+    /// Mean loss on the deterministic held-out set ([`eval_batches`]).
+    pub final_eval_loss: f64,
+    /// Replica consistency at the end of the run (1e-5 tolerance).
+    pub replicas_synced: bool,
+    pub switches: usize,
+    pub pauses: usize,
+    pub bytes_saved_local: u64,
+    pub bytes_saved_cloud: u64,
+    pub bytes_loaded_local: u64,
+    pub bytes_loaded_rdma: u64,
+    pub bytes_loaded_cloud: u64,
+    /// Simulated (bandwidth-model) seconds across all saves / loads.
+    pub save_sim_s: f64,
+    pub load_sim_s: f64,
+    /// Real wall-clock seconds across all saves / loads.
+    pub save_wall_s: f64,
+    pub load_wall_s: f64,
+    pub rows: Vec<EnactRow>,
+}
+
+impl EnactReport {
+    /// Did this enactment take the exact decision trail of a replay of
+    /// the same trace + config? (Same events, same kept/switched/paused
+    /// verdicts, same forced flags.)
+    pub fn matches_decision_log(&self, log: &ReplayReport) -> bool {
+        self.rows.len() == log.rows.len()
+            && self.rows.iter().zip(&log.rows).all(|(e, r)| {
+                e.decision == r.decision
+                    && e.forced == r.forced
+                    && (e.at_s - r.at_s).abs() < 1e-9
+            })
+    }
+
+    /// Per-event CSV (commas in reasons become `;`).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "t_hours,decision,forced,gpus,iter_s,migration_s,steps,loss,\
+             save_local_b,save_cloud_b,load_local_b,load_rdma_b,load_cloud_b,\
+             local_frac,peer_frac,cloud_frac,fig10_s,save_wall_s,load_wall_s,reason\n",
+        );
+        for r in &self.rows {
+            let load = r.load.clone().unwrap_or_default();
+            out.push_str(&format!(
+                "{:.3},{},{},{},{:.4},{:.1},{},{:.4},{},{},{},{},{},{:.3},{:.3},{:.3},{:.1},{:.4},{:.4},{}\n",
+                r.at_s / 3600.0,
+                r.decision,
+                r.forced,
+                r.gpus,
+                r.iter_s,
+                r.migration_s,
+                r.steps_run,
+                r.loss_before,
+                r.save.bytes_local,
+                r.save.bytes_cloud,
+                load.bytes_memory + load.bytes_disk,
+                load.bytes_rdma,
+                load.bytes_cloud,
+                r.local_frac,
+                r.peer_frac,
+                r.cloud_frac,
+                r.timing_model_s,
+                r.save_wall_s,
+                r.load_wall_s,
+                r.reason.replace(',', ";"),
+            ));
+        }
+        out
+    }
+
+    /// `step,loss` CSV of the real loss curve.
+    pub fn loss_csv(&self) -> String {
+        let mut out = String::from("step,loss\n");
+        for (i, l) in self.losses.iter().enumerate() {
+            out.push_str(&format!("{i},{l:.6}\n"));
+        }
+        out
+    }
+}
+
+/// Largest TP dimension ≤ `desired` at which the engine's tensors shard
+/// evenly (column splits divide `3·d_model` and `d_ff`; row splits divide
+/// `d_model` and `d_ff`) — the TP shape checkpoints are written at, so a
+/// plan's TP choice exercises real resharding without ever producing an
+/// indivisible shard.
+pub fn ckpt_tp(dims: &ModelDims, desired: usize) -> usize {
+    let mut tp = desired.max(1);
+    while tp > 1 {
+        if dims.d_model % tp == 0 && (3 * dims.d_model) % tp == 0 && dims.d_ff % tp == 0 {
+            return tp;
+        }
+        tp -= 1;
+    }
+    1
+}
+
+/// Rescale one group's stage layer spans (over the analytic model's
+/// layer total) onto `n_layers` engine layers: proportional cumulative
+/// boundaries, every stage keeps ≥ 1 layer, trailing stages merge when
+/// the engine has fewer layers than the plan has stages.
+fn rescale_spans(spans: &[usize], n_layers: usize) -> Vec<usize> {
+    if spans.is_empty() {
+        return vec![n_layers];
+    }
+    let total: usize = spans.iter().sum::<usize>().max(1);
+    let s = spans.len().min(n_layers).max(1);
+    let mut merged: Vec<usize> = spans[..s].to_vec();
+    for &extra in &spans[s..] {
+        *merged.last_mut().unwrap() += extra;
+    }
+    let mut out = Vec::with_capacity(s);
+    let mut prev = 0usize;
+    let mut cum = 0usize;
+    for (i, &w) in merged.iter().enumerate() {
+        cum += w;
+        let remaining = s - i - 1;
+        let mut b = if remaining == 0 {
+            n_layers
+        } else {
+            ((cum as f64 / total as f64) * n_layers as f64).round() as usize
+        };
+        b = b.clamp(prev + 1, n_layers - remaining);
+        out.push(b - prev);
+        prev = b;
+    }
+    out
+}
+
+/// Map a plan's per-group stage partition onto the engine's layer count:
+/// the [`ExecTopology::from_layer_splits`] input that mirrors the plan.
+/// Only the first `min(dp_degree, max_groups)` groups are materialized.
+pub fn engine_splits(plan: &ParallelPlan, n_layers: usize, max_groups: usize) -> Vec<Vec<usize>> {
+    plan.groups
+        .iter()
+        .take(max_groups.max(1))
+        .map(|g| {
+            let spans: Vec<usize> = g.stages.iter().map(|s| s.n_layers()).collect();
+            rescale_spans(&spans, n_layers)
+        })
+        .collect()
+}
+
+/// Engine-layer spans of group 0 with the plan node that hosts each:
+/// `(layer_lo, layer_hi, node_id)` — the checkpoint placement map.
+fn layer_nodes(plan: &ParallelPlan, splits0: &[usize]) -> Vec<(usize, usize, usize)> {
+    let stages = &plan.groups[0].stages;
+    let mut out = Vec::with_capacity(splits0.len());
+    let mut lo = 0usize;
+    for (si, &span) in splits0.iter().enumerate() {
+        let node = stages[si.min(stages.len() - 1)].gpus[0].node;
+        out.push((lo, lo + span, node));
+        lo += span;
+    }
+    out
+}
+
+/// Node hosting a given (pseudo-)layer under the placement map: embed
+/// with the first stage, head with the last.
+fn node_of(spans: &[(usize, usize, usize)], layer: usize) -> usize {
+    if layer == CkptKey::EMBED {
+        return spans.first().map_or(0, |s| s.2);
+    }
+    if layer == CkptKey::HEAD {
+        return spans.last().map_or(0, |s| s.2);
+    }
+    spans
+        .iter()
+        .find(|&&(lo, hi, _)| layer >= lo && layer < hi)
+        .map_or(0, |s| s.2)
+}
+
+/// One group-major batch draw from the shared corpus stream.
+fn draw_batches(
+    corpus: &mut MarkovCorpus,
+    dims: &ModelDims,
+    groups: usize,
+    k: usize,
+) -> Vec<Vec<(HostTensor, HostTensor)>> {
+    (0..groups)
+        .map(|_| {
+            (0..k)
+                .map(|_| {
+                    let (t, g) = corpus.next_batch(dims.microbatch, dims.seq);
+                    (
+                        HostTensor::from_i32(&[dims.microbatch, dims.seq], t),
+                        HostTensor::from_i32(&[dims.microbatch, dims.seq], g),
+                    )
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Deterministic held-out eval set: 8 microbatches from the *same*
+/// Markov chain the training stream draws from, but sampled with an
+/// independent RNG stream — no train/eval leakage, and enacted and
+/// baseline runs are compared on identical data.
+pub fn eval_batches(dims: &ModelDims, seed: u64) -> Vec<(HostTensor, HostTensor)> {
+    let mut corpus =
+        MarkovCorpus::with_sample_seed(dims.vocab, 4, seed ^ 0x5EED, seed ^ 0xE7A1_0FF5);
+    (0..8)
+        .map(|_| {
+            let (t, g) = corpus.next_batch(dims.microbatch, dims.seq);
+            (
+                HostTensor::from_i32(&[dims.microbatch, dims.seq], t),
+                HostTensor::from_i32(&[dims.microbatch, dims.seq], g),
+            )
+        })
+        .collect()
+}
+
+/// Run `steps` real optimizer steps, appending per-step losses.
+fn run_interval(
+    tr: &mut PipelineTrainer<'_>,
+    corpus: &mut MarkovCorpus,
+    dims: &ModelDims,
+    steps: usize,
+    k: usize,
+    losses: &mut Vec<f64>,
+) -> Result<()> {
+    for _ in 0..steps {
+        let batches = draw_batches(corpus, dims, tr.groups.len(), k);
+        losses.push(tr.step(&batches)?.loss);
+    }
+    Ok(())
+}
+
+/// Train the same model **uninterrupted** (no events, fixed topology,
+/// same seeds and corpus stream) for `steps` — the elastic-equivalence
+/// oracle an enacted run is compared against. Returns the loss curve and
+/// the final held-out eval loss.
+pub fn baseline_train(
+    engine: &Engine,
+    splits: &[Vec<usize>],
+    steps: usize,
+    cfg: &EnactConfig,
+) -> Result<(Vec<f64>, f64)> {
+    let dims = engine.manifest.dims;
+    let topo = ExecTopology::from_layer_splits(splits);
+    let mut tr = PipelineTrainer::new(engine, &topo, cfg.k_per_group, cfg.adam, cfg.seed)?;
+    let mut corpus = MarkovCorpus::new(dims.vocab, 4, cfg.seed ^ 0x5EED);
+    let mut losses = Vec::new();
+    run_interval(&mut tr, &mut corpus, &dims, steps, cfg.k_per_group, &mut losses)?;
+    let eval = tr.eval_loss(&eval_batches(&dims, cfg.seed))?;
+    Ok((losses, eval))
+}
+
+/// Enact a spot-market trace end-to-end on the real training stack. The
+/// decision trail is produced live by the same coordinator logic as
+/// [`super::replay::replay`] — run both with the same trace + config and
+/// [`EnactReport::matches_decision_log`] holds.
+pub fn enact(
+    engine: &Engine,
+    profile: &ProfileDb,
+    trace: &SpotTrace,
+    cfg: &EnactConfig,
+) -> Result<EnactReport> {
+    ensure!(cfg.steps_per_event >= 1, "steps_per_event must be >= 1");
+    let dims = engine.manifest.dims;
+    let cluster = opening_cluster(profile, trace, cfg.replay.gpus_per_node)?;
+    let rcfg = ReplanConfig {
+        objective: cfg.replay.objective,
+        policy: cfg.replay.policy,
+        opts: cfg.replay.opts.clone(),
+        gpus_per_node: cfg.replay.gpus_per_node.max(1),
+    };
+    let mut coord =
+        ElasticCoordinator::new_with(profile.model.clone(), profile.clone(), cluster, rcfg)?;
+    coord.reprice(&opening_prices(trace))?;
+
+    let mut mgr = CheckpointManager::new(&cfg.ckpt_dir)?;
+    let mut corpus = MarkovCorpus::new(dims.vocab, 4, cfg.seed ^ 0x5EED);
+    let mut report = EnactReport::default();
+
+    // materialize the opening plan
+    let mut trainer: Option<PipelineTrainer> = None;
+    let mut spans: Vec<(usize, usize, usize)> = Vec::new();
+    if let Some(plan) = coord.plan.clone() {
+        let splits = engine_splits(&plan, dims.n_layers, cfg.max_groups);
+        let topo = ExecTopology::from_layer_splits(&splits);
+        trainer = Some(PipelineTrainer::new(
+            engine,
+            &topo,
+            cfg.k_per_group,
+            cfg.adam,
+            cfg.seed,
+        )?);
+        spans = layer_nodes(&plan, &splits[0]);
+    }
+
+    for ev in trace.market_events(cfg.replay.price_rel_threshold) {
+        // 1) train the interval leading up to this event
+        let mut steps_run = 0usize;
+        if let Some(tr) = trainer.as_mut() {
+            run_interval(
+                tr,
+                &mut corpus,
+                &dims,
+                cfg.steps_per_event,
+                cfg.k_per_group,
+                &mut report.losses,
+            )?;
+            steps_run = cfg.steps_per_event;
+        }
+        let loss_before = report.losses.last().copied().unwrap_or(f64::NAN);
+
+        // 2) checkpoint the replica at the event instant (the durable
+        // state predates the preemption it is about to survive)
+        let mut save = SaveReport::default();
+        let mut save_wall_s = 0.0;
+        if let Some(tr) = trainer.as_ref() {
+            let tp = ckpt_tp(&dims, coord.plan.as_ref().map_or(1, |p| p.tp_dim));
+            let g0 = &tr.groups[0];
+            let placement = spans.clone();
+            let t0 = Instant::now();
+            save = mgr.save_full(
+                report.losses.len() as u64,
+                &g0.params,
+                Some(&g0.adam),
+                tp,
+                &|l| node_of(&placement, l),
+            )?;
+            save_wall_s = t0.elapsed().as_secs_f64();
+        }
+
+        // 3) the market moves: apply the event, kill dead nodes' local
+        // checkpoint tiers (their cloud replicas survive)
+        let before_nodes: std::collections::BTreeSet<usize> =
+            coord.cluster.nodes.iter().map(|n| n.node_id).collect();
+        let out = coord.handle_market_event(&ev)?;
+        let after_nodes: std::collections::BTreeSet<usize> =
+            out.cluster.nodes.iter().map(|n| n.node_id).collect();
+        for dead in before_nodes.difference(&after_nodes) {
+            mgr.bitmap.drop_node(*dead);
+        }
+        if out.decision == ReplanDecision::Paused {
+            // the whole run is descheduled: every node's local tiers go
+            // back to the market, volatile memory is wiped (§IV-B1)
+            for n in &before_nodes {
+                mgr.bitmap.drop_node(*n);
+            }
+            mgr.store.wipe_memory();
+            trainer = None;
+            spans.clear();
+            report.pauses += 1;
+        }
+
+        // 4) enact a switch: rebuild the trainer from the tiered store
+        let mut load: Option<LoadReport> = None;
+        let mut load_wall_s = 0.0;
+        let (mut local_frac, mut peer_frac, mut cloud_frac) = (0.0, 0.0, 0.0);
+        let mut timing_model_s = 0.0;
+        if out.decision == ReplanDecision::Switched {
+            let plan = out
+                .plan
+                .clone()
+                .ok_or_else(|| anyhow!("coordinator switched without a plan"))?;
+            let splits = engine_splits(&plan, dims.n_layers, cfg.max_groups);
+            let topo = ExecTopology::from_layer_splits(&splits);
+            if mgr.bitmap.keys().is_empty() {
+                // nothing was ever checkpointed (the run opened paused):
+                // this "restore" is a fresh start
+                trainer = Some(PipelineTrainer::new(
+                    engine,
+                    &topo,
+                    cfg.k_per_group,
+                    cfg.adam,
+                    cfg.seed,
+                )?);
+            } else {
+                let load_node = plan.groups[0].stages[0].gpus[0].node;
+                let mut params = ModelParams::init(&dims, cfg.seed);
+                let mut adam = Adam::new(cfg.adam, &params);
+                let t1 = Instant::now();
+                let rep = mgr.load_full(&mut params, Some(&mut adam), load_node)?;
+                load_wall_s = t1.elapsed().as_secs_f64();
+                // optimizer step count continues across the migration
+                adam.step = report.losses.len() as u64;
+                let (lf, pf, cf) = rep.fractions();
+                local_frac = lf;
+                peer_frac = pf;
+                cloud_frac = cf;
+                let sc = RecoveryScenario {
+                    surviving_nodes: after_nodes.len().max(1),
+                    local_frac,
+                    peer_frac,
+                    dp_groups_new: plan.dp_degree(),
+                };
+                timing_model_s =
+                    autohet_recovery_s(&profile.model, &sc, &Interconnect::default());
+                load = Some(rep);
+                trainer = Some(PipelineTrainer::from_state(
+                    engine,
+                    &topo,
+                    cfg.k_per_group,
+                    &params,
+                    &adam,
+                )?);
+            }
+            spans = layer_nodes(&plan, &splits[0]);
+            report.switches += 1;
+        }
+
+        // 5) meters + the decision row
+        report.bytes_saved_local += save.bytes_local;
+        report.bytes_saved_cloud += save.bytes_cloud;
+        report.save_sim_s += save.sim_local_s + save.sim_cloud_s;
+        report.save_wall_s += save_wall_s;
+        if let Some(l) = &load {
+            report.bytes_loaded_local += l.bytes_memory + l.bytes_disk;
+            report.bytes_loaded_rdma += l.bytes_rdma;
+            report.bytes_loaded_cloud += l.bytes_cloud;
+            report.load_sim_s += l.sim_s;
+            report.load_wall_s += load_wall_s;
+        }
+        let iter_s = out.plan.as_ref().map_or(0.0, |p| p.est_iter_s);
+        let dp_groups = out.plan.as_ref().map_or(0, |p| p.dp_degree());
+        report.rows.push(EnactRow {
+            at_s: ev.at_s,
+            decision: out.decision,
+            forced: out.forced,
+            gpus: out.cluster.total_gpus(),
+            iter_s,
+            price_per_hour: out.price_per_hour,
+            migration_s: out.migration_s,
+            steps_run,
+            loss_before,
+            dp_groups,
+            enacted_groups: trainer.as_ref().map_or(0, |t| t.groups.len()),
+            save,
+            save_wall_s,
+            load,
+            load_wall_s,
+            local_frac,
+            peer_frac,
+            cloud_frac,
+            timing_model_s,
+            reason: out.reason,
+        });
+    }
+
+    // the tail interval after the last event
+    if let Some(tr) = trainer.as_mut() {
+        run_interval(
+            tr,
+            &mut corpus,
+            &dims,
+            cfg.steps_per_event,
+            cfg.k_per_group,
+            &mut report.losses,
+        )?;
+    }
+
+    report.steps = report.losses.len();
+    report.final_train_loss = report.losses.last().copied().unwrap_or(f64::NAN);
+    if let Some(tr) = trainer.as_ref() {
+        report.replicas_synced = tr.replicas_synced(1e-5);
+        report.final_eval_loss = tr.eval_loss(&eval_batches(&dims, cfg.seed))?;
+    } else {
+        report.final_eval_loss = f64::NAN;
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{GpuRef, KindId};
+    use crate::planner::{DpGroupPlan, StagePlan};
+
+    fn stage(node: usize, lo: usize, hi: usize, last: usize) -> StagePlan {
+        StagePlan {
+            gpus: vec![GpuRef { node, local: 0 }],
+            kind: KindId::A100,
+            layer_lo: lo,
+            layer_hi: hi,
+            has_embed: lo == 0,
+            has_head: hi == last,
+        }
+    }
+
+    fn plan(groups: Vec<Vec<(usize, usize, usize)>>, n_layers: usize) -> ParallelPlan {
+        ParallelPlan {
+            model_name: "t".into(),
+            tp_dim: 1,
+            groups: groups
+                .into_iter()
+                .map(|sts| DpGroupPlan {
+                    stages: sts
+                        .into_iter()
+                        .map(|(node, lo, hi)| stage(node, lo, hi, n_layers))
+                        .collect(),
+                    microbatches: 4,
+                })
+                .collect(),
+            est_iter_s: 0.1,
+            planning_s: 0.0,
+        }
+    }
+
+    fn dims() -> ModelDims {
+        ModelDims {
+            vocab: 64, d_model: 128, n_heads: 4, d_ff: 512,
+            seq: 16, microbatch: 1, n_layers: 4, params_count: 0,
+        }
+    }
+
+    #[test]
+    fn rescale_preserves_count_and_coverage() {
+        // 24 model layers over stages [8, 8, 8] -> 4 engine layers
+        for (spans, n, expect) in [
+            (vec![8usize, 8, 8], 4usize, vec![1usize, 2, 1]),
+            (vec![24], 4, vec![4]),
+            (vec![12, 12], 4, vec![2, 2]),
+            (vec![20, 4], 4, vec![3, 1]),
+        ] {
+            let got = rescale_spans(&spans, n);
+            assert_eq!(got.iter().sum::<usize>(), n, "{spans:?}");
+            assert!(got.iter().all(|&l| l >= 1), "{spans:?} -> {got:?}");
+            assert_eq!(got, expect, "{spans:?}");
+        }
+    }
+
+    #[test]
+    fn rescale_merges_excess_stages() {
+        // more plan stages than engine layers: every engine stage keeps
+        // >= 1 layer and the count clamps to n_layers
+        let got = rescale_spans(&[4, 4, 4, 4, 4, 4], 4);
+        assert_eq!(got.len(), 4);
+        assert_eq!(got.iter().sum::<usize>(), 4);
+        assert!(got.iter().all(|&l| l == 1));
+    }
+
+    #[test]
+    fn engine_splits_mirror_plan_shape() {
+        let p = plan(vec![vec![(0, 0, 12), (1, 12, 24)], vec![(2, 0, 24)]], 24);
+        let splits = engine_splits(&p, 4, 4);
+        assert_eq!(splits, vec![vec![2, 2], vec![4]]);
+        // the topology it feeds validates against the engine layer count
+        ExecTopology::from_layer_splits(&splits).validate(4).unwrap();
+        // max_groups caps materialized replicas
+        assert_eq!(engine_splits(&p, 4, 1).len(), 1);
+    }
+
+    #[test]
+    fn placement_maps_layers_to_plan_nodes() {
+        let p = plan(vec![vec![(3, 0, 12), (5, 12, 24)]], 24);
+        let splits = engine_splits(&p, 4, 4);
+        let spans = layer_nodes(&p, &splits[0]);
+        assert_eq!(spans, vec![(0, 2, 3), (2, 4, 5)]);
+        assert_eq!(node_of(&spans, 0), 3);
+        assert_eq!(node_of(&spans, 3), 5);
+        assert_eq!(node_of(&spans, CkptKey::EMBED), 3);
+        assert_eq!(node_of(&spans, CkptKey::HEAD), 5);
+    }
+
+    #[test]
+    fn ckpt_tp_respects_divisibility() {
+        let d = dims();
+        assert_eq!(ckpt_tp(&d, 1), 1);
+        assert_eq!(ckpt_tp(&d, 2), 2);
+        assert_eq!(ckpt_tp(&d, 8), 8); // 128 % 8 == 0, 512 % 8 == 0
+        assert_eq!(ckpt_tp(&d, 0), 1);
+        // an odd d_model clamps down to a dividing dimension
+        let odd = ModelDims { d_model: 96, d_ff: 384, ..d };
+        assert_eq!(ckpt_tp(&odd, 8), 8); // 96 % 8 == 0
+        let prime = ModelDims { d_model: 97, d_ff: 388, ..d };
+        assert_eq!(ckpt_tp(&prime, 8), 1);
+    }
+
+    #[test]
+    fn empty_report_csvs_have_headers() {
+        let r = EnactReport::default();
+        assert!(r.to_csv().starts_with("t_hours,decision"));
+        assert_eq!(r.loss_csv(), "step,loss\n");
+        assert!(r.matches_decision_log(&ReplayReport::default()));
+    }
+}

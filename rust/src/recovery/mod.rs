@@ -15,12 +15,20 @@
 //!   through the coordinator and account tokens, dollars, downtime, and
 //!   replans taken vs skipped ([`ReplayReport`]); the scenario engine
 //!   behind the greedy-vs-amortized comparisons (`docs/ELASTICITY.md`).
+//! * [`enact`](mod@enact) — execute the decision log on the **real**
+//!   stack: per-segment [`crate::pipeline::PipelineTrainer`] steps,
+//!   layer-wise [`crate::checkpoint::CheckpointManager`] save/load on
+//!   every replan with local-first tiering, real loss curves and byte
+//!   counters ([`EnactReport`]) — the loss-level regression oracle for
+//!   the whole elastic stack.
 
+pub mod enact;
 pub mod migration;
 pub mod orchestrator;
 pub mod replay;
 pub mod timing;
 
+pub use enact::{baseline_train, enact, EnactConfig, EnactReport, EnactRow};
 pub use migration::{plan_migration, MigrationPlan};
 pub use orchestrator::{
     ElasticCoordinator, ReplanConfig, ReplanDecision, ReplanOutcome, ReplanPolicy,

@@ -20,7 +20,7 @@
 
 use anyhow::Result;
 
-use crate::cluster::SpotTrace;
+use crate::cluster::{ClusterSpec, KindId, SpotTrace};
 use crate::planner::cost::plan_tokens_per_iter;
 use crate::planner::{Objective, PlanOptions};
 use crate::profile::ProfileDb;
@@ -173,10 +173,16 @@ fn active_of(coord: &ElasticCoordinator) -> Option<(f64, f64, f64)> {
     })
 }
 
-/// Replay a trace end-to-end. The initial fleet is the trace's first
-/// availability sample, chunked into `gpus_per_node`-sized nodes over
-/// the profile's catalog.
-pub fn replay(profile: &ProfileDb, trace: &SpotTrace, cfg: &ReplayConfig) -> Result<ReplayReport> {
+/// The fleet a trace opens with: its first availability sample, chunked
+/// into `gpus_per_node`-sized nodes over the profile's catalog. Shared
+/// by [`replay`] and [`super::enact::enact`] so both drive the elastic
+/// coordinator from the identical opening state (and hence take the
+/// identical decision log on the same trace + config).
+pub(crate) fn opening_cluster(
+    profile: &ProfileDb,
+    trace: &SpotTrace,
+    gpus_per_node: usize,
+) -> Result<ClusterSpec> {
     for &(kind, _) in &trace.cfg.capacity {
         anyhow::ensure!(
             kind.index() < profile.catalog.len(),
@@ -185,7 +191,7 @@ pub fn replay(profile: &ProfileDb, trace: &SpotTrace, cfg: &ReplayConfig) -> Res
             profile.catalog
         );
     }
-    let node_size = cfg.gpus_per_node.max(1);
+    let node_size = gpus_per_node.max(1);
     let mut counts = Vec::new();
     for (ki, &(kind, _)) in trace.cfg.capacity.iter().enumerate() {
         let mut have = trace.avail[0][ki];
@@ -195,7 +201,27 @@ pub fn replay(profile: &ProfileDb, trace: &SpotTrace, cfg: &ReplayConfig) -> Res
             have -= take;
         }
     }
-    let cluster = crate::cluster::ClusterSpec::from_counts_in(&profile.catalog, &counts);
+    Ok(ClusterSpec::from_counts_in(&profile.catalog, &counts))
+}
+
+/// The trace's step-0 price sample, applied from t=0 (`market_events`
+/// only emits from step 1 on).
+pub(crate) fn opening_prices(trace: &SpotTrace) -> Vec<(KindId, f64)> {
+    trace
+        .cfg
+        .capacity
+        .iter()
+        .enumerate()
+        .map(|(ki, &(kind, _))| (kind, trace.prices[0][ki]))
+        .collect()
+}
+
+/// Replay a trace end-to-end. The initial fleet is the trace's first
+/// availability sample, chunked into `gpus_per_node`-sized nodes over
+/// the profile's catalog.
+pub fn replay(profile: &ProfileDb, trace: &SpotTrace, cfg: &ReplayConfig) -> Result<ReplayReport> {
+    let node_size = cfg.gpus_per_node.max(1);
+    let cluster = opening_cluster(profile, trace, node_size)?;
     let rcfg = ReplanConfig {
         objective: cfg.objective,
         policy: cfg.policy,
@@ -205,15 +231,8 @@ pub fn replay(profile: &ProfileDb, trace: &SpotTrace, cfg: &ReplayConfig) -> Res
     let mut coord =
         ElasticCoordinator::new_with(profile.model.clone(), profile.clone(), cluster, rcfg)?;
     // the trace's opening price sample applies from t=0, to both billing
-    // and the opening plan pick (market_events only emits from step 1 on)
-    let opening: Vec<_> = trace
-        .cfg
-        .capacity
-        .iter()
-        .enumerate()
-        .map(|(ki, &(kind, _))| (kind, trace.prices[0][ki]))
-        .collect();
-    coord.reprice(&opening)?;
+    // and the opening plan pick
+    coord.reprice(&opening_prices(trace))?;
 
     let horizon_s = trace.covered_s();
     let mut meter = Meter::default();

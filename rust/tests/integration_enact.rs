@@ -1,0 +1,250 @@
+//! Elastic-equivalence integration over the REAL artifact path: a
+//! hand-built 3-event spot trace is enacted end-to-end — real optimizer
+//! steps per market segment, layer-wise checkpoint save/load through the
+//! tiered store on every replan — and must land within tolerance of the
+//! uninterrupted baseline run with identical seeds, with replicas still
+//! bit-synced. Plus: two identical enact runs produce bit-identical loss
+//! curves, the enactment follows the replay decision log exactly, and a
+//! full-fleet pause resumes from the cloud tier alone.
+//!
+//! All tests skip (with a notice) until the AOT artifacts exist
+//! (`cd python && python -m compile.aot --preset tiny --out-dir ../rust/artifacts`).
+
+use std::path::{Path, PathBuf};
+
+use autohet::cluster::{GpuCatalog, KindId, SpotTrace, TraceConfig};
+use autohet::modelcfg::ModelCfg;
+use autohet::profile::ProfileDb;
+use autohet::recovery::{
+    baseline_train, enact, replay, EnactConfig, ReplanDecision, ReplayConfig,
+};
+use autohet::runtime::Engine;
+use autohet::train::AdamConfig;
+
+fn tiny_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny")
+}
+
+fn engine() -> Option<Engine> {
+    if !tiny_dir().join("manifest.json").exists() {
+        eprintln!("SKIP: run the AOT compile first (python -m compile.aot)");
+        return None;
+    }
+    Some(Engine::load(&tiny_dir()).unwrap())
+}
+
+fn tmp(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "ah-enact-{tag}-{}-{}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn profile() -> ProfileDb {
+    ProfileDb::build(&ModelCfg::bert_large(), &GpuCatalog::builtin(), &[1, 2, 4, 8], 1)
+}
+
+/// A trace with hand-built availability so it yields EXACTLY three
+/// market events: preempt 4×H800, preempt 2×A100, grant 2×A100. Prices
+/// are flat so no price-only events fire.
+fn three_event_trace() -> SpotTrace {
+    let tc = TraceConfig {
+        horizon_s: 6.0 * 600.0,
+        step_s: 600.0,
+        capacity: vec![(KindId::A100, 6), (KindId::H800, 4)],
+        base_price_per_hour: vec![(KindId::A100, 1.2), (KindId::H800, 2.5)],
+        ..Default::default()
+    };
+    let kinds: Vec<KindId> = tc.capacity.iter().map(|&(k, _)| k).collect();
+    SpotTrace {
+        kinds,
+        avail: vec![
+            vec![6, 4],
+            vec![6, 4],
+            vec![6, 0], // event 1: all H800 preempted
+            vec![6, 0],
+            vec![4, 0], // event 2: 2×A100 preempted
+            vec![6, 0], // event 3: 2×A100 granted back
+        ],
+        prices: vec![vec![1.2, 2.5]; 6],
+        cfg: tc,
+    }
+}
+
+/// A trace that kills the whole fleet then grants a fresh one, forcing a
+/// pause + cloud-only resume.
+fn pause_resume_trace() -> SpotTrace {
+    let tc = TraceConfig {
+        horizon_s: 5.0 * 600.0,
+        step_s: 600.0,
+        capacity: vec![(KindId::A100, 6), (KindId::H800, 4)],
+        base_price_per_hour: vec![(KindId::A100, 1.2), (KindId::H800, 2.5)],
+        ..Default::default()
+    };
+    let kinds: Vec<KindId> = tc.capacity.iter().map(|&(k, _)| k).collect();
+    SpotTrace {
+        kinds,
+        avail: vec![
+            vec![6, 4],
+            vec![6, 4],
+            vec![0, 0], // everything preempted -> pause
+            vec![0, 0],
+            vec![4, 0], // fresh grant -> resume from cloud
+        ],
+        prices: vec![vec![1.2, 2.5]; 5],
+        cfg: tc,
+    }
+}
+
+fn cfg(tag: &str) -> EnactConfig {
+    EnactConfig {
+        replay: ReplayConfig::default(),
+        steps_per_event: 4,
+        k_per_group: 2,
+        max_groups: 2,
+        adam: AdamConfig { lr: 2e-3, ..Default::default() },
+        seed: 7,
+        ckpt_dir: tmp(tag),
+    }
+}
+
+#[test]
+fn three_event_enactment_is_loss_equivalent_to_uninterrupted() {
+    let Some(e) = engine() else { return };
+    let p = profile();
+    let trace = three_event_trace();
+    let c = cfg("equiv");
+
+    let report = enact(&e, &p, &trace, &c).unwrap();
+    assert_eq!(report.rows.len(), 3, "the trace must yield exactly 3 events");
+    assert!(report.switches >= 1, "losing all H800s must force a migration");
+    assert!(report.steps >= 3 * c.steps_per_event, "paused too much: {}", report.steps);
+    assert!(report.replicas_synced, "replicas diverged through the enactment");
+    assert!(report.final_eval_loss.is_finite());
+
+    // the uninterrupted oracle: identical seeds, same number of real steps
+    let (base_losses, base_eval) =
+        baseline_train(&e, &[vec![e.manifest.dims.n_layers]], report.steps, &c).unwrap();
+    assert_eq!(base_losses.len(), report.steps);
+    let diff = (report.final_eval_loss - base_eval).abs();
+    assert!(
+        diff < 0.3,
+        "enacted {:.4} vs uninterrupted {:.4}: |Δ| = {diff:.4}",
+        report.final_eval_loss,
+        base_eval
+    );
+    // both runs actually trained (eval below the untrained starting point)
+    let (_, init_eval) = baseline_train(&e, &[vec![e.manifest.dims.n_layers]], 0, &c).unwrap();
+    assert!(report.final_eval_loss < init_eval, "{} !< {init_eval}", report.final_eval_loss);
+    assert!(base_eval < init_eval);
+}
+
+#[test]
+fn enactment_follows_the_replay_decision_log_and_reconciles_bytes() {
+    let Some(e) = engine() else { return };
+    let p = profile();
+    let trace = three_event_trace();
+    let c = cfg("log");
+
+    let log = replay(&p, &trace, &c.replay).unwrap();
+    let report = enact(&e, &p, &trace, &c).unwrap();
+    assert!(
+        report.matches_decision_log(&log),
+        "enactment diverged from the replay decision log:\n{:?}\nvs\n{:?}",
+        report.rows.iter().map(|r| (r.at_s, r.decision, r.forced)).collect::<Vec<_>>(),
+        log.rows.iter().map(|r| (r.at_s, r.decision, r.forced)).collect::<Vec<_>>()
+    );
+
+    // every enacted migration's byte counters feed the Fig-10 model:
+    // fractions partition the measured bytes, and the timing model prices
+    // them to a positive recovery time
+    let mut loads = 0;
+    for r in &report.rows {
+        if let Some(load) = &r.load {
+            loads += 1;
+            assert!(load.total_bytes() > 0);
+            assert!(
+                (r.local_frac + r.peer_frac + r.cloud_frac - 1.0).abs() < 1e-9,
+                "fractions must partition the load: {r:?}"
+            );
+            assert!(r.timing_model_s > 0.0);
+        }
+        // a checkpoint is written at every event the run was live for
+        if r.steps_run > 0 {
+            assert!(r.save.bytes_local > 0 && r.save.bytes_cloud > 0);
+            assert_eq!(r.save.bytes_local, r.save.bytes_cloud);
+        }
+    }
+    assert!(loads >= 1, "no real restore was exercised");
+
+    // CSV surface: header + one line per event, fixed column count
+    let csv = report.to_csv();
+    let lines: Vec<&str> = csv.lines().collect();
+    assert_eq!(lines.len(), report.rows.len() + 1);
+    let cols = lines[0].matches(',').count();
+    for l in &lines[1..] {
+        assert_eq!(l.matches(',').count(), cols, "{l}");
+    }
+}
+
+#[test]
+fn two_identical_enact_runs_are_bit_identical() {
+    let Some(e) = engine() else { return };
+    let p = profile();
+    let trace = three_event_trace();
+
+    let a = enact(&e, &p, &trace, &cfg("det-a")).unwrap();
+    let b = enact(&e, &p, &trace, &cfg("det-b")).unwrap();
+    assert_eq!(a.losses, b.losses, "loss curves must be bit-identical");
+    assert_eq!(a.final_eval_loss, b.final_eval_loss);
+    assert_eq!(a.steps, b.steps);
+    assert_eq!(a.switches, b.switches);
+    assert_eq!(
+        a.rows.iter().map(|r| r.decision).collect::<Vec<_>>(),
+        b.rows.iter().map(|r| r.decision).collect::<Vec<_>>()
+    );
+    assert_eq!(a.bytes_loaded_cloud, b.bytes_loaded_cloud);
+}
+
+#[test]
+fn full_fleet_pause_resumes_from_cloud_only() {
+    let Some(e) = engine() else { return };
+    let p = profile();
+    let trace = pause_resume_trace();
+    let c = cfg("pause");
+
+    let report = enact(&e, &p, &trace, &c).unwrap();
+    assert_eq!(report.pauses, 1);
+    let pause = report
+        .rows
+        .iter()
+        .find(|r| r.decision == ReplanDecision::Paused)
+        .expect("no pause row");
+    // the pre-pause checkpoint made it to the cloud before the fleet died
+    assert!(pause.save.bytes_cloud > 0);
+
+    let resume = report
+        .rows
+        .iter()
+        .find(|r| r.decision == ReplanDecision::Switched && r.load.is_some())
+        .expect("no resume row");
+    assert_eq!(resume.steps_run, 0, "nothing trains while paused");
+    let load = resume.load.as_ref().unwrap();
+    assert!(load.bytes_cloud > 0, "resume must pull from the cloud");
+    assert_eq!(
+        load.bytes_memory + load.bytes_disk + load.bytes_rdma,
+        0,
+        "no local tier survives a full-fleet preemption: {load:?}"
+    );
+    assert!((resume.cloud_frac - 1.0).abs() < 1e-9);
+    // training continues after the resume: the pre-pause interval plus
+    // the post-resume tail train, the paused interval does not
+    assert_eq!(report.steps, 2 * c.steps_per_event);
+    assert!(report.replicas_synced);
+}

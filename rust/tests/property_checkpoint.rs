@@ -1,0 +1,218 @@
+//! Property suite for the layer-wise checkpoint stack — codec, TP
+//! sharding, tiered store, bitmap, and the manager's save/load
+//! orchestration. Artifact-free: replicas are synthetic `ModelParams`,
+//! so this runs in every environment (unlike the engine-backed
+//! integration tests).
+//!
+//! Pinned properties:
+//! * arbitrary shard layouts round-trip `save_full` → `load_full`
+//!   losslessly (params and Adam moments, any TP dim, any placement);
+//! * `bytes_cloud == 0` whenever every local tier is intact (local-first
+//!   retrieval never touches the cloud front door);
+//! * after a node dies, the load downloads **exactly** the dead node's
+//!   bitmap complement from the cloud — no more, no less;
+//! * the codec rejects truncation and round-trips arbitrary bundles.
+
+use autohet::checkpoint::{codec, CheckpointManager, CkptKey, Location, StorageTier};
+use autohet::runtime::{HostTensor, ModelDims};
+use autohet::train::{Adam, AdamConfig, ModelParams};
+use autohet::util::rng::Rng;
+
+fn tmp(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "ah-prop-ckpt-{tag}-{}-{}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Random model dims whose shard axes divide evenly for tp ∈ {1, 2, 4}.
+fn arb_dims(rng: &mut Rng) -> ModelDims {
+    let d_model = [8, 16, 32][rng.below(3)];
+    ModelDims {
+        vocab: 16 + rng.below(48),
+        d_model,
+        n_heads: 2,
+        d_ff: d_model * (2 + rng.below(3)),
+        seq: 4 + rng.below(5),
+        microbatch: 1,
+        n_layers: 1 + rng.below(6),
+        params_count: 0,
+    }
+}
+
+#[test]
+fn arbitrary_shard_layouts_roundtrip_losslessly() {
+    for case in 0..12u64 {
+        let mut rng = Rng::new(0xC0DE ^ case);
+        let d = arb_dims(&mut rng);
+        let tp = [1usize, 2, 4][rng.below(3)];
+        let n_nodes = 1 + rng.below(4);
+        let placement: Vec<usize> = (0..d.n_layers).map(|_| rng.below(n_nodes)).collect();
+
+        let params = ModelParams::init(&d, 11 + case);
+        let mut adam = Adam::new(AdamConfig::default(), &params);
+        // non-trivial moments
+        let mut g = params.zeros_like();
+        for (_, t) in g.tensors_mut() {
+            t.f32s_mut()
+                .iter_mut()
+                .enumerate()
+                .for_each(|(i, x)| *x = (i % 13) as f32 * 1e-3);
+        }
+        let mut stepped = params.clone();
+        adam.update(&mut stepped, &g);
+
+        let mut mgr = CheckpointManager::new(&tmp(&format!("rt-{case}"))).unwrap();
+        let placement_of = |l: usize| {
+            if l >= CkptKey::EMBED {
+                0
+            } else {
+                placement[l]
+            }
+        };
+        let save = mgr
+            .save_full(case, &stepped, Some(&adam), tp, &placement_of)
+            .unwrap();
+        // every unit lands on a local tier AND the cloud replica
+        assert!(save.bytes_local > 0 && save.bytes_cloud > 0);
+        assert_eq!(save.bytes_local, save.bytes_cloud, "tiers see identical bytes");
+        // units: tp shards per layer + embed + head
+        assert_eq!(save.units, d.n_layers * tp + 2, "case {case}");
+
+        // load from a random node: lossless, and never from the cloud
+        // while every local tier is intact
+        let node = rng.below(n_nodes.max(1));
+        let mut out = ModelParams::init(&d, 999);
+        let mut out_adam = Adam::new(AdamConfig::default(), &out);
+        let rep = mgr.load_full(&mut out, Some(&mut out_adam), node).unwrap();
+        assert_eq!(out.max_abs_diff(&stepped), 0.0, "case {case} (tp {tp})");
+        assert_eq!(out_adam.m.max_abs_diff(&adam.m), 0.0);
+        assert_eq!(out_adam.v.max_abs_diff(&adam.v), 0.0);
+        assert_eq!(rep.bytes_cloud, 0, "local tiers intact, case {case}: {rep:?}");
+        assert_eq!(rep.total_bytes(), save.bytes_local, "all saved bytes reload");
+        // fractions partition the load
+        let (lf, pf, cf) = rep.fractions();
+        assert!((lf + pf + cf - 1.0).abs() < 1e-12, "case {case}");
+        assert_eq!(cf, 0.0);
+    }
+}
+
+#[test]
+fn dead_node_load_fetches_exactly_the_bitmap_complement() {
+    for case in 0..8u64 {
+        let mut rng = Rng::new(0xDEAD ^ case);
+        let d = arb_dims(&mut rng);
+        let tp = [1usize, 2][rng.below(2)];
+        let n_nodes = 2 + rng.below(3); // >= 2 so someone survives
+        let params = ModelParams::init(&d, 3 + case);
+        let mut mgr = CheckpointManager::new(&tmp(&format!("dead-{case}"))).unwrap();
+        let placement_of = move |l: usize| {
+            if l >= CkptKey::EMBED {
+                0
+            } else {
+                l % n_nodes
+            }
+        };
+        mgr.save_full(case, &params, None, tp, &placement_of).unwrap();
+
+        let dead = rng.below(n_nodes);
+        mgr.bitmap.drop_node(dead);
+
+        // the bitmap complement: units whose every non-cloud copy died
+        let cloud_keys = mgr.bitmap.cloud_only_keys();
+        for k in &cloud_keys {
+            let holder = placement_of(k.layer);
+            assert_eq!(holder, dead, "only the dead node's units go cloud-only: {k:?}");
+        }
+        let expected_cloud: u64 = cloud_keys
+            .iter()
+            .map(|k| {
+                let (bytes, _) = mgr
+                    .store
+                    .get(StorageTier::Cloud, &k.storage_key(case))
+                    .unwrap();
+                bytes.len() as u64
+            })
+            .sum();
+
+        let survivor = (dead + 1) % n_nodes;
+        let mut out = ModelParams::init(&d, 77);
+        let rep = mgr.load_full(&mut out, None, survivor).unwrap();
+        assert_eq!(out.max_abs_diff(&params), 0.0, "case {case}");
+        assert_eq!(
+            rep.bytes_cloud, expected_cloud,
+            "cloud download must be exactly the dead node's complement (case {case})"
+        );
+        // surviving nodes' units never touch the cloud
+        if cloud_keys.is_empty() {
+            assert_eq!(rep.bytes_cloud, 0);
+        } else {
+            assert!(rep.bytes_cloud > 0);
+        }
+    }
+}
+
+#[test]
+fn codec_roundtrips_arbitrary_bundles_and_rejects_truncation() {
+    for case in 0..16u64 {
+        let mut rng = Rng::new(0xC0DEC ^ case);
+        let n_tensors = 1 + rng.below(6);
+        let bundle: Vec<(String, HostTensor)> = (0..n_tensors)
+            .map(|i| {
+                let ndim = 1 + rng.below(3);
+                let shape: Vec<usize> = (0..ndim).map(|_| 1 + rng.below(5)).collect();
+                let n: usize = shape.iter().product();
+                let t = if rng.below(2) == 0 {
+                    HostTensor::from_f32(
+                        &shape,
+                        (0..n).map(|j| (j as f32 - 2.5) * rng.f32()).collect(),
+                    )
+                } else {
+                    HostTensor::from_i32(&shape, (0..n).map(|j| j as i32 - 3).collect())
+                };
+                (format!("t{i}"), t)
+            })
+            .collect();
+        let refs: Vec<(String, &HostTensor)> =
+            bundle.iter().map(|(n, t)| (n.clone(), t)).collect();
+        let bytes = codec::encode(&refs);
+        let back = codec::decode(&bytes).unwrap();
+        assert_eq!(back.len(), bundle.len());
+        for ((n0, t0), (n1, t1)) in bundle.iter().zip(&back) {
+            assert_eq!(n0, n1);
+            assert_eq!(t0, t1, "case {case}");
+        }
+        // any strict prefix must be rejected, never mis-decoded
+        let cut = 1 + rng.below(bytes.len() - 1);
+        assert!(codec::decode(&bytes[..cut]).is_err(), "case {case} cut {cut}");
+    }
+}
+
+#[test]
+fn bitmap_tracks_saves_local_first() {
+    let mut rng = Rng::new(0xB17);
+    let d = arb_dims(&mut rng);
+    let params = ModelParams::init(&d, 1);
+    let mut mgr = CheckpointManager::new(&tmp("bitmap")).unwrap();
+    mgr.save_full(5, &params, None, 2, &|_| 3).unwrap();
+    for key in mgr.bitmap.keys() {
+        // saving node's memory is always the best location for itself
+        assert_eq!(mgr.bitmap.best_location(&key, 3), Some(Location::Memory(3)));
+        // a foreign node still prefers peer memory over the cloud
+        let best = mgr.bitmap.best_location(&key, 0).unwrap();
+        assert!(matches!(best, Location::Memory(3)), "{best:?}");
+    }
+    // volatile wipe falls back to disk, then a full drop to cloud
+    mgr.bitmap.drop_node_memory(3);
+    let k = CkptKey::layer(0, 0, 2);
+    assert_eq!(mgr.bitmap.best_location(&k, 3), Some(Location::Disk(3)));
+    mgr.bitmap.drop_node(3);
+    assert_eq!(mgr.bitmap.best_location(&k, 3), Some(Location::Cloud));
+    assert_eq!(mgr.bitmap.cloud_only_keys().len(), mgr.bitmap.keys().len());
+}
