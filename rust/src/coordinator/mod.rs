@@ -10,7 +10,7 @@ use crate::log_info;
 use crate::metrics::Recorder;
 use crate::modelcfg::ModelCfg;
 use crate::pipeline::{ExecTopology, PipelineTrainer};
-use crate::planner::{auto_plan, plan_choice, Objective, PlanOptions, ScoredPlan};
+use crate::planner::{auto_plan, plan_choice, BudgetEnvelope, Objective, PlanOptions, ScoredPlan};
 use crate::profile::ProfileDb;
 use crate::recovery::{
     baseline_train, enact, replay, EnactConfig, ReplanPolicy, ReplayConfig, ReplayReport,
@@ -26,10 +26,12 @@ autohet — automatic 3D parallelism for heterogeneous spot-instance GPUs
 USAGE:
   autohet plan    [--model NAME] [--cluster FILE|--counts 4xA100,2xH800]
                   [--objective time|cost] [--no-bench] [--out FILE]
+                  [--budget-usd X] [--deadline-h H]
                   cluster FILEs may carry a custom GPU catalog (`catalog.kinds`,
                   incl. per-kind `price_per_hour` / `rdma_nics`); `--objective
                   cost` picks the cheapest-per-token plan, `--no-bench` forces
-                  the paper's use-every-device grouping
+                  the paper's use-every-device grouping; with a budget
+                  envelope the pick maximizes tokens projected within it
   autohet sim     [--model NAME] [--counts ...]       simulate an iteration
   autohet train   [--artifacts DIR] [--steps N] [--groups 2,2|4] [--k N]
                   [--lr F] [--seed N] [--csv FILE]    real PJRT training
@@ -37,13 +39,17 @@ USAGE:
   autohet replay  [--model NAME] [--cluster FILE|--counts ...] [--hours H]
                   [--objective time|cost] [--amortize-h H] [--greedy]
                   [--gpus-per-node N] [--seed N] [--csv FILE]
+                  [--budget-usd X] [--deadline-h H]
                   replay a generated spot-market trace (per-kind capacity =
                   the given cluster counts) through the elastic coordinator;
                   amortized replanning by default, `--greedy` replans on
                   every delta like the seed coordinator, `--csv` dumps the
-                  per-event decision log
+                  per-event decision log; `--budget-usd`/`--deadline-h` cap
+                  the run (spend ≤ $X, stop at T) — the meter halts at the
+                  cap and decisions weigh candidates within the envelope
   autohet enact   [--model NAME] [--cluster FILE|--counts ...] [--hours H]
                   [--objective time|cost] [--amortize-h H] [--greedy]
+                  [--budget-usd X] [--deadline-h H]
                   [--gpus-per-node N] [--seed N] [--steps-per-event N]
                   [--k N] [--max-groups N] [--ckpt-dir DIR]
                   [--artifacts DIR] [--csv FILE] [--loss-csv FILE]
@@ -90,6 +96,41 @@ fn build_profile(model: &ModelCfg, catalog: &GpuCatalog, seed: u64) -> ProfileDb
     ProfileDb::build(model, catalog, &[1, 2, 4, 8], seed)
 }
 
+/// `--budget-usd X` / `--deadline-h H` → the run's spending envelope
+/// (shared by `plan`, `replay`, and `enact`; both flags optional).
+fn envelope_from(args: &Args) -> Result<BudgetEnvelope> {
+    let max_usd = match args.get("budget-usd") {
+        Some(s) => {
+            let v: f64 = s.parse().map_err(|e| anyhow!("bad --budget-usd `{s}`: {e}"))?;
+            anyhow::ensure!(v > 0.0, "--budget-usd must be positive, got {v}");
+            Some(v)
+        }
+        None => None,
+    };
+    let deadline_s = match args.get("deadline-h") {
+        Some(s) => {
+            let v: f64 = s.parse().map_err(|e| anyhow!("bad --deadline-h `{s}`: {e}"))?;
+            anyhow::ensure!(v > 0.0, "--deadline-h must be positive, got {v}");
+            Some(v * 3600.0)
+        }
+        None => None,
+    };
+    Ok(BudgetEnvelope { max_usd, deadline_s })
+}
+
+/// One-line rendering of an envelope's constraints.
+fn fmt_envelope(e: &BudgetEnvelope) -> String {
+    let cap = match e.max_usd {
+        Some(v) => format!("${v:.2}"),
+        None => "∞".to_string(),
+    };
+    let dl = match e.deadline_s {
+        Some(v) => format!("{:.1}h", v / 3600.0),
+        None => "∞".to_string(),
+    };
+    format!("budget {cap}, deadline {dl}")
+}
+
 /// Render one scored candidate for the CLI.
 fn print_scored(tag: &str, s: &ScoredPlan, catalog: &GpuCatalog) {
     println!("{tag}: {}", s.plan.summary(catalog));
@@ -122,10 +163,27 @@ pub fn cmd_plan(args: &Args) -> Result<()> {
     let cluster = load_cluster(args)?;
     let profile = build_profile(&model, &cluster.catalog, args.get_u64("seed", 1));
     let objective: Objective = args.get_str("objective", "time").parse()?;
+    let envelope = envelope_from(args)?;
     let opts = PlanOptions { bench: !args.has("no-bench"), ..Default::default() };
     let choice = plan_choice(&cluster, &profile, &opts)?;
-    let pick = choice.pick(objective);
+    let pick = choice.pick_within(objective, &envelope, 0.0, 0.0);
     print_scored("plan", pick, &cluster.catalog);
+    if envelope.is_bounded() {
+        let run_s = envelope.run_s(0.0, 0.0, pick.price_per_hour);
+        // sustainable = remaining-$ spread to the deadline; a fleet rate
+        // above it means the budget, not the deadline, ends the run
+        let sustain = match envelope.sustainable_per_hour(0.0, 0.0) {
+            s if s.is_finite() => format!(" (sustainable ${s:.2}/h)"),
+            _ => String::new(),
+        };
+        println!(
+            "  envelope: {} | runs {:.1}h at ${:.2}/h{sustain} | ≈{:.2e} tokens within it",
+            fmt_envelope(&envelope),
+            run_s / 3600.0,
+            pick.price_per_hour,
+            pick.tokens_within(&envelope, 0.0, 0.0)
+        );
+    }
     println!("planning {:.2}s", pick.plan.planning_s);
     // When the two objectives disagree, show what the road not taken
     // would have bought.
@@ -271,6 +329,21 @@ fn print_replay(tag: &str, r: &ReplayReport) {
         r.unchanged,
         r.events
     );
+    if r.envelope.is_bounded() {
+        let slack_usd = match r.budget_slack_usd {
+            Some(v) => format!("${v:.2}"),
+            None => "∞".to_string(),
+        };
+        let slack_h = match r.deadline_slack_s {
+            Some(v) => format!("{:.1}h", v / 3600.0),
+            None => "∞".to_string(),
+        };
+        println!(
+            "  envelope: {} | {} | slack: {slack_usd} budget, {slack_h} deadline",
+            fmt_envelope(&r.envelope),
+            if r.exhausted { "EXHAUSTED — run stopped early" } else { "held to the horizon" }
+        );
+    }
 }
 
 pub fn cmd_replay(args: &Args) -> Result<()> {
@@ -319,6 +392,7 @@ fn market_setup(
     default_hours: f64,
 ) -> Result<(SpotTrace, ReplayConfig)> {
     let objective: Objective = args.get_str("objective", "time").parse()?;
+    let envelope = envelope_from(args)?;
     let hours = args.get_f64("hours", default_hours);
     let amortize_h = args.get_f64("amortize-h", 6.0);
     let seed = args.get_u64("seed", 1);
@@ -333,7 +407,12 @@ fn market_setup(
     let rcfg = ReplayConfig {
         objective,
         policy,
+        // a bounded envelope needs benched-subset candidates: the
+        // voluntary downshift to a cheaper sub-fleet is only possible
+        // when plans that idle some devices are on the table
+        opts: PlanOptions { bench: envelope.is_bounded(), ..Default::default() },
         gpus_per_node: args.get_usize("gpus-per-node", 8),
+        envelope,
         ..Default::default()
     };
     Ok((trace, rcfg))
@@ -435,6 +514,18 @@ pub fn cmd_enact(args: &Args) -> Result<()> {
         report.load_wall_s,
         report.load_sim_s
     );
+    if ecfg.replay.envelope.is_bounded() {
+        let slack = match report.budget_slack_usd {
+            Some(v) => format!("${v:.2}"),
+            None => "∞".to_string(),
+        };
+        println!(
+            "envelope:  {} | simulated spend ${:.2} | budget slack {slack}{}",
+            fmt_envelope(&ecfg.replay.envelope),
+            report.usd,
+            if report.exhausted { " | EXHAUSTED — run stopped early" } else { "" }
+        );
+    }
 
     if let Some(csv) = args.get("csv") {
         std::fs::write(csv, report.to_csv())?;
@@ -523,6 +614,28 @@ mod tests {
         assert_eq!(fmt_benched(&v, 1, &cat), "1xA100,2xH20");
         // entities × tp = GPUs: one benched tp-4 entity is 4 idle GPUs
         assert_eq!(fmt_benched(&v, 4, &cat), "4xA100,8xH20");
+    }
+
+    #[test]
+    fn envelope_flags_parse() {
+        let args = Args::parse(["replay".to_string()]);
+        assert!(!envelope_from(&args).unwrap().is_bounded());
+        let args = Args::parse([
+            "replay".into(),
+            "--budget-usd".into(),
+            "120.5".into(),
+            "--deadline-h".into(),
+            "12".into(),
+        ]);
+        let e = envelope_from(&args).unwrap();
+        assert_eq!(e.max_usd, Some(120.5));
+        assert_eq!(e.deadline_s, Some(12.0 * 3600.0));
+        assert_eq!(fmt_envelope(&e), "budget $120.50, deadline 12.0h");
+        // invalid values error instead of silently falling back
+        let args = Args::parse(["replay".into(), "--budget-usd".into(), "-3".into()]);
+        assert!(envelope_from(&args).is_err());
+        let args = Args::parse(["replay".into(), "--deadline-h".into(), "soon".into()]);
+        assert!(envelope_from(&args).is_err());
     }
 
     #[test]

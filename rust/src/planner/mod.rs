@@ -26,6 +26,10 @@
 //! * **Dollar objective**: every candidate is priced with the catalog's
 //!   per-kind spot `price_per_hour`; [`plan::plan_choice`] reports both
 //!   the fastest and the cheapest-per-token plan ([`PlanChoice`]).
+//! * **Budget envelopes**: a run-level "spend at most $X by deadline T"
+//!   constraint ([`BudgetEnvelope`]); [`PlanChoice::pick_within`]
+//!   re-ranks the candidate set by tokens projected *within* the
+//!   envelope, shifting from fastest to cheapest plans as slack shrinks.
 
 pub mod cost;
 pub mod grouping;
@@ -35,5 +39,7 @@ pub mod plan;
 pub mod solver;
 pub mod types;
 
-pub use plan::{auto_plan, plan_choice, Objective, PlanChoice, PlanOptions, ScoredPlan};
+pub use plan::{
+    auto_plan, plan_choice, BudgetEnvelope, Objective, PlanChoice, PlanOptions, ScoredPlan,
+};
 pub use types::{DpGroupPlan, ParallelPlan, StagePlan};

@@ -40,6 +40,72 @@ pub struct PlanOptions {
     pub bench: bool,
 }
 
+/// A run-level spending envelope: "spend at most `max_usd` and be done
+/// by `deadline_s`". This is the constraint real spot users operate
+/// under — not "fastest plan now" but "most training bought before the
+/// money or the time runs out". Threaded from the CLI through
+/// [`PlanChoice::pick_within`], the elastic coordinator's amortization
+/// rule, and the replay/enact spend meters (`docs/ELASTICITY.md`
+/// § Budget envelope).
+///
+/// `None` (or an infinite bound) means unconstrained on that axis; the
+/// all-`None` envelope is inert and every consumer reproduces its
+/// envelope-free behavior bit-identically.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct BudgetEnvelope {
+    /// Cumulative spend cap for the whole run, USD.
+    pub max_usd: Option<f64>,
+    /// Wall-clock deadline, seconds from run start; training past it is
+    /// worthless (the run stops there).
+    pub deadline_s: Option<f64>,
+}
+
+impl BudgetEnvelope {
+    /// The inert envelope: no cap, no deadline.
+    pub const UNBOUNDED: BudgetEnvelope = BudgetEnvelope { max_usd: None, deadline_s: None };
+
+    /// True when either axis actually constrains the run (an infinite
+    /// cap or deadline is as inert as `None`).
+    pub fn is_bounded(&self) -> bool {
+        self.max_usd.is_some_and(|v| v.is_finite())
+            || self.deadline_s.is_some_and(|v| v.is_finite())
+    }
+
+    /// Dollars left under the cap after `spent_usd` (∞ without a cap,
+    /// clamped at 0 once overspent).
+    pub fn remaining_usd(&self, spent_usd: f64) -> f64 {
+        self.max_usd.map_or(f64::INFINITY, |m| (m - spent_usd).max(0.0))
+    }
+
+    /// Seconds left before the deadline at wall-clock `now_s` (∞ without
+    /// a deadline, clamped at 0 once past it).
+    pub fn remaining_s(&self, now_s: f64) -> f64 {
+        self.deadline_s.map_or(f64::INFINITY, |d| (d - now_s).max(0.0))
+    }
+
+    /// The longest a fleet billing `price_per_hour` can keep running
+    /// before hitting the budget cap or the deadline, seconds.
+    pub fn run_s(&self, spent_usd: f64, now_s: f64, price_per_hour: f64) -> f64 {
+        let by_deadline = self.remaining_s(now_s);
+        if price_per_hour <= 0.0 {
+            return by_deadline;
+        }
+        by_deadline.min(self.remaining_usd(spent_usd) / price_per_hour * 3600.0)
+    }
+
+    /// Sustainable burn rate: the remaining dollars spread evenly over
+    /// the time left to the deadline, $/hr (∞ when either axis is
+    /// unbounded — or when no time is left, in which case any rate
+    /// "fits" because nothing more can be spent).
+    pub fn sustainable_per_hour(&self, spent_usd: f64, now_s: f64) -> f64 {
+        let rem_s = self.remaining_s(now_s);
+        if !rem_s.is_finite() || rem_s <= 0.0 {
+            return f64::INFINITY;
+        }
+        self.remaining_usd(spent_usd) / (rem_s / 3600.0)
+    }
+}
+
 /// What the planner optimizes when picking among scored candidates.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Objective {
@@ -78,6 +144,31 @@ pub struct ScoredPlan {
     pub cost_per_iter_usd: f64,
     /// Training tokens bought per dollar.
     pub tokens_per_usd: f64,
+    /// Training tokens one iteration advances (global batch × seq).
+    pub tokens_per_iter: f64,
+}
+
+impl ScoredPlan {
+    /// Training throughput at the sim estimate, tokens per second.
+    pub fn tokens_per_s(&self) -> f64 {
+        if self.plan.est_iter_s > 0.0 {
+            self.tokens_per_iter / self.plan.est_iter_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Tokens this plan is projected to train before a budget envelope
+    /// stops it: throughput × the longest its fleet can keep billing.
+    /// (A zero-throughput plan projects 0 even over an unbounded window
+    /// — never the `0 × ∞ = NaN` that would poison comparisons.)
+    pub fn tokens_within(&self, envelope: &BudgetEnvelope, spent_usd: f64, now_s: f64) -> f64 {
+        let tps = self.tokens_per_s();
+        if tps <= 0.0 {
+            return 0.0;
+        }
+        tps * envelope.run_s(spent_usd, now_s, self.price_per_hour)
+    }
 }
 
 /// The planner's verdict under both objectives. `fastest` is what
@@ -88,6 +179,10 @@ pub struct ScoredPlan {
 pub struct PlanChoice {
     pub fastest: ScoredPlan,
     pub cheapest: ScoredPlan,
+    /// Every scored candidate the loop materialized (the two picks above
+    /// are members). [`PlanChoice::pick_within`] re-ranks this full set
+    /// under a budget envelope.
+    pub candidates: Vec<ScoredPlan>,
 }
 
 impl PlanChoice {
@@ -97,6 +192,50 @@ impl PlanChoice {
             Objective::Time => &self.fastest,
             Objective::Cost => &self.cheapest,
         }
+    }
+
+    /// Budget/deadline-aware pick: the candidate that maximizes the
+    /// tokens projected to train *within the envelope* given what has
+    /// already been spent. A plan whose burn rate exhausts the remaining
+    /// budget before the deadline only trains until the money runs out
+    /// ([`ScoredPlan::tokens_within`]), so as slack shrinks the pick
+    /// naturally shifts from the fastest plan toward cheaper (possibly
+    /// benched-subset) plans:
+    ///
+    /// * deadline-only → projected tokens ∝ tokens/s → the fastest plan;
+    /// * budget-only → projected tokens ∝ tokens/$ → the cheapest plan;
+    /// * both → whichever candidate buys the most training before the
+    ///   first constraint bites.
+    ///
+    /// Ties (including several plans projecting ∞ tokens under a
+    /// degenerate envelope) break toward higher throughput, then first
+    /// wins. With an unbounded envelope this is exactly
+    /// [`PlanChoice::pick`]`(objective)` — the envelope-free paths stay
+    /// bit-identical.
+    pub fn pick_within(
+        &self,
+        objective: Objective,
+        envelope: &BudgetEnvelope,
+        spent_usd: f64,
+        now_s: f64,
+    ) -> &ScoredPlan {
+        if !envelope.is_bounded() {
+            return self.pick(objective);
+        }
+        let mut best: Option<(&ScoredPlan, f64)> = None;
+        for c in &self.candidates {
+            let proj = c.tokens_within(envelope, spent_usd, now_s);
+            let better = match &best {
+                None => true,
+                Some((b, bp)) => {
+                    proj > *bp || (proj == *bp && c.tokens_per_s() > b.tokens_per_s())
+                }
+            };
+            if better {
+                best = Some((c, proj));
+            }
+        }
+        best.map(|(c, _)| c).unwrap_or_else(|| self.pick(objective))
     }
 }
 
@@ -161,11 +300,13 @@ pub fn plan_choice(
         })
         .ok_or_else(no_plan)?;
     let planning_s = t0.elapsed().as_secs_f64();
-    let mut fastest = cands[fastest].clone();
-    let mut cheapest = cands[cheapest].clone();
-    fastest.plan.planning_s = planning_s;
-    cheapest.plan.planning_s = planning_s;
-    Ok(PlanChoice { fastest, cheapest })
+    let mut cands = cands;
+    for c in cands.iter_mut() {
+        c.plan.planning_s = planning_s;
+    }
+    let fastest = cands[fastest].clone();
+    let cheapest = cands[cheapest].clone();
+    Ok(PlanChoice { fastest, cheapest, candidates: cands })
 }
 
 /// Materialize and score every candidate grouping: map, partition,
@@ -254,6 +395,7 @@ fn scored_candidates(
                 price_per_hour,
                 cost_per_iter_usd,
                 tokens_per_usd,
+                tokens_per_iter: tokens,
             });
         }
     }
@@ -356,6 +498,77 @@ mod tests {
         let benched =
             auto_plan(&cluster, &p, &PlanOptions { bench: true, ..Default::default() }).unwrap();
         assert!(benched.est_iter_s <= plain.est_iter_s + 1e-12);
+    }
+
+    #[test]
+    fn envelope_arithmetic() {
+        let e = BudgetEnvelope { max_usd: Some(10.0), deadline_s: Some(7200.0) };
+        assert!(e.is_bounded());
+        assert_eq!(e.remaining_usd(4.0), 6.0);
+        assert_eq!(e.remaining_usd(12.0), 0.0);
+        assert_eq!(e.remaining_s(3600.0), 3600.0);
+        assert_eq!(e.remaining_s(9000.0), 0.0);
+        // $6 left at $3/h buys 2 h; only 1 h remains to the deadline
+        assert_eq!(e.run_s(4.0, 3600.0, 3.0), 3600.0);
+        // $6 left at $12/h buys 30 min, inside the deadline hour
+        assert_eq!(e.run_s(4.0, 3600.0, 12.0), 1800.0);
+        // free fleet: only the deadline binds
+        assert_eq!(e.run_s(4.0, 3600.0, 0.0), 3600.0);
+        assert_eq!(e.sustainable_per_hour(4.0, 3600.0), 6.0);
+        // an infinite bound is as inert as None
+        assert!(!BudgetEnvelope::UNBOUNDED.is_bounded());
+        let inf = BudgetEnvelope { max_usd: Some(f64::INFINITY), deadline_s: None };
+        assert!(!inf.is_bounded());
+        assert_eq!(BudgetEnvelope::UNBOUNDED.remaining_usd(5.0), f64::INFINITY);
+        assert_eq!(BudgetEnvelope::UNBOUNDED.sustainable_per_hour(5.0, 0.0), f64::INFINITY);
+    }
+
+    #[test]
+    fn pick_within_unbounded_is_the_objective_pick() {
+        let model = ModelCfg::bert_large();
+        let p = profile(&model);
+        let cluster = ClusterSpec::from_counts(&[(4, KindId::A100), (4, KindId::H800)]);
+        let choice = plan_choice(&cluster, &p, &PlanOptions::default()).unwrap();
+        for obj in [Objective::Time, Objective::Cost] {
+            let a = choice.pick(obj);
+            let b = choice.pick_within(obj, &BudgetEnvelope::UNBOUNDED, 123.0, 456.0);
+            assert_eq!(a.plan, b.plan, "{obj:?}");
+            // an infinite cap is inert too (the issue's `max_usd = ∞` case)
+            let inf = BudgetEnvelope { max_usd: Some(f64::INFINITY), deadline_s: None };
+            let c = choice.pick_within(obj, &inf, 123.0, 456.0);
+            assert_eq!(a.plan, c.plan, "{obj:?}");
+        }
+    }
+
+    #[test]
+    fn pick_within_shifts_with_the_binding_constraint() {
+        let model = ModelCfg::bert_large();
+        let p = profile(&model);
+        let cluster = ClusterSpec::from_counts(&[(4, KindId::A100), (2, KindId::H800)]);
+        let choice =
+            plan_choice(&cluster, &p, &PlanOptions { bench: true, ..Default::default() }).unwrap();
+        // deadline-only: maximize tokens by the deadline = max throughput
+        let dl = BudgetEnvelope { deadline_s: Some(3600.0), max_usd: None };
+        let pick = choice.pick_within(Objective::Cost, &dl, 0.0, 0.0);
+        let best_tps =
+            choice.candidates.iter().map(|c| c.tokens_per_s()).fold(0.0f64, f64::max);
+        assert!((pick.tokens_per_s() - best_tps).abs() < 1e-9);
+        // budget-only: projected tokens = budget × tokens/$ — the
+        // cheapest-per-token plan wins regardless of the objective
+        let b = BudgetEnvelope { max_usd: Some(10.0), deadline_s: None };
+        let pick = choice.pick_within(Objective::Time, &b, 0.0, 0.0);
+        assert!((pick.tokens_per_usd - choice.cheapest.tokens_per_usd).abs() < 1e-9);
+        // the pick's projection is the max over all candidates
+        let best_proj = choice
+            .candidates
+            .iter()
+            .map(|c| c.tokens_within(&b, 0.0, 0.0))
+            .fold(0.0f64, f64::max);
+        assert!((pick.tokens_within(&b, 0.0, 0.0) - best_proj).abs() < 1e-6);
+        // overspent: every projection is 0, but a plan is still returned
+        let broke = choice.pick_within(Objective::Time, &b, 99.0, 0.0);
+        assert_eq!(broke.tokens_within(&b, 99.0, 0.0), 0.0);
+        assert!(broke.plan.est_iter_s > 0.0);
     }
 
     #[test]

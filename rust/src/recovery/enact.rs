@@ -48,7 +48,9 @@ use crate::runtime::{Engine, HostTensor, ModelDims};
 use crate::train::{Adam, AdamConfig, MarkovCorpus, ModelParams};
 
 use super::orchestrator::{ElasticCoordinator, ReplanConfig, ReplanDecision};
-use super::replay::{opening_cluster, opening_prices, ReplayConfig, ReplayReport};
+use super::replay::{
+    active_of, metered_advance, opening_cluster, opening_prices, Meter, ReplayConfig, ReplayReport,
+};
 use super::timing::{autohet_recovery_s, RecoveryScenario};
 
 /// How a decision log is enacted on the real training path.
@@ -153,6 +155,14 @@ pub struct EnactReport {
     /// Real wall-clock seconds across all saves / loads.
     pub save_wall_s: f64,
     pub load_wall_s: f64,
+    /// Simulated dollars billed — the replay engine's spend meter run
+    /// alongside the real steps, so a budget envelope stops the
+    /// enactment at the same instant it stops the replay.
+    pub usd: f64,
+    /// Dollars left under the envelope cap (`None` without a cap).
+    pub budget_slack_usd: Option<f64>,
+    /// True when the budget envelope (not the trace) ended the run.
+    pub exhausted: bool,
     pub rows: Vec<EnactRow>,
 }
 
@@ -400,14 +410,24 @@ pub fn enact(
         policy: cfg.replay.policy,
         opts: cfg.replay.opts.clone(),
         gpus_per_node: cfg.replay.gpus_per_node.max(1),
+        envelope: cfg.replay.envelope,
     };
     let mut coord =
         ElasticCoordinator::new_with(profile.model.clone(), profile.clone(), cluster, rcfg)?;
-    coord.reprice(&opening_prices(trace))?;
+    coord.reprice(&opening_prices(trace)?)?;
 
     let mut mgr = CheckpointManager::new(&cfg.ckpt_dir)?;
     let mut corpus = MarkovCorpus::new(dims.vocab, 4, cfg.seed ^ 0x5EED);
     let mut report = EnactReport::default();
+
+    // the analytic spend meter runs alongside the real steps: it is the
+    // replay meter to the bit (same `metered_advance` calls in the same
+    // order), so a budget cap stops the enactment at the exact instant
+    // it stops the replay of the same trace + config
+    let horizon_s = trace.covered_s();
+    let mut meter = Meter::default();
+    let mut t_cursor = 0.0;
+    let mut stopped: Option<String> = None;
 
     // materialize the opening plan
     let mut trainer: Option<PipelineTrainer> = None;
@@ -426,6 +446,23 @@ pub fn enact(
     }
 
     for ev in trace.market_events(cfg.replay.price_rel_threshold) {
+        // 0) meter the simulated interval; the envelope may end the run
+        // before this event fires (out-of-order event times are a
+        // malformed trace and error instead of being swallowed)
+        let active = active_of(&coord);
+        stopped = metered_advance(
+            &cfg.replay.envelope,
+            &mut meter,
+            &mut t_cursor,
+            ev.at_s,
+            horizon_s,
+            active,
+        )?;
+        if stopped.is_some() {
+            break;
+        }
+        coord.note_spend(meter.usd);
+
         // 1) train the interval leading up to this event
         let mut steps_run = 0usize;
         if let Some(tr) = trainer.as_mut() {
@@ -472,7 +509,9 @@ pub fn enact(
         }
         if out.decision == ReplanDecision::Paused {
             // the whole run is descheduled: every node's local tiers go
-            // back to the market, volatile memory is wiped (§IV-B1)
+            // back to the market, volatile memory is wiped (§IV-B1);
+            // an in-flight migration dies with the fleet (the meter
+            // mirrors the replay engine exactly)
             for n in &before_nodes {
                 mgr.bitmap.drop_node(*n);
             }
@@ -480,7 +519,9 @@ pub fn enact(
             trainer = None;
             spans.clear();
             report.pauses += 1;
+            meter.pending_migration_s = 0.0;
         }
+        meter.pending_migration_s += out.migration_s;
 
         // 4) enact a switch: rebuild the trainer from the tiered store
         let mut load: Option<LoadReport> = None;
@@ -576,17 +617,60 @@ pub fn enact(
         });
     }
 
-    // the tail interval after the last event
-    if let Some(tr) = trainer.as_mut() {
-        run_interval(
-            tr,
-            &mut corpus,
-            &dims,
-            cfg.steps_per_event,
-            cfg.k_per_group,
-            &mut report.losses,
+    // the tail interval after the last event (skipped when the envelope
+    // already ended the run)
+    if stopped.is_none() {
+        let active = active_of(&coord);
+        stopped = metered_advance(
+            &cfg.replay.envelope,
+            &mut meter,
+            &mut t_cursor,
+            horizon_s,
+            horizon_s,
+            active,
         )?;
+        if stopped.is_none() {
+            if let Some(tr) = trainer.as_mut() {
+                run_interval(
+                    tr,
+                    &mut corpus,
+                    &dims,
+                    cfg.steps_per_event,
+                    cfg.k_per_group,
+                    &mut report.losses,
+                )?;
+            }
+        }
     }
+    report.exhausted = stopped.is_some();
+    if let Some(why) = stopped {
+        // terminal row: the envelope ended the run — the fleet goes back
+        // to the market, nothing further trains, saves, or bills
+        report.rows.push(EnactRow {
+            at_s: t_cursor,
+            decision: ReplanDecision::BudgetExhausted,
+            forced: true,
+            gpus: coord.cluster.total_gpus(),
+            iter_s: 0.0,
+            price_per_hour: 0.0,
+            migration_s: 0.0,
+            steps_run: 0,
+            loss_before: report.losses.last().copied().unwrap_or(f64::NAN),
+            dp_groups: 0,
+            enacted_groups: 0,
+            save: SaveReport::default(),
+            save_wall_s: 0.0,
+            load: None,
+            load_wall_s: 0.0,
+            local_frac: 0.0,
+            peer_frac: 0.0,
+            cloud_frac: 0.0,
+            timing_model_s: 0.0,
+            reason: why,
+        });
+    }
+    report.usd = meter.usd;
+    report.budget_slack_usd = cfg.replay.envelope.max_usd.map(|m| m - meter.usd);
 
     report.steps = report.losses.len();
     report.final_train_loss = report.losses.last().copied().unwrap_or(f64::NAN);

@@ -15,6 +15,10 @@
 //!   through the coordinator and account tokens, dollars, downtime, and
 //!   replans taken vs skipped ([`ReplayReport`]); the scenario engine
 //!   behind the greedy-vs-amortized comparisons (`docs/ELASTICITY.md`).
+//!   Both replay and enact meter spend against an optional
+//!   [`crate::planner::BudgetEnvelope`] ("spend at most $X by deadline
+//!   T") and stop with a [`ReplanDecision::BudgetExhausted`] terminal
+//!   row when it runs out.
 //! * [`enact`](mod@enact) — execute the decision log on the **real**
 //!   stack: per-segment [`crate::pipeline::PipelineTrainer`] steps,
 //!   layer-wise [`crate::checkpoint::CheckpointManager`] save/load on

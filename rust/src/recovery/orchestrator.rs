@@ -26,7 +26,7 @@ use crate::cluster::{
 };
 use crate::modelcfg::ModelCfg;
 use crate::planner::cost::plan_tokens_per_iter;
-use crate::planner::{plan_choice, Objective, ParallelPlan, PlanOptions};
+use crate::planner::{plan_choice, BudgetEnvelope, Objective, ParallelPlan, PlanOptions};
 use crate::profile::ProfileDb;
 
 use super::migration::plan_migration;
@@ -61,6 +61,12 @@ pub struct ReplanConfig {
     /// at most this many GPUs (a spot grant is new instances — it cannot
     /// densify a half-preempted host into an impossible super-node).
     pub gpus_per_node: usize,
+    /// Run-level budget/deadline constraint. When bounded, candidates
+    /// are re-ranked by [`crate::planner::PlanChoice::pick_within`] and
+    /// the amortization rule scores tokens *within the envelope* (fed by
+    /// [`ElasticCoordinator::note_spend`]); unbounded (the default) keeps
+    /// every decision bit-identical to the envelope-free coordinator.
+    pub envelope: BudgetEnvelope,
 }
 
 impl Default for ReplanConfig {
@@ -70,6 +76,7 @@ impl Default for ReplanConfig {
             policy: ReplanPolicy::default(),
             opts: PlanOptions::default(),
             gpus_per_node: 8,
+            envelope: BudgetEnvelope::UNBOUNDED,
         }
     }
 }
@@ -84,6 +91,10 @@ pub enum ReplanDecision {
     Switched,
     /// No feasible plan on the surviving fleet; training pauses.
     Paused,
+    /// The run's budget envelope is spent (cap hit or deadline passed).
+    /// Never produced by the coordinator itself — the replay/enact spend
+    /// meters emit it as the terminal row of a budget-capped run.
+    BudgetExhausted,
 }
 
 impl fmt::Display for ReplanDecision {
@@ -92,6 +103,7 @@ impl fmt::Display for ReplanDecision {
             ReplanDecision::Kept => "kept",
             ReplanDecision::Switched => "switched",
             ReplanDecision::Paused => "paused",
+            ReplanDecision::BudgetExhausted => "budget-exhausted",
         })
     }
 }
@@ -132,6 +144,12 @@ pub struct ElasticCoordinator {
     pub prices: KindVec<f64>,
     /// Wall-clock of the last handled event, seconds.
     pub now_s: f64,
+    /// Cumulative dollars the run has billed so far, as reported by the
+    /// metering caller (replay / enact) via
+    /// [`ElasticCoordinator::note_spend`] before each event. The budget
+    /// envelope rule reads it; the coordinator never accrues spend
+    /// itself.
+    pub spent_usd: f64,
     /// Migrations actually taken (plan adopted).
     pub replans: usize,
     /// Events where the amortization rule deliberately declined a
@@ -213,7 +231,7 @@ impl ElasticCoordinator {
         );
         let plan = plan_choice(&cluster, &profile, &cfg.opts)
             .ok()
-            .map(|c| c.pick(cfg.objective).plan.clone());
+            .map(|c| c.pick_within(cfg.objective, &cfg.envelope, 0.0, 0.0).plan.clone());
         let next_node_id = cluster.nodes.iter().map(|n| n.node_id).max().map_or(0, |m| m + 1);
         Ok(ElasticCoordinator {
             model,
@@ -223,11 +241,19 @@ impl ElasticCoordinator {
             cfg,
             prices,
             now_s: 0.0,
+            spent_usd: 0.0,
             replans: 0,
             holds: 0,
             unchanged: 0,
             next_node_id,
         })
+    }
+
+    /// Report the run's cumulative billed dollars (metered by the
+    /// replay/enact caller) so the budget-envelope rule can price every
+    /// candidate against what is actually left.
+    pub fn note_spend(&mut self, usd: f64) {
+        self.spent_usd = usd;
     }
 
     /// The catalog with `price_per_hour` set to the *current* spot prices
@@ -265,9 +291,11 @@ impl ElasticCoordinator {
         cluster.catalog = cat.clone();
         let mut profile = self.profile.clone();
         profile.catalog = cat;
-        self.plan = plan_choice(&cluster, &profile, &self.cfg.opts)
-            .ok()
-            .map(|c| c.pick(self.cfg.objective).plan.clone());
+        self.plan = plan_choice(&cluster, &profile, &self.cfg.opts).ok().map(|c| {
+            c.pick_within(self.cfg.objective, &self.cfg.envelope, self.spent_usd, self.now_s)
+                .plan
+                .clone()
+        });
         Ok(())
     }
 
@@ -389,6 +417,54 @@ impl ElasticCoordinator {
         };
         let cur_tps = self.plan_tps(cur);
         let cand_tps = self.plan_tps(cand);
+        if self.cfg.envelope.is_bounded() {
+            // Under an envelope the score is a single currency: tokens
+            // trained before the budget or the deadline stops the run.
+            // Each side's window is the amortization horizon clamped to
+            // how long ITS fleet can keep billing — so a migration whose
+            // payback lands past the deadline can never win, and a
+            // cheaper candidate that simply runs longer on the remaining
+            // dollars beats a faster one that burns out (the voluntary
+            // downshift). The fleet bills through the migration, so the
+            // switch side loses its downtime out of the same window.
+            let env = &self.cfg.envelope;
+            let cand_price = cand.price_per_hour(cat);
+            let cur_price = cur.price_per_hour(cat);
+            let stay_run_s = horizon_s.min(env.run_s(self.spent_usd, self.now_s, cur_price));
+            let switch_run_s = horizon_s.min(env.run_s(self.spent_usd, self.now_s, cand_price));
+            let stay = stay_run_s * cur_tps;
+            let switch = (switch_run_s - t_m).max(0.0) * cand_tps;
+            let payback_s = if cand_tps > cur_tps {
+                t_m * cand_tps / (cand_tps - cur_tps)
+            } else {
+                f64::INFINITY
+            };
+            let slack = format!(
+                "${:.2} / {:.1}h left",
+                env.remaining_usd(self.spent_usd),
+                env.remaining_s(self.now_s) / 3600.0
+            );
+            return if switch > stay * (1.0 + min_rel_gain) {
+                Verdict {
+                    switch: true,
+                    migration_s: t_m,
+                    payback_s: Some(payback_s),
+                    reason: format!(
+                        "gain amortizes migration {t_m:.0}s within the envelope ({slack})"
+                    ),
+                }
+            } else {
+                Verdict {
+                    switch: false,
+                    migration_s: 0.0,
+                    payback_s: Some(payback_s),
+                    reason: format!(
+                        "held: candidate does not amortize migration {t_m:.0}s within the \
+                         envelope ({slack})"
+                    ),
+                }
+            };
+        }
         let (stay_score, switch_score, payback_s) = match self.cfg.objective {
             Objective::Time => {
                 // tokens trained over the horizon, downtime included
@@ -458,9 +534,10 @@ impl ElasticCoordinator {
         cluster.catalog = cat.clone();
         let mut profile = self.profile.clone();
         profile.catalog = cat.clone();
-        let cand = plan_choice(&cluster, &profile, &self.cfg.opts)
-            .ok()
-            .map(|c| c.pick(self.cfg.objective).clone());
+        let cand = plan_choice(&cluster, &profile, &self.cfg.opts).ok().map(|c| {
+            c.pick_within(self.cfg.objective, &self.cfg.envelope, self.spent_usd, self.now_s)
+                .clone()
+        });
 
         let (decision, forced, reason, migration_s, payback_s) = match (&old_plan, cand) {
             (_, None) => {
@@ -718,6 +795,64 @@ mod tests {
         assert!(out.migration_s > 0.0);
         assert_eq!(c.replans, 1);
         assert_eq!(c.holds, 0);
+    }
+
+    #[test]
+    fn passed_deadline_blocks_voluntary_migration() {
+        // past the deadline no candidate can buy tokens, so a migration's
+        // payback necessarily lands beyond it: the envelope-clamped
+        // amortization window scores every voluntary switch at 0 and the
+        // grant is held (a preemption would still force through — see
+        // forced_migration_ignores_the_envelope).
+        let (model, profile, cluster) = parts();
+        let cfg = ReplanConfig {
+            envelope: BudgetEnvelope { deadline_s: Some(500.0), max_usd: None },
+            ..Default::default()
+        };
+        let mut c = ElasticCoordinator::new_with(model, profile, cluster, cfg).unwrap();
+        assert!(c.plan.is_some(), "envelope must not prevent the opening plan");
+        let out = c.grant(KindId::H20, 4, 600.0).unwrap();
+        assert_eq!(out.decision, ReplanDecision::Kept);
+        assert_eq!(c.replans, 0);
+        assert_eq!(out.migration_s, 0.0);
+    }
+
+    #[test]
+    fn exhausted_budget_blocks_voluntary_migration() {
+        // with the cap already spent, no candidate can buy any tokens —
+        // the rule holds whatever is running rather than paying downtime
+        let (model, profile, cluster) = parts();
+        let cfg = ReplanConfig {
+            envelope: BudgetEnvelope { max_usd: Some(50.0), deadline_s: None },
+            ..Default::default()
+        };
+        let mut c = ElasticCoordinator::new_with(model, profile, cluster, cfg).unwrap();
+        c.note_spend(50.0);
+        assert_eq!(c.spent_usd, 50.0);
+        let out = c.grant(KindId::H20, 4, 600.0).unwrap();
+        assert_eq!(out.decision, ReplanDecision::Kept);
+        assert_eq!(c.replans, 0);
+    }
+
+    #[test]
+    fn forced_migration_ignores_the_envelope() {
+        // losing the running plan's GPUs forces a migration even with no
+        // budget slack left — there is nothing to hold on to
+        let (model, profile, cluster) = parts();
+        let cfg = ReplanConfig {
+            envelope: BudgetEnvelope { max_usd: Some(1.0), deadline_s: Some(900.0) },
+            ..Default::default()
+        };
+        let mut c = ElasticCoordinator::new_with(model, profile, cluster, cfg).unwrap();
+        c.note_spend(1.0);
+        let out = c.preempt(KindId::H800, 4, 600.0).unwrap();
+        assert_eq!(out.decision, ReplanDecision::Switched);
+        assert!(out.forced);
+    }
+
+    #[test]
+    fn budget_exhausted_decision_displays() {
+        assert_eq!(ReplanDecision::BudgetExhausted.to_string(), "budget-exhausted");
     }
 
     #[test]

@@ -8,11 +8,21 @@
 //! compared head-to-head on tokens and $/token. The accounting model:
 //!
 //! * between market events the active plan trains at its simulated
-//!   iteration rate and bills its fleet's *current* spot $/hr;
-//! * a migration charges its downtime (no tokens) while the fleet keeps
-//!   billing — downtime carries over into the following interval;
+//!   iteration rate and bills the GPUs it **occupies** at their current
+//!   spot $/hr — billing follows the *plan*, not the held fleet: granted
+//!   GPUs the plan leaves unplaced (benched subsets, surplus grants) are
+//!   released back to the market and bill nothing;
+//! * a migration charges its downtime (no tokens) while the plan's
+//!   fleet keeps billing — downtime carries over into the following
+//!   interval;
 //! * with no feasible plan the run is paused: no tokens, no billing (the
-//!   fleet is released back to the market).
+//!   whole fleet is released back to the market);
+//! * an optional [`BudgetEnvelope`] caps the run: the meter stops the
+//!   replay at the exact instant the cumulative spend reaches `max_usd`
+//!   or the wall clock reaches `deadline_s`, emitting a terminal
+//!   [`ReplanDecision::BudgetExhausted`] row. An unbounded envelope
+//!   reproduces the unconstrained replay bit-identically
+//!   (`tests/property_envelope.rs` pins this).
 //!
 //! Prices are stepwise-constant between emitted events (the trace's
 //! price track moves every step; events are emitted per
@@ -22,7 +32,7 @@ use anyhow::Result;
 
 use crate::cluster::{ClusterSpec, KindId, SpotTrace};
 use crate::planner::cost::plan_tokens_per_iter;
-use crate::planner::{Objective, PlanOptions};
+use crate::planner::{BudgetEnvelope, Objective, PlanOptions};
 use crate::profile::ProfileDb;
 
 use super::orchestrator::{per_usd, ElasticCoordinator, ReplanConfig, ReplanDecision, ReplanPolicy};
@@ -38,6 +48,11 @@ pub struct ReplayConfig {
     /// Emit a price-only market event when any kind moves this much
     /// relative to the last emitted event.
     pub price_rel_threshold: f64,
+    /// Budget/deadline cap on the run. Bounded envelopes stop the meter
+    /// at the cap/deadline and steer every replan decision through the
+    /// coordinator ([`super::orchestrator::ReplanConfig::envelope`]);
+    /// the default unbounded envelope is inert.
+    pub envelope: BudgetEnvelope,
 }
 
 impl Default for ReplayConfig {
@@ -48,6 +63,7 @@ impl Default for ReplayConfig {
             opts: PlanOptions::default(),
             gpus_per_node: 8,
             price_rel_threshold: 0.05,
+            envelope: BudgetEnvelope::UNBOUNDED,
         }
     }
 }
@@ -62,7 +78,9 @@ pub struct ReplayRow {
     pub gpus: usize,
     /// Active plan's simulated iteration seconds (0 when paused).
     pub iter_s: f64,
-    /// Active fleet $/hr at current spot prices (0 when paused).
+    /// $/hr of the GPUs the active *plan* occupies at current spot
+    /// prices — held-but-unplaced GPUs are released and bill $0, and a
+    /// paused run bills nothing.
     pub price_per_hour: f64,
     /// Migration downtime charged by this event.
     pub migration_s: f64,
@@ -76,9 +94,10 @@ pub struct ReplayRow {
 pub struct ReplayReport {
     /// Horizon covered, seconds.
     pub horizon_s: f64,
-    /// Tokens trained.
+    /// Tokens trained. Under a bounded envelope the meter halts at the
+    /// cap/deadline, so this *is* the tokens-by-deadline figure.
     pub tokens: f64,
-    /// Dollars billed.
+    /// Dollars billed (never exceeds the envelope's `max_usd`).
     pub usd: f64,
     /// Seconds actually training.
     pub train_s: f64,
@@ -92,8 +111,18 @@ pub struct ReplayReport {
     pub holds: usize,
     /// Events whose candidate was identical to the running plan.
     pub unchanged: usize,
-    /// Market events handled.
+    /// Market events handled (plus the terminal envelope row, if any).
     pub events: usize,
+    /// The envelope the run was metered against.
+    pub envelope: BudgetEnvelope,
+    /// Dollars left under the cap when the run ended (`None` without a
+    /// cap).
+    pub budget_slack_usd: Option<f64>,
+    /// Seconds between the end of the run and the deadline (`None`
+    /// without one; negative never happens — the meter stops at it).
+    pub deadline_slack_s: Option<f64>,
+    /// True when the envelope (not the trace horizon) ended the run.
+    pub exhausted: bool,
     pub rows: Vec<ReplayRow>,
 }
 
@@ -128,20 +157,26 @@ impl ReplayReport {
 }
 
 /// Cumulative meters + the migration debt carried between intervals.
+/// Shared with [`super::enact`], whose simulated spend meter must match
+/// this one event-for-event so both runs hit a budget cap at the same
+/// instant.
 #[derive(Default)]
-struct Meter {
-    tokens: f64,
-    usd: f64,
-    train_s: f64,
-    downtime_s: f64,
-    paused_s: f64,
-    pending_migration_s: f64,
+pub(crate) struct Meter {
+    pub(crate) tokens: f64,
+    pub(crate) usd: f64,
+    pub(crate) train_s: f64,
+    pub(crate) downtime_s: f64,
+    pub(crate) paused_s: f64,
+    pub(crate) pending_migration_s: f64,
 }
 
 impl Meter {
     /// Advance `dt` seconds under `active = (iter_s, tokens/iter, $/hr)`
-    /// (or a pause when `None`), draining migration debt first.
-    fn accrue(&mut self, dt: f64, active: Option<(f64, f64, f64)>) {
+    /// (or a pause when `None`), draining migration debt first. A
+    /// negative `dt` is a caller bug (the replay/enact loops reject
+    /// out-of-order event times before accruing).
+    pub(crate) fn accrue(&mut self, dt: f64, active: Option<(f64, f64, f64)>) {
+        debug_assert!(dt >= 0.0, "Meter::accrue got negative dt {dt}");
         if dt <= 0.0 {
             return;
         }
@@ -163,7 +198,7 @@ impl Meter {
     }
 }
 
-fn active_of(coord: &ElasticCoordinator) -> Option<(f64, f64, f64)> {
+pub(crate) fn active_of(coord: &ElasticCoordinator) -> Option<(f64, f64, f64)> {
     coord.plan.as_ref().map(|p| {
         (
             p.est_iter_s,
@@ -171,6 +206,76 @@ fn active_of(coord: &ElasticCoordinator) -> Option<(f64, f64, f64)> {
             coord.current_price_per_hour(),
         )
     })
+}
+
+/// Where inside `(from_s, to_s]` the envelope stops the run, if it does:
+/// the active fleet's burn rate crosses the budget cap, or the deadline
+/// falls inside the interval. Returns the stop instant and the terminal
+/// reason. A paused interval burns no money, so only the deadline can
+/// stop it.
+fn envelope_stop(
+    env: &BudgetEnvelope,
+    spent_usd: f64,
+    from_s: f64,
+    to_s: f64,
+    active: Option<(f64, f64, f64)>,
+) -> Option<(f64, String)> {
+    let mut stop: Option<(f64, String)> = None;
+    if let (Some(max_usd), Some((_, _, usd_per_hour))) = (env.max_usd, active) {
+        if usd_per_hour > 0.0 {
+            let t = from_s + (max_usd - spent_usd).max(0.0) / usd_per_hour * 3600.0;
+            if t <= to_s {
+                stop = Some((t, format!("budget cap ${max_usd:.2} reached")));
+            }
+        }
+    }
+    if let Some(deadline) = env.deadline_s {
+        let first = match &stop {
+            None => true,
+            Some((s, _)) => deadline < *s,
+        };
+        if deadline <= to_s && first {
+            stop = Some((deadline, format!("deadline {:.2}h reached", deadline / 3600.0)));
+        }
+    }
+    stop
+}
+
+/// Advance the meter from its cursor to `to_s`, honoring the envelope:
+/// if the budget or the deadline runs out strictly before `final_s`
+/// (the trace horizon), the meter stops there and the terminal reason
+/// is returned; an envelope that expires exactly at the horizon cut
+/// nothing short and is not a stop. Shared verbatim by [`replay`] and
+/// [`super::enact::enact`] so both runs stop at the identical instant
+/// and their decision logs keep matching. Also rejects non-monotonic
+/// event times (a malformed trace) instead of letting the meter's
+/// `dt <= 0` guard swallow them.
+pub(crate) fn metered_advance(
+    env: &BudgetEnvelope,
+    meter: &mut Meter,
+    t_cursor: &mut f64,
+    to_s: f64,
+    final_s: f64,
+    active: Option<(f64, f64, f64)>,
+) -> Result<Option<String>> {
+    anyhow::ensure!(
+        to_s >= *t_cursor,
+        "market event at {to_s:.1}s precedes the meter cursor at {:.1}s — \
+         event times must be non-decreasing (malformed trace?)",
+        *t_cursor
+    );
+    if env.is_bounded() {
+        if let Some((stop_s, why)) = envelope_stop(env, meter.usd, *t_cursor, to_s, active) {
+            if stop_s < final_s {
+                meter.accrue(stop_s - *t_cursor, active);
+                *t_cursor = stop_s;
+                return Ok(Some(why));
+            }
+        }
+    }
+    meter.accrue(to_s - *t_cursor, active);
+    *t_cursor = to_s;
+    Ok(None)
 }
 
 /// The fleet a trace opens with: its first availability sample, chunked
@@ -183,6 +288,7 @@ pub(crate) fn opening_cluster(
     trace: &SpotTrace,
     gpus_per_node: usize,
 ) -> Result<ClusterSpec> {
+    ensure_nonempty(trace)?;
     for &(kind, _) in &trace.cfg.capacity {
         anyhow::ensure!(
             kind.index() < profile.catalog.len(),
@@ -204,16 +310,34 @@ pub(crate) fn opening_cluster(
     Ok(ClusterSpec::from_counts_in(&profile.catalog, &counts))
 }
 
+/// A zero-step trace has no opening availability or price sample to
+/// derive a run from — error with the trace's config instead of
+/// index-panicking on `avail[0]` / `prices[0]`.
+fn ensure_nonempty(trace: &SpotTrace) -> Result<()> {
+    anyhow::ensure!(
+        !trace.avail.is_empty() && !trace.prices.is_empty(),
+        "trace has no samples ({} avail rows, {} price rows; horizon {:.0}s, step {:.0}s, \
+         {} kinds) — nothing to replay",
+        trace.avail.len(),
+        trace.prices.len(),
+        trace.cfg.horizon_s,
+        trace.cfg.step_s,
+        trace.cfg.capacity.len()
+    );
+    Ok(())
+}
+
 /// The trace's step-0 price sample, applied from t=0 (`market_events`
 /// only emits from step 1 on).
-pub(crate) fn opening_prices(trace: &SpotTrace) -> Vec<(KindId, f64)> {
-    trace
+pub(crate) fn opening_prices(trace: &SpotTrace) -> Result<Vec<(KindId, f64)>> {
+    ensure_nonempty(trace)?;
+    Ok(trace
         .cfg
         .capacity
         .iter()
         .enumerate()
         .map(|(ki, &(kind, _))| (kind, trace.prices[0][ki]))
-        .collect()
+        .collect())
 }
 
 /// Replay a trace end-to-end. The initial fleet is the trace's first
@@ -227,20 +351,33 @@ pub fn replay(profile: &ProfileDb, trace: &SpotTrace, cfg: &ReplayConfig) -> Res
         policy: cfg.policy,
         opts: cfg.opts.clone(),
         gpus_per_node: node_size,
+        envelope: cfg.envelope,
     };
     let mut coord =
         ElasticCoordinator::new_with(profile.model.clone(), profile.clone(), cluster, rcfg)?;
     // the trace's opening price sample applies from t=0, to both billing
     // and the opening plan pick
-    coord.reprice(&opening_prices(trace))?;
+    coord.reprice(&opening_prices(trace)?)?;
 
     let horizon_s = trace.covered_s();
     let mut meter = Meter::default();
     let mut rows = Vec::new();
     let mut t_cursor = 0.0;
+    let mut stopped: Option<String> = None;
     for ev in trace.market_events(cfg.price_rel_threshold) {
-        meter.accrue(ev.at_s - t_cursor, active_of(&coord));
-        t_cursor = ev.at_s;
+        let active = active_of(&coord);
+        stopped = metered_advance(
+            &cfg.envelope,
+            &mut meter,
+            &mut t_cursor,
+            ev.at_s,
+            horizon_s,
+            active,
+        )?;
+        if stopped.is_some() {
+            break;
+        }
+        coord.note_spend(meter.usd);
         let out = coord.handle_market_event(&ev)?;
         if out.decision == ReplanDecision::Paused {
             // an in-flight migration dies with the fleet; the eventual
@@ -261,7 +398,34 @@ pub fn replay(profile: &ProfileDb, trace: &SpotTrace, cfg: &ReplayConfig) -> Res
             reason: out.reason,
         });
     }
-    meter.accrue(horizon_s - t_cursor, active_of(&coord));
+    if stopped.is_none() {
+        let active = active_of(&coord);
+        stopped = metered_advance(
+            &cfg.envelope,
+            &mut meter,
+            &mut t_cursor,
+            horizon_s,
+            horizon_s,
+            active,
+        )?;
+    }
+    let exhausted = stopped.is_some();
+    if let Some(why) = stopped {
+        // terminal row: the run ends here, the fleet goes back to the
+        // market, nothing further trains or bills
+        rows.push(ReplayRow {
+            at_s: t_cursor,
+            decision: ReplanDecision::BudgetExhausted,
+            forced: true,
+            gpus: coord.cluster.total_gpus(),
+            iter_s: 0.0,
+            price_per_hour: 0.0,
+            migration_s: 0.0,
+            tokens_total: meter.tokens,
+            usd_total: meter.usd,
+            reason: why,
+        });
+    }
 
     Ok(ReplayReport {
         horizon_s,
@@ -274,6 +438,10 @@ pub fn replay(profile: &ProfileDb, trace: &SpotTrace, cfg: &ReplayConfig) -> Res
         holds: coord.holds,
         unchanged: coord.unchanged,
         events: rows.len(),
+        envelope: cfg.envelope,
+        budget_slack_usd: cfg.envelope.max_usd.map(|m| m - meter.usd),
+        deadline_slack_s: cfg.envelope.deadline_s.map(|d| d - t_cursor),
+        exhausted,
         rows,
     })
 }
@@ -281,7 +449,7 @@ pub fn replay(profile: &ProfileDb, trace: &SpotTrace, cfg: &ReplayConfig) -> Res
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cluster::{GpuCatalog, SpotTrace, TraceConfig};
+    use crate::cluster::{GpuCatalog, KindId, NodeSpec, SpotTrace, TraceConfig};
     use crate::modelcfg::ModelCfg;
 
     fn profile() -> ProfileDb {
@@ -339,6 +507,59 @@ mod tests {
         assert_eq!(a.usd, b.usd);
         assert_eq!(a.switches, b.switches);
         assert_eq!(a.holds, b.holds);
+    }
+
+    #[test]
+    fn unplaced_grant_bills_zero() {
+        // the documented billing model: dollars follow the ACTIVE PLAN's
+        // GPUs, not the held fleet — a granted node the plan never
+        // places is released back to the market and bills $0
+        let p = profile();
+        let cluster = ClusterSpec::from_counts(&[(4, KindId::A100), (4, KindId::H800)]);
+        let mut coord = ElasticCoordinator::new(p.model.clone(), p.clone(), cluster).unwrap();
+        let plan_price = coord.current_price_per_hour();
+        assert!(plan_price > 0.0);
+        // a grant lands but the running plan is untouched: the idle node
+        // must not change what the run bills
+        coord.cluster.nodes.push(NodeSpec { node_id: 99, count: 8, kind: KindId::H20 });
+        assert_eq!(coord.current_price_per_hour(), plan_price);
+        // and the plan's own price is exactly its stage GPUs' spot rate
+        let cat = coord.repriced_catalog();
+        let plan = coord.plan.as_ref().unwrap();
+        assert!((plan.price_per_hour(&cat) - plan_price).abs() < 1e-12);
+    }
+
+    #[test]
+    fn out_of_order_market_events_error_instead_of_vanishing() {
+        // a malformed trace whose event times run backward used to be
+        // silently absorbed by the meter's dt <= 0 guard ("nothing
+        // happened"); it must surface as an error
+        let p = profile();
+        let tc = TraceConfig {
+            horizon_s: 3.0 * 600.0,
+            step_s: -600.0, // malformed: event times decrease
+            capacity: vec![(KindId::A100, 6)],
+            base_price_per_hour: vec![(KindId::A100, 1.2)],
+            ..Default::default()
+        };
+        let trace = SpotTrace {
+            kinds: vec![KindId::A100],
+            avail: vec![vec![6], vec![4], vec![6]], // guaranteed delta events
+            prices: vec![vec![1.2]; 3],
+            cfg: tc,
+        };
+        let err = replay(&p, &trace, &ReplayConfig::default()).unwrap_err().to_string();
+        assert!(err.contains("precedes"), "{err}");
+    }
+
+    #[test]
+    fn zero_step_trace_errors_with_config() {
+        let p = profile();
+        let mut trace = short_trace(3);
+        trace.avail.clear();
+        trace.prices.clear();
+        let err = replay(&p, &trace, &ReplayConfig::default()).unwrap_err().to_string();
+        assert!(err.contains("no samples") && err.contains("step"), "{err}");
     }
 
     #[test]

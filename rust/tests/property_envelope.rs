@@ -1,0 +1,176 @@
+//! Property tests for the budget/deadline envelope (the paper's actual
+//! spot operating regime: "spend at most $X by time T").
+//!
+//! For random traces and randomly drawn envelopes, a budget-capped
+//! replay must (a) never report more dollars than the cap (+ float ε),
+//! (b) never attribute a second of training/downtime/pause past the
+//! deadline, and (c) with an unbounded envelope (including the
+//! `max_usd = ∞` form) reproduce the unconstrained replay bit-for-bit.
+
+use autohet::cluster::{GpuCatalog, KindId, SpotTrace, TraceConfig};
+use autohet::modelcfg::ModelCfg;
+use autohet::planner::{BudgetEnvelope, PlanOptions};
+use autohet::profile::ProfileDb;
+use autohet::recovery::{replay, ReplanDecision, ReplayConfig};
+use autohet::util::rng::Rng;
+
+fn profile() -> ProfileDb {
+    ProfileDb::build(&ModelCfg::bert_large(), &GpuCatalog::builtin(), &[1, 2, 4, 8], 1)
+}
+
+fn trace(seed: u64, hours: f64) -> SpotTrace {
+    let tc = TraceConfig {
+        horizon_s: hours * 3600.0,
+        step_s: 1800.0,
+        capacity: vec![(KindId::A100, 8), (KindId::H800, 4), (KindId::H20, 4)],
+        base_price_per_hour: vec![
+            (KindId::A100, 1.2),
+            (KindId::H800, 2.5),
+            (KindId::H20, 0.9),
+        ],
+        ..Default::default()
+    };
+    SpotTrace::generate(tc, seed)
+}
+
+#[test]
+fn capped_replay_never_overspends_or_overruns() {
+    let p = profile();
+    let mut rng = Rng::new(0xB0D6E7);
+    let eps = 1e-6;
+    for seed in 0..6u64 {
+        let trace = trace(seed, 12.0);
+        let free = replay(&p, &trace, &ReplayConfig::default()).unwrap();
+        assert!(free.usd > 0.0, "seed {seed}: free run billed nothing");
+
+        // a random envelope strictly inside what the free run consumed,
+        // so at least one axis genuinely binds
+        let env = BudgetEnvelope {
+            max_usd: Some(free.usd * (0.1 + 0.6 * rng.f64())),
+            deadline_s: Some(free.horizon_s * (0.2 + 0.6 * rng.f64())),
+        };
+        let cfg = ReplayConfig {
+            envelope: env,
+            opts: PlanOptions { bench: true, ..Default::default() },
+            ..Default::default()
+        };
+        let r = replay(&p, &trace, &cfg).unwrap();
+
+        // (a) the cap is a hard ceiling
+        let cap = env.max_usd.unwrap();
+        assert!(r.usd <= cap + eps, "seed {seed}: spent {} over cap {cap}", r.usd);
+        for row in &r.rows {
+            assert!(row.usd_total <= cap + eps, "seed {seed}: row over cap: {row:?}");
+        }
+
+        // (b) not a second is attributed past the deadline
+        let deadline = env.deadline_s.unwrap();
+        let attributed = r.train_s + r.downtime_s + r.paused_s;
+        assert!(
+            attributed <= deadline.min(r.horizon_s) + eps,
+            "seed {seed}: {attributed}s attributed past deadline {deadline}s"
+        );
+
+        // slack bookkeeping agrees with the meters
+        assert!((r.budget_slack_usd.unwrap() - (cap - r.usd)).abs() < 1e-9);
+        assert!(r.deadline_slack_s.unwrap() >= -eps);
+
+        // an exhausted run ends in exactly one terminal row
+        let terminal: Vec<_> = r
+            .rows
+            .iter()
+            .filter(|row| row.decision == ReplanDecision::BudgetExhausted)
+            .collect();
+        if r.exhausted {
+            assert_eq!(terminal.len(), 1, "seed {seed}");
+            let last = r.rows.last().unwrap();
+            assert_eq!(last.decision, ReplanDecision::BudgetExhausted);
+            assert!(last.forced);
+            assert_eq!(last.iter_s, 0.0);
+            assert_eq!(last.price_per_hour, 0.0);
+        } else {
+            assert!(terminal.is_empty(), "seed {seed}");
+        }
+
+        // the cap is strictly inside the free run's spend, so the capped
+        // run necessarily bills less than the unconstrained one
+        assert!(r.usd < free.usd, "seed {seed}: {} !< {}", r.usd, free.usd);
+    }
+}
+
+#[test]
+fn unbounded_envelope_is_bit_identical_to_unconstrained() {
+    let p = profile();
+    for seed in [3u64, 9, 21] {
+        let trace = trace(seed, 10.0);
+        let a = replay(&p, &trace, &ReplayConfig::default()).unwrap();
+        // the issue's `max_usd = ∞` form: an infinite bound must be as
+        // inert as no bound at all
+        let cfg = ReplayConfig {
+            envelope: BudgetEnvelope { max_usd: Some(f64::INFINITY), deadline_s: None },
+            ..Default::default()
+        };
+        let b = replay(&p, &trace, &cfg).unwrap();
+        assert_eq!(a.tokens.to_bits(), b.tokens.to_bits(), "seed {seed}");
+        assert_eq!(a.usd.to_bits(), b.usd.to_bits(), "seed {seed}");
+        assert_eq!(a.train_s.to_bits(), b.train_s.to_bits(), "seed {seed}");
+        assert_eq!(a.downtime_s.to_bits(), b.downtime_s.to_bits(), "seed {seed}");
+        assert_eq!(a.paused_s.to_bits(), b.paused_s.to_bits(), "seed {seed}");
+        assert_eq!(a.switches, b.switches);
+        assert_eq!(a.holds, b.holds);
+        assert_eq!(a.unchanged, b.unchanged);
+        assert_eq!(a.rows.len(), b.rows.len());
+        for (ra, rb) in a.rows.iter().zip(&b.rows) {
+            assert_eq!(ra.decision, rb.decision);
+            assert_eq!(ra.forced, rb.forced);
+            assert_eq!(ra.at_s.to_bits(), rb.at_s.to_bits());
+            assert_eq!(ra.tokens_total.to_bits(), rb.tokens_total.to_bits());
+            assert_eq!(ra.usd_total.to_bits(), rb.usd_total.to_bits());
+        }
+        assert!(!b.exhausted);
+        // the infinite cap still reports its (infinite) slack
+        assert_eq!(b.budget_slack_usd, Some(f64::INFINITY));
+        assert_eq!(a.budget_slack_usd, None);
+        assert_eq!(a.deadline_slack_s, None);
+    }
+}
+
+#[test]
+fn deadline_alone_stops_the_run_at_the_deadline() {
+    let p = profile();
+    let trace = trace(7, 12.0);
+    let deadline = trace.covered_s() * 0.5;
+    let cfg = ReplayConfig {
+        envelope: BudgetEnvelope { max_usd: None, deadline_s: Some(deadline) },
+        ..Default::default()
+    };
+    let r = replay(&p, &trace, &cfg).unwrap();
+    assert!(r.exhausted, "a mid-horizon deadline must end the run early");
+    let last = r.rows.last().unwrap();
+    assert_eq!(last.decision, ReplanDecision::BudgetExhausted);
+    assert!((last.at_s - deadline).abs() < 1e-9, "{} vs {deadline}", last.at_s);
+    assert!(last.reason.contains("deadline"), "{}", last.reason);
+    assert!(r.train_s + r.downtime_s + r.paused_s <= deadline + 1e-6);
+    assert_eq!(r.budget_slack_usd, None);
+    assert!((r.deadline_slack_s.unwrap()).abs() < 1e-9);
+}
+
+#[test]
+fn tight_budget_emits_the_cap_reason_and_stops_billing() {
+    let p = profile();
+    let trace = trace(11, 12.0);
+    let free = replay(&p, &trace, &ReplayConfig::default()).unwrap();
+    // so tight the very first billed interval crosses it
+    let cap = free.usd * 0.01;
+    let cfg = ReplayConfig {
+        envelope: BudgetEnvelope { max_usd: Some(cap), deadline_s: None },
+        ..Default::default()
+    };
+    let r = replay(&p, &trace, &cfg).unwrap();
+    assert!(r.usd <= cap + 1e-9);
+    assert!(r.exhausted, "1% of the free spend must exhaust");
+    let last = r.rows.last().unwrap();
+    assert!(last.reason.contains("budget cap"), "{}", last.reason);
+    // the meter stopped exactly at the cap (the run was billing when it hit)
+    assert!((r.usd - cap).abs() < 1e-6, "{} vs {cap}", r.usd);
+}
