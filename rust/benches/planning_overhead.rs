@@ -1,19 +1,66 @@
-//! Section V-B table: planning + profiling overheads.
+//! Section V-B table: planning + profiling overheads, plus the
+//! fleet-scale planning perf trajectory.
 //!
 //! Paper: SCIP planning times {1.23, 5.72, 16.96, 159.12} s at
 //! {16, 24, 32, 64} GPUs; profiling 11.9–15.4 min (Alpa: 240 min search,
 //! 209 min profiling). We time our branch-and-bound on the same instance
 //! sizes and report the emulated profiling sweep cost.
+//!
+//! The second table scales past the paper's testbed: multi-kind spot
+//! fleets up to 1000 nodes × 10 GPU kinds through the full `plan_choice`
+//! path (parallel per-J/per-subset solves, fleet-scaled budgets). Each
+//! row is also written machine-readably to `BENCH_plan.json` at the repo
+//! root — the perf series CI tracks across PRs. Pass `--assert` to fail
+//! (exit 1) when the smoke-size fleets exceed their wall-clock bounds.
 
 use std::time::Instant;
 
-use autohet::cluster::{ClusterSpec, GpuCatalog, KindId};
+use autohet::cluster::{ClusterSpec, GpuCatalog, GpuSpec, KindId};
 use autohet::modelcfg::ModelCfg;
-use autohet::planner::{auto_plan, PlanOptions};
+use autohet::planner::{auto_plan, plan_choice, PlanOptions};
 use autohet::profile::ProfileDb;
 use autohet::util::bench::Table;
+use autohet::util::json::Json;
+
+/// Wall-clock smoke bounds (generous vs the ~1 s release-build headline:
+/// CI runners are slow and shared).
+const ASSERT_256_S: f64 = 5.0;
+const ASSERT_1000_S: f64 = 10.0;
+
+/// The 6 bundled presets plus 4 synthetic spot parts = a 10-kind market.
+fn ten_kind_catalog() -> GpuCatalog {
+    let mut cat = GpuCatalog::extended();
+    for (name, g, tf, mem, nvl, hbm, usd, nics) in [
+        ("SynA", 0.55, 140.0, 48.0, 300.0, 1200.0, 0.9, 1),
+        ("SynB", 0.75, 190.0, 64.0, 400.0, 1600.0, 1.4, 2),
+        ("SynC", 1.15, 290.0, 96.0, 600.0, 2400.0, 2.8, 4),
+        ("SynD", 1.60, 400.0, 141.0, 900.0, 3300.0, 4.1, 8),
+    ] {
+        cat.add(GpuSpec {
+            name: name.to_string(),
+            relative_power: g,
+            flops_tf: tf,
+            mem_gib: mem,
+            nvlink_gbs: nvl,
+            hbm_gbs: hbm,
+            price_per_hour: usd,
+            rdma_nics: nics,
+        })
+        .unwrap();
+    }
+    cat
+}
+
+/// `nodes` 8-GPU hosts cycling through every kind of `cat`.
+fn fleet(cat: &GpuCatalog, nodes: usize) -> ClusterSpec {
+    let kinds: Vec<KindId> = cat.ids().collect();
+    let counts: Vec<(usize, KindId)> =
+        (0..nodes).map(|i| (8, kinds[i % kinds.len()])).collect();
+    ClusterSpec::from_counts_in(cat, &counts)
+}
 
 fn main() {
+    let assert_bounds = std::env::args().any(|a| a == "--assert");
     let model = ModelCfg::gpt3_6p7b();
     let cat = GpuCatalog::builtin();
     let profile = ProfileDb::build(&model, &cat, &[1, 2, 4, 8], 1);
@@ -63,10 +110,96 @@ fn main() {
     }
     t.print("Planning overhead vs cluster size (paper section V-B; ours = custom B&B, paper = SCIP)");
 
+    // ---- fleet-scale trajectory: 10-kind spot fleets, full plan_choice ----
+    let fcat = ten_kind_catalog();
+    let fprofile = ProfileDb::build(&model, &fcat, &[1, 2, 4, 8], 1);
+    let opts = PlanOptions {
+        bench: true,
+        plan_threads: None, // all cores; results are thread-count-invariant
+        solver_deadline_s: Some(0.8),
+        ..Default::default()
+    };
+    let mut ft = Table::new(&[
+        "nodes",
+        "gpus",
+        "kinds",
+        "planning_s",
+        "exact",
+        "lpt",
+        "subset",
+        "plan",
+    ]);
+    let mut json_rows: Vec<Json> = Vec::new();
+    let mut failures: Vec<String> = Vec::new();
+    for nodes in [32usize, 256, 1000] {
+        let cluster = fleet(&fcat, nodes);
+        let gpus = cluster.total_gpus();
+        match plan_choice(&cluster, &fprofile, &opts) {
+            Ok(choice) => {
+                let s = choice.stats;
+                ft.row(&[
+                    nodes.to_string(),
+                    gpus.to_string(),
+                    fcat.len().to_string(),
+                    format!("{:.3}", s.planning_s),
+                    s.exact_solves.to_string(),
+                    s.lpt_solves.to_string(),
+                    s.subset_solves.to_string(),
+                    choice.fastest.plan.summary(&fcat),
+                ]);
+                json_rows.push(Json::obj(vec![
+                    ("nodes", Json::num(nodes as f64)),
+                    ("gpus", Json::num(gpus as f64)),
+                    ("kinds", Json::num(fcat.len() as f64)),
+                    ("planning_s", Json::num(s.planning_s)),
+                    ("exact_solves", Json::num(s.exact_solves as f64)),
+                    ("lpt_solves", Json::num(s.lpt_solves as f64)),
+                    ("subset_solves", Json::num(s.subset_solves as f64)),
+                    ("cache_hits", Json::num(s.cache_hits as f64)),
+                ]));
+                let bound = match nodes {
+                    256 => Some(ASSERT_256_S),
+                    1000 => Some(ASSERT_1000_S),
+                    _ => None,
+                };
+                if let Some(b) = bound {
+                    if s.planning_s >= b {
+                        failures.push(format!(
+                            "{nodes}-node fleet planned in {:.3}s (bound {b:.1}s)",
+                            s.planning_s
+                        ));
+                    }
+                }
+            }
+            Err(e) => failures.push(format!("{nodes}-node fleet infeasible: {e}")),
+        }
+    }
+    ft.print("Fleet-scale planning (10-kind spot market, parallel B&B, 0.8s solver deadline)");
+    println!("target: 1000-node fleet plans in < 1 s on a release build");
+
+    let out = Json::obj(vec![
+        ("series", Json::str("plan_perf")),
+        ("generated_by", Json::str("cargo bench --bench planning_overhead")),
+        ("model", Json::str(model.name.clone())),
+        ("rows", Json::Arr(json_rows)),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_plan.json");
+    match std::fs::write(path, out.to_string_pretty() + "\n") {
+        Ok(()) => println!("wrote perf series to {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+
     println!(
         "\nProfiling sweep (emulated measurement cost): {:.1} min over {} points \
          (paper: 11.9-15.4 min; Alpa ~209 min)",
         profile.profiling_cost_s() / 60.0,
         profile.points()
     );
+
+    if assert_bounds && !failures.is_empty() {
+        for f in &failures {
+            eprintln!("plan-perf assertion failed: {f}");
+        }
+        std::process::exit(1);
+    }
 }

@@ -27,11 +27,16 @@ USAGE:
   autohet plan    [--model NAME] [--cluster FILE|--counts 4xA100,2xH800]
                   [--objective time|cost] [--no-bench] [--out FILE]
                   [--budget-usd X] [--deadline-h H]
+                  [--plan-threads N] [--plan-deadline-ms T]
                   cluster FILEs may carry a custom GPU catalog (`catalog.kinds`,
                   incl. per-kind `price_per_hour` / `rdma_nics`); `--objective
                   cost` picks the cheapest-per-token plan, `--no-bench` forces
                   the paper's use-every-device grouping; with a budget
-                  envelope the pick maximizes tokens projected within it
+                  envelope the pick maximizes tokens projected within it;
+                  `--plan-threads` caps the solver's worker threads (default
+                  all cores; results are bit-identical at any count) and
+                  `--plan-deadline-ms` bounds the solve wall-clock, scaling
+                  the exact/subset budgets down to fit
   autohet sim     [--model NAME] [--counts ...]       simulate an iteration
   autohet train   [--artifacts DIR] [--steps N] [--groups 2,2|4] [--k N]
                   [--lr F] [--seed N] [--csv FILE]    real PJRT training
@@ -40,6 +45,7 @@ USAGE:
                   [--objective time|cost] [--amortize-h H] [--greedy]
                   [--gpus-per-node N] [--seed N] [--csv FILE]
                   [--budget-usd X] [--deadline-h H]
+                  [--plan-threads N] [--plan-deadline-ms T]
                   replay a generated spot-market trace (per-kind capacity =
                   the given cluster counts) through the elastic coordinator;
                   amortized replanning by default, `--greedy` replans on
@@ -50,6 +56,7 @@ USAGE:
   autohet enact   [--model NAME] [--cluster FILE|--counts ...] [--hours H]
                   [--objective time|cost] [--amortize-h H] [--greedy]
                   [--budget-usd X] [--deadline-h H]
+                  [--plan-threads N] [--plan-deadline-ms T]
                   [--gpus-per-node N] [--seed N] [--steps-per-event N]
                   [--k N] [--max-groups N] [--ckpt-dir DIR]
                   [--artifacts DIR] [--csv FILE] [--loss-csv FILE]
@@ -118,6 +125,27 @@ fn envelope_from(args: &Args) -> Result<BudgetEnvelope> {
     Ok(BudgetEnvelope { max_usd, deadline_s })
 }
 
+/// `--plan-threads N` / `--plan-deadline-ms T` → solver fan-out and
+/// wall-clock budget (shared by `plan`, `replay`, and `enact`).
+fn plan_perf_from(args: &Args) -> Result<(Option<usize>, Option<f64>)> {
+    let plan_threads = match args.get("plan-threads") {
+        Some(s) => {
+            let v: usize = s.parse().map_err(|e| anyhow!("bad --plan-threads `{s}`: {e}"))?;
+            Some(v)
+        }
+        None => None,
+    };
+    let deadline_s = match args.get("plan-deadline-ms") {
+        Some(s) => {
+            let v: f64 = s.parse().map_err(|e| anyhow!("bad --plan-deadline-ms `{s}`: {e}"))?;
+            anyhow::ensure!(v > 0.0, "--plan-deadline-ms must be positive, got {v}");
+            Some(v / 1000.0)
+        }
+        None => None,
+    };
+    Ok((plan_threads, deadline_s))
+}
+
 /// One-line rendering of an envelope's constraints.
 fn fmt_envelope(e: &BudgetEnvelope) -> String {
     let cap = match e.max_usd {
@@ -164,7 +192,13 @@ pub fn cmd_plan(args: &Args) -> Result<()> {
     let profile = build_profile(&model, &cluster.catalog, args.get_u64("seed", 1));
     let objective: Objective = args.get_str("objective", "time").parse()?;
     let envelope = envelope_from(args)?;
-    let opts = PlanOptions { bench: !args.has("no-bench"), ..Default::default() };
+    let (plan_threads, plan_deadline_s) = plan_perf_from(args)?;
+    let opts = PlanOptions {
+        bench: !args.has("no-bench"),
+        plan_threads,
+        solver_deadline_s: plan_deadline_s,
+        ..Default::default()
+    };
     let choice = plan_choice(&cluster, &profile, &opts)?;
     let pick = choice.pick_within(objective, &envelope, 0.0, 0.0);
     print_scored("plan", pick, &cluster.catalog);
@@ -184,7 +218,13 @@ pub fn cmd_plan(args: &Args) -> Result<()> {
             pick.tokens_within(&envelope, 0.0, 0.0)
         );
     }
-    println!("planning {:.2}s", pick.plan.planning_s);
+    println!(
+        "planning {:.2}s | {} exact + {} lpt + {} subset solves",
+        pick.plan.planning_s,
+        choice.stats.exact_solves,
+        choice.stats.lpt_solves,
+        choice.stats.subset_solves
+    );
     // When the two objectives disagree, show what the road not taken
     // would have bought.
     let other = choice.pick(match objective {
@@ -329,6 +369,14 @@ fn print_replay(tag: &str, r: &ReplayReport) {
         r.unchanged,
         r.events
     );
+    if r.events > 0 {
+        println!(
+            "  replan: {:.1}ms total, {:.1}ms max | {} plan-cache hits",
+            1e3 * r.replan_total_s,
+            1e3 * r.replan_max_s,
+            r.plan_cache_hits
+        );
+    }
     if r.envelope.is_bounded() {
         let slack_usd = match r.budget_slack_usd {
             Some(v) => format!("${v:.2}"),
@@ -404,13 +452,19 @@ fn market_setup(
     } else {
         ReplanPolicy::Amortized { horizon_s: amortize_h * 3600.0, min_rel_gain: 0.02 }
     };
+    let (plan_threads, plan_deadline_s) = plan_perf_from(args)?;
     let rcfg = ReplayConfig {
         objective,
         policy,
         // a bounded envelope needs benched-subset candidates: the
         // voluntary downshift to a cheaper sub-fleet is only possible
         // when plans that idle some devices are on the table
-        opts: PlanOptions { bench: envelope.is_bounded(), ..Default::default() },
+        opts: PlanOptions {
+            bench: envelope.is_bounded(),
+            plan_threads,
+            solver_deadline_s: plan_deadline_s,
+            ..Default::default()
+        },
         gpus_per_node: args.get_usize("gpus-per-node", 8),
         envelope,
         ..Default::default()

@@ -17,7 +17,8 @@ use crate::cluster::{ClusterSpec, KindVec};
 use crate::modelcfg::ModelCfg;
 use crate::profile::ProfileDb;
 
-use super::solver::{self, EntitySpec, GroupingProblem, GroupingSolution};
+use super::solver::{self, EntitySpec, GroupingProblem, GroupingSolution, SolveCtx};
+use super::types::ParallelPlan;
 
 /// Result of device grouping at a fixed TP dimension.
 #[derive(Debug, Clone)]
@@ -84,6 +85,36 @@ pub fn group_devices_all(
     cap: usize,
     bench: bool,
 ) -> Vec<Grouping> {
+    let opts = GroupingOpts { deadline, cap, bench, warm: None, ctx: SolveCtx::default() };
+    group_devices_all_with(cluster, model, profile, tp_dim, &opts)
+}
+
+/// Knobs for [`group_devices_all_with`] beyond the TP dimension.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct GroupingOpts<'a> {
+    /// Optional solver wall-clock budget, seconds.
+    pub deadline: Option<f64>,
+    /// Keep at most this many candidates per pass.
+    pub cap: usize,
+    /// Also enumerate device-subset (benched) groupings.
+    pub bench: bool,
+    /// Warm-start objective (a surviving plan's Eq-3 score at this TP
+    /// dim): seeds the subset solver's prune floor. Must be achievable on
+    /// this cluster, which [`plan_eq3_objective`] guarantees when the
+    /// plan's entities all survived.
+    pub warm: Option<f64>,
+    /// Solver execution context (threads / budget / stats).
+    pub ctx: SolveCtx<'a>,
+}
+
+/// [`group_devices_all`] under explicit [`GroupingOpts`].
+pub fn group_devices_all_with(
+    cluster: &ClusterSpec,
+    model: &ModelCfg,
+    profile: &ProfileDb,
+    tp_dim: usize,
+    opts: &GroupingOpts,
+) -> Vec<Grouping> {
     debug_assert_eq!(cluster.catalog, profile.catalog, "catalog mismatch");
     let counts = entity_counts(cluster, tp_dim);
     if counts.total() == 0 {
@@ -95,27 +126,61 @@ pub fn group_devices_all(
         entity: entity_specs(model, profile, tp_dim),
         min_mem_gib: model.min_mem_bytes() / f64::powi(2.0, 30),
         microbatches_total: model.microbatches(),
-        deadline,
+        deadline: opts.deadline,
     };
-    let mut out: Vec<Grouping> = solver::bnb::solve_all(&problem)
+    let mut out: Vec<Grouping> = solver::bnb::solve_all_with(&problem, &opts.ctx)
         .into_iter()
-        .take(cap)
+        .take(opts.cap)
         .map(|s| from_solution(tp_dim, model, s, KindVec::new(kdim, 0)))
         .collect();
-    if bench {
+    if opts.bench {
         // The exact-coverage pass above already found the all-devices
-        // optimum; seeding the subset DFS with it tightens pruning and
-        // we only keep genuinely-benched groupings from this pass.
+        // optimum; it and the caller's warm objective (when given) are
+        // both valid lower bounds, so the tighter of the two seeds the
+        // subset enumeration. Only genuinely-benched groupings are kept
+        // from this pass.
         let incumbent = out.first().map(|g| g.objective);
+        let seed = match (incumbent, opts.warm) {
+            (Some(a), Some(b)) => Some(a.max(b)),
+            (a, b) => a.or(b),
+        };
         out.extend(
-            solver::bnb::solve_subsets(&problem, incumbent)
+            solver::bnb::solve_subsets_with(&problem, seed, &opts.ctx)
                 .into_iter()
                 .filter(|s| s.benched.total() > 0)
-                .take(cap)
+                .take(opts.cap)
                 .map(|s| from_solution(tp_dim, model, s.solution, s.benched)),
         );
     }
     out
+}
+
+/// Eq-3 objective of an already-materialized plan under this profile:
+/// J · min over groups of the composition's effective power, with entity
+/// specs re-derived at the plan's TP dim. Price-independent, so a
+/// surviving plan's score is a valid warm-start floor for a re-solve on
+/// any fleet that still contains all of the plan's entities.
+pub fn plan_eq3_objective(plan: &ParallelPlan, model: &ModelCfg, profile: &ProfileDb) -> Option<f64> {
+    let j = plan.groups.len();
+    if j == 0 {
+        return None;
+    }
+    let e = entity_specs(model, profile, plan.tp_dim);
+    let k = (model.microbatches() / j).max(1);
+    let mut min_g = f64::INFINITY;
+    for g in &plan.groups {
+        // each stage is one TP entity of its kind
+        let mut comp = profile.catalog.kind_vec(0usize);
+        for s in &g.stages {
+            comp[s.kind] += 1;
+        }
+        min_g = min_g.min(solver::bnb::eff_power(&comp, &e, k));
+    }
+    if min_g.is_finite() {
+        Some(j as f64 * min_g)
+    } else {
+        None
+    }
 }
 
 fn from_solution(

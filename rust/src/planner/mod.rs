@@ -30,6 +30,12 @@
 //!   constraint ([`BudgetEnvelope`]); [`PlanChoice::pick_within`]
 //!   re-ranks the candidate set by tokens projected *within* the
 //!   envelope, shifting from fastest to cheapest plans as slack shrinks.
+//! * **Parallel & incremental solving** (PLANNER.md Extension 4): the
+//!   per-J and per-subset solves fan out over `PlanOptions::plan_threads`
+//!   worker threads with bit-identical results, budgets scale with fleet
+//!   size and deadline ([`solver::SolveBudget`]), and replans warm-start
+//!   from the surviving plan's Eq-3 objective
+//!   ([`grouping::plan_eq3_objective`]).
 
 pub mod cost;
 pub mod grouping;
@@ -40,6 +46,7 @@ pub mod solver;
 pub mod types;
 
 pub use plan::{
-    auto_plan, plan_choice, BudgetEnvelope, Objective, PlanChoice, PlanOptions, ScoredPlan,
+    auto_plan, plan_choice, BudgetEnvelope, Objective, PlanChoice, PlanOptions, PlanStats,
+    ScoredPlan,
 };
 pub use types::{DpGroupPlan, ParallelPlan, StagePlan};

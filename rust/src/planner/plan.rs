@@ -26,11 +26,15 @@ use super::cost;
 use super::grouping;
 use super::mapping::map_nodes_and_stages;
 use super::partition::{partition_layers, StageRes};
+use super::solver::{SolveCtx, SolverStats};
 use super::types::ParallelPlan;
+use crate::util::par::resolve_threads;
 
 #[derive(Debug, Clone, Default)]
 pub struct PlanOptions {
-    /// Per-TP-dim solver deadline (seconds); over it, LPT fallback.
+    /// Per-TP-dim solver deadline (seconds); over it, LPT fallback. Also
+    /// scales the solver's work budget down when under a second
+    /// ([`super::solver::SolveBudget::for_fleet`]).
     pub solver_deadline_s: Option<f64>,
     /// Restrict to one TP dim (ablations / baselines).
     pub force_tp: Option<usize>,
@@ -38,6 +42,32 @@ pub struct PlanOptions {
     /// Off by default: the paper's formulation places every device, and
     /// the all-devices path stays bit-identical to the seed planner.
     pub bench: bool,
+    /// Worker threads for the solver fan-out. `None`/`Some(0)` = all
+    /// cores. Any value returns a bit-identical plan (PLANNER.md
+    /// Extension 4), so this is purely a latency knob.
+    pub plan_threads: Option<usize>,
+    /// Warm start for replans: `(tp_dim, eq3_objective)` of a surviving
+    /// plan, seeded into the subset solver's prune floor at that TP dim
+    /// (see [`super::grouping::plan_eq3_objective`]). The objective must
+    /// be achievable on this cluster — i.e. the plan's entities survived.
+    pub warm: Option<(usize, f64)>,
+}
+
+/// Solver work counters for one `plan_choice` call, exposed so the CLI,
+/// replay metering, and the perf bench can report planning cost.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PlanStats {
+    /// Wall-clock seconds spent planning (same value stamped on plans).
+    pub planning_s: f64,
+    /// Exact per-J branch-and-bound runs.
+    pub exact_solves: usize,
+    /// LPT heuristic evaluations.
+    pub lpt_solves: usize,
+    /// Full Eq-3 solves spent on benched-subset candidates.
+    pub subset_solves: usize,
+    /// Plan-cache hits an elastic coordinator served instead of calling
+    /// the solver; always 0 on a direct [`plan_choice`] call.
+    pub cache_hits: usize,
 }
 
 /// A run-level spending envelope: "spend at most `max_usd` and be done
@@ -183,6 +213,8 @@ pub struct PlanChoice {
     /// are members). [`PlanChoice::pick_within`] re-ranks this full set
     /// under a budget envelope.
     pub candidates: Vec<ScoredPlan>,
+    /// Solver work spent producing this choice.
+    pub stats: PlanStats,
 }
 
 impl PlanChoice {
@@ -262,7 +294,8 @@ pub fn plan_choice(
         profile.catalog
     );
     let model = &profile.model;
-    let cands = scored_candidates(cluster, profile, opts)?;
+    let solver_stats = SolverStats::default();
+    let cands = scored_candidates(cluster, profile, opts, &solver_stats)?;
     let no_plan = || {
         anyhow!(
             "no feasible plan: {} GPUs / {:.0} GiB cannot hold {} ({:.0} GiB needed)",
@@ -306,7 +339,14 @@ pub fn plan_choice(
     }
     let fastest = cands[fastest].clone();
     let cheapest = cands[cheapest].clone();
-    Ok(PlanChoice { fastest, cheapest, candidates: cands })
+    let stats = PlanStats {
+        planning_s,
+        exact_solves: solver_stats.exact(),
+        lpt_solves: solver_stats.lpt(),
+        subset_solves: solver_stats.subsets(),
+        cache_hits: 0,
+    };
+    Ok(PlanChoice { fastest, cheapest, candidates: cands, stats })
 }
 
 /// Materialize and score every candidate grouping: map, partition,
@@ -315,26 +355,32 @@ fn scored_candidates(
     cluster: &ClusterSpec,
     profile: &ProfileDb,
     opts: &PlanOptions,
+    solver_stats: &SolverStats,
 ) -> Result<Vec<ScoredPlan>> {
     let model = &profile.model;
     let tp_dims: Vec<usize> = match opts.force_tp {
         Some(tp) => vec![tp],
         None => cluster.valid_tp_dims(),
     };
+    let ctx = SolveCtx {
+        threads: resolve_threads(opts.plan_threads),
+        budget: None,
+        stats: Some(solver_stats),
+    };
 
     let mut out = Vec::new();
     for tp in tp_dims {
         // Algorithm 1 keeps several promising grouping plans per TP dim
         // ("Plans <- append(plan)"); the cost estimator arbitrates.
-        let candidates = grouping::group_devices_all(
-            cluster,
-            model,
-            profile,
-            tp,
-            opts.solver_deadline_s,
-            6,
-            opts.bench,
-        );
+        let gopts = grouping::GroupingOpts {
+            deadline: opts.solver_deadline_s,
+            cap: 6,
+            bench: opts.bench,
+            // the warm objective only floors the TP dim it was scored at
+            warm: opts.warm.and_then(|(wtp, w)| if wtp == tp { Some(w) } else { None }),
+            ctx,
+        };
+        let candidates = grouping::group_devices_all_with(cluster, model, profile, tp, &gopts);
         for grouping in candidates {
             let mut groups = map_nodes_and_stages(cluster, &grouping);
 

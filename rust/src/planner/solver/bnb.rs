@@ -2,12 +2,20 @@
 //! the device-*subset* extension: [`solve_subsets`] relaxes the paper's
 //! exact-coverage constraint (3e) so a straggler kind can be benched
 //! (left unused) when that raises the objective. See `docs/PLANNER.md`
-//! for a worked example of both.
+//! for a worked example of both, and its "Extension 4" section for the
+//! parallel decomposition used by the `_with` entry points.
+//!
+//! Threading model: per-J exact solves and per-subset solves are
+//! independent work units fanned out over [`par_map`]; the shared
+//! incumbent floor ([`AtomicFloor`]) is raised only at deterministic
+//! points, so every thread count returns a bit-identical result.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Instant;
 
 use crate::cluster::KindVec;
+use crate::util::par::{par_map, AtomicFloor};
 
 use super::lpt::lpt_heuristic;
 use super::EntitySpec;
@@ -41,12 +49,95 @@ pub struct GroupingSolution {
     pub heuristic_fallback: bool,
 }
 
+/// Work budget for one grouping solve, derived from fleet size and the
+/// caller's deadline instead of the former fixed constants
+/// (`EXACT_J_BUDGET = 10` / `SUBSET_SOLVE_BUDGET = 128`, which this
+/// reproduces exactly on paper-scale fleets).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SolveBudget {
+    /// How many J values (in LPT-rank order) get the exact B&B.
+    pub exact_j: usize,
+    /// Cap on full Eq-3 solves during subset enumeration.
+    pub subset_solves: usize,
+}
+
+impl SolveBudget {
+    /// Fleet-adaptive budget: paper-scale fleets keep the historical
+    /// 10/128; thousand-entity fleets scale the subset cap down
+    /// (`8192 / total`, floored at 16) so enumeration cost stays flat as
+    /// the fleet grows. A sub-second deadline scales both knobs down
+    /// proportionally — the caller asked for an answer by then, not an
+    /// exhaustive sweep.
+    pub fn for_fleet(total_entities: usize, deadline: Option<f64>) -> SolveBudget {
+        let subset = (8192 / total_entities.max(1)).clamp(16, 128);
+        let base = SolveBudget { exact_j: 10, subset_solves: subset };
+        match deadline {
+            Some(d) if d < 1.0 => {
+                let scale = d.max(0.0);
+                SolveBudget {
+                    exact_j: ((base.exact_j as f64 * scale).ceil() as usize).min(base.exact_j),
+                    subset_solves: ((subset as f64 * scale).ceil() as usize).clamp(1, subset),
+                }
+            }
+            _ => base,
+        }
+    }
+}
+
+/// Cumulative solver work counters, shared across threads. One instance
+/// typically spans a whole `plan_choice` call (all TP dims).
+#[derive(Debug, Default)]
+pub struct SolverStats {
+    pub exact_solves: AtomicUsize,
+    pub lpt_solves: AtomicUsize,
+    pub subset_solves: AtomicUsize,
+}
+
+impl SolverStats {
+    pub fn exact(&self) -> usize {
+        self.exact_solves.load(Ordering::Relaxed)
+    }
+    pub fn lpt(&self) -> usize {
+        self.lpt_solves.load(Ordering::Relaxed)
+    }
+    pub fn subsets(&self) -> usize {
+        self.subset_solves.load(Ordering::Relaxed)
+    }
+}
+
+/// Execution context for a solve: fan-out width, work budget, counters.
+/// The default (1 thread, fleet-derived budget, no stats) reproduces the
+/// historical sequential behavior exactly.
+#[derive(Debug, Clone, Copy)]
+pub struct SolveCtx<'a> {
+    /// Worker threads for the per-J and per-subset fan-out; 1 = inline.
+    /// Any value returns a bit-identical result (see `docs/PLANNER.md`
+    /// "Extension 4" for the argument).
+    pub threads: usize,
+    /// `None` derives [`SolveBudget::for_fleet`] from the problem.
+    pub budget: Option<SolveBudget>,
+    /// Optional shared work counters.
+    pub stats: Option<&'a SolverStats>,
+}
+
+impl Default for SolveCtx<'_> {
+    fn default() -> Self {
+        SolveCtx { threads: 1, budget: None, stats: None }
+    }
+}
+
 /// Memo key: the per-kind remainders plus the groups-left counter.
-fn key(counts: &[usize], j: usize) -> Vec<u16> {
+/// `u32` digits — a fleet would need >4 billion entities of one kind to
+/// overflow, and the checked conversion turns that impossibility into a
+/// loud panic instead of the silent aliasing the old `as u16` cast
+/// allowed at >65535 entities.
+fn key(counts: &[usize], j: usize) -> Vec<u32> {
     counts
         .iter()
-        .map(|&c| c as u16)
-        .chain(std::iter::once(j as u16))
+        .map(|&c| u32::try_from(c).expect("memo key: per-kind entity count exceeds u32"))
+        .chain(std::iter::once(
+            u32::try_from(j).expect("memo key: group count exceeds u32"),
+        ))
         .collect()
 }
 
@@ -72,7 +163,7 @@ struct Search<'a> {
     e: &'a [EntitySpec],
     min_mem: f64,
     k: usize,
-    memo: HashMap<Vec<u16>, f64>,
+    memo: HashMap<Vec<u32>, f64>,
     /// Candidate compositions, pre-sorted by eff_power desc.
     comps: Vec<KindVec<usize>>,
 }
@@ -210,15 +301,25 @@ fn candidate_comps(
 /// per J sorted by objective (best first). Algorithm 1 keeps several
 /// promising grouping plans and lets the cost model pick the winner.
 pub fn solve_all(p: &GroupingProblem) -> Vec<GroupingSolution> {
-    let mut out = all_solutions(p);
+    solve_all_with(p, &SolveCtx::default())
+}
+
+/// [`solve_all`] under an explicit execution context (threads/budget/stats).
+pub fn solve_all_with(p: &GroupingProblem, ctx: &SolveCtx) -> Vec<GroupingSolution> {
+    let mut out = all_solutions(p, ctx);
     out.sort_by(|a, b| b.objective.partial_cmp(&a.objective).unwrap());
     out
 }
 
 /// Solve Eq (3): maximize J · min_j G_j over J and the assignment.
 pub fn solve(p: &GroupingProblem) -> Option<GroupingSolution> {
+    solve_with(p, &SolveCtx::default())
+}
+
+/// [`solve`] under an explicit execution context (threads/budget/stats).
+pub fn solve_with(p: &GroupingProblem, ctx: &SolveCtx) -> Option<GroupingSolution> {
     let mut best: Option<GroupingSolution> = None;
-    for sol in all_solutions(p) {
+    for sol in all_solutions(p, ctx) {
         // Strictly-better objective wins; on ties prefer more DP groups
         // (shallower pipelines — smaller bubbles and cheaper recovery).
         let better = match &best {
@@ -246,10 +347,49 @@ pub struct SubsetSolution {
     pub benched: KindVec<usize>,
 }
 
-/// Cap on full Eq-3 solves during subset enumeration. The upper-bound
-/// prune usually cuts the space to a handful of solves; the budget is a
-/// backstop for adversarial instances (many kinds, near-equal powers).
-const SUBSET_SOLVE_BUDGET: usize = 128;
+/// Bench candidates solved per fan-out round. The incumbent floor is
+/// frozen while a chunk runs and raised (as a deterministic max) between
+/// chunks, so the candidate sequence — and therefore the returned list —
+/// is identical for every thread count. Deliberately independent of
+/// `threads`: if chunking tracked parallelism, determinism would too.
+const SUBSET_CHUNK: usize = 16;
+
+/// Raw power of the entities a `bench` prefix can still keep (digits
+/// past the prefix are optimistically fully kept — trailing zeros).
+fn kept_power(p: &GroupingProblem, bench: &KindVec<usize>) -> f64 {
+    p.counts
+        .iter()
+        .zip(bench.iter())
+        .zip(p.entity.iter())
+        .map(|((&c, &b), e)| (c - b) as f64 * e.power)
+        .sum()
+}
+
+/// Advance `bench` to the next candidate in the historical DFS visit
+/// order (last kind's digit spins fastest), skipping every subtree whose
+/// optimistic kept power cannot beat `floor`. Returns false when the
+/// space is exhausted. The prune is exact because raising any digit only
+/// lowers kept power: one failed check cuts that digit's whole tail, so
+/// the carry moves straight to the previous kind.
+fn advance(bench: &mut KindVec<usize>, p: &GroupingProblem, floor: f64) -> bool {
+    let kdim = p.counts.len();
+    let mut i = kdim;
+    loop {
+        if i == 0 {
+            return false;
+        }
+        if bench[i - 1] < p.counts[i - 1] {
+            bench[i - 1] += 1;
+            if kept_power(p, bench) > floor + 1e-12 {
+                return true;
+            }
+        }
+        bench[i - 1] = 0;
+        i -= 1;
+    }
+}
+
+type SolvedSubset = (KindVec<usize>, f64, Option<GroupingSolution>);
 
 /// Solve Eq (3) over every device subset worth considering: enumerate
 /// benching `0..=n_k` entities of each kind, solving the all-devices
@@ -260,27 +400,116 @@ const SUBSET_SOLVE_BUDGET: usize = 128;
 /// always contains the all-devices solution when one is feasible, so the
 /// best subset is never worse than exact coverage.
 ///
-/// `incumbent` optionally seeds the prune floor with an objective the
-/// caller already computed (e.g. [`solve_all`]'s best): subtrees that
-/// cannot beat it are cut from the first digit on. Note a seed *equal*
-/// to the kept raw power of the full fleet prunes the zero-bench leaf
-/// itself — callers that pass an incumbent must already hold the
-/// all-devices solution.
+/// `incumbent` optionally warm-starts the prune floor with an objective
+/// the caller already holds (e.g. [`solve_all`]'s best, or a surviving
+/// plan's Eq-3 score on replan). The seed is nudged a hair below the
+/// given value so the subset *achieving* it is still enumerated, and the
+/// returned list is filtered against the final floor rather than the
+/// pruning path — so a warm-started solve returns the same list as a
+/// cold one whenever the solve budget doesn't bind.
 ///
-/// Returns one entry per solved (feasible) subset, best objective first;
-/// ties prefer fewer benched entities, keeping the all-devices plan the
-/// default when benching buys nothing.
+/// Returns one entry per solved subset whose kept raw power ties the
+/// best objective found, best first; ties prefer fewer benched entities,
+/// keeping the all-devices plan the default when benching buys nothing.
 pub fn solve_subsets(p: &GroupingProblem, incumbent: Option<f64>) -> Vec<SubsetSolution> {
-    let mut search = SubsetSearch {
-        p,
-        t0: Instant::now(),
-        best_obj: incumbent.unwrap_or(f64::NEG_INFINITY),
-        solves: 0,
-        out: Vec::new(),
-    };
+    solve_subsets_with(p, incumbent, &SolveCtx::default())
+}
+
+/// [`solve_subsets`] under an explicit execution context.
+pub fn solve_subsets_with(
+    p: &GroupingProblem,
+    incumbent: Option<f64>,
+    ctx: &SolveCtx,
+) -> Vec<SubsetSolution> {
+    let budget = ctx
+        .budget
+        .unwrap_or_else(|| SolveBudget::for_fleet(p.counts.total(), p.deadline));
+    let threads = ctx.threads.max(1);
+    let t0 = Instant::now();
+    // Sub-solves stay sequential inside each worker — the subset fan-out
+    // is already as wide as the pool.
+    let sub_ctx = SolveCtx { threads: 1, budget: Some(budget), stats: ctx.stats };
+    let floor = AtomicFloor::new(match incumbent {
+        // Strictly below the caller's objective so the subset achieving
+        // exactly that objective is never pruned.
+        Some(w) => w - (w.abs() * 1e-6 + 1e-9),
+        None => f64::NEG_INFINITY,
+    });
+    let mut solved: Vec<SolvedSubset> = Vec::new();
     let mut bench = KindVec::new(p.counts.len(), 0usize);
-    search.dfs(0, &mut bench);
-    let mut out = search.out;
+    let mut visited_first = false;
+    let mut exhausted = false;
+    let mut solves = 0usize;
+    while !exhausted && solves < budget.subset_solves {
+        // Past the caller's deadline keep only what's already solved.
+        if solves > 0
+            && p.deadline
+                .map(|d| t0.elapsed().as_secs_f64() > d)
+                .unwrap_or(false)
+        {
+            break;
+        }
+        // Collect the next chunk of bench candidates at a *frozen* floor.
+        // Freezing per chunk is what keeps the fan-out deterministic:
+        // every thread count sees the same candidate sequence because the
+        // floor only moves at chunk boundaries.
+        let frozen = floor.get();
+        let cap = SUBSET_CHUNK.min(budget.subset_solves - solves);
+        let mut chunk: Vec<KindVec<usize>> = Vec::with_capacity(cap);
+        while chunk.len() < cap {
+            if !visited_first {
+                visited_first = true;
+                // The zero bench (keep everything) is the first candidate;
+                // if even it fails the floor, no bench can pass.
+                if kept_power(p, &bench) <= frozen + 1e-12 {
+                    exhausted = true;
+                    break;
+                }
+            } else if !advance(&mut bench, p, frozen) {
+                exhausted = true;
+                break;
+            }
+            if p.counts.minus(&bench).total() > 0 {
+                chunk.push(bench.clone());
+            }
+        }
+        if chunk.is_empty() {
+            break;
+        }
+        let results: Vec<SolvedSubset> = par_map(threads, chunk, |b| {
+            let kept = p.counts.minus(&b);
+            let kp = kept_power(p, &b);
+            let sub = GroupingProblem { counts: kept, ..p.clone() };
+            let sol = solve_with(&sub, &sub_ctx);
+            (b, kp, sol)
+        });
+        solves += results.len();
+        if let Some(st) = ctx.stats {
+            st.subset_solves.fetch_add(results.len(), Ordering::Relaxed);
+        }
+        // Deterministic floor raise: the max over this chunk's results,
+        // independent of worker finish order.
+        for (_, _, sol) in &results {
+            if let Some(s) = sol {
+                floor.raise(s.objective);
+            }
+        }
+        solved.extend(results);
+    }
+    // Retroactive filter at the *final* floor: keep exactly the subsets
+    // whose kept raw power ties the best objective found (J·min_g can
+    // never exceed kept raw power, so anything below is provably worse).
+    // Filtering on the final floor — not the pruning path — makes the
+    // output independent of how the floor evolved, which is what lets a
+    // warm-started solve match a cold one.
+    let best = floor.get();
+    let thresh = best - (best.abs() * 1e-9 + 1e-12);
+    let mut out: Vec<SubsetSolution> = solved
+        .into_iter()
+        .filter_map(|(bench, kp, sol)| sol.map(|s| (bench, kp, s)))
+        .filter(|t| t.1 >= thresh)
+        .map(|(benched, _, solution)| SubsetSolution { solution, benched })
+        .collect();
     out.sort_by(|a, b| {
         b.solution
             .objective
@@ -291,76 +520,8 @@ pub fn solve_subsets(p: &GroupingProblem, incumbent: Option<f64>) -> Vec<SubsetS
     out
 }
 
-struct SubsetSearch<'a> {
-    p: &'a GroupingProblem,
-    t0: Instant,
-    best_obj: f64,
-    solves: usize,
-    out: Vec<SubsetSolution>,
-}
-
-impl<'a> SubsetSearch<'a> {
-    /// Raw power of the entities a completed `bench` prefix can still
-    /// keep (digits past the prefix are optimistically fully kept).
-    fn kept_power(&self, bench: &KindVec<usize>) -> f64 {
-        self.p
-            .counts
-            .iter()
-            .zip(bench.iter())
-            .zip(self.p.entity.iter())
-            .map(|((&c, &b), e)| (c - b) as f64 * e.power)
-            .sum()
-    }
-
-    fn over_budget(&self) -> bool {
-        if self.solves >= SUBSET_SOLVE_BUDGET {
-            return true;
-        }
-        // Past the caller's deadline keep only the all-devices result.
-        self.solves > 0
-            && self
-                .p
-                .deadline
-                .map(|d| self.t0.elapsed().as_secs_f64() > d)
-                .unwrap_or(false)
-    }
-
-    /// DFS over per-kind bench counts; the last kind's digit spins
-    /// fastest, mirroring the composition odometer's visit order.
-    fn dfs(&mut self, ki: usize, bench: &mut KindVec<usize>) {
-        if self.over_budget() {
-            return;
-        }
-        if ki == self.p.counts.len() {
-            let kept = self.p.counts.minus(bench);
-            if kept.total() == 0 {
-                return;
-            }
-            self.solves += 1;
-            let sub = GroupingProblem { counts: kept, ..self.p.clone() };
-            if let Some(sol) = solve(&sub) {
-                if sol.objective > self.best_obj {
-                    self.best_obj = sol.objective;
-                }
-                self.out.push(SubsetSolution { solution: sol, benched: bench.clone() });
-            }
-            return;
-        }
-        for bk in 0..=self.p.counts[ki] {
-            bench[ki] = bk;
-            // Raising bk only lowers kept power, so once the optimistic
-            // bound falls to the incumbent the whole tail is pruned.
-            if self.kept_power(bench) <= self.best_obj + 1e-12 {
-                break;
-            }
-            self.dfs(ki + 1, bench);
-        }
-        bench[ki] = 0;
-    }
-}
-
 /// One Eq-3 solution per feasible J (unsorted).
-fn all_solutions(p: &GroupingProblem) -> Vec<GroupingSolution> {
+fn all_solutions(p: &GroupingProblem, ctx: &SolveCtx) -> Vec<GroupingSolution> {
     assert_eq!(
         p.counts.len(),
         p.entity.len(),
@@ -384,6 +545,10 @@ fn all_solutions(p: &GroupingProblem) -> Vec<GroupingSolution> {
         return Vec::new();
     }
 
+    let budget = ctx
+        .budget
+        .unwrap_or_else(|| SolveBudget::for_fleet(total, p.deadline));
+    let threads = ctx.threads.max(1);
     let t0 = Instant::now();
 
     // §Perf: LPT screening pass. The greedy solves every J in
@@ -392,22 +557,31 @@ fn all_solutions(p: &GroupingProblem) -> Vec<GroupingSolution> {
     // seeded with the LPT result as incumbent so the first prune already
     // has a strong floor. Large instances (64+ entities) dropped from
     // ~7 min of exhaustive per-J search to seconds (see DESIGN.md
-    // "Planning overhead").
-    const EXACT_J_BUDGET: usize = 10;
-    let mut lpt: Vec<(usize, Option<(Vec<KindVec<usize>>, f64)>)> = (1..=max_j)
-        .map(|j| {
-            let k = (p.microbatches_total / j).max(1);
-            (j, lpt_heuristic(&p.counts, &p.entity, p.min_mem_gib, j, k))
-        })
-        .collect();
+    // "Planning overhead"). Each J is independent, and `par_map` returns
+    // in J order, so the fanned-out screen feeds the sort exactly what
+    // the sequential loop did.
+    let js: Vec<usize> = (1..=max_j).collect();
+    let mut lpt: Vec<(usize, Option<(Vec<KindVec<usize>>, f64)>)> = par_map(threads, js, |j| {
+        let k = (p.microbatches_total / j).max(1);
+        (j, lpt_heuristic(&p.counts, &p.entity, p.min_mem_gib, j, k))
+    });
+    if let Some(st) = ctx.stats {
+        st.lpt_solves.fetch_add(max_j, Ordering::Relaxed);
+    }
     lpt.sort_by(|a, b| {
         let oa = a.1.as_ref().map(|(_, g)| a.0 as f64 * g).unwrap_or(f64::NEG_INFINITY);
         let ob = b.1.as_ref().map(|(_, g)| b.0 as f64 * g).unwrap_or(f64::NEG_INFINITY);
         ob.partial_cmp(&oa).unwrap()
     });
 
-    let mut out: Vec<GroupingSolution> = Vec::new();
-    for (rank, (j, lpt_sol)) in lpt.into_iter().enumerate() {
+    // Per-J exact searches are self-contained (own memo, own LPT floor),
+    // so fanning them out is bit-identical to the sequential loop — there
+    // is no cross-J state to race on. (Sharing incumbents across J would
+    // prune harder but make exact-vs-fallback outcomes depend on worker
+    // finish order; determinism wins.)
+    let ranked: Vec<(usize, (usize, Option<(Vec<KindVec<usize>>, f64)>))> =
+        lpt.into_iter().enumerate().collect();
+    let solved: Vec<Option<GroupingSolution>> = par_map(threads, ranked, |(rank, (j, lpt_sol))| {
         let k_per_group = (p.microbatches_total / j).max(1);
         let over_deadline = p
             .deadline
@@ -417,9 +591,12 @@ fn all_solutions(p: &GroupingProblem) -> Vec<GroupingSolution> {
         // instances; at 64+ entities the composition space explodes and
         // the LPT assignment with floored verification is the practical
         // optimum (documented in DESIGN.md "Planning overhead").
-        let run_exact = rank < EXACT_J_BUDGET && !over_deadline && total <= 26;
+        let run_exact = rank < budget.exact_j && !over_deadline && total <= 26;
         let mut fell_back = !run_exact;
         let sol = if run_exact {
+            if let Some(st) = ctx.stats {
+                st.exact_solves.fetch_add(1, Ordering::Relaxed);
+            }
             let comps = candidate_comps(&p.counts, &p.entity, p.min_mem_gib, k_per_group);
             if comps.is_empty() {
                 None
@@ -448,17 +625,17 @@ fn all_solutions(p: &GroupingProblem) -> Vec<GroupingSolution> {
         } else {
             lpt_sol
         };
-        if let Some((groups, min_g)) = sol {
+        sol.map(|(groups, min_g)| {
             let objective = j as f64 * min_g;
-            out.push(GroupingSolution {
+            GroupingSolution {
                 groups,
                 min_g,
                 objective,
                 heuristic_fallback: fell_back,
-            });
-        }
-    }
-    out
+            }
+        })
+    });
+    solved.into_iter().flatten().collect()
 }
 
 #[cfg(test)]
@@ -698,5 +875,82 @@ mod tests {
         let s = solve(&p).unwrap();
         assert!(s.heuristic_fallback);
         assert!(s.min_g > 0.0);
+    }
+
+    #[test]
+    fn budget_scales_with_fleet_and_deadline() {
+        // paper-scale fleets keep the historical constants
+        let small = SolveBudget::for_fleet(8, None);
+        assert_eq!(small, SolveBudget { exact_j: 10, subset_solves: 128 });
+        assert_eq!(SolveBudget::for_fleet(64, None).subset_solves, 128);
+        // thousand-entity fleets scale the subset cap down, floored at 16
+        let big = SolveBudget::for_fleet(1000, None);
+        assert_eq!(big.subset_solves, 16);
+        assert_eq!(SolveBudget::for_fleet(100_000, None).subset_solves, 16);
+        // sub-second deadlines scale both knobs proportionally
+        let tight = SolveBudget::for_fleet(8, Some(0.5));
+        assert_eq!(tight.exact_j, 5);
+        assert_eq!(tight.subset_solves, 64);
+        // a zero deadline still permits the all-devices solve
+        let zero = SolveBudget::for_fleet(8, Some(0.0));
+        assert_eq!(zero.exact_j, 0);
+        assert_eq!(zero.subset_solves, 1);
+    }
+
+    #[test]
+    fn parallel_solve_is_bit_identical_to_sequential() {
+        // Spot check here; the full random grid lives in
+        // tests/property_parallel.rs.
+        let p = GroupingProblem {
+            counts: kv([3, 2, 1]),
+            entity: paper_entities(),
+            min_mem_gib: 70.0,
+            microbatches_total: 16,
+            deadline: None,
+        };
+        let seq = SolveCtx { threads: 1, ..Default::default() };
+        let par = SolveCtx { threads: 4, ..Default::default() };
+        assert_eq!(solve_all_with(&p, &seq), solve_all_with(&p, &par));
+        assert_eq!(
+            solve_subsets_with(&p, None, &seq),
+            solve_subsets_with(&p, None, &par)
+        );
+    }
+
+    #[test]
+    fn warm_incumbent_matches_cold_subset_solve() {
+        // Seeding the floor with the best objective (even the optimum
+        // itself) must not change the returned list.
+        let entity = KindVec::from(vec![ent(1.0, 80.0), ent(0.1, 80.0)]);
+        let p = GroupingProblem {
+            counts: KindVec::from(vec![2, 1]),
+            entity,
+            min_mem_gib: 60.0,
+            microbatches_total: 8,
+            deadline: None,
+        };
+        let cold = solve_subsets(&p, None);
+        let best = cold[0].solution.objective;
+        let warm = solve_subsets(&p, Some(best));
+        assert_eq!(cold, warm);
+    }
+
+    #[test]
+    fn stats_count_solver_work() {
+        let p = GroupingProblem {
+            counts: kv([3, 2, 0]),
+            entity: paper_entities(),
+            min_mem_gib: 70.0,
+            microbatches_total: 12,
+            deadline: None,
+        };
+        let stats = SolverStats::default();
+        let ctx = SolveCtx { stats: Some(&stats), ..Default::default() };
+        let _ = solve_all_with(&p, &ctx);
+        assert!(stats.lpt() > 0);
+        assert!(stats.exact() > 0);
+        assert_eq!(stats.subsets(), 0);
+        let _ = solve_subsets_with(&p, None, &ctx);
+        assert!(stats.subsets() > 0);
     }
 }

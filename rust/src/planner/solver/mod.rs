@@ -30,7 +30,10 @@
 pub mod bnb;
 pub mod lpt;
 
-pub use bnb::{solve, solve_subsets, GroupingProblem, GroupingSolution, SubsetSolution};
+pub use bnb::{
+    solve, solve_all, solve_all_with, solve_subsets, solve_subsets_with, solve_with,
+    GroupingProblem, GroupingSolution, SolveBudget, SolveCtx, SolverStats, SubsetSolution,
+};
 pub use lpt::lpt_heuristic;
 
 /// Per-kind TP-entity description (power and memory already folded by tp).

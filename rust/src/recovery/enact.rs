@@ -106,6 +106,9 @@ pub struct EnactRow {
     pub price_per_hour: f64,
     /// Analytic migration downtime the coordinator charged.
     pub migration_s: f64,
+    /// Wall-clock seconds the coordinator spent replanning this event
+    /// (~0 on a plan-cache hit).
+    pub replan_s: f64,
     /// Real optimizer steps run in the interval before this event.
     pub steps_run: usize,
     /// Last real train loss before the event (NaN while paused).
@@ -163,6 +166,10 @@ pub struct EnactReport {
     pub budget_slack_usd: Option<f64>,
     /// True when the budget envelope (not the trace) ended the run.
     pub exhausted: bool,
+    /// Total wall-clock seconds the coordinator spent replanning.
+    pub replan_total_s: f64,
+    /// Replans served from the coordinator's fleet-signature plan cache.
+    pub plan_cache_hits: usize,
     pub rows: Vec<EnactRow>,
 }
 
@@ -182,20 +189,21 @@ impl EnactReport {
     /// Per-event CSV (commas in reasons become `;`).
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
-            "t_hours,decision,forced,gpus,iter_s,migration_s,steps,loss,\
+            "t_hours,decision,forced,gpus,iter_s,migration_s,replan_s,steps,loss,\
              save_local_b,save_cloud_b,load_local_b,load_rdma_b,load_cloud_b,\
              local_frac,peer_frac,cloud_frac,fig10_s,save_wall_s,load_wall_s,reason\n",
         );
         for r in &self.rows {
             let load = r.load.clone().unwrap_or_default();
             out.push_str(&format!(
-                "{:.3},{},{},{},{:.4},{:.1},{},{:.4},{},{},{},{},{},{:.3},{:.3},{:.3},{:.1},{:.4},{:.4},{}\n",
+                "{:.3},{},{},{},{:.4},{:.1},{:.4},{},{:.4},{},{},{},{},{},{:.3},{:.3},{:.3},{:.1},{:.4},{:.4},{}\n",
                 r.at_s / 3600.0,
                 r.decision,
                 r.forced,
                 r.gpus,
                 r.iter_s,
                 r.migration_s,
+                r.replan_s,
                 r.steps_run,
                 r.loss_before,
                 r.save.bytes_local,
@@ -501,7 +509,10 @@ pub fn enact(
         // checkpoint tiers (their cloud replicas survive)
         let before_nodes: std::collections::BTreeSet<usize> =
             coord.cluster.nodes.iter().map(|n| n.node_id).collect();
+        let t_replan = Instant::now();
         let out = coord.handle_market_event(&ev)?;
+        let replan_s = t_replan.elapsed().as_secs_f64();
+        report.replan_total_s += replan_s;
         let after_nodes: std::collections::BTreeSet<usize> =
             out.cluster.nodes.iter().map(|n| n.node_id).collect();
         for dead in before_nodes.difference(&after_nodes) {
@@ -601,6 +612,7 @@ pub fn enact(
             iter_s,
             price_per_hour: out.price_per_hour,
             migration_s: out.migration_s,
+            replan_s,
             steps_run,
             loss_before,
             dp_groups,
@@ -654,6 +666,7 @@ pub fn enact(
             iter_s: 0.0,
             price_per_hour: 0.0,
             migration_s: 0.0,
+            replan_s: 0.0,
             steps_run: 0,
             loss_before: report.losses.last().copied().unwrap_or(f64::NAN),
             dp_groups: 0,
@@ -671,6 +684,7 @@ pub fn enact(
     }
     report.usd = meter.usd;
     report.budget_slack_usd = cfg.replay.envelope.max_usd.map(|m| m - meter.usd);
+    report.plan_cache_hits = coord.plan_cache_hits;
 
     report.steps = report.losses.len();
     report.final_train_loss = report.losses.last().copied().unwrap_or(f64::NAN);

@@ -15,7 +15,7 @@
 //! Preemptions that kill GPUs the running plan uses force a migration
 //! regardless; `docs/ELASTICITY.md` walks the decision rule.
 
-use std::collections::BTreeSet;
+use std::collections::{BTreeSet, HashMap};
 use std::fmt;
 
 use anyhow::Result;
@@ -26,7 +26,8 @@ use crate::cluster::{
 };
 use crate::modelcfg::ModelCfg;
 use crate::planner::cost::plan_tokens_per_iter;
-use crate::planner::{plan_choice, BudgetEnvelope, Objective, ParallelPlan, PlanOptions};
+use crate::planner::grouping::plan_eq3_objective;
+use crate::planner::{plan_choice, BudgetEnvelope, Objective, ParallelPlan, PlanChoice, PlanOptions};
 use crate::profile::ProfileDb;
 
 use super::migration::plan_migration;
@@ -163,7 +164,22 @@ pub struct ElasticCoordinator {
     /// preempt+grant could resurrect the dead node as a "surviving"
     /// checkpoint holder in the migration cost model.
     next_node_id: usize,
+    /// Memoized `plan_choice` results keyed on the canonical fleet
+    /// signature (node layout + prices bucketed to $0.001). A market
+    /// event that merely restates known fleet state replans in
+    /// microseconds instead of re-running the solver.
+    plan_cache: HashMap<FleetSig, PlanChoice>,
+    /// Events whose candidate scoring was served from `plan_cache`.
+    pub plan_cache_hits: usize,
 }
+
+/// Canonical fleet signature: `(node_id, kind, count)` per node, plus
+/// per-kind spot prices bucketed to $0.001.
+type FleetSig = (Vec<(usize, usize, usize)>, Vec<u64>);
+
+/// Cache bound; cleared wholesale when full (fleet states recur in small
+/// cycles, so an eviction policy fancier than "start over" buys nothing).
+const PLAN_CACHE_CAP: usize = 64;
 
 /// Migration-worthiness verdict for a voluntary (non-forced) candidate.
 struct Verdict {
@@ -246,7 +262,25 @@ impl ElasticCoordinator {
             holds: 0,
             unchanged: 0,
             next_node_id,
+            plan_cache: HashMap::new(),
+            plan_cache_hits: 0,
         })
+    }
+
+    /// Signature of everything the solver sees: the node layout plus
+    /// per-kind prices bucketed to $0.001. Sub-millidollar price moves
+    /// land in the same bucket — far inside the amortization rule's 2%
+    /// hysteresis, so serving cached candidates cannot flip a decision
+    /// the rule would have made differently.
+    fn fleet_signature(&self) -> FleetSig {
+        let nodes = self
+            .cluster
+            .nodes
+            .iter()
+            .map(|n| (n.node_id, n.kind.index(), n.count))
+            .collect();
+        let prices = self.prices.iter().map(|&p| (p * 1000.0).round() as u64).collect();
+        (nodes, prices)
     }
 
     /// Report the run's cumulative billed dollars (metered by the
@@ -534,7 +568,36 @@ impl ElasticCoordinator {
         cluster.catalog = cat.clone();
         let mut profile = self.profile.clone();
         profile.catalog = cat.clone();
-        let cand = plan_choice(&cluster, &profile, &self.cfg.opts).ok().map(|c| {
+        // Incremental replan: serve the scored candidates from the
+        // fleet-signature cache when this exact fleet was solved before;
+        // otherwise warm-start the solve with the surviving plan's Eq-3
+        // objective (a valid prune floor whenever its entities are all
+        // still alive) and remember the result. The envelope-aware pick
+        // below always runs fresh — spend and wall-clock move even when
+        // the fleet doesn't.
+        let sig = self.fleet_signature();
+        let choice = if let Some(hit) = self.plan_cache.get(&sig).cloned() {
+            self.plan_cache_hits += 1;
+            Some(hit)
+        } else {
+            let mut opts = self.cfg.opts.clone();
+            if let Some(cur) = &old_plan {
+                if plan_fits(cur, &self.cluster) {
+                    if let Some(w) = plan_eq3_objective(cur, &self.model, &profile) {
+                        opts.warm = Some((cur.tp_dim, w));
+                    }
+                }
+            }
+            let c = plan_choice(&cluster, &profile, &opts).ok();
+            if let Some(c) = &c {
+                if self.plan_cache.len() >= PLAN_CACHE_CAP {
+                    self.plan_cache.clear();
+                }
+                self.plan_cache.insert(sig, c.clone());
+            }
+            c
+        };
+        let cand = choice.map(|c| {
             c.pick_within(self.cfg.objective, &self.cfg.envelope, self.spent_usd, self.now_s)
                 .clone()
         });
@@ -853,6 +916,58 @@ mod tests {
     #[test]
     fn budget_exhausted_decision_displays() {
         assert_eq!(ReplanDecision::BudgetExhausted.to_string(), "budget-exhausted");
+    }
+
+    #[test]
+    fn warm_started_replan_equals_cold_solve() {
+        // Plan the full fleet, preempt one kind, then re-plan the
+        // shrunken fleet both cold and warm-started from a surviving
+        // plan's Eq-3 objective: the choices must be identical.
+        let (model, profile, _) = parts();
+        let shrunk = ClusterSpec::from_counts(&[(4, KindId::A100), (2, KindId::H800)]);
+        let cold_opts = PlanOptions { bench: true, ..Default::default() };
+        let cold = plan_choice(&shrunk, &profile, &cold_opts).unwrap();
+        let w = plan_eq3_objective(&cold.fastest.plan, &model, &profile).unwrap();
+        let warm_opts = PlanOptions {
+            bench: true,
+            warm: Some((cold.fastest.plan.tp_dim, w)),
+            ..Default::default()
+        };
+        let warm = plan_choice(&shrunk, &profile, &warm_opts).unwrap();
+        assert_eq!(cold.candidates.len(), warm.candidates.len());
+        assert_eq!(cold.fastest.plan.tp_dim, warm.fastest.plan.tp_dim);
+        assert_eq!(cold.fastest.plan.groups, warm.fastest.plan.groups);
+        assert_eq!(cold.cheapest.plan.groups, warm.cheapest.plan.groups);
+    }
+
+    #[test]
+    fn repeated_fleet_state_hits_the_plan_cache() {
+        let mut c = coordinator();
+        assert_eq!(c.plan_cache_hits, 0);
+        let out = c
+            .handle_market_event(&MarketEvent {
+                at_s: 600.0,
+                deltas: vec![],
+                prices: vec![],
+                max_price_move: 0.0,
+            })
+            .unwrap();
+        assert_eq!(out.decision, ReplanDecision::Kept);
+        assert_eq!(c.plan_cache_hits, 0, "first solve is a miss");
+        // identical fleet + prices: the second event is served from cache
+        let out = c
+            .handle_market_event(&MarketEvent {
+                at_s: 1200.0,
+                deltas: vec![],
+                prices: vec![],
+                max_price_move: 0.0,
+            })
+            .unwrap();
+        assert_eq!(out.decision, ReplanDecision::Kept);
+        assert_eq!(c.plan_cache_hits, 1);
+        // a fleet change invalidates the signature: miss again
+        c.preempt(KindId::H800, 2, 1800.0).unwrap();
+        assert_eq!(c.plan_cache_hits, 1);
     }
 
     #[test]

@@ -28,6 +28,8 @@
 //! price track moves every step; events are emitted per
 //! `price_rel_threshold`).
 
+use std::time::Instant;
+
 use anyhow::Result;
 
 use crate::cluster::{ClusterSpec, KindId, SpotTrace};
@@ -84,6 +86,9 @@ pub struct ReplayRow {
     pub price_per_hour: f64,
     /// Migration downtime charged by this event.
     pub migration_s: f64,
+    /// Wall-clock seconds the coordinator spent replanning this event
+    /// (candidate scoring + decision; ~0 on a plan-cache hit).
+    pub replan_s: f64,
     pub tokens_total: f64,
     pub usd_total: f64,
     pub reason: String,
@@ -123,6 +128,13 @@ pub struct ReplayReport {
     pub deadline_slack_s: Option<f64>,
     /// True when the envelope (not the trace horizon) ended the run.
     pub exhausted: bool,
+    /// Total wall-clock seconds spent replanning across all events.
+    pub replan_total_s: f64,
+    /// Slowest single replan, seconds.
+    pub replan_max_s: f64,
+    /// Events whose candidate scoring was served from the coordinator's
+    /// fleet-signature plan cache.
+    pub plan_cache_hits: usize,
     pub rows: Vec<ReplayRow>,
 }
 
@@ -135,11 +147,11 @@ impl ReplayReport {
     /// Per-event CSV (commas in reasons become `;`).
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
-            "t_hours,decision,forced,gpus,iter_s,fleet_usd_per_h,migration_s,tokens,usd,reason\n",
+            "t_hours,decision,forced,gpus,iter_s,fleet_usd_per_h,migration_s,replan_s,tokens,usd,reason\n",
         );
         for r in &self.rows {
             out.push_str(&format!(
-                "{:.3},{},{},{},{:.4},{:.2},{:.1},{:.0},{:.2},{}\n",
+                "{:.3},{},{},{},{:.4},{:.2},{:.1},{:.4},{:.0},{:.2},{}\n",
                 r.at_s / 3600.0,
                 r.decision,
                 r.forced,
@@ -147,6 +159,7 @@ impl ReplayReport {
                 r.iter_s,
                 r.price_per_hour,
                 r.migration_s,
+                r.replan_s,
                 r.tokens_total,
                 r.usd_total,
                 r.reason.replace(',', ";"),
@@ -364,6 +377,8 @@ pub fn replay(profile: &ProfileDb, trace: &SpotTrace, cfg: &ReplayConfig) -> Res
     let mut rows = Vec::new();
     let mut t_cursor = 0.0;
     let mut stopped: Option<String> = None;
+    let mut replan_total_s = 0.0f64;
+    let mut replan_max_s = 0.0f64;
     for ev in trace.market_events(cfg.price_rel_threshold) {
         let active = active_of(&coord);
         stopped = metered_advance(
@@ -378,7 +393,11 @@ pub fn replay(profile: &ProfileDb, trace: &SpotTrace, cfg: &ReplayConfig) -> Res
             break;
         }
         coord.note_spend(meter.usd);
+        let t_replan = Instant::now();
         let out = coord.handle_market_event(&ev)?;
+        let replan_s = t_replan.elapsed().as_secs_f64();
+        replan_total_s += replan_s;
+        replan_max_s = replan_max_s.max(replan_s);
         if out.decision == ReplanDecision::Paused {
             // an in-flight migration dies with the fleet; the eventual
             // resume charges its own (cloud) restore in full
@@ -393,6 +412,7 @@ pub fn replay(profile: &ProfileDb, trace: &SpotTrace, cfg: &ReplayConfig) -> Res
             iter_s: out.plan.as_ref().map_or(0.0, |p| p.est_iter_s),
             price_per_hour: out.price_per_hour,
             migration_s: out.migration_s,
+            replan_s,
             tokens_total: meter.tokens,
             usd_total: meter.usd,
             reason: out.reason,
@@ -421,6 +441,7 @@ pub fn replay(profile: &ProfileDb, trace: &SpotTrace, cfg: &ReplayConfig) -> Res
             iter_s: 0.0,
             price_per_hour: 0.0,
             migration_s: 0.0,
+            replan_s: 0.0,
             tokens_total: meter.tokens,
             usd_total: meter.usd,
             reason: why,
@@ -442,6 +463,9 @@ pub fn replay(profile: &ProfileDb, trace: &SpotTrace, cfg: &ReplayConfig) -> Res
         budget_slack_usd: cfg.envelope.max_usd.map(|m| m - meter.usd),
         deadline_slack_s: cfg.envelope.deadline_s.map(|d| d - t_cursor),
         exhausted,
+        replan_total_s,
+        replan_max_s,
+        plan_cache_hits: coord.plan_cache_hits,
         rows,
     })
 }
@@ -573,7 +597,22 @@ mod tests {
         assert_eq!(lines.len(), report.rows.len() + 1);
         // no unescaped commas leak from reasons: fixed column count
         for l in &lines[1..] {
-            assert_eq!(l.matches(',').count(), 9, "{l}");
+            assert_eq!(l.matches(',').count(), 10, "{l}");
         }
+    }
+
+    #[test]
+    fn replay_meters_replan_latency() {
+        let p = profile();
+        let trace = short_trace(3);
+        let report = replay(&p, &trace, &ReplayConfig::default()).unwrap();
+        // every handled event carries a (possibly tiny) replan latency
+        assert!(report.replan_total_s >= 0.0);
+        assert!(report.replan_max_s <= report.replan_total_s + 1e-12);
+        let row_sum: f64 = report.rows.iter().map(|r| r.replan_s).sum();
+        assert!((row_sum - report.replan_total_s).abs() < 1e-9);
+        // a replayed trace revisits fleet states; with >1 event the
+        // signature cache should see at least zero hits (counter wired)
+        assert!(report.plan_cache_hits <= report.events);
     }
 }

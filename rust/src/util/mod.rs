@@ -12,5 +12,6 @@ pub mod bench;
 pub mod cli;
 pub mod json;
 pub mod logging;
+pub mod par;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,162 @@
+//! Structured fork/join parallelism on plain `std::thread` (no `rayon`
+//! in the vendor set).
+//!
+//! Two primitives cover everything the fleet-scale planner needs:
+//!
+//! * [`par_map`] — an *ordered* parallel map over owned items: results
+//!   come back in input order no matter which worker finishes first, so
+//!   a caller that was deterministic sequentially stays deterministic
+//!   fanned out.
+//! * [`AtomicFloor`] — a monotone shared `f64` maximum (the solver's
+//!   incumbent objective) workers can read lock-free. Determinism is the
+//!   *caller's* contract: the branch-and-bound raises it only at
+//!   deterministic points (chunk boundaries), never from whichever
+//!   thread happens to finish first.
+
+use std::num::NonZeroUsize;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Resolve a thread-count request: `None` or `Some(0)` means "all the
+/// cores the OS reports" (falling back to 1 when it reports nothing).
+pub fn resolve_threads(requested: Option<usize>) -> usize {
+    match requested {
+        Some(n) if n > 0 => n,
+        _ => std::thread::available_parallelism().map(NonZeroUsize::get).unwrap_or(1),
+    }
+}
+
+/// Apply `f` to every item on up to `threads` scoped workers and return
+/// the results **in input order**. `threads <= 1` (or a single item)
+/// runs inline with no thread machinery at all, so the sequential path
+/// is exactly `items.map(f)`.
+///
+/// Work is pulled from a shared cursor, so uneven item costs balance
+/// across workers; a panicking `f` propagates out of the scope.
+pub fn par_map<T, R, F>(threads: usize, items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = items.len();
+    if threads <= 1 || n <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+    let work = Mutex::new(items.into_iter().enumerate());
+    let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..threads.min(n) {
+            s.spawn(|| loop {
+                let next = work.lock().unwrap().next();
+                match next {
+                    Some((i, item)) => {
+                        let r = f(item);
+                        *slots[i].lock().unwrap() = Some(r);
+                    }
+                    None => break,
+                }
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("par_map: worker produced no result"))
+        .collect()
+}
+
+/// Order-preserving `f64 -> u64` bit mapping (standard sign-flip trick):
+/// for any non-NaN `a < b`, `enc(a) < enc(b)`.
+fn enc(x: f64) -> u64 {
+    let b = x.to_bits();
+    if b >> 63 == 0 {
+        b | (1 << 63)
+    } else {
+        !b
+    }
+}
+
+fn dec(b: u64) -> f64 {
+    if b >> 63 == 1 {
+        f64::from_bits(b & !(1 << 63))
+    } else {
+        f64::from_bits(!b)
+    }
+}
+
+/// A monotonically *rising* shared `f64` — the incumbent floor the
+/// branch-and-bound prunes against. `raise` is a lock-free `fetch_max`
+/// over the order-preserving bit encoding; `get` never tears. NaN is
+/// rejected (it has no place in an ordering).
+pub struct AtomicFloor(AtomicU64);
+
+impl AtomicFloor {
+    pub fn new(v: f64) -> AtomicFloor {
+        assert!(!v.is_nan(), "AtomicFloor seeded with NaN");
+        AtomicFloor(AtomicU64::new(enc(v)))
+    }
+
+    pub fn get(&self) -> f64 {
+        dec(self.0.load(Ordering::Acquire))
+    }
+
+    /// Raise the floor to `v` if `v` is higher; lower values are no-ops.
+    pub fn raise(&self, v: f64) {
+        if !v.is_nan() {
+            self.0.fetch_max(enc(v), Ordering::AcqRel);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_preserves_order() {
+        let xs: Vec<usize> = (0..100).collect();
+        let seq: Vec<usize> = xs.iter().map(|&x| x * x).collect();
+        for threads in [1, 2, 4, 7] {
+            assert_eq!(par_map(threads, xs.clone(), |x| x * x), seq, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn par_map_handles_empty_and_single() {
+        let empty: Vec<usize> = vec![];
+        assert!(par_map(4, empty, |x: usize| x).is_empty());
+        assert_eq!(par_map(4, vec![7usize], |x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn atomic_floor_is_monotone_across_signs() {
+        let f = AtomicFloor::new(f64::NEG_INFINITY);
+        assert_eq!(f.get(), f64::NEG_INFINITY);
+        f.raise(-3.5);
+        assert_eq!(f.get(), -3.5);
+        f.raise(-7.0); // lower: no-op
+        assert_eq!(f.get(), -3.5);
+        f.raise(0.0);
+        assert_eq!(f.get(), 0.0);
+        f.raise(2.25);
+        assert_eq!(f.get(), 2.25);
+        f.raise(f64::NAN); // ignored
+        assert_eq!(f.get(), 2.25);
+    }
+
+    #[test]
+    fn encoding_orders_like_f64() {
+        let xs = [f64::NEG_INFINITY, -1e300, -1.0, -0.0, 0.0, 1e-9, 1.0, 1e300, f64::INFINITY];
+        for w in xs.windows(2) {
+            assert!(enc(w[0]) <= enc(w[1]), "{} vs {}", w[0], w[1]);
+            assert_eq!(dec(enc(w[0])), w[0]);
+        }
+    }
+
+    #[test]
+    fn resolve_threads_defaults_to_cores() {
+        assert!(resolve_threads(None) >= 1);
+        assert!(resolve_threads(Some(0)) >= 1);
+        assert_eq!(resolve_threads(Some(3)), 3);
+    }
+}

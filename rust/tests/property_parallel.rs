@@ -1,0 +1,136 @@
+//! Property tests for PLANNER.md Extension 4 — parallel & incremental
+//! solving.
+//!
+//! 1. The fanned-out solver (per-J exact solves + chunked subset
+//!    enumeration) must return **bit-identical** solutions to the
+//!    sequential path at any thread count: the chunked algorithm with a
+//!    per-chunk frozen floor *is* the canonical algorithm, threads only
+//!    change who executes each chunk entry.
+//! 2. A warm-started subset solve (prune floor seeded with an objective
+//!    the caller already holds — its own previous optimum, or a survivor
+//!    plan's score after a preemption) must return the same list as a
+//!    cold solve: warm-starting is a pure speedup, never a result change.
+//!
+//! The warm-start fixtures are sized so the subset solve budget cannot
+//! bind: total ≤ 6 entities → at most Π(cᵢ+1) ≤ 2⁶ = 64 candidates,
+//! under `SolveBudget::for_fleet`'s 128-solve small-fleet budget. A
+//! *binding* budget legitimately lets a warm solve reach deeper than a
+//! cold one (warm prunes junk earlier, so the same solve count covers
+//! more of the enumeration). The thread-identity fixtures need no such
+//! cap — both sides run the identical chunk sequence and truncate at the
+//! identical point.
+
+use autohet::cluster::KindVec;
+use autohet::planner::solver::{
+    solve_all_with, solve_subsets_with, solve_with, EntitySpec, GroupingProblem, SolveCtx,
+};
+use autohet::util::rng::Rng;
+
+/// Random 2–10-kind grouping problem with at most `max_total` entities.
+fn random_problem(rng: &mut Rng, max_total: usize) -> GroupingProblem {
+    let kdim = 2 + rng.below(9); // 2..=10 kinds
+    let mut counts = vec![0usize; kdim];
+    let total = 2 + rng.below(max_total - 1); // 2..=max_total
+    for _ in 0..total {
+        counts[rng.below(kdim)] += 1;
+    }
+    let entity: Vec<EntitySpec> = (0..kdim)
+        .map(|_| EntitySpec {
+            power: 0.25 + rng.f64() * 4.0,
+            mem_gib: 40.0 + rng.f64() * 120.0,
+        })
+        .collect();
+    GroupingProblem {
+        counts: KindVec::from(counts),
+        entity: KindVec::from(entity),
+        min_mem_gib: 40.0 + rng.f64() * 80.0,
+        microbatches_total: 8 + rng.below(56),
+        deadline: None,
+    }
+}
+
+#[test]
+fn parallel_solver_is_bit_identical_to_sequential() {
+    let mut rng = Rng::new(0xA11E7);
+    let seq = SolveCtx { threads: 1, ..Default::default() };
+    let mut feasible = 0;
+    for case in 0..60 {
+        let p = random_problem(&mut rng, 8);
+        let a = solve_all_with(&p, &seq);
+        let sa = solve_subsets_with(&p, None, &seq);
+        for threads in [2usize, 4, 8] {
+            let par = SolveCtx { threads, ..Default::default() };
+            let b = solve_all_with(&p, &par);
+            assert_eq!(
+                a, b,
+                "case {case}: per-J solutions diverge at {threads} threads on {:?}",
+                p.counts
+            );
+            let sb = solve_subsets_with(&p, None, &par);
+            assert_eq!(
+                sa, sb,
+                "case {case}: subset solutions diverge at {threads} threads on {:?}",
+                p.counts
+            );
+        }
+        if !a.is_empty() {
+            feasible += 1;
+        }
+    }
+    assert!(feasible >= 10, "only {feasible}/60 fixtures feasible — fixtures too harsh");
+}
+
+#[test]
+fn warm_started_subset_solve_equals_cold() {
+    let mut rng = Rng::new(0xBEEF5);
+    let ctx = SolveCtx::default();
+    let mut checked = 0;
+    for case in 0..40 {
+        let p = random_problem(&mut rng, 6);
+        let cold = solve_subsets_with(&p, None, &ctx);
+        let Some(best) = cold.first() else { continue };
+        // warm-start at the cold optimum itself — the tightest valid
+        // floor; the epsilon seed must keep the optimum enumerable
+        let warm = solve_subsets_with(&p, Some(best.solution.objective), &ctx);
+        assert_eq!(cold, warm, "case {case}: warm-at-optimum diverges on {:?}", p.counts);
+        // and at a survivor's objective: preempt one entity of the first
+        // populated kind, solve that fleet, then re-plan the full fleet
+        // seeded with the survivor's (achievable, hence valid) score
+        let k = (0..p.counts.len()).find(|&i| p.counts[i] > 0).unwrap();
+        let mut shrunk = p.clone();
+        shrunk.counts[k] -= 1;
+        if let Some(survivor) = solve_with(&shrunk, &ctx) {
+            let warm2 = solve_subsets_with(&p, Some(survivor.objective), &ctx);
+            assert_eq!(
+                cold, warm2,
+                "case {case}: warm-from-survivor diverges on {:?}",
+                p.counts
+            );
+        }
+        checked += 1;
+    }
+    assert!(checked >= 10, "only {checked}/40 fixtures feasible — fixtures too harsh");
+}
+
+#[test]
+fn warm_start_is_deterministic_across_thread_counts_too() {
+    // the combination: warm seed + parallel fan-out still equals the
+    // sequential cold solve
+    let mut rng = Rng::new(0xC0FFEE);
+    let seq = SolveCtx::default();
+    let mut checked = 0;
+    for case in 0..25 {
+        let p = random_problem(&mut rng, 6);
+        let cold = solve_subsets_with(&p, None, &seq);
+        let Some(best) = cold.first() else { continue };
+        let par = SolveCtx { threads: 4, ..Default::default() };
+        let warm_par = solve_subsets_with(&p, Some(best.solution.objective), &par);
+        assert_eq!(
+            cold, warm_par,
+            "case {case}: warm+parallel diverges on {:?}",
+            p.counts
+        );
+        checked += 1;
+    }
+    assert!(checked >= 5, "only {checked}/25 fixtures feasible — fixtures too harsh");
+}
