@@ -1,0 +1,294 @@
+//! Background checkpointing: the encode+commit half of a save runs on a
+//! dedicated worker thread while training continues.
+//!
+//! Determinism is by construction, not by luck:
+//!
+//! * **One FIFO worker.** Every state mutation — saves, node drops,
+//!   memory wipes — flows through a single `sync_channel` and is applied
+//!   by one thread in submission order. The tiered store's simulated
+//!   byte/second counters therefore accumulate in exactly the order the
+//!   synchronous path would produce, at any encode fan-out width
+//!   (encoding itself uses the *ordered* [`crate::util::par::par_map`]).
+//! * **Double buffering.** The channel is a rendezvous (`sync_channel(0)`):
+//!   a submit hands its snapshot straight to the worker or blocks until
+//!   the previous one is taken, so at most **two snapshots are live**
+//!   beyond the model itself — one encoding in the worker, one in the
+//!   submitting caller's hand. The block is charged to the training
+//!   path as backpressure, not hidden.
+//! * **Drain before read.** [`AsyncCheckpointer::drain`] is the barrier
+//!   callers must cross before touching the manager (loads, bitmap
+//!   inspection); [`AsyncCheckpointer::lock`] hands out the manager
+//!   afterwards.
+//!
+//! `workers == 0` selects a fully synchronous inline mode with the same
+//! API, so callers write one code path and tests can diff the two modes
+//! bit-for-bit.
+
+use std::sync::mpsc::{Receiver, SyncSender};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::manager::{CheckpointManager, SaveReport, Snapshot};
+use super::store::{Store, TieredStore};
+
+/// One finished background save. `report` carries the commit outcome
+/// (`Err` = the save crashed; the previous checkpoint is still the
+/// system of record). `bg_wall_s` is the wall time the encode+commit
+/// spent off the training path (0 in sync mode — nothing was hidden).
+#[derive(Debug, Clone)]
+pub struct CommittedSave {
+    pub tag: usize,
+    pub report: Result<SaveReport, String>,
+    pub bg_wall_s: f64,
+}
+
+enum Op {
+    Save { tag: usize, snap: Snapshot },
+    DropNode(usize),
+    WipeMemory,
+}
+
+/// Serialized async front-end over a [`CheckpointManager`].
+pub struct AsyncCheckpointer<S: Store + 'static = TieredStore> {
+    mgr: Arc<Mutex<CheckpointManager<S>>>,
+    /// `None` = synchronous inline mode.
+    tx: Option<SyncSender<Op>>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    done: Arc<Mutex<Vec<CommittedSave>>>,
+    pending: Arc<(Mutex<usize>, Condvar)>,
+}
+
+impl<S: Store + 'static> AsyncCheckpointer<S> {
+    /// Wrap `mgr`. `workers == 0` → synchronous inline mode (encode
+    /// fan-out stays at `mgr.threads`); `workers >= 1` → one background
+    /// commit thread encoding on `workers` [`crate::util::par::par_map`]
+    /// workers.
+    pub fn new(mut mgr: CheckpointManager<S>, workers: usize) -> AsyncCheckpointer<S> {
+        if workers > 0 {
+            mgr.threads = workers;
+        }
+        let mgr = Arc::new(Mutex::new(mgr));
+        let done: Arc<Mutex<Vec<CommittedSave>>> = Arc::default();
+        let pending: Arc<(Mutex<usize>, Condvar)> = Arc::default();
+        if workers == 0 {
+            return AsyncCheckpointer { mgr, tx: None, handle: None, done, pending };
+        }
+        let (tx, rx) = mpsc::sync_channel::<Op>(0);
+        let handle = {
+            let (mgr, done, pending) = (mgr.clone(), done.clone(), pending.clone());
+            std::thread::spawn(move || worker_loop(rx, mgr, done, pending))
+        };
+        AsyncCheckpointer { mgr, tx: Some(tx), handle: Some(handle), done, pending }
+    }
+
+    fn enqueue(&self, op: Op) {
+        let (lock, _) = &*self.pending;
+        *lock.lock().unwrap() += 1;
+        self.tx
+            .as_ref()
+            .expect("enqueue in sync mode")
+            .send(op)
+            .expect("checkpoint worker died");
+    }
+
+    /// Hand a captured snapshot to the background worker (or run it
+    /// inline in sync mode). Blocks when two snapshots are already in
+    /// flight — that backpressure is the caller's to meter. The commit
+    /// outcome surfaces later via [`Self::take_done`] under `tag`.
+    pub fn submit_save(&self, tag: usize, snap: Snapshot) {
+        match &self.tx {
+            None => {
+                let report = self.mgr.lock().unwrap().save_snapshot(&snap);
+                self.done.lock().unwrap().push(CommittedSave {
+                    tag,
+                    report: report.map_err(|e| format!("{e:#}")),
+                    bg_wall_s: 0.0,
+                });
+            }
+            Some(_) => self.enqueue(Op::Save { tag, snap }),
+        }
+    }
+
+    /// Drop a preempted node from the bitmap — serialized behind any
+    /// in-flight saves so the ordering matches the synchronous path.
+    pub fn drop_node(&self, node: usize) {
+        match &self.tx {
+            None => self.mgr.lock().unwrap().bitmap.drop_node(node),
+            Some(_) => self.enqueue(Op::DropNode(node)),
+        }
+    }
+
+    /// Wipe volatile memory (preemption), serialized like [`Self::drop_node`].
+    pub fn wipe_memory(&self) {
+        match &self.tx {
+            None => self.mgr.lock().unwrap().store.wipe_memory(),
+            Some(_) => self.enqueue(Op::WipeMemory),
+        }
+    }
+
+    /// Barrier: block until every submitted op has been applied.
+    pub fn drain(&self) {
+        let (lock, cv) = &*self.pending;
+        let mut n = lock.lock().unwrap();
+        while *n > 0 {
+            n = cv.wait(n).unwrap();
+        }
+    }
+
+    /// Direct manager access (loads, bitmap inspection). Call
+    /// [`Self::drain`] first — the lock alone does not order you after
+    /// queued-but-unstarted ops.
+    pub fn lock(&self) -> MutexGuard<'_, CheckpointManager<S>> {
+        self.mgr.lock().unwrap()
+    }
+
+    /// Take every commit result recorded so far (submission order).
+    pub fn take_done(&self) -> Vec<CommittedSave> {
+        std::mem::take(&mut *self.done.lock().unwrap())
+    }
+
+    /// Drain, stop the worker, and hand back the manager + any commit
+    /// results not yet taken.
+    pub fn finish(mut self) -> (CheckpointManager<S>, Vec<CommittedSave>) {
+        self.drain();
+        self.tx = None; // close the channel → worker exits
+        if let Some(h) = self.handle.take() {
+            h.join().expect("checkpoint worker panicked");
+        }
+        let done = self.take_done();
+        let mgr_arc = self.mgr.clone();
+        drop(self); // releases our Arc; the worker's was dropped at join
+        let mgr = Arc::try_unwrap(mgr_arc)
+            .unwrap_or_else(|_| panic!("checkpoint manager still shared"))
+            .into_inner()
+            .unwrap();
+        (mgr, done)
+    }
+}
+
+fn worker_loop<S: Store>(
+    rx: Receiver<Op>,
+    mgr: Arc<Mutex<CheckpointManager<S>>>,
+    done: Arc<Mutex<Vec<CommittedSave>>>,
+    pending: Arc<(Mutex<usize>, Condvar)>,
+) {
+    while let Ok(op) = rx.recv() {
+        match op {
+            Op::Save { tag, snap } => {
+                let t0 = Instant::now();
+                let report = mgr.lock().unwrap().save_snapshot(&snap);
+                done.lock().unwrap().push(CommittedSave {
+                    tag,
+                    report: report.map_err(|e| format!("{e:#}")),
+                    bg_wall_s: t0.elapsed().as_secs_f64(),
+                });
+            }
+            Op::DropNode(n) => mgr.lock().unwrap().bitmap.drop_node(n),
+            Op::WipeMemory => mgr.lock().unwrap().store.wipe_memory(),
+        }
+        let (lock, cv) = &*pending;
+        *lock.lock().unwrap() -= 1;
+        cv.notify_all();
+    }
+}
+
+impl<S: Store + 'static> Drop for AsyncCheckpointer<S> {
+    fn drop(&mut self) {
+        self.tx = None;
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ModelDims;
+    use crate::train::ModelParams;
+
+    fn dims() -> ModelDims {
+        ModelDims {
+            vocab: 32, d_model: 8, n_heads: 2, d_ff: 16,
+            seq: 4, microbatch: 1, n_layers: 4, params_count: 0,
+        }
+    }
+
+    fn tmp() -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "ahasync-{}-{}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn run_mode(workers: usize) -> (Vec<CommittedSave>, f64, u64) {
+        let d = dims();
+        let params = ModelParams::init(&d, 11);
+        let mgr = CheckpointManager::new(&tmp()).unwrap();
+        let ck = AsyncCheckpointer::new(mgr, workers);
+        for step in 1..=3u64 {
+            let snap = Snapshot::capture(step, &params, None, 2, &|l| l % 2);
+            ck.submit_save(step as usize, snap);
+        }
+        ck.drop_node(1);
+        let (mgr, done) = ck.finish();
+        let charged =
+            mgr.store.total_charged_s(crate::checkpoint::StorageTier::Cloud);
+        let mut out = ModelParams::init(&d, 0);
+        let mut mgr = mgr;
+        let rep = mgr.load_full(&mut out, None, 0).unwrap();
+        assert_eq!(out.max_abs_diff(&params), 0.0);
+        (done, charged, rep.total_bytes())
+    }
+
+    #[test]
+    fn async_modes_match_sync_bit_for_bit() {
+        let (done0, charged0, loaded0) = run_mode(0);
+        assert_eq!(done0.len(), 3);
+        assert!(done0.iter().all(|c| c.report.is_ok() && c.bg_wall_s == 0.0));
+        for workers in [1usize, 2, 8] {
+            let (done, charged, loaded) = run_mode(workers);
+            assert_eq!(done.len(), 3, "workers={workers}");
+            assert_eq!(
+                done.iter().map(|c| c.tag).collect::<Vec<_>>(),
+                vec![1, 2, 3],
+                "commit order must be submission order (workers={workers})"
+            );
+            // sim-time accounting is an f64 sum — bit equality proves the
+            // op order matched the synchronous path exactly
+            assert_eq!(charged.to_bits(), charged0.to_bits(), "workers={workers}");
+            assert_eq!(loaded, loaded0, "workers={workers}");
+            for (c, c0) in done.iter().zip(&done0) {
+                let (r, r0) =
+                    (c.report.as_ref().unwrap(), c0.report.as_ref().unwrap());
+                assert_eq!(r.bytes_local, r0.bytes_local);
+                assert_eq!(r.bytes_raw, r0.bytes_raw);
+                assert_eq!(r.sim_cloud_s.to_bits(), r0.sim_cloud_s.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn drain_is_a_barrier() {
+        let d = dims();
+        let params = ModelParams::init(&d, 3);
+        let ck = AsyncCheckpointer::new(CheckpointManager::new(&tmp()).unwrap(), 2);
+        let snap = Snapshot::capture(7, &params, None, 1, &|_| 0);
+        ck.submit_save(0, snap);
+        ck.drain();
+        // after the barrier the bitmap must already be at step 7
+        assert_eq!(ck.lock().bitmap.step, 7);
+        let done = ck.take_done();
+        assert_eq!(done.len(), 1);
+        assert!(done[0].bg_wall_s >= 0.0);
+        assert!(done[0].report.is_ok());
+    }
+}

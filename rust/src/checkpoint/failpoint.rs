@@ -1,0 +1,165 @@
+//! Fault-injection storage wrapper for the async-checkpoint test layer.
+//!
+//! [`FailpointStore`] forwards every operation to an inner [`Store`] but
+//! can be armed to kill exactly one `put`: the `n`-th write to a chosen
+//! tier dies after a chosen number of bytes, leaving a **partial object**
+//! behind — the worst crash a real upload can produce. The commit
+//! protocol must make that partial object invisible: the bitmap is only
+//! swapped after every unit of a step has landed, so a reader never
+//! routes to a key written by a crashed save.
+//!
+//! The failpoint is one-shot (a crashed upload, not a dead disk):
+//! subsequent operations succeed, which is exactly what the property
+//! suite needs to prove the *previous* checkpoint is still loadable
+//! after the crash.
+
+use anyhow::{bail, Result};
+
+use crate::cluster::gpu::Interconnect;
+
+use super::store::{Receipt, StorageTier, Store, TieredStore};
+
+/// Where a put dies: the `unit_index`-th put to `tier` (counting from 0
+/// across the store's lifetime) stops after `byte_offset` bytes.
+#[derive(Debug, Clone, Copy)]
+pub struct FailPlan {
+    pub tier: StorageTier,
+    pub unit_index: usize,
+    pub byte_offset: usize,
+}
+
+/// A [`Store`] that injects one crash according to a [`FailPlan`].
+pub struct FailpointStore<S: Store = TieredStore> {
+    pub inner: S,
+    plan: Option<FailPlan>,
+    /// Puts observed so far, per tier (memory, disk, cloud).
+    seen: [usize; 3],
+    /// Number of injected crashes so far (0 or 1).
+    pub trips: usize,
+}
+
+fn tier_slot(tier: StorageTier) -> usize {
+    match tier {
+        StorageTier::CpuMemory => 0,
+        StorageTier::LocalDisk => 1,
+        StorageTier::Cloud => 2,
+    }
+}
+
+impl<S: Store> FailpointStore<S> {
+    pub fn new(inner: S) -> FailpointStore<S> {
+        FailpointStore { inner, plan: None, seen: [0; 3], trips: 0 }
+    }
+
+    /// Arm the (one-shot) failpoint. Replaces any previously armed plan.
+    pub fn arm(&mut self, plan: FailPlan) {
+        self.plan = Some(plan);
+    }
+
+    /// Puts observed so far on `tier` — lets a test size a crash grid
+    /// after one clean run.
+    pub fn puts_seen(&self, tier: StorageTier) -> usize {
+        self.seen[tier_slot(tier)]
+    }
+}
+
+impl<S: Store> Store for FailpointStore<S> {
+    fn put(&mut self, tier: StorageTier, key: &str, bytes: &[u8]) -> Result<Receipt> {
+        let n = self.seen[tier_slot(tier)];
+        self.seen[tier_slot(tier)] += 1;
+        if let Some(p) = self.plan {
+            if p.tier == tier && p.unit_index == n {
+                // the crash: a truncated object lands, then the op dies
+                self.plan = None;
+                self.trips += 1;
+                let cut = p.byte_offset.min(bytes.len());
+                self.inner.put(tier, key, &bytes[..cut])?;
+                bail!(
+                    "failpoint: put #{n} to {tier:?} (`{key}`) crashed after {cut} of {} bytes",
+                    bytes.len()
+                );
+            }
+        }
+        self.inner.put(tier, key, bytes)
+    }
+
+    fn get(&mut self, tier: StorageTier, key: &str) -> Result<(Vec<u8>, Receipt)> {
+        self.inner.get(tier, key)
+    }
+
+    fn delete(&mut self, tier: StorageTier, key: &str) -> Result<()> {
+        self.inner.delete(tier, key)
+    }
+
+    fn exists(&self, tier: StorageTier, key: &str) -> bool {
+        self.inner.exists(tier, key)
+    }
+
+    fn wipe_memory(&mut self) {
+        self.inner.wipe_memory()
+    }
+
+    fn wipe_local(&mut self) -> Result<()> {
+        self.inner.wipe_local()
+    }
+
+    fn ic(&self) -> &Interconnect {
+        self.inner.ic()
+    }
+
+    fn total_charged_s(&self, tier: StorageTier) -> f64 {
+        self.inner.total_charged_s(tier)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store() -> FailpointStore {
+        let dir = std::env::temp_dir().join(format!(
+            "ahfail-{}-{}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        FailpointStore::new(TieredStore::new(&dir).unwrap())
+    }
+
+    #[test]
+    fn passes_through_when_unarmed() {
+        let mut s = store();
+        s.put(StorageTier::LocalDisk, "k", b"abc").unwrap();
+        let (v, _) = s.get(StorageTier::LocalDisk, "k").unwrap();
+        assert_eq!(v, b"abc");
+        assert_eq!(s.trips, 0);
+        assert_eq!(s.puts_seen(StorageTier::LocalDisk), 1);
+    }
+
+    #[test]
+    fn armed_put_leaves_partial_object_then_recovers() {
+        let mut s = store();
+        s.arm(FailPlan { tier: StorageTier::Cloud, unit_index: 1, byte_offset: 2 });
+        s.put(StorageTier::Cloud, "a", b"hello").unwrap(); // put #0: clean
+        let err = s.put(StorageTier::Cloud, "b", b"world").unwrap_err();
+        assert!(err.to_string().contains("failpoint"), "{err}");
+        // the partial object is really there — 2 of 5 bytes
+        let (v, _) = s.get(StorageTier::Cloud, "b").unwrap();
+        assert_eq!(v, b"wo");
+        assert_eq!(s.trips, 1);
+        // one-shot: the store works again afterwards
+        s.put(StorageTier::Cloud, "c", b"again").unwrap();
+        assert_eq!(s.get(StorageTier::Cloud, "c").unwrap().0, b"again");
+    }
+
+    #[test]
+    fn other_tiers_unaffected() {
+        let mut s = store();
+        s.arm(FailPlan { tier: StorageTier::Cloud, unit_index: 0, byte_offset: 0 });
+        s.put(StorageTier::LocalDisk, "k", b"x").unwrap();
+        s.put(StorageTier::CpuMemory, "k", b"x").unwrap();
+        assert_eq!(s.trips, 0);
+    }
+}

@@ -1,25 +1,60 @@
 //! Checkpoint orchestration: layer-wise save of a training replica
 //! (params + Adam moments) into the tiered store, bitmap maintenance,
 //! and adaptive loading (local-first, reshard on TP change).
+//!
+//! The save path is split into three stages so the hot path can go
+//! asynchronous (see [`super::async_ckpt`]):
+//!
+//! 1. [`Snapshot::capture`] — the only part that must run on the
+//!    training path: clone the param/optimizer state and pin the
+//!    layer→node placement. O(model bytes) of memcpy, no I/O.
+//! 2. [`Snapshot::encode`] — serialize + compress every (layer, TP
+//!    shard) unit, fanned out over [`crate::util::par::par_map`]
+//!    (ordered, so the unit list is deterministic at any thread count).
+//! 3. [`CheckpointManager::commit`] — write all units to all tiers,
+//!    **then** swap the bitmap, **then** evict the superseded step's
+//!    bounded-tier copies. A crash anywhere before the swap leaves the
+//!    previous checkpoint fully intact and routable; partial objects of
+//!    the dead save are never referenced by the bitmap.
+//!
+//! [`CheckpointManager::save_full`] runs the three stages back-to-back
+//! and is exactly the old synchronous behavior (modulo the deferred
+//! eviction, which closed a crash-corruption window).
 
 use anyhow::{anyhow, ensure, Result};
 
 use crate::runtime::HostTensor;
 use crate::train::{Adam, ModelParams, BLOCK_PARAM_NAMES};
+use crate::util::par::par_map;
 
 use super::bitmap::{CkptKey, LayerBitmap, Location};
-use super::codec;
+use super::codec::{self, Codec};
 use super::shard;
-use super::store::{StorageTier, TieredStore};
+use super::store::{StorageTier, Store, TieredStore};
 
 /// Outcome of a save: bytes written per tier + simulated seconds.
+/// `bytes_local`/`bytes_cloud` count **framed (compressed) bytes** — the
+/// bytes that actually move and that the Fig-10 model prices;
+/// `bytes_raw` is the pre-compression payload for ratio reporting.
 #[derive(Debug, Clone, Default)]
 pub struct SaveReport {
     pub bytes_local: u64,
     pub bytes_cloud: u64,
+    pub bytes_raw: u64,
     pub sim_local_s: f64,
     pub sim_cloud_s: f64,
     pub units: usize,
+}
+
+impl SaveReport {
+    /// Compressed-to-raw byte ratio (1.0 when nothing was saved).
+    pub fn compression_ratio(&self) -> f64 {
+        if self.bytes_raw == 0 {
+            1.0
+        } else {
+            self.bytes_local as f64 / self.bytes_raw as f64
+        }
+    }
 }
 
 /// Outcome of a load: where the bytes came from + simulated seconds.
@@ -56,96 +91,180 @@ impl LoadReport {
     }
 }
 
-pub struct CheckpointManager {
-    pub store: TieredStore,
-    pub bitmap: LayerBitmap,
+/// The training-path half of a save: an owned clone of the replica
+/// state plus the materialized layer→node placement, so encoding and
+/// committing can happen later, on another thread, with no borrow of
+/// the live model. Capturing is the *only* cost a save charges to the
+/// training path in async mode.
+pub struct Snapshot {
+    pub step: u64,
+    pub tp_dim: usize,
+    params: ModelParams,
+    adam: Option<Adam>,
+    layer_nodes: Vec<usize>,
+    embed_node: usize,
+    head_node: usize,
 }
 
-impl CheckpointManager {
-    pub fn new(root: &std::path::Path) -> Result<CheckpointManager> {
-        Ok(CheckpointManager { store: TieredStore::new(root)?, bitmap: LayerBitmap::new(0) })
-    }
+/// One encoded checkpoint unit, ready to commit: the framed
+/// (compressed) bytes for one (layer, TP shard), plus the node whose
+/// local tiers receive it.
+pub struct EncodedUnit {
+    pub key: CkptKey,
+    pub node: usize,
+    pub bytes: Vec<u8>,
+    pub raw_len: u64,
+}
 
-    /// Bundle one layer's tensors (unstacked) + optional Adam moments.
-    fn layer_bundle(
+impl Snapshot {
+    /// Clone the replica state and pin the placement. `node_of_layer`
+    /// is consulted eagerly (including for `CkptKey::EMBED` /
+    /// `CkptKey::HEAD`) so the snapshot is self-contained and `Send`.
+    pub fn capture(
+        step: u64,
         params: &ModelParams,
         adam: Option<&Adam>,
-        layer: usize,
-    ) -> Result<Vec<(String, HostTensor)>> {
-        let mut out = Vec::new();
-        for (i, name) in BLOCK_PARAM_NAMES.iter().enumerate() {
-            let t = params.blocks[i].slice_axis0(layer, layer + 1)?;
-            out.push((name.to_string(), squeeze0(&t)));
-            if let Some(a) = adam {
-                out.push((
-                    format!("m.{name}"),
-                    squeeze0(&a.m.blocks[i].slice_axis0(layer, layer + 1)?),
-                ));
-                out.push((
-                    format!("v.{name}"),
-                    squeeze0(&a.v.blocks[i].slice_axis0(layer, layer + 1)?),
-                ));
+        tp_dim: usize,
+        node_of_layer: &dyn Fn(usize) -> usize,
+    ) -> Snapshot {
+        let n_layers = params.blocks[0].shape[0];
+        Snapshot {
+            step,
+            tp_dim,
+            params: params.clone(),
+            adam: adam.cloned(),
+            layer_nodes: (0..n_layers).map(node_of_layer).collect(),
+            embed_node: node_of_layer(CkptKey::EMBED),
+            head_node: node_of_layer(CkptKey::HEAD),
+        }
+    }
+
+    /// Serialize + compress every unit on up to `threads` workers.
+    /// `par_map` is ordered, so the unit list — and therefore every
+    /// downstream byte counter and sim-time sum — is identical at any
+    /// thread count.
+    pub fn encode(&self, codec_id: Codec, threads: usize) -> Result<Vec<EncodedUnit>> {
+        let n_layers = self.params.blocks[0].shape[0];
+        let mut jobs: Vec<(CkptKey, usize)> = Vec::new();
+        for layer in 0..n_layers {
+            for s in 0..self.tp_dim {
+                jobs.push((CkptKey::layer(layer, s, self.tp_dim), self.layer_nodes[layer]));
             }
         }
-        Ok(out)
-    }
+        jobs.push((CkptKey::embed(0, 1), self.embed_node));
+        jobs.push((CkptKey::head(0, 1), self.head_node));
 
-    fn embed_bundle(params: &ModelParams, adam: Option<&Adam>) -> Vec<(String, HostTensor)> {
-        let mut out = vec![
-            ("tok_emb".to_string(), params.tok_emb.clone()),
-            ("pos_emb".to_string(), params.pos_emb.clone()),
-        ];
-        if let Some(a) = adam {
-            out.push(("m.tok_emb".into(), a.m.tok_emb.clone()));
-            out.push(("v.tok_emb".into(), a.v.tok_emb.clone()));
-            out.push(("m.pos_emb".into(), a.m.pos_emb.clone()));
-            out.push(("v.pos_emb".into(), a.v.pos_emb.clone()));
+        par_map(threads, jobs, |(key, node)| -> Result<EncodedUnit> {
+            let bundle: Vec<(String, HostTensor)> = match key.layer {
+                CkptKey::EMBED => embed_bundle(&self.params, self.adam.as_ref()),
+                CkptKey::HEAD => head_bundle(&self.params, self.adam.as_ref()),
+                layer => {
+                    layer_bundle(&self.params, self.adam.as_ref(), layer)?
+                        .iter()
+                        .map(|(name, t)| {
+                            let base = name.rsplit('.').next().unwrap();
+                            Ok((
+                                name.clone(),
+                                shard::split_for_tp(base, t, key.tp_dim, key.tp_shard)?,
+                            ))
+                        })
+                        .collect::<Result<_>>()?
+                }
+            };
+            let refs: Vec<(String, &HostTensor)> =
+                bundle.iter().map(|(n, t)| (n.clone(), t)).collect();
+            let raw = codec::encode(&refs);
+            let bytes = codec::compress(codec_id, &raw);
+            Ok(EncodedUnit { key, node, bytes, raw_len: raw.len() as u64 })
+        })
+        .into_iter()
+        .collect()
+    }
+}
+
+pub struct CheckpointManager<S: Store = TieredStore> {
+    pub store: S,
+    pub bitmap: LayerBitmap,
+    /// Compression codec applied to every saved unit.
+    pub codec: Codec,
+    /// Encode/decode fan-out width (1 = inline, no thread machinery).
+    pub threads: usize,
+    /// Compressed-to-raw byte ratio of the last committed step (1.0
+    /// before any commit) — what a loader should hand the Fig-10 model
+    /// as `bytes_scale`.
+    pub last_save_ratio: f64,
+}
+
+impl CheckpointManager<TieredStore> {
+    pub fn new(root: &std::path::Path) -> Result<CheckpointManager> {
+        Ok(CheckpointManager::with_store(TieredStore::new(root)?))
+    }
+}
+
+impl<S: Store> CheckpointManager<S> {
+    /// Wrap an arbitrary [`Store`] (test doubles included).
+    pub fn with_store(store: S) -> CheckpointManager<S> {
+        CheckpointManager {
+            store,
+            bitmap: LayerBitmap::new(0),
+            codec: Codec::default(),
+            threads: 1,
+            last_save_ratio: 1.0,
         }
-        out
     }
 
-    fn head_bundle(params: &ModelParams, adam: Option<&Adam>) -> Vec<(String, HostTensor)> {
-        let mut out = vec![
-            ("lnf_g".to_string(), params.lnf_g.clone()),
-            ("lnf_b".to_string(), params.lnf_b.clone()),
-            ("w_out".to_string(), params.w_out.clone()),
-        ];
-        if let Some(a) = adam {
-            out.push(("m.w_out".into(), a.m.w_out.clone()));
-            out.push(("v.w_out".into(), a.v.w_out.clone()));
-            out.push(("m.lnf_g".into(), a.m.lnf_g.clone()));
-            out.push(("v.lnf_g".into(), a.v.lnf_g.clone()));
-            out.push(("m.lnf_b".into(), a.m.lnf_b.clone()));
-            out.push(("v.lnf_b".into(), a.v.lnf_b.clone()));
+    /// Commit a fully encoded step: write **all** units to all tiers,
+    /// then atomically swap the bitmap, then evict the superseded
+    /// step's memory + local-disk copies. Ordering is the
+    /// crash-consistency argument: until the swap, every reader routes
+    /// to the old step (whose bounded-tier copies are still present);
+    /// an error anywhere in the write loop leaves the old bitmap — and
+    /// the old checkpoint — untouched. Cloud replicas of superseded
+    /// steps are retained (object-store history).
+    pub fn commit(&mut self, step: u64, units: &[EncodedUnit]) -> Result<SaveReport> {
+        let mut next = LayerBitmap::new(step);
+        let mut report = SaveReport::default();
+        for u in units {
+            let skey = u.key.storage_key(step);
+            // CPU memory (fast path), local SSD (persistent), cloud (replica)
+            self.store.put(StorageTier::CpuMemory, &skey, &u.bytes)?;
+            let rl = self.store.put(StorageTier::LocalDisk, &skey, &u.bytes)?;
+            let rc = self.store.put(StorageTier::Cloud, &skey, &u.bytes)?;
+            next.record(u.key, Location::Memory(u.node));
+            next.record(u.key, Location::Disk(u.node));
+            next.record(u.key, Location::Cloud);
+            report.bytes_local += rl.bytes;
+            report.bytes_cloud += rc.bytes;
+            report.bytes_raw += u.raw_len;
+            report.sim_local_s += rl.sim_s;
+            report.sim_cloud_s += rc.sim_s;
+            report.units += 1;
         }
-        out
+        let old = std::mem::replace(&mut self.bitmap, next);
+        if old.step != step {
+            // Deferred eviction: only the committed successor may evict.
+            // Without it a long elastic run accumulates every dead
+            // replica in process RAM; doing it *before* the new step
+            // landed (the old behavior) was the crash-corruption window.
+            for key in old.keys() {
+                let skey = key.storage_key(old.step);
+                self.store.delete(StorageTier::CpuMemory, &skey)?;
+                self.store.delete(StorageTier::LocalDisk, &skey)?;
+            }
+        }
+        self.last_save_ratio = report.compression_ratio();
+        Ok(report)
     }
 
-    fn put_unit(
-        &mut self,
-        key: CkptKey,
-        step: u64,
-        bytes: &[u8],
-        node: usize,
-        report: &mut SaveReport,
-    ) -> Result<()> {
-        let skey = key.storage_key(step);
-        // CPU memory (fast path), local SSD (persistent), cloud (replica)
-        self.store.put(StorageTier::CpuMemory, &skey, bytes)?;
-        let rl = self.store.put(StorageTier::LocalDisk, &skey, bytes)?;
-        let rc = self.store.put(StorageTier::Cloud, &skey, bytes)?;
-        self.bitmap.record(key, Location::Memory(node));
-        self.bitmap.record(key, Location::Disk(node));
-        self.bitmap.record(key, Location::Cloud);
-        report.bytes_local += rl.bytes;
-        report.bytes_cloud += rc.bytes;
-        report.sim_local_s += rl.sim_s;
-        report.sim_cloud_s += rc.sim_s;
-        report.units += 1;
-        Ok(())
+    /// Encode + commit an already captured snapshot (the background
+    /// half of an async save).
+    pub fn save_snapshot(&mut self, snap: &Snapshot) -> Result<SaveReport> {
+        let units = snap.encode(self.codec, self.threads)?;
+        self.commit(snap.step, &units)
     }
 
-    /// Save a full replica layer-wise at TP dimension `tp_dim`.
+    /// Save a full replica layer-wise at TP dimension `tp_dim`,
+    /// synchronously (capture → encode → commit back-to-back).
     /// `node_of_layer(layer)` maps each (pseudo-)layer to the node whose
     /// local tiers receive it (`CkptKey::EMBED` / `CkptKey::HEAD` included).
     pub fn save_full(
@@ -156,59 +275,8 @@ impl CheckpointManager {
         tp_dim: usize,
         node_of_layer: &dyn Fn(usize) -> usize,
     ) -> Result<SaveReport> {
-        // Evict the superseded checkpoint's memory + local-disk copies:
-        // only the latest step is ever loadable (the bitmap is reset
-        // below), so without eviction a long elastic run accumulates
-        // every dead replica in process RAM. Cloud replicas are retained
-        // (object-store history).
-        let old_step = self.bitmap.step;
-        if old_step != step {
-            for key in self.bitmap.keys() {
-                let skey = key.storage_key(old_step);
-                self.store.delete(StorageTier::CpuMemory, &skey)?;
-                self.store.delete(StorageTier::LocalDisk, &skey)?;
-            }
-        }
-        self.bitmap = LayerBitmap::new(step);
-        let n_layers = params.blocks[0].shape[0];
-        let mut report = SaveReport::default();
-        for layer in 0..n_layers {
-            let bundle = Self::layer_bundle(params, adam, layer)?;
-            for s in 0..tp_dim {
-                let sharded: Vec<(String, HostTensor)> = bundle
-                    .iter()
-                    .map(|(name, t)| {
-                        let base = name.rsplit('.').next().unwrap();
-                        Ok((name.clone(), shard::split_for_tp(base, t, tp_dim, s)?))
-                    })
-                    .collect::<Result<_>>()?;
-                let refs: Vec<(String, &HostTensor)> =
-                    sharded.iter().map(|(n, t)| (n.clone(), t)).collect();
-                let bytes = codec::encode(&refs);
-                self.put_unit(
-                    CkptKey::layer(layer, s, tp_dim),
-                    step,
-                    &bytes,
-                    node_of_layer(layer),
-                    &mut report,
-                )?;
-            }
-        }
-        // embed + head (replicated across TP in Megatron's layout)
-        for (key_fn, bundle) in [
-            (
-                CkptKey::embed(0, 1),
-                Self::embed_bundle(params, adam),
-            ),
-            (CkptKey::head(0, 1), Self::head_bundle(params, adam)),
-        ] {
-            let refs: Vec<(String, &HostTensor)> =
-                bundle.iter().map(|(n, t)| (n.clone(), t)).collect();
-            let bytes = codec::encode(&refs);
-            let node = node_of_layer(key_fn.layer);
-            self.put_unit(key_fn, step, &bytes, node, &mut report)?;
-        }
-        Ok(report)
+        let snap = Snapshot::capture(step, params, adam, tp_dim, node_of_layer);
+        self.save_snapshot(&snap)
     }
 
     /// Fetch one unit honoring local-first; charges RDMA when the best
@@ -227,7 +295,7 @@ impl CheckpointManager {
         match loc {
             Location::Memory(n) | Location::Disk(n) if n != node => {
                 // peer fetch rides RDMA on top of the source medium
-                let rdma_s = bytes.len() as f64 / (self.store.ic.rdma_gbs * 1e9);
+                let rdma_s = bytes.len() as f64 / (self.store.ic().rdma_gbs * 1e9);
                 report.bytes_rdma += bytes.len() as u64;
                 report.sim_s += receipt.sim_s + rdma_s;
             }
@@ -249,7 +317,10 @@ impl CheckpointManager {
     }
 
     /// Load a full replica (target TP = 1) into `params` (+ Adam moments),
-    /// resharding from whatever TP dimension the checkpoint was written at.
+    /// resharding from whatever TP dimension the checkpoint was written
+    /// at. Fetches run sequentially (deterministic per-tier sim-time
+    /// accounting); decompression + decode + TP reassembly fan out
+    /// across layers on `self.threads` workers.
     pub fn load_full(
         &mut self,
         params: &mut ModelParams,
@@ -266,20 +337,43 @@ impl CheckpointManager {
             .map(|k| k.tp_dim)
             .ok_or_else(|| anyhow!("bitmap has no layer units"))?;
 
-        let mut adam = adam;
+        // stage 1: gather every layer's shard bytes (sequential I/O)
+        let mut fetched: Vec<Vec<Vec<u8>>> = Vec::with_capacity(n_layers);
         for layer in 0..n_layers {
-            // gather all shards of the layer
-            let mut decoded: Vec<Vec<(String, HostTensor)>> = Vec::with_capacity(tp_dim);
+            let mut shards_bytes = Vec::with_capacity(tp_dim);
             for s in 0..tp_dim {
-                let bytes = self.fetch(&CkptKey::layer(layer, s, tp_dim), node, &mut report)?;
-                decoded.push(codec::decode(&bytes)?);
+                shards_bytes
+                    .push(self.fetch(&CkptKey::layer(layer, s, tp_dim), node, &mut report)?);
             }
-            // reassemble each tensor
-            let names: Vec<String> = decoded[0].iter().map(|(n, _)| n.clone()).collect();
-            for (ti, name) in names.iter().enumerate() {
+            fetched.push(shards_bytes);
+        }
+
+        // stage 2: decompress + decode + reassemble, parallel across layers
+        let assembled: Vec<Vec<(String, HostTensor)>> =
+            par_map(self.threads, fetched, |shards_bytes| -> Result<Vec<(String, HostTensor)>> {
+                let decoded: Vec<Vec<(String, HostTensor)>> = shards_bytes
+                    .iter()
+                    .map(|b| codec::decode(&codec::decompress(b)?))
+                    .collect::<Result<_>>()?;
+                let names: Vec<String> = decoded[0].iter().map(|(n, _)| n.clone()).collect();
+                names
+                    .iter()
+                    .enumerate()
+                    .map(|(ti, name)| {
+                        let base = name.rsplit('.').next().unwrap();
+                        let shards: Vec<&HostTensor> = decoded.iter().map(|d| &d[ti].1).collect();
+                        Ok((name.clone(), shard::concat_from_shards(base, &shards)?))
+                    })
+                    .collect()
+            })
+            .into_iter()
+            .collect::<Result<_>>()?;
+
+        // stage 3: route the reassembled tensors into the replica
+        let mut adam = adam;
+        for (layer, bundle) in assembled.into_iter().enumerate() {
+            for (name, full) in bundle {
                 let base = name.rsplit('.').next().unwrap();
-                let shards: Vec<&HostTensor> = decoded.iter().map(|d| &d[ti].1).collect();
-                let full = shard::concat_from_shards(base, &shards)?;
                 let bi = BLOCK_PARAM_NAMES
                     .iter()
                     .position(|n| n == &base)
@@ -302,7 +396,7 @@ impl CheckpointManager {
         }
         // embed + head
         let ebytes = self.fetch(&CkptKey::embed(0, 1), node, &mut report)?;
-        for (name, t) in codec::decode(&ebytes)? {
+        for (name, t) in codec::decode(&codec::decompress(&ebytes)?)? {
             match name.as_str() {
                 "tok_emb" => params.tok_emb = t,
                 "pos_emb" => params.pos_emb = t,
@@ -314,7 +408,7 @@ impl CheckpointManager {
             }
         }
         let hbytes = self.fetch(&CkptKey::head(0, 1), node, &mut report)?;
-        for (name, t) in codec::decode(&hbytes)? {
+        for (name, t) in codec::decode(&codec::decompress(&hbytes)?)? {
             match name.as_str() {
                 "lnf_g" => params.lnf_g = t,
                 "lnf_b" => params.lnf_b = t,
@@ -330,6 +424,61 @@ impl CheckpointManager {
         }
         Ok(report)
     }
+}
+
+/// Bundle one layer's tensors (unstacked) + optional Adam moments.
+fn layer_bundle(
+    params: &ModelParams,
+    adam: Option<&Adam>,
+    layer: usize,
+) -> Result<Vec<(String, HostTensor)>> {
+    let mut out = Vec::new();
+    for (i, name) in BLOCK_PARAM_NAMES.iter().enumerate() {
+        let t = params.blocks[i].slice_axis0(layer, layer + 1)?;
+        out.push((name.to_string(), squeeze0(&t)));
+        if let Some(a) = adam {
+            out.push((
+                format!("m.{name}"),
+                squeeze0(&a.m.blocks[i].slice_axis0(layer, layer + 1)?),
+            ));
+            out.push((
+                format!("v.{name}"),
+                squeeze0(&a.v.blocks[i].slice_axis0(layer, layer + 1)?),
+            ));
+        }
+    }
+    Ok(out)
+}
+
+fn embed_bundle(params: &ModelParams, adam: Option<&Adam>) -> Vec<(String, HostTensor)> {
+    let mut out = vec![
+        ("tok_emb".to_string(), params.tok_emb.clone()),
+        ("pos_emb".to_string(), params.pos_emb.clone()),
+    ];
+    if let Some(a) = adam {
+        out.push(("m.tok_emb".into(), a.m.tok_emb.clone()));
+        out.push(("v.tok_emb".into(), a.v.tok_emb.clone()));
+        out.push(("m.pos_emb".into(), a.m.pos_emb.clone()));
+        out.push(("v.pos_emb".into(), a.v.pos_emb.clone()));
+    }
+    out
+}
+
+fn head_bundle(params: &ModelParams, adam: Option<&Adam>) -> Vec<(String, HostTensor)> {
+    let mut out = vec![
+        ("lnf_g".to_string(), params.lnf_g.clone()),
+        ("lnf_b".to_string(), params.lnf_b.clone()),
+        ("w_out".to_string(), params.w_out.clone()),
+    ];
+    if let Some(a) = adam {
+        out.push(("m.w_out".into(), a.m.w_out.clone()));
+        out.push(("v.w_out".into(), a.v.w_out.clone()));
+        out.push(("m.lnf_g".into(), a.m.lnf_g.clone()));
+        out.push(("v.lnf_g".into(), a.v.lnf_g.clone()));
+        out.push(("m.lnf_b".into(), a.m.lnf_b.clone()));
+        out.push(("v.lnf_b".into(), a.v.lnf_b.clone()));
+    }
+    out
 }
 
 /// Squeeze the leading length-1 axis of a sliced stacked tensor.
@@ -468,5 +617,55 @@ mod tests {
         mgr.load_full(&mut out, Some(&mut out_adam), 0).unwrap();
         assert_eq!(out_adam.m.max_abs_diff(&adam.m), 0.0);
         assert_eq!(out_adam.v.max_abs_diff(&adam.v), 0.0);
+    }
+
+    #[test]
+    fn compressed_save_roundtrips_and_shrinks_fresh_adam() {
+        let d = dims();
+        let params = ModelParams::init(&d, 11);
+        let adam = Adam::new(AdamConfig::default(), &params); // all-zero moments
+        for codec_id in Codec::ALL {
+            let mut mgr = CheckpointManager::new(&tmp()).unwrap();
+            mgr.codec = codec_id;
+            mgr.threads = 4;
+            let save = mgr.save_full(3, &params, Some(&adam), 2, &|_| 0).unwrap();
+            assert_eq!(save.bytes_local, save.bytes_cloud);
+            assert!(save.bytes_raw > 0);
+            if codec_id == Codec::Raw {
+                assert!(save.compression_ratio() >= 1.0);
+            } else {
+                // fresh Adam moments are 2/3 of the payload and all zeros
+                assert!(
+                    save.compression_ratio() < 0.5,
+                    "{codec_id:?} ratio {}",
+                    save.compression_ratio()
+                );
+            }
+            let mut out = ModelParams::init(&d, 7);
+            let mut out_adam = Adam::new(AdamConfig::default(), &out);
+            mgr.load_full(&mut out, Some(&mut out_adam), 0).unwrap();
+            assert_eq!(out.max_abs_diff(&params), 0.0);
+            assert_eq!(out_adam.m.max_abs_diff(&adam.m), 0.0);
+        }
+    }
+
+    #[test]
+    fn snapshot_commit_split_matches_save_full() {
+        let d = dims();
+        let params = ModelParams::init(&d, 5);
+        let mut mgr = CheckpointManager::new(&tmp()).unwrap();
+        mgr.codec = Codec::Delta;
+        let snap = Snapshot::capture(4, &params, None, 2, &|l| l % 2);
+        let units = snap.encode(mgr.codec, 3).unwrap();
+        let save = mgr.commit(snap.step, &units).unwrap();
+        let mut mgr2 = CheckpointManager::new(&tmp()).unwrap();
+        mgr2.codec = Codec::Delta;
+        let save2 = mgr2.save_full(4, &params, None, 2, &|l| l % 2).unwrap();
+        assert_eq!(save.bytes_local, save2.bytes_local);
+        assert_eq!(save.bytes_raw, save2.bytes_raw);
+        assert_eq!(save.units, save2.units);
+        let mut out = ModelParams::init(&d, 1);
+        mgr.load_full(&mut out, None, 0).unwrap();
+        assert_eq!(out.max_abs_diff(&params), 0.0);
     }
 }

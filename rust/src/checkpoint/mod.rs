@@ -6,7 +6,8 @@
 //! and Adam moments for one TP shard. Special pseudo-layers `embed` and
 //! `head` carry the embedding tables and LM head.
 //!
-//! * [`codec`] — the binary tensor format (no serde in the vendor set).
+//! * [`codec`] — the binary tensor format (no serde in the vendor set)
+//!   plus the compression frame ([`codec::Codec`]: raw / RLE / delta).
 //! * [`shard`] — Megatron-style TP split/concat per parameter, powering
 //!   the adaptive loading scenarios (unchanged / increased / decreased
 //!   TP dimension, Fig 6).
@@ -15,14 +16,24 @@
 //!   accounting against the paper's 3500 MB/s NVMe and 1200 MB/s cloud.
 //! * [`bitmap`] — the layer bitmap tracking which (layer, shard) lives
 //!   where, driving local-first retrieval.
-//! * [`manager`] — save/load orchestration over a training replica.
+//! * [`manager`] — save/load orchestration over a training replica,
+//!   split into snapshot → encode → commit stages.
+//! * [`async_ckpt`] — the background worker that hides encode+commit
+//!   off the training path with deterministic FIFO semantics.
+//! * [`failpoint`] — fault-injection store wrapper for the
+//!   crash-consistency test layer.
 
+pub mod async_ckpt;
 pub mod bitmap;
 pub mod codec;
+pub mod failpoint;
 pub mod manager;
 pub mod shard;
 pub mod store;
 
+pub use async_ckpt::{AsyncCheckpointer, CommittedSave};
 pub use bitmap::{CkptKey, LayerBitmap, Location};
-pub use manager::{CheckpointManager, LoadReport, SaveReport};
-pub use store::{StorageTier, TieredStore};
+pub use codec::Codec;
+pub use failpoint::{FailPlan, FailpointStore};
+pub use manager::{CheckpointManager, EncodedUnit, LoadReport, SaveReport, Snapshot};
+pub use store::{StorageTier, Store, TieredStore};

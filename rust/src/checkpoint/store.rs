@@ -35,6 +35,25 @@ pub struct Receipt {
     pub sim_s: f64,
 }
 
+/// The storage surface the checkpoint manager writes through.
+///
+/// [`TieredStore`] is the real implementation; test doubles (e.g.
+/// [`super::failpoint::FailpointStore`]) wrap it to inject crashes at
+/// exact byte offsets. `Send` is part of the contract: the async
+/// checkpointer moves the store to a background commit thread.
+pub trait Store: Send {
+    fn put(&mut self, tier: StorageTier, key: &str, bytes: &[u8]) -> Result<Receipt>;
+    fn get(&mut self, tier: StorageTier, key: &str) -> Result<(Vec<u8>, Receipt)>;
+    fn delete(&mut self, tier: StorageTier, key: &str) -> Result<()>;
+    fn exists(&self, tier: StorageTier, key: &str) -> bool;
+    fn wipe_memory(&mut self);
+    fn wipe_local(&mut self) -> Result<()>;
+    /// Interconnect the store charges transfers against (RDMA pricing
+    /// for peer fetches lives here).
+    fn ic(&self) -> &Interconnect;
+    fn total_charged_s(&self, tier: StorageTier) -> f64;
+}
+
 /// A tiered store rooted at a scratch directory.
 pub struct TieredStore {
     mem: HashMap<String, Vec<u8>>,
@@ -146,6 +165,40 @@ impl TieredStore {
 
     pub fn total_charged_s(&self, tier: StorageTier) -> f64 {
         self.charged_s.get(&tier).copied().unwrap_or(0.0)
+    }
+}
+
+impl Store for TieredStore {
+    fn put(&mut self, tier: StorageTier, key: &str, bytes: &[u8]) -> Result<Receipt> {
+        TieredStore::put(self, tier, key, bytes)
+    }
+
+    fn get(&mut self, tier: StorageTier, key: &str) -> Result<(Vec<u8>, Receipt)> {
+        TieredStore::get(self, tier, key)
+    }
+
+    fn delete(&mut self, tier: StorageTier, key: &str) -> Result<()> {
+        TieredStore::delete(self, tier, key)
+    }
+
+    fn exists(&self, tier: StorageTier, key: &str) -> bool {
+        TieredStore::exists(self, tier, key)
+    }
+
+    fn wipe_memory(&mut self) {
+        TieredStore::wipe_memory(self)
+    }
+
+    fn wipe_local(&mut self) -> Result<()> {
+        TieredStore::wipe_local(self)
+    }
+
+    fn ic(&self) -> &Interconnect {
+        &self.ic
+    }
+
+    fn total_charged_s(&self, tier: StorageTier) -> f64 {
+        TieredStore::total_charged_s(self, tier)
     }
 }
 

@@ -59,13 +59,19 @@ USAGE:
                   [--plan-threads N] [--plan-deadline-ms T]
                   [--gpus-per-node N] [--seed N] [--steps-per-event N]
                   [--k N] [--max-groups N] [--ckpt-dir DIR]
+                  [--ckpt-compress none|rle|delta] [--ckpt-async-workers N]
                   [--artifacts DIR] [--csv FILE] [--loss-csv FILE]
                   ENACT the replay decision log on the real training
                   path: real optimizer steps per market segment,
                   layer-wise checkpoint save/load through the tiered
                   store on every replan, real loss curve + byte
                   counters; compares against the uninterrupted baseline
-                  (needs AOT artifacts — see python/compile/aot.py)
+                  (needs AOT artifacts — see python/compile/aot.py);
+                  `--ckpt-compress` frames every checkpoint unit through
+                  a codec, `--ckpt-async-workers N` moves encode+commit
+                  to a background worker (N encode threads) so only the
+                  snapshot blocks training — results are bit-identical
+                  at any worker count
   autohet models                                      list model presets
 ";
 
@@ -493,6 +499,8 @@ pub fn cmd_enact(args: &Args) -> Result<()> {
         k_per_group: args.get_usize("k", 2),
         max_groups: args.get_usize("max-groups", 4),
         seed,
+        ckpt_workers: args.get_usize("ckpt-async-workers", 0),
+        ckpt_codec: args.get_str("ckpt-compress", "none").parse()?,
         ..Default::default()
     };
     if let Some(d) = args.get("ckpt-dir") {
@@ -567,6 +575,22 @@ pub fn cmd_enact(args: &Args) -> Result<()> {
         report.save_sim_s,
         report.load_wall_s,
         report.load_sim_s
+    );
+    println!(
+        "ckpt path: codec {} — {} B framed of {} B raw ({:.0}%) | async workers {} — \
+         {:.2}s encode+commit in background, {:.2}s blocked, overlap {:.0}%",
+        ecfg.ckpt_codec.name(),
+        report.bytes_saved_local,
+        report.bytes_saved_raw,
+        if report.bytes_saved_raw > 0 {
+            100.0 * report.bytes_saved_local as f64 / report.bytes_saved_raw as f64
+        } else {
+            100.0
+        },
+        ecfg.ckpt_workers,
+        report.save_bg_wall_s,
+        report.save_wall_s,
+        100.0 * report.save_overlap_ratio()
     );
     if ecfg.replay.envelope.is_bounded() {
         let slack = match report.budget_slack_usd {

@@ -14,9 +14,13 @@
 //!   [`PipelineTrainer`] whose [`ExecTopology`] mirrors the active plan's
 //!   stage partition ([`engine_splits`] rescales the plan's layer spans
 //!   onto the artifact model's layer count);
-//! * at every event the replica is checkpointed layer-wise through
-//!   [`CheckpointManager::save_full`] with the plan's node placement, so
-//!   the tiered store holds *real bytes* exactly where the plan put them;
+//! * at every event the replica is checkpointed layer-wise with the
+//!   plan's node placement, so the tiered store holds *real bytes*
+//!   exactly where the plan put them — only the [`Snapshot`] capture
+//!   runs on the training path; encode (optionally compressed, see
+//!   [`Codec`]) and commit ride the [`AsyncCheckpointer`] background
+//!   worker when `ckpt_workers > 0` and overlap with the next
+//!   interval's real steps, bit-identically to the synchronous mode;
 //! * a migration rebuilds the trainer from [`CheckpointManager::load_full`]
 //!   with local-first retrieval — resharding when the checkpoint TP shape
 //!   differs, and touching the cloud **only** for units whose every
@@ -39,7 +43,9 @@ use std::time::Instant;
 
 use anyhow::{anyhow, ensure, Result};
 
-use crate::checkpoint::{CheckpointManager, CkptKey, LoadReport, SaveReport};
+use crate::checkpoint::{
+    AsyncCheckpointer, CheckpointManager, CkptKey, Codec, LoadReport, SaveReport, Snapshot,
+};
 use crate::cluster::{Interconnect, SpotTrace};
 use crate::pipeline::{ExecTopology, PipelineTrainer};
 use crate::planner::ParallelPlan;
@@ -51,7 +57,7 @@ use super::orchestrator::{ElasticCoordinator, ReplanConfig, ReplanDecision};
 use super::replay::{
     active_of, metered_advance, opening_cluster, opening_prices, Meter, ReplayConfig, ReplayReport,
 };
-use super::timing::{autohet_recovery_s, RecoveryScenario};
+use super::timing::{autohet_recovery_s_scaled, RecoveryScenario};
 
 /// How a decision log is enacted on the real training path.
 #[derive(Debug, Clone)]
@@ -75,6 +81,12 @@ pub struct EnactConfig {
     pub seed: u64,
     /// Root of the tiered checkpoint store (local + cloud file trees).
     pub ckpt_dir: PathBuf,
+    /// Background checkpoint workers: 0 = synchronous saves on the
+    /// training path; N ≥ 1 = one background commit thread encoding on
+    /// N parallel workers. Results are bit-identical at any value.
+    pub ckpt_workers: usize,
+    /// Compression codec for every checkpoint unit.
+    pub ckpt_codec: Codec,
 }
 
 impl Default for EnactConfig {
@@ -87,6 +99,8 @@ impl Default for EnactConfig {
             adam: AdamConfig { lr: 2e-3, ..Default::default() },
             seed: 7,
             ckpt_dir: std::env::temp_dir().join(format!("autohet-enact-{}", std::process::id())),
+            ckpt_workers: 0,
+            ckpt_codec: Codec::Raw,
         }
     }
 }
@@ -117,9 +131,15 @@ pub struct EnactRow {
     pub dp_groups: usize,
     /// Replicas actually materialized (≤ `max_groups`).
     pub enacted_groups: usize,
-    /// Layer-wise checkpoint written at the event instant.
+    /// Layer-wise checkpoint written at the event instant (backfilled
+    /// from the background worker's commit when saves are async).
     pub save: SaveReport,
+    /// Wall seconds the save charged to the *training path*: snapshot
+    /// capture + submit (including any double-buffer backpressure).
     pub save_wall_s: f64,
+    /// Wall seconds the encode+commit spent on the background worker
+    /// (0 for synchronous saves — nothing was hidden).
+    pub save_bg_wall_s: f64,
     /// Real restore behind a switch (None on kept/paused events).
     pub load: Option<LoadReport>,
     pub load_wall_s: f64,
@@ -128,7 +148,8 @@ pub struct EnactRow {
     pub peer_frac: f64,
     pub cloud_frac: f64,
     /// Fig-10 model seconds for *these measured fractions* — the real
-    /// byte counters fed through [`autohet_recovery_s`].
+    /// byte counters fed through [`autohet_recovery_s_scaled`] with the
+    /// checkpoint's measured compression ratio.
     pub timing_model_s: f64,
     pub reason: String,
 }
@@ -149,15 +170,22 @@ pub struct EnactReport {
     pub pauses: usize,
     pub bytes_saved_local: u64,
     pub bytes_saved_cloud: u64,
+    /// Pre-compression payload bytes across all saves (compare with
+    /// `bytes_saved_local` for the realized compression ratio).
+    pub bytes_saved_raw: u64,
     pub bytes_loaded_local: u64,
     pub bytes_loaded_rdma: u64,
     pub bytes_loaded_cloud: u64,
     /// Simulated (bandwidth-model) seconds across all saves / loads.
     pub save_sim_s: f64,
     pub load_sim_s: f64,
-    /// Real wall-clock seconds across all saves / loads.
+    /// Real wall-clock seconds saves charged to the training path
+    /// (snapshot capture + submit backpressure) and loads took.
     pub save_wall_s: f64,
     pub load_wall_s: f64,
+    /// Real wall-clock seconds of encode+commit hidden on the
+    /// background checkpoint worker (0 when saves are synchronous).
+    pub save_bg_wall_s: f64,
     /// Simulated dollars billed — the replay engine's spend meter run
     /// alongside the real steps, so a budget envelope stops the
     /// enactment at the same instant it stops the replay.
@@ -186,17 +214,29 @@ impl EnactReport {
             })
     }
 
+    /// Fraction of total save wall time hidden off the training path:
+    /// `bg / (bg + blocked)`. 0 when saves are synchronous (or when no
+    /// save ever ran).
+    pub fn save_overlap_ratio(&self) -> f64 {
+        let total = self.save_bg_wall_s + self.save_wall_s;
+        if total <= 0.0 {
+            0.0
+        } else {
+            self.save_bg_wall_s / total
+        }
+    }
+
     /// Per-event CSV (commas in reasons become `;`).
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
             "t_hours,decision,forced,gpus,iter_s,migration_s,replan_s,steps,loss,\
              save_local_b,save_cloud_b,load_local_b,load_rdma_b,load_cloud_b,\
-             local_frac,peer_frac,cloud_frac,fig10_s,save_wall_s,load_wall_s,reason\n",
+             local_frac,peer_frac,cloud_frac,fig10_s,save_wall_s,save_bg_wall_s,load_wall_s,reason\n",
         );
         for r in &self.rows {
             let load = r.load.clone().unwrap_or_default();
             out.push_str(&format!(
-                "{:.3},{},{},{},{:.4},{:.1},{:.4},{},{:.4},{},{},{},{},{},{:.3},{:.3},{:.3},{:.1},{:.4},{:.4},{}\n",
+                "{:.3},{},{},{},{:.4},{:.1},{:.4},{},{:.4},{},{},{},{},{},{:.3},{:.3},{:.3},{:.1},{:.4},{:.4},{:.4},{}\n",
                 r.at_s / 3600.0,
                 r.decision,
                 r.forced,
@@ -216,6 +256,7 @@ impl EnactReport {
                 r.cloud_frac,
                 r.timing_model_s,
                 r.save_wall_s,
+                r.save_bg_wall_s,
                 r.load_wall_s,
                 r.reason.replace(',', ";"),
             ));
@@ -425,6 +466,12 @@ pub fn enact(
     coord.reprice(&opening_prices(trace)?)?;
 
     let mut mgr = CheckpointManager::new(&cfg.ckpt_dir)?;
+    mgr.codec = cfg.ckpt_codec;
+    // every checkpoint mutation (saves, drops, wipes) flows through the
+    // checkpointer FIFO — inline when ckpt_workers == 0, on a background
+    // thread otherwise — so the store's simulated meters accumulate in
+    // submission order either way
+    let ck = AsyncCheckpointer::new(mgr, cfg.ckpt_workers);
     let mut corpus = MarkovCorpus::new(dims.vocab, 4, cfg.seed ^ 0x5EED);
     let mut report = EnactReport::default();
 
@@ -487,21 +534,24 @@ pub fn enact(
         let loss_before = report.losses.last().copied().unwrap_or(f64::NAN);
 
         // 2) checkpoint the replica at the event instant (the durable
-        // state predates the preemption it is about to survive)
-        let mut save = SaveReport::default();
+        // state predates the preemption it is about to survive). Only
+        // the snapshot capture + submit runs here — encode and commit
+        // ride the background worker; the commit outcome is backfilled
+        // into this row (keyed by its index) after the run drains.
         let mut save_wall_s = 0.0;
         if let Some(tr) = trainer.as_ref() {
             let tp = ckpt_tp(&dims, coord.plan.as_ref().map_or(1, |p| p.tp_dim));
             let g0 = &tr.groups[0];
             let placement = spans.clone();
             let t0 = Instant::now();
-            save = mgr.save_full(
+            let snap = Snapshot::capture(
                 report.losses.len() as u64,
                 &g0.params,
                 Some(&g0.adam),
                 tp,
                 &|l| node_of(&placement, l),
-            )?;
+            );
+            ck.submit_save(report.rows.len(), snap);
             save_wall_s = t0.elapsed().as_secs_f64();
         }
 
@@ -516,7 +566,7 @@ pub fn enact(
         let after_nodes: std::collections::BTreeSet<usize> =
             out.cluster.nodes.iter().map(|n| n.node_id).collect();
         for dead in before_nodes.difference(&after_nodes) {
-            mgr.bitmap.drop_node(*dead);
+            ck.drop_node(*dead);
         }
         if out.decision == ReplanDecision::Paused {
             // the whole run is descheduled: every node's local tiers go
@@ -524,9 +574,9 @@ pub fn enact(
             // an in-flight migration dies with the fleet (the meter
             // mirrors the replay engine exactly)
             for n in &before_nodes {
-                mgr.bitmap.drop_node(*n);
+                ck.drop_node(*n);
             }
-            mgr.store.wipe_memory();
+            ck.wipe_memory();
             trainer = None;
             spans.clear();
             report.pauses += 1;
@@ -546,7 +596,11 @@ pub fn enact(
                 .ok_or_else(|| anyhow!("coordinator switched without a plan"))?;
             let splits = engine_splits(&plan, dims.n_layers, cfg.max_groups);
             let topo = ExecTopology::from_layer_splits(&splits);
-            if mgr.bitmap.keys().is_empty() {
+            // a restore reads the manager: barrier behind every
+            // submitted save/drop/wipe first
+            ck.drain();
+            let bitmap_empty = ck.lock().bitmap.keys().is_empty();
+            if bitmap_empty {
                 // nothing was ever checkpointed (the run opened paused):
                 // this "restore" is a fresh start
                 trainer = Some(PipelineTrainer::new(
@@ -561,7 +615,11 @@ pub fn enact(
                 let mut params = ModelParams::init(&dims, cfg.seed);
                 let mut adam = Adam::new(cfg.adam, &params);
                 let t1 = Instant::now();
-                let rep = mgr.load_full(&mut params, Some(&mut adam), load_node)?;
+                let (rep, save_ratio) = {
+                    let mut mgr = ck.lock();
+                    let rep = mgr.load_full(&mut params, Some(&mut adam), load_node)?;
+                    (rep, mgr.last_save_ratio)
+                };
                 load_wall_s = t1.elapsed().as_secs_f64();
                 // optimizer step count continues across the migration
                 adam.step = report.losses.len() as u64;
@@ -575,8 +633,14 @@ pub fn enact(
                     peer_frac,
                     dp_groups_new: plan.dp_degree(),
                 };
-                timing_model_s =
-                    autohet_recovery_s(&profile.model, &sc, &Interconnect::default());
+                // the Fig-10 model prices the *compressed* bytes actually
+                // on the wire — the manager's measured save ratio
+                timing_model_s = autohet_recovery_s_scaled(
+                    &profile.model,
+                    &sc,
+                    &Interconnect::default(),
+                    save_ratio,
+                );
                 load = Some(rep);
                 trainer = Some(PipelineTrainer::from_state(
                     engine,
@@ -590,10 +654,8 @@ pub fn enact(
             report.switches += 1;
         }
 
-        // 5) meters + the decision row
-        report.bytes_saved_local += save.bytes_local;
-        report.bytes_saved_cloud += save.bytes_cloud;
-        report.save_sim_s += save.sim_local_s + save.sim_cloud_s;
+        // 5) meters + the decision row (save byte/sim meters are
+        // backfilled from the worker's commit results after the drain)
         report.save_wall_s += save_wall_s;
         if let Some(l) = &load {
             report.bytes_loaded_local += l.bytes_memory + l.bytes_disk;
@@ -617,8 +679,9 @@ pub fn enact(
             loss_before,
             dp_groups,
             enacted_groups: trainer.as_ref().map_or(0, |t| t.groups.len()),
-            save,
+            save: SaveReport::default(),
             save_wall_s,
+            save_bg_wall_s: 0.0,
             load,
             load_wall_s,
             local_frac,
@@ -673,6 +736,7 @@ pub fn enact(
             enacted_groups: 0,
             save: SaveReport::default(),
             save_wall_s: 0.0,
+            save_bg_wall_s: 0.0,
             load: None,
             load_wall_s: 0.0,
             local_frac: 0.0,
@@ -682,6 +746,26 @@ pub fn enact(
             reason: why,
         });
     }
+    // stop the checkpoint worker and backfill every row's commit result
+    // (tag = the row index recorded at submit time)
+    let (_mgr, committed) = ck.finish();
+    for c in committed {
+        let rep = c
+            .report
+            .map_err(|e| anyhow!("background checkpoint save failed: {e}"))?;
+        report.bytes_saved_local += rep.bytes_local;
+        report.bytes_saved_cloud += rep.bytes_cloud;
+        report.bytes_saved_raw += rep.bytes_raw;
+        report.save_sim_s += rep.sim_local_s + rep.sim_cloud_s;
+        report.save_bg_wall_s += c.bg_wall_s;
+        let row = report
+            .rows
+            .get_mut(c.tag)
+            .ok_or_else(|| anyhow!("save tag {} has no row", c.tag))?;
+        row.save_bg_wall_s = c.bg_wall_s;
+        row.save = rep;
+    }
+
     report.usd = meter.usd;
     report.budget_slack_usd = cfg.replay.envelope.max_usd.map(|m| m - meter.usd);
     report.plan_cache_hits = coord.plan_cache_hits;

@@ -38,4 +38,4 @@ pub use orchestrator::{
     ElasticCoordinator, ReplanConfig, ReplanDecision, ReplanOutcome, ReplanPolicy,
 };
 pub use replay::{replay, ReplayConfig, ReplayReport, ReplayRow};
-pub use timing::{autohet_recovery_s, RecoveryScenario};
+pub use timing::{autohet_recovery_s, autohet_recovery_s_scaled, RecoveryScenario};

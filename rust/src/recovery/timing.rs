@@ -59,9 +59,23 @@ impl RecoveryScenario {
     }
 }
 
-/// AutoHet recovery seconds for a scenario.
+/// AutoHet recovery seconds for a scenario (uncompressed checkpoints).
 pub fn autohet_recovery_s(model: &ModelCfg, sc: &RecoveryScenario, ic: &Interconnect) -> f64 {
-    let ckpt = model.ckpt_bytes_total();
+    autohet_recovery_s_scaled(model, sc, ic, 1.0)
+}
+
+/// AutoHet recovery seconds with the checkpoint volume scaled by
+/// `bytes_scale` — the measured compressed-to-raw byte ratio of the
+/// checkpoint actually being loaded. Bytes moved is the term this model
+/// prices, so compression shrinks every transfer leg proportionally;
+/// the restart overhead is wall time and does not scale.
+pub fn autohet_recovery_s_scaled(
+    model: &ModelCfg,
+    sc: &RecoveryScenario,
+    ic: &Interconnect,
+    bytes_scale: f64,
+) -> f64 {
+    let ckpt = model.ckpt_bytes_total() * bytes_scale.clamp(0.0, 1.0);
     // Local: each surviving node streams its share from NVMe in parallel.
     let local_bytes_per_node = ckpt * sc.local_frac / sc.surviving_nodes.max(1) as f64;
     let t_local = local_bytes_per_node / (ic.nvme_gbs * 1e9);
@@ -110,6 +124,22 @@ mod tests {
     fn cloud_frac_clamps() {
         let sc = RecoveryScenario { surviving_nodes: 1, local_frac: 0.8, peer_frac: 0.4, dp_groups_new: 1 };
         assert_eq!(sc.cloud_frac(), 0.0);
+    }
+
+    #[test]
+    fn compressed_bytes_price_proportionally() {
+        let m = ModelCfg::gpt3_6p7b();
+        let ic = Interconnect::default();
+        let sc = RecoveryScenario::scenario_b(0.5, 2, 2);
+        let full = autohet_recovery_s(&m, &sc, &ic);
+        let half = autohet_recovery_s_scaled(&m, &sc, &ic, 0.5);
+        // scale 1.0 is exactly the unscaled model
+        assert_eq!(autohet_recovery_s_scaled(&m, &sc, &ic, 1.0).to_bits(), full.to_bits());
+        // halving the bytes halves every transfer leg but not the restart
+        assert!(half < full);
+        assert!(half > 0.5 * full - 1e-9);
+        // ratios above 1 (raw fallback pathologies) clamp to 1
+        assert_eq!(autohet_recovery_s_scaled(&m, &sc, &ic, 1.7).to_bits(), full.to_bits());
     }
 
     #[test]

@@ -5,13 +5,17 @@
 //! uninterrupted baseline run with identical seeds, with replicas still
 //! bit-synced. Plus: two identical enact runs produce bit-identical loss
 //! curves, the enactment follows the replay decision log exactly, and a
-//! full-fleet pause resumes from the cloud tier alone.
+//! full-fleet pause resumes from the cloud tier alone. Async saves are
+//! pinned bit-identical to the synchronous path at worker counts 1/2/8
+//! (loss curves, decision log, sim-time meters), and codec compression
+//! must never perturb training.
 //!
 //! All tests skip (with a notice) until the AOT artifacts exist
 //! (`cd python && python -m compile.aot --preset tiny --out-dir ../rust/artifacts`).
 
 use std::path::{Path, PathBuf};
 
+use autohet::checkpoint::Codec;
 use autohet::cluster::{GpuCatalog, KindId, SpotTrace, TraceConfig};
 use autohet::modelcfg::ModelCfg;
 use autohet::profile::ProfileDb;
@@ -111,6 +115,8 @@ fn cfg(tag: &str) -> EnactConfig {
         adam: AdamConfig { lr: 2e-3, ..Default::default() },
         seed: 7,
         ckpt_dir: tmp(tag),
+        ckpt_workers: 0,
+        ckpt_codec: Codec::Raw,
     }
 }
 
@@ -247,4 +253,84 @@ fn full_fleet_pause_resumes_from_cloud_only() {
     // the post-resume tail train, the paused interval does not
     assert_eq!(report.steps, 2 * c.steps_per_event);
     assert!(report.replicas_synced);
+}
+
+#[test]
+fn async_enact_is_bit_identical_to_sync_at_any_worker_count() {
+    let Some(e) = engine() else { return };
+    let p = profile();
+    let trace = three_event_trace();
+
+    let sync = enact(&e, &p, &trace, &cfg("async-0")).unwrap();
+    assert_eq!(sync.save_bg_wall_s, 0.0, "sync mode hides nothing");
+    assert_eq!(sync.save_overlap_ratio(), 0.0);
+    for workers in [1usize, 2, 8] {
+        let mut c = cfg(&format!("async-{workers}"));
+        c.ckpt_workers = workers;
+        let r = enact(&e, &p, &trace, &c).unwrap();
+        // the real loss curve is bit-identical: background encode+commit
+        // must not perturb a single optimizer step
+        assert_eq!(r.losses, sync.losses, "workers={workers}");
+        assert_eq!(
+            r.final_eval_loss.to_bits(),
+            sync.final_eval_loss.to_bits(),
+            "workers={workers}"
+        );
+        // same decision trail
+        assert_eq!(
+            r.rows.iter().map(|x| (x.decision, x.forced)).collect::<Vec<_>>(),
+            sync.rows.iter().map(|x| (x.decision, x.forced)).collect::<Vec<_>>(),
+            "workers={workers}"
+        );
+        // sim-time meters are f64 sums over store ops — bit equality
+        // proves the op order matched the synchronous path exactly
+        assert_eq!(r.save_sim_s.to_bits(), sync.save_sim_s.to_bits(), "workers={workers}");
+        assert_eq!(r.load_sim_s.to_bits(), sync.load_sim_s.to_bits(), "workers={workers}");
+        assert_eq!(r.bytes_saved_local, sync.bytes_saved_local, "workers={workers}");
+        assert_eq!(r.bytes_saved_raw, sync.bytes_saved_raw, "workers={workers}");
+        assert_eq!(r.bytes_loaded_cloud, sync.bytes_loaded_cloud, "workers={workers}");
+        // per-row commit results were backfilled under the right tags
+        for (x, y) in r.rows.iter().zip(&sync.rows) {
+            assert_eq!(x.save.bytes_local, y.save.bytes_local, "workers={workers}");
+            assert_eq!(x.save.units, y.save.units, "workers={workers}");
+        }
+    }
+}
+
+#[test]
+fn codec_compression_never_perturbs_training() {
+    let Some(e) = engine() else { return };
+    let p = profile();
+    let trace = three_event_trace();
+
+    let raw = enact(&e, &p, &trace, &cfg("codec-raw")).unwrap();
+    let mut c = cfg("codec-delta");
+    c.ckpt_codec = Codec::Delta;
+    c.ckpt_workers = 2;
+    let r = enact(&e, &p, &trace, &c).unwrap();
+    // compression changes bytes on the wire, never the training path
+    assert_eq!(r.losses, raw.losses);
+    assert_eq!(r.final_eval_loss.to_bits(), raw.final_eval_loss.to_bits());
+    assert!(r.replicas_synced);
+    // the raw payload is codec-invariant; framed bytes stay within the
+    // header ceiling and the Fig-10 model never prices compressed bytes
+    // above the raw run
+    assert_eq!(r.bytes_saved_raw, raw.bytes_saved_raw);
+    assert!(r.bytes_saved_raw > 0);
+    assert!(
+        r.bytes_saved_local <= raw.bytes_saved_local + 64 * 1024,
+        "framed {} vs raw-run {}",
+        r.bytes_saved_local,
+        raw.bytes_saved_local
+    );
+    for (x, y) in r.rows.iter().zip(&raw.rows) {
+        if x.load.is_some() {
+            assert!(
+                x.timing_model_s <= y.timing_model_s + 1e-9,
+                "compressed recovery must not price above raw: {} vs {}",
+                x.timing_model_s,
+                y.timing_model_s
+            );
+        }
+    }
 }

@@ -1,0 +1,221 @@
+//! Fault-injection property suite for the async checkpoint path.
+//!
+//! A [`FailpointStore`] kills exactly one `put` — configurable tier,
+//! unit index, and byte offset — leaving the truncated partial object a
+//! real crashed upload leaves. The pinned properties:
+//!
+//! * a crashed save **never corrupts the previous complete checkpoint**:
+//!   the bitmap still routes to the last committed step and its
+//!   bounded-tier copies are untouched, for every cell of the
+//!   (tier × unit × offset) grid;
+//! * **partial uploads are invisible to `load_full`**: the restore after
+//!   any crash is byte-identical to the pre-crash replica;
+//! * a **preemption mid-save** (crash + node loss + memory wipe)
+//!   restores the last committed step from the cloud;
+//! * through the [`AsyncCheckpointer`], a background crash surfaces as
+//!   an `Err` commit result under the right tag — at any worker count —
+//!   while later saves keep committing;
+//! * **eviction is deferred**: a superseded step's local copies are
+//!   deleted only after its successor fully commits (the regression
+//!   test for the save-eviction crash window).
+
+use autohet::checkpoint::{
+    AsyncCheckpointer, CheckpointManager, Codec, FailPlan, FailpointStore, Snapshot, StorageTier,
+    Store, TieredStore,
+};
+use autohet::runtime::ModelDims;
+use autohet::train::{Adam, AdamConfig, ModelParams};
+
+fn dims() -> ModelDims {
+    ModelDims {
+        vocab: 32,
+        d_model: 8,
+        n_heads: 2,
+        d_ff: 16,
+        seq: 4,
+        microbatch: 1,
+        n_layers: 4,
+        params_count: 0,
+    }
+}
+
+fn tmp(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "ah-prop-async-{tag}-{}-{}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn failing_mgr(tag: &str) -> CheckpointManager<FailpointStore> {
+    CheckpointManager::with_store(FailpointStore::new(TieredStore::new(&tmp(tag)).unwrap()))
+}
+
+#[test]
+fn crash_grid_never_corrupts_previous_checkpoint() {
+    let d = dims();
+    let p1 = ModelParams::init(&d, 11);
+    let p2 = ModelParams::init(&d, 22);
+    // size the grid from one clean save: puts per tier == units per step
+    let mut probe = failing_mgr("probe");
+    probe.save_full(1, &p1, None, 2, &|l| l % 2).unwrap();
+    let units = probe.store.puts_seen(StorageTier::Cloud);
+    assert_eq!(units, d.n_layers * 2 + 2);
+
+    for tier in [StorageTier::CpuMemory, StorageTier::LocalDisk, StorageTier::Cloud] {
+        for unit in [0, units / 2, units - 1] {
+            // 0 = nothing landed, 1/64 = truncated object,
+            // usize::MAX = full object landed but the ack was lost
+            for off in [0usize, 1, 64, usize::MAX] {
+                let tag = format!("grid-{tier:?}-{unit}-{off}");
+                let mut mgr = failing_mgr(&tag);
+                mgr.codec = Codec::Delta;
+                let save1 = mgr.save_full(1, &p1, None, 2, &|l| l % 2).unwrap();
+                // crash the chosen put of the NEXT save
+                mgr.store.arm(FailPlan { tier, unit_index: units + unit, byte_offset: off });
+                let err = mgr.save_full(2, &p2, None, 2, &|l| l % 2).unwrap_err();
+                assert!(err.to_string().contains("failpoint"), "{tag}: {err}");
+                assert_eq!(mgr.store.trips, 1, "{tag}");
+                // the bitmap still routes every reader to step 1…
+                assert_eq!(mgr.bitmap.step, 1, "{tag}");
+                // …whose bounded-tier copies were never evicted
+                for key in mgr.bitmap.keys() {
+                    let skey = key.storage_key(1);
+                    assert!(mgr.store.exists(StorageTier::CpuMemory, &skey), "{tag}: {skey}");
+                    assert!(mgr.store.exists(StorageTier::LocalDisk, &skey), "{tag}: {skey}");
+                }
+                // partial uploads are invisible: the restore is exactly
+                // the step-1 replica, byte for byte
+                let mut out = ModelParams::init(&d, 0);
+                let rep = mgr.load_full(&mut out, None, 0).unwrap();
+                assert_eq!(out.max_abs_diff(&p1), 0.0, "{tag}");
+                assert_eq!(rep.total_bytes(), save1.bytes_local, "{tag}");
+            }
+        }
+    }
+}
+
+#[test]
+fn preemption_mid_save_restores_last_committed_step() {
+    let d = dims();
+    let p1 = ModelParams::init(&d, 5);
+    let mut adam = Adam::new(AdamConfig::default(), &p1);
+    // non-zero moments so the optimizer state restore is checked too
+    let mut g = p1.zeros_like();
+    for (_, t) in g.tensors_mut() {
+        t.f32s_mut().iter_mut().enumerate().for_each(|(i, x)| *x = (i % 5) as f32 * 1e-3);
+    }
+    let mut stepped = p1.clone();
+    adam.update(&mut stepped, &g);
+
+    let mut mgr = failing_mgr("preempt");
+    mgr.save_full(7, &stepped, Some(&adam), 1, &|_| 0).unwrap();
+
+    // the preemption lands mid-way through the next save's disk writes…
+    let seen = mgr.store.puts_seen(StorageTier::LocalDisk);
+    mgr.store.arm(FailPlan {
+        tier: StorageTier::LocalDisk,
+        unit_index: seen + 2,
+        byte_offset: 3,
+    });
+    let p2 = ModelParams::init(&d, 6);
+    assert!(mgr.save_full(8, &p2, Some(&adam), 1, &|_| 0).is_err());
+    // …and takes the node with it: local tiers gone, volatile memory wiped
+    mgr.bitmap.drop_node(0);
+    mgr.store.wipe_memory();
+
+    // the replica restores from the cloud at the last COMMITTED step
+    assert_eq!(mgr.bitmap.step, 7);
+    let mut out = ModelParams::init(&d, 0);
+    let mut out_adam = Adam::new(AdamConfig::default(), &out);
+    let rep = mgr.load_full(&mut out, Some(&mut out_adam), 1).unwrap();
+    assert_eq!(out.max_abs_diff(&stepped), 0.0);
+    assert_eq!(out_adam.m.max_abs_diff(&adam.m), 0.0);
+    assert_eq!(out_adam.v.max_abs_diff(&adam.v), 0.0);
+    assert!(rep.bytes_cloud > 0);
+    assert_eq!(rep.bytes_memory + rep.bytes_disk + rep.bytes_rdma, 0);
+}
+
+#[test]
+fn async_crash_surfaces_under_its_tag_and_later_saves_commit() {
+    let d = dims();
+    let p1 = ModelParams::init(&d, 1);
+    let p2 = ModelParams::init(&d, 2);
+    let p3 = ModelParams::init(&d, 3);
+    let units = d.n_layers + 2; // tp = 1
+    for workers in [1usize, 2, 8] {
+        let mut mgr = failing_mgr(&format!("async-{workers}"));
+        // crash the middle save's second cloud upload
+        mgr.store.arm(FailPlan {
+            tier: StorageTier::Cloud,
+            unit_index: units + 1,
+            byte_offset: 9,
+        });
+        let ck = AsyncCheckpointer::new(mgr, workers);
+        for (step, p) in [(1u64, &p1), (2, &p2), (3, &p3)] {
+            let snap = Snapshot::capture(step, p, None, 1, &|_| 0);
+            ck.submit_save(step as usize, snap);
+        }
+        let (mut mgr, done) = ck.finish();
+        assert_eq!(done.len(), 3, "workers={workers}");
+        assert_eq!(
+            done.iter().map(|c| c.tag).collect::<Vec<_>>(),
+            vec![1, 2, 3],
+            "FIFO commit order (workers={workers})"
+        );
+        assert!(done[0].report.is_ok(), "workers={workers}");
+        let err = done[1].report.as_ref().unwrap_err();
+        assert!(err.contains("failpoint"), "workers={workers}: {err}");
+        // the crashed save left no trace in the routing state, and the
+        // NEXT save committed cleanly over step 1
+        assert!(done[2].report.is_ok(), "workers={workers}");
+        assert_eq!(mgr.bitmap.step, 3, "workers={workers}");
+        let mut out = ModelParams::init(&d, 0);
+        mgr.load_full(&mut out, None, 0).unwrap();
+        assert_eq!(out.max_abs_diff(&p3), 0.0, "workers={workers}");
+    }
+}
+
+#[test]
+fn eviction_deferred_until_successor_commits() {
+    let d = dims();
+    let p1 = ModelParams::init(&d, 4);
+    let p2 = ModelParams::init(&d, 8);
+    let mut mgr = failing_mgr("evict");
+    mgr.save_full(1, &p1, None, 1, &|_| 0).unwrap();
+    let step1_keys: Vec<String> =
+        mgr.bitmap.keys().iter().map(|k| k.storage_key(1)).collect();
+    assert!(!step1_keys.is_empty());
+
+    // crash the very first write of the successor: nothing of step 2 lands
+    let seen = mgr.store.puts_seen(StorageTier::CpuMemory);
+    mgr.store.arm(FailPlan {
+        tier: StorageTier::CpuMemory,
+        unit_index: seen,
+        byte_offset: 0,
+    });
+    assert!(mgr.save_full(2, &p2, None, 1, &|_| 0).is_err());
+    // step 1's local copies MUST still be there — deleting them before
+    // the successor commits was the crash-corruption window
+    for skey in &step1_keys {
+        assert!(mgr.store.exists(StorageTier::CpuMemory, skey), "{skey}");
+        assert!(mgr.store.exists(StorageTier::LocalDisk, skey), "{skey}");
+    }
+
+    // a clean successor commits — only then are step-1 copies evicted
+    mgr.save_full(2, &p2, None, 1, &|_| 0).unwrap();
+    for skey in &step1_keys {
+        assert!(!mgr.store.exists(StorageTier::CpuMemory, skey), "{skey}");
+        assert!(!mgr.store.exists(StorageTier::LocalDisk, skey), "{skey}");
+        // the cloud retains history
+        assert!(mgr.store.exists(StorageTier::Cloud, skey), "{skey}");
+    }
+    let mut out = ModelParams::init(&d, 0);
+    mgr.load_full(&mut out, None, 0).unwrap();
+    assert_eq!(out.max_abs_diff(&p2), 0.0);
+}

@@ -11,9 +11,12 @@
 //!   retrieval never touches the cloud front door);
 //! * after a node dies, the load downloads **exactly** the dead node's
 //!   bitmap complement from the cloud — no more, no less;
-//! * the codec rejects truncation and round-trips arbitrary bundles.
+//! * the codec rejects truncation and round-trips arbitrary bundles;
+//! * every compression frame ([`Codec`] raw/rle/delta) round-trips any
+//!   payload byte-exactly within the `raw + header` size ceiling, and
+//!   truncated or mis-tagged frames are rejected with the codec named.
 
-use autohet::checkpoint::{codec, CheckpointManager, CkptKey, Location, StorageTier};
+use autohet::checkpoint::{codec, CheckpointManager, CkptKey, Codec, Location, StorageTier};
 use autohet::runtime::{HostTensor, ModelDims};
 use autohet::train::{Adam, AdamConfig, ModelParams};
 use autohet::util::rng::Rng;
@@ -192,6 +195,87 @@ fn codec_roundtrips_arbitrary_bundles_and_rejects_truncation() {
         let cut = 1 + rng.below(bytes.len() - 1);
         assert!(codec::decode(&bytes[..cut]).is_err(), "case {case} cut {cut}");
     }
+}
+
+#[test]
+fn compression_frames_roundtrip_byte_exactly() {
+    let mut rng = Rng::new(0xF7A3);
+    let mut payloads: Vec<(&str, Vec<u8>)> = vec![
+        ("empty", vec![]),
+        ("all-zero", vec![0u8; 4096]),
+        ("constant", vec![0xAB; 1237]),
+        ("random", (0..2048).map(|_| rng.below(256) as u8).collect()),
+        // adversarial for RLE: no byte ever repeats 3 times in a row
+        ("ramp", (0..1024u32).map(|i| (i % 251) as u8).collect()),
+    ];
+    // adversarial for delta: the lag-4 differences are themselves runless
+    payloads.push((
+        "lag4-hostile",
+        (0..1024u32).map(|i| (i.wrapping_mul(2654435761) >> 13) as u8).collect(),
+    ));
+    for (tag, payload) in &payloads {
+        for c in Codec::ALL {
+            let frame = codec::compress(c, payload);
+            // raw fallback makes this a hard ceiling for ANY payload
+            assert!(
+                frame.len() <= payload.len() + codec::FRAME_HEADER_LEN,
+                "{tag}/{}: {} > {} + header",
+                c.name(),
+                frame.len(),
+                payload.len()
+            );
+            let back = codec::decompress(&frame).unwrap();
+            assert_eq!(&back, payload, "{tag}/{} must roundtrip byte-exactly", c.name());
+        }
+    }
+    // the compressible classes actually shrink (fresh Adam moments are
+    // exactly the all-zero case)
+    let zeros = [0u8; 4096];
+    for c in [Codec::Rle, Codec::Delta] {
+        let frame = codec::compress(c, &zeros);
+        assert!(frame.len() < 4096 / 8, "{} must crush an all-zero payload", c.name());
+    }
+}
+
+#[test]
+fn truncated_and_mistagged_frames_reject_by_codec() {
+    // long zero runs + sparse noise: compresses under both rle and delta,
+    // so the frame really carries the codec under test (no raw fallback)
+    let mut rng = Rng::new(0xBADF_7A3);
+    let mut payload = vec![0u8; 512];
+    for _ in 0..32 {
+        let i = rng.below(512);
+        payload[i] = rng.below(256) as u8;
+    }
+    for c in [Codec::Rle, Codec::Delta] {
+        let frame = codec::compress(c, &payload);
+        assert_eq!(frame[4], c.id(), "payload must not fall back to raw");
+        // every strict prefix is rejected, never mis-decoded
+        for cut in [0, 3, codec::FRAME_HEADER_LEN - 1, codec::FRAME_HEADER_LEN, frame.len() - 1] {
+            assert!(
+                codec::decompress(&frame[..cut]).is_err(),
+                "{} must reject a {cut}-byte prefix",
+                c.name()
+            );
+        }
+        // body-level corruption inside a length-consistent frame still
+        // fails, and the error names the codec that was decoding
+        let mut short = frame.clone();
+        short.truncate(frame.len() - 1);
+        let body_len = (short.len() - codec::FRAME_HEADER_LEN) as u64;
+        short[13..21].copy_from_slice(&body_len.to_le_bytes());
+        let err = codec::decompress(&short).unwrap_err().to_string();
+        assert!(err.contains(c.name()), "{}: error must name the codec: {err}", c.name());
+    }
+    // bad magic and unknown codec ids are called out as such
+    let mut frame = codec::compress(Codec::Rle, &payload);
+    let mut bad_magic = frame.clone();
+    bad_magic[0] = b'Z';
+    let err = codec::decompress(&bad_magic).unwrap_err().to_string();
+    assert!(err.contains("magic"), "{err}");
+    frame[4] = 9;
+    let err = codec::decompress(&frame).unwrap_err().to_string();
+    assert!(err.contains('9'), "unknown id must appear in the error: {err}");
 }
 
 #[test]
