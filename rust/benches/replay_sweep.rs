@@ -1,0 +1,159 @@
+//! Monte-Carlo replay sweep throughput: many-trace policy evaluation at
+//! 1/4/8 worker threads, with the cross-replay plan cache on.
+//!
+//! Measures scenarios/second for the full trace-gen → replay pipeline
+//! (`recovery::sweep`), the shared-plan-cache hit rate, and the parallel
+//! speedup — and re-checks, in a release build at bench scale, that the
+//! sweep report is bit-identical at every thread count. Each row is
+//! written machine-readably to `BENCH_replay.json` at the repo root (the
+//! perf series the `replay-perf` CI job tracks across PRs). Pass
+//! `--assert` to fail (exit 1) when a floor is missed.
+
+use std::time::Instant;
+
+use autohet::cluster::{GpuCatalog, KindId, TraceConfig};
+use autohet::modelcfg::ModelCfg;
+use autohet::profile::ProfileDb;
+use autohet::recovery::{sweep, SweepConfig, SweepReport};
+use autohet::util::bench::Table;
+use autohet::util::json::Json;
+
+/// Floors are deliberately generous vs a warm release build: CI runners
+/// are slow, shared, and typically 4-core (8 worker threads oversubscribe
+/// there, so the speedup floor is set by cores, not threads).
+const SCENARIOS: usize = 24;
+const ASSERT_MIN_SCEN_PER_S: f64 = 0.5; // at the widest thread count
+const ASSERT_MIN_SPEEDUP_8: f64 = 2.0; // 8 threads vs 1 thread
+const ASSERT_MIN_HIT_RATE: f64 = 0.5; // shared + private cache, sweep-wide
+
+fn sweep_cfg(threads: usize) -> SweepConfig {
+    SweepConfig {
+        scenarios: SCENARIOS,
+        base_seed: 42,
+        threads: Some(threads),
+        warmup: 1,
+        trace: TraceConfig {
+            horizon_s: 24.0 * 3600.0,
+            step_s: 1800.0,
+            capacity: vec![(KindId::A100, 8), (KindId::H800, 4), (KindId::H20, 4)],
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+fn main() {
+    let assert_bounds = std::env::args().any(|a| a == "--assert");
+    let model = ModelCfg::bert_large();
+    let cat = GpuCatalog::builtin();
+    let profile = ProfileDb::build(&model, &cat, &[1, 2, 4, 8], 1);
+
+    let mut t = Table::new(&[
+        "threads",
+        "scenarios",
+        "wall_s",
+        "scen_per_s",
+        "cache_hits",
+        "solves",
+        "hit_rate",
+        "speedup",
+    ]);
+    let mut json_rows: Vec<Json> = Vec::new();
+    let mut failures: Vec<String> = Vec::new();
+    let mut baseline_wall = f64::NAN;
+    let mut widest: Option<(usize, f64, f64)> = None; // (threads, scen/s, speedup)
+    let mut reference: Option<SweepReport> = None;
+
+    for threads in [1usize, 4, 8] {
+        let cfg = sweep_cfg(threads);
+        let t0 = Instant::now();
+        let report = sweep(&profile, &cfg).expect("sweep failed");
+        let wall = t0.elapsed().as_secs_f64();
+        if threads == 1 {
+            baseline_wall = wall;
+        }
+        let scen_per_s = SCENARIOS as f64 / wall.max(1e-9);
+        let speedup = baseline_wall / wall.max(1e-9);
+        let hit_rate = report.cache_hit_rate();
+        widest = Some((threads, scen_per_s, speedup));
+
+        // the determinism contract, re-checked in release at bench scale
+        match &reference {
+            None => reference = Some(report.clone()),
+            Some(r) => {
+                if *r != report {
+                    failures.push(format!(
+                        "sweep report at {threads} threads differs from the 1-thread run"
+                    ));
+                }
+            }
+        }
+
+        t.row(&[
+            threads.to_string(),
+            SCENARIOS.to_string(),
+            format!("{wall:.2}"),
+            format!("{scen_per_s:.2}"),
+            report.plan_cache_hits.to_string(),
+            report.plan_solves.to_string(),
+            format!("{hit_rate:.2}"),
+            format!("{speedup:.2}x"),
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("threads", Json::num(threads as f64)),
+            ("scenarios", Json::num(SCENARIOS as f64)),
+            ("wall_s", Json::num(wall)),
+            ("scenarios_per_s", Json::num(scen_per_s)),
+            ("cache_hits", Json::num(report.plan_cache_hits as f64)),
+            ("plan_solves", Json::num(report.plan_solves as f64)),
+            ("cache_hit_rate", Json::num(hit_rate)),
+            ("speedup_vs_1t", Json::num(speedup)),
+        ]));
+
+        if threads == 8 && speedup < ASSERT_MIN_SPEEDUP_8 {
+            failures.push(format!(
+                "8-thread speedup {speedup:.2}x below floor {ASSERT_MIN_SPEEDUP_8:.1}x"
+            ));
+        }
+        if hit_rate < ASSERT_MIN_HIT_RATE {
+            failures.push(format!(
+                "cache hit rate {hit_rate:.2} at {threads} threads below floor \
+                 {ASSERT_MIN_HIT_RATE:.2}"
+            ));
+        }
+    }
+    t.print(&format!(
+        "Replay sweep throughput ({SCENARIOS} scenarios x 24h traces, {}, shared plan cache)",
+        model.name
+    ));
+
+    if let Some((threads, scen_per_s, _)) = widest {
+        if scen_per_s < ASSERT_MIN_SCEN_PER_S {
+            failures.push(format!(
+                "{scen_per_s:.2} scenarios/s at {threads} threads below floor \
+                 {ASSERT_MIN_SCEN_PER_S:.1}"
+            ));
+        }
+    }
+
+    let out = Json::obj(vec![
+        ("series", Json::str("replay_perf")),
+        ("generated_by", Json::str("cargo bench --bench replay_sweep")),
+        ("model", Json::str(model.name.clone())),
+        ("rows", Json::Arr(json_rows)),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_replay.json");
+    match std::fs::write(path, out.to_string_pretty() + "\n") {
+        Ok(()) => println!("wrote perf series to {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+
+    if !failures.is_empty() {
+        for f in &failures {
+            eprintln!("replay-perf assertion failed: {f}");
+        }
+        if assert_bounds {
+            std::process::exit(1);
+        }
+    }
+}

@@ -12,4 +12,4 @@ pub mod trace;
 pub use catalog::{GpuCatalog, GpuSpec, KindId, KindVec};
 pub use gpu::Interconnect;
 pub use spec::{ClusterSpec, GpuRef, NodeSpec};
-pub use trace::{MarketEvent, PreemptionEvent, SpotTrace, TraceConfig};
+pub use trace::{MarketEvent, MarketEvents, PreemptionEvent, SpotTrace, TraceConfig};

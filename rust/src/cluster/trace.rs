@@ -128,6 +128,10 @@ pub struct SpotTrace {
     pub kinds: Vec<KindId>,
     pub avail: Vec<Vec<usize>>,
     pub prices: Vec<Vec<f64>>,
+    /// RNG seed the trace was generated from ([`SpotTrace::generate`]),
+    /// carried so replay/sweep reports can name the exact scenario (any
+    /// outlier re-runs solo via `--trace-seed`). Hand-built traces use 0.
+    pub seed: u64,
 }
 
 /// A change event derived from the trace.
@@ -221,7 +225,7 @@ impl SpotTrace {
                 .collect();
             prices.push(row);
         }
-        SpotTrace { cfg, kinds, avail, prices }
+        SpotTrace { cfg, kinds, avail, prices, seed }
     }
 
     pub fn steps(&self) -> usize {
@@ -249,43 +253,24 @@ impl SpotTrace {
     /// any availability delta, or whose largest relative price move since
     /// the last emitted event reaches `price_rel_threshold`. Pass
     /// `f64::INFINITY` for availability-only events.
+    ///
+    /// Thin wrapper over [`SpotTrace::market_events_iter`] — a sweep over
+    /// hundreds of long traces streams events instead of materializing
+    /// every per-trace event vector up front.
     pub fn market_events(&self, price_rel_threshold: f64) -> Vec<MarketEvent> {
-        let mut out = Vec::new();
-        if self.avail.is_empty() {
-            return out;
+        self.market_events_iter(price_rel_threshold).collect()
+    }
+
+    /// Streaming form of [`SpotTrace::market_events`]: a lazy iterator
+    /// producing the identical event sequence (pinned by
+    /// `tests/property_trace.rs`), one step at a time.
+    pub fn market_events_iter(&self, price_rel_threshold: f64) -> MarketEvents<'_> {
+        MarketEvents {
+            trace: self,
+            threshold: price_rel_threshold,
+            t: 1,
+            ref_prices: self.prices.first().cloned().unwrap_or_default(),
         }
-        let mut ref_prices = self.prices[0].clone();
-        for t in 1..self.avail.len() {
-            let deltas: Vec<(KindId, i64)> = self
-                .kinds
-                .iter()
-                .enumerate()
-                .filter_map(|(ki, &kind)| {
-                    let d = self.avail[t][ki] as i64 - self.avail[t - 1][ki] as i64;
-                    (d != 0).then_some((kind, d))
-                })
-                .collect();
-            let max_price_move = self.prices[t]
-                .iter()
-                .zip(&ref_prices)
-                .map(|(&p, &r)| if r > 0.0 { (p / r - 1.0).abs() } else { 0.0 })
-                .fold(0.0f64, f64::max);
-            if !deltas.is_empty() || max_price_move >= price_rel_threshold {
-                ref_prices = self.prices[t].clone();
-                out.push(MarketEvent {
-                    at_s: t as f64 * self.cfg.step_s,
-                    deltas,
-                    prices: self
-                        .kinds
-                        .iter()
-                        .enumerate()
-                        .map(|(ki, &kind)| (kind, self.prices[t][ki]))
-                        .collect(),
-                    max_price_move,
-                });
-            }
-        }
-        out
     }
 
     /// Derive grant/preempt events from consecutive samples. Flat shim
@@ -323,6 +308,63 @@ impl SpotTrace {
             .filter(|row| row.iter().sum::<usize>() >= need)
             .count();
         hits as f64 / self.avail.len() as f64
+    }
+}
+
+/// Lazy [`MarketEvent`] stream over a [`SpotTrace`], created by
+/// [`SpotTrace::market_events_iter`]. Carries the same state the eager
+/// loop did — a step cursor and the prices at the last *emitted* event
+/// (the reference for `max_price_move`) — so collecting it reproduces
+/// [`SpotTrace::market_events`] exactly.
+#[derive(Debug, Clone)]
+pub struct MarketEvents<'a> {
+    trace: &'a SpotTrace,
+    threshold: f64,
+    /// Next step to examine (events start at step 1: step 0 is the
+    /// opening sample, not a change).
+    t: usize,
+    /// Price row of the last emitted event (step 0 before any emission).
+    ref_prices: Vec<f64>,
+}
+
+impl Iterator for MarketEvents<'_> {
+    type Item = MarketEvent;
+
+    fn next(&mut self) -> Option<MarketEvent> {
+        let tr = self.trace;
+        while self.t < tr.avail.len() {
+            let t = self.t;
+            self.t += 1;
+            let deltas: Vec<(KindId, i64)> = tr
+                .kinds
+                .iter()
+                .enumerate()
+                .filter_map(|(ki, &kind)| {
+                    let d = tr.avail[t][ki] as i64 - tr.avail[t - 1][ki] as i64;
+                    (d != 0).then_some((kind, d))
+                })
+                .collect();
+            let max_price_move = tr.prices[t]
+                .iter()
+                .zip(&self.ref_prices)
+                .map(|(&p, &r)| if r > 0.0 { (p / r - 1.0).abs() } else { 0.0 })
+                .fold(0.0f64, f64::max);
+            if !deltas.is_empty() || max_price_move >= self.threshold {
+                self.ref_prices = tr.prices[t].clone();
+                return Some(MarketEvent {
+                    at_s: t as f64 * tr.cfg.step_s,
+                    deltas,
+                    prices: tr
+                        .kinds
+                        .iter()
+                        .enumerate()
+                        .map(|(ki, &kind)| (kind, tr.prices[t][ki]))
+                        .collect(),
+                    max_price_move,
+                });
+            }
+        }
+        None
     }
 }
 
@@ -489,5 +531,43 @@ mod tests {
         let cfg = TraceConfig::from_cluster(&cluster);
         assert_eq!(cfg.capacity, vec![(KindId::A100, 8), (KindId::H20, 4)]);
         assert_eq!(cfg.base_price_per_hour.len(), 2);
+    }
+
+    #[test]
+    fn generate_stamps_its_seed() {
+        let t = SpotTrace::generate(TraceConfig::default(), 42);
+        assert_eq!(t.seed, 42);
+    }
+
+    #[test]
+    fn market_events_iter_matches_eager_vec() {
+        let t = SpotTrace::generate(TraceConfig::default(), 17);
+        for threshold in [0.0, 0.02, 0.05, 0.5, f64::INFINITY] {
+            let eager = t.market_events(threshold);
+            let streamed: Vec<MarketEvent> = t.market_events_iter(threshold).collect();
+            assert_eq!(eager, streamed, "threshold {threshold}");
+        }
+    }
+
+    #[test]
+    fn market_events_iter_is_resumable() {
+        // taking a prefix and then draining the same iterator must yield
+        // the eager sequence — the ref-price state lives in the iterator
+        let t = SpotTrace::generate(TraceConfig::default(), 19);
+        let eager = t.market_events(0.05);
+        assert!(eager.len() > 4, "trace too quiet for the split test");
+        let mut it = t.market_events_iter(0.05);
+        let mut streamed: Vec<MarketEvent> = (&mut it).take(3).collect();
+        streamed.extend(it);
+        assert_eq!(eager, streamed);
+    }
+
+    #[test]
+    fn market_events_iter_empty_trace_is_empty() {
+        let mut t = SpotTrace::generate(TraceConfig::default(), 1);
+        t.avail.clear();
+        t.prices.clear();
+        assert_eq!(t.market_events_iter(0.05).count(), 0);
+        assert!(t.market_events(0.05).is_empty());
     }
 }

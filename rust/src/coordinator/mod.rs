@@ -2,6 +2,7 @@
 //! real trainer, and recovery together. This is the binary a user runs.
 
 use std::path::{Path, PathBuf};
+use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
@@ -13,7 +14,8 @@ use crate::pipeline::{ExecTopology, PipelineTrainer};
 use crate::planner::{auto_plan, plan_choice, BudgetEnvelope, Objective, PlanOptions, ScoredPlan};
 use crate::profile::ProfileDb;
 use crate::recovery::{
-    baseline_train, enact, replay, EnactConfig, ReplanPolicy, ReplayConfig, ReplayReport,
+    baseline_train, enact, replay, sweep, sweep_ab, EnactConfig, ReplanPolicy, ReplayConfig,
+    ReplayReport, SweepConfig, SweepReport,
 };
 use crate::runtime::{Engine, HostTensor};
 use crate::sim::simulate_plan;
@@ -43,7 +45,7 @@ USAGE:
   autohet trace   [--hours H] [--seed N]              spot availability + price trace
   autohet replay  [--model NAME] [--cluster FILE|--counts ...] [--hours H]
                   [--objective time|cost] [--amortize-h H] [--greedy]
-                  [--gpus-per-node N] [--seed N] [--csv FILE]
+                  [--gpus-per-node N] [--seed N] [--trace-seed N] [--csv FILE]
                   [--budget-usd X] [--deadline-h H]
                   [--plan-threads N] [--plan-deadline-ms T]
                   replay a generated spot-market trace (per-kind capacity =
@@ -52,12 +54,32 @@ USAGE:
                   every delta like the seed coordinator, `--csv` dumps the
                   per-event decision log; `--budget-usd`/`--deadline-h` cap
                   the run (spend ≤ $X, stop at T) — the meter halts at the
-                  cap and decisions weigh candidates within the envelope
+                  cap and decisions weigh candidates within the envelope;
+                  `--trace-seed` pins the market draw independently of the
+                  profiling seed (e.g. to re-run one sweep scenario solo)
+  autohet sweep   [--model NAME] [--cluster FILE|--counts ...] [--hours H]
+                  [--scenarios N] [--threads T] [--seed S] [--warmup N]
+                  [--policy-a greedy|amortized] [--policy-b greedy|amortized]
+                  [--objective time|cost] [--amortize-h H] [--no-cache]
+                  [--gpus-per-node N] [--csv FILE]
+                  [--budget-usd X] [--deadline-h H]
+                  [--plan-threads N] [--plan-deadline-ms T]
+                  Monte-Carlo policy evaluation: replay N seeded scenarios
+                  (trace seeds derived from --seed) in parallel over T
+                  threads — results are bit-identical at any thread count —
+                  and report tokens/$, downtime, switch, and spend
+                  distributions (mean/p50/p95/worst); with `--policy-b` the
+                  identical seed set is replayed under both policies and
+                  per-seed A−B deltas are reported (paired comparison);
+                  one plan cache is shared across scenarios (sealed after a
+                  `--warmup`-scenario sequential pass; `--no-cache` disables
+                  it); `--csv` dumps per-scenario rows (or A−B deltas)
   autohet enact   [--model NAME] [--cluster FILE|--counts ...] [--hours H]
                   [--objective time|cost] [--amortize-h H] [--greedy]
                   [--budget-usd X] [--deadline-h H]
                   [--plan-threads N] [--plan-deadline-ms T]
-                  [--gpus-per-node N] [--seed N] [--steps-per-event N]
+                  [--gpus-per-node N] [--seed N] [--trace-seed N]
+                  [--steps-per-event N]
                   [--k N] [--max-groups N] [--ckpt-dir DIR]
                   [--ckpt-compress none|rle|delta] [--ckpt-async-workers N]
                   [--artifacts DIR] [--csv FILE] [--loss-csv FILE]
@@ -377,10 +399,13 @@ fn print_replay(tag: &str, r: &ReplayReport) {
     );
     if r.events > 0 {
         println!(
-            "  replan: {:.1}ms total, {:.1}ms max | {} plan-cache hits",
+            "  trace seed {} | replan: {:.1}ms total, {:.1}ms max | {} plan-cache hits, \
+             {} solves",
+            r.trace_seed,
             1e3 * r.replan_total_s,
             1e3 * r.replan_max_s,
-            r.plan_cache_hits
+            r.plan_cache_hits,
+            r.plan_solves
         );
     }
     if r.envelope.is_bounded() {
@@ -449,10 +474,12 @@ fn market_setup(
     let envelope = envelope_from(args)?;
     let hours = args.get_f64("hours", default_hours);
     let amortize_h = args.get_f64("amortize-h", 6.0);
-    let seed = args.get_u64("seed", 1);
+    // the market draw is pinned independently of the profiling seed so a
+    // sweep outlier re-runs solo: `--trace-seed <row.seed>`
+    let trace_seed = args.get_u64("trace-seed", args.get_u64("seed", 1));
     let mut tc = TraceConfig::from_cluster(cluster);
     tc.horizon_s = hours * 3600.0;
-    let trace = SpotTrace::generate(tc, seed);
+    let trace = SpotTrace::generate(tc, trace_seed);
     let policy = if args.has("greedy") {
         ReplanPolicy::Greedy
     } else {
@@ -476,6 +503,134 @@ fn market_setup(
         ..Default::default()
     };
     Ok((trace, rcfg))
+}
+
+/// `greedy` / `amortized` → a replan policy (`--policy-a`/`--policy-b`).
+fn policy_from(name: &str, amortize_h: f64) -> Result<ReplanPolicy> {
+    match name {
+        "greedy" => Ok(ReplanPolicy::Greedy),
+        "amortized" => Ok(ReplanPolicy::Amortized {
+            horizon_s: amortize_h * 3600.0,
+            min_rel_gain: 0.02,
+        }),
+        other => Err(anyhow!("unknown policy `{other}` (want greedy|amortized)")),
+    }
+}
+
+/// Distribution summary of one sweep arm for the CLI.
+fn print_sweep(tag: &str, r: &SweepReport) {
+    println!("{tag}: {} scenarios, base seed {}", r.scenarios, r.base_seed);
+    println!(
+        "  tokens/$: mean {:.1} | p50 {:.1} | p95 {:.1} | worst {:.1}",
+        r.tokens_per_usd.mean, r.tokens_per_usd.p50, r.tokens_per_usd.p95, r.tokens_per_usd.worst
+    );
+    println!(
+        "  downtime: mean {:.1}min | p50 {:.1}min | p95 {:.1}min | worst {:.1}min",
+        r.downtime_s.mean / 60.0,
+        r.downtime_s.p50 / 60.0,
+        r.downtime_s.p95 / 60.0,
+        r.downtime_s.worst / 60.0
+    );
+    println!(
+        "  switches: mean {:.1} | p50 {:.0} | p95 {:.0} | worst {:.0}",
+        r.switches.mean, r.switches.p50, r.switches.p95, r.switches.worst
+    );
+    println!(
+        "  spend:    mean ${:.2} | p50 ${:.2} | p95 ${:.2} | worst ${:.2}",
+        r.usd.mean, r.usd.p50, r.usd.p95, r.usd.worst
+    );
+    println!(
+        "  plan cache: {} hits / {} solves ({:.0}% hit rate)",
+        r.plan_cache_hits,
+        r.plan_solves,
+        100.0 * r.cache_hit_rate()
+    );
+}
+
+pub fn cmd_sweep(args: &Args) -> Result<()> {
+    let model = load_model(args)?;
+    let cluster = load_cluster(args)?;
+    let seed = args.get_u64("seed", 1);
+    let profile = build_profile(&model, &cluster.catalog, seed);
+    let objective: Objective = args.get_str("objective", "time").parse()?;
+    let envelope = envelope_from(args)?;
+    let amortize_h = args.get_f64("amortize-h", 6.0);
+    let (plan_threads, plan_deadline_s) = plan_perf_from(args)?;
+    let mut tc = TraceConfig::from_cluster(&cluster);
+    tc.horizon_s = args.get_f64("hours", 24.0) * 3600.0;
+
+    let name_a = args.get_str("policy-a", "amortized");
+    let rcfg = ReplayConfig {
+        objective,
+        policy: policy_from(name_a, amortize_h)?,
+        opts: PlanOptions {
+            bench: envelope.is_bounded(),
+            plan_threads,
+            solver_deadline_s: plan_deadline_s,
+            ..Default::default()
+        },
+        gpus_per_node: args.get_usize("gpus-per-node", 8),
+        envelope,
+        ..Default::default()
+    };
+    let cfg = SweepConfig {
+        scenarios: args.get_usize("scenarios", 32),
+        base_seed: seed,
+        threads: match args.get_usize("threads", 0) {
+            0 => None, // all cores
+            n => Some(n),
+        },
+        warmup: args.get_usize("warmup", 1),
+        share_cache: !args.has("no-cache"),
+        replay: rcfg,
+        trace: tc,
+    };
+    log_info!(
+        "sweeping {} scenarios of {:.0}h spot traces (base seed {seed}) for {} on {} GPUs",
+        cfg.scenarios,
+        args.get_f64("hours", 24.0),
+        model.name,
+        cluster.total_gpus(),
+    );
+
+    let t0 = Instant::now();
+    if let Some(name_b) = args.get("policy-b") {
+        let replay_b =
+            ReplayConfig { policy: policy_from(name_b, amortize_h)?, ..cfg.replay.clone() };
+        let ab = sweep_ab(&profile, &cfg, &replay_b)?;
+        let wall = t0.elapsed().as_secs_f64();
+        print_sweep(&format!("A ({name_a})"), &ab.a);
+        print_sweep(&format!("B ({name_b})"), &ab.b);
+        println!(
+            "paired A−B: mean Δtokens/$ {:+.1} | A wins {}/{} scenarios",
+            ab.mean_d_tokens_per_usd(),
+            ab.wins_a(),
+            ab.deltas.len()
+        );
+        println!(
+            "{} paired replays in {wall:.2}s ({:.1} scenarios/s)",
+            2 * ab.deltas.len(),
+            2.0 * ab.deltas.len() as f64 / wall.max(1e-9)
+        );
+        if let Some(csv) = args.get("csv") {
+            std::fs::write(csv, ab.to_csv())?;
+            log_info!("wrote per-seed A−B deltas to {csv}");
+        }
+    } else {
+        let report = sweep(&profile, &cfg)?;
+        let wall = t0.elapsed().as_secs_f64();
+        print_sweep(&format!("sweep ({name_a})"), &report);
+        println!(
+            "{} scenarios in {wall:.2}s ({:.1} scenarios/s)",
+            report.scenarios,
+            report.scenarios as f64 / wall.max(1e-9)
+        );
+        if let Some(csv) = args.get("csv") {
+            std::fs::write(csv, report.to_csv())?;
+            log_info!("wrote per-scenario rows to {csv}");
+        }
+    }
+    Ok(())
 }
 
 pub fn cmd_enact(args: &Args) -> Result<()> {
@@ -641,6 +796,7 @@ pub fn run(args: Args) -> Result<()> {
         Some("train") => cmd_train(&args),
         Some("trace") => cmd_trace(&args),
         Some("replay") => cmd_replay(&args),
+        Some("sweep") => cmd_sweep(&args),
         Some("enact") => cmd_enact(&args),
         Some("models") => cmd_models(),
         _ => {
@@ -714,6 +870,36 @@ mod tests {
         assert!(envelope_from(&args).is_err());
         let args = Args::parse(["replay".into(), "--deadline-h".into(), "soon".into()]);
         assert!(envelope_from(&args).is_err());
+    }
+
+    #[test]
+    fn policy_flags_parse() {
+        assert_eq!(policy_from("greedy", 6.0).unwrap(), ReplanPolicy::Greedy);
+        match policy_from("amortized", 12.0).unwrap() {
+            ReplanPolicy::Amortized { horizon_s, min_rel_gain } => {
+                assert_eq!(horizon_s, 12.0 * 3600.0);
+                assert!(min_rel_gain > 0.0);
+            }
+            p => panic!("wrong policy {p:?}"),
+        }
+        let err = policy_from("eager", 6.0).unwrap_err().to_string();
+        assert!(err.contains("eager") && err.contains("amortized"), "{err}");
+    }
+
+    #[test]
+    fn trace_seed_flag_defaults_to_seed() {
+        // `--trace-seed` pins the market draw; without it the profiling
+        // seed doubles as the trace seed (the pre-sweep behavior)
+        let args = Args::parse(["replay".into(), "--seed".into(), "9".into()]);
+        assert_eq!(args.get_u64("trace-seed", args.get_u64("seed", 1)), 9);
+        let args = Args::parse([
+            "replay".into(),
+            "--seed".into(),
+            "9".into(),
+            "--trace-seed".into(),
+            "1234".into(),
+        ]);
+        assert_eq!(args.get_u64("trace-seed", args.get_u64("seed", 1)), 1234);
     }
 
     #[test]

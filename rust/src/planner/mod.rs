@@ -46,7 +46,7 @@ pub mod solver;
 pub mod types;
 
 pub use plan::{
-    auto_plan, plan_choice, BudgetEnvelope, Objective, PlanChoice, PlanOptions, PlanStats,
-    ScoredPlan,
+    auto_plan, plan_choice, score_solved, solve_candidates, BudgetEnvelope, Objective,
+    PlanChoice, PlanOptions, PlanStats, ScoredPlan, SolvedCandidates, SolvedPlan,
 };
 pub use types::{DpGroupPlan, ParallelPlan, StagePlan};

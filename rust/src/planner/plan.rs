@@ -15,11 +15,12 @@
 //! benched device subsets (`PlanOptions::bench`). `docs/PLANNER.md`
 //! walks the whole pipeline on the paper's 4×A100 + 2×H800 example.
 
+use std::collections::HashMap;
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::cluster::{ClusterSpec, KindVec};
+use crate::cluster::{ClusterSpec, GpuCatalog, KindVec};
 use crate::profile::ProfileDb;
 
 use super::cost;
@@ -30,7 +31,7 @@ use super::solver::{SolveCtx, SolverStats};
 use super::types::ParallelPlan;
 use crate::util::par::resolve_threads;
 
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct PlanOptions {
     /// Per-TP-dim solver deadline (seconds); over it, LPT fallback. Also
     /// scales the solver's work budget down when under a second
@@ -281,11 +282,89 @@ pub fn auto_plan(
 }
 
 /// Run Algorithm 1 and report the winner under *both* objectives.
+///
+/// Composition of [`solve_candidates`] (the price-independent solver
+/// pipeline) and [`score_solved`] (pricing + winner selection), split so
+/// the elastic coordinator's layout-keyed plan cache can reuse one solve
+/// across spot-price points and still score bit-identically to a fresh
+/// call.
 pub fn plan_choice(
     cluster: &ClusterSpec,
     profile: &ProfileDb,
     opts: &PlanOptions,
 ) -> Result<PlanChoice> {
+    score_solved(&solve_candidates(cluster, profile, opts)?, &profile.catalog)
+}
+
+/// One feasible candidate before any price enters: the mapped/partitioned
+/// plan with its simulated and Eq-1 estimates and token count. Everything
+/// here depends only on the cluster *layout* (kinds, counts, topology) —
+/// never on `price_per_hour` — which is what makes [`SolvedCandidates`]
+/// cacheable across price moves.
+#[derive(Debug, Clone)]
+pub struct SolvedPlan {
+    pub plan: ParallelPlan,
+    /// Closed-form Eq-1 estimate (the simulator's `est_iter_s` arbitrates).
+    pub eq1_iter_s: f64,
+    /// Per-kind devices the Eq-3 stage deliberately left unused.
+    pub benched: KindVec<usize>,
+    /// Global-batch tokens one iteration trains.
+    pub tokens_per_iter: f64,
+}
+
+/// Price-independent output of one [`solve_candidates`] call: every
+/// feasible candidate plus the solver work counters. [`score_solved`]
+/// prices it against a catalog; [`plan_choice`] is the composition.
+#[derive(Debug, Clone)]
+pub struct SolvedCandidates {
+    pub cands: Vec<SolvedPlan>,
+    pub stats: PlanStats,
+    /// Pre-rendered "no feasible plan" diagnostic (cluster + model
+    /// sizes), carried so [`score_solved`] can error usefully without
+    /// the cluster in hand.
+    no_plan_msg: String,
+}
+
+impl SolvedCandidates {
+    /// Clone with every plan's node ids remapped positionally
+    /// (`from[i] → to[i]`). The grouping solver consumes `cluster.nodes`
+    /// in order and treats node ids as opaque labels, so a solve cached
+    /// for an identical ordered `(kind, count)` layout transfers to the
+    /// current fleet by relabeling — estimates, partitions, and topology
+    /// are untouched (the map is injective, so same-node/cross-node
+    /// structure is preserved exactly).
+    pub fn remap_nodes(&self, from: &[usize], to: &[usize]) -> SolvedCandidates {
+        debug_assert_eq!(from.len(), to.len());
+        let mut out = self.clone();
+        if from == to {
+            return out;
+        }
+        let map: HashMap<usize, usize> =
+            from.iter().copied().zip(to.iter().copied()).collect();
+        for sp in out.cands.iter_mut() {
+            for g in sp.plan.groups.iter_mut() {
+                for s in g.stages.iter_mut() {
+                    for gpu in s.gpus.iter_mut() {
+                        if let Some(&n) = map.get(&gpu.node) {
+                            gpu.node = n;
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// The price-independent half of Algorithm 1: solve, map, partition,
+/// validate, and estimate every candidate grouping. The result depends
+/// only on the cluster layout and `opts` — repricing the catalog cannot
+/// change it — so callers may cache it keyed on the layout alone.
+pub fn solve_candidates(
+    cluster: &ClusterSpec,
+    profile: &ProfileDb,
+    opts: &PlanOptions,
+) -> Result<SolvedCandidates> {
     let t0 = Instant::now();
     anyhow::ensure!(
         cluster.catalog == profile.catalog,
@@ -295,16 +374,57 @@ pub fn plan_choice(
     );
     let model = &profile.model;
     let solver_stats = SolverStats::default();
-    let cands = scored_candidates(cluster, profile, opts, &solver_stats)?;
-    let no_plan = || {
-        anyhow!(
-            "no feasible plan: {} GPUs / {:.0} GiB cannot hold {} ({:.0} GiB needed)",
-            cluster.total_gpus(),
-            cluster.total_mem_gib(),
-            model.name,
-            model.min_mem_bytes() / f64::powi(2.0, 30),
-        )
-    };
+    let cands = raw_candidates(cluster, profile, opts, &solver_stats)?;
+    let no_plan_msg = format!(
+        "no feasible plan: {} GPUs / {:.0} GiB cannot hold {} ({:.0} GiB needed)",
+        cluster.total_gpus(),
+        cluster.total_mem_gib(),
+        model.name,
+        model.min_mem_bytes() / f64::powi(2.0, 30),
+    );
+    let planning_s = t0.elapsed().as_secs_f64();
+    Ok(SolvedCandidates {
+        cands,
+        stats: PlanStats {
+            planning_s,
+            exact_solves: solver_stats.exact(),
+            lpt_solves: solver_stats.lpt(),
+            subset_solves: solver_stats.subsets(),
+            cache_hits: 0,
+        },
+        no_plan_msg,
+    })
+}
+
+/// The price-dependent half of Algorithm 1: price every solved candidate
+/// against `catalog`'s current `price_per_hour` and pick the fastest and
+/// cheapest-per-token winners. Cache hits and fresh solves both score
+/// through this exact function, so a served solve is bit-identical to a
+/// fresh `plan_choice` at the same prices.
+pub fn score_solved(solved: &SolvedCandidates, catalog: &GpuCatalog) -> Result<PlanChoice> {
+    let mut cands: Vec<ScoredPlan> = solved
+        .cands
+        .iter()
+        .map(|sp| {
+            let price_per_hour = cost::plan_price_per_hour(catalog, &sp.plan);
+            let cost_per_iter_usd = cost::cost_per_iter_usd(price_per_hour, sp.plan.est_iter_s);
+            let tokens_per_usd = if cost_per_iter_usd > 0.0 {
+                sp.tokens_per_iter / cost_per_iter_usd
+            } else {
+                f64::INFINITY
+            };
+            ScoredPlan {
+                plan: sp.plan.clone(),
+                eq1_iter_s: sp.eq1_iter_s,
+                benched: sp.benched.clone(),
+                price_per_hour,
+                cost_per_iter_usd,
+                tokens_per_usd,
+                tokens_per_iter: sp.tokens_per_iter,
+            }
+        })
+        .collect();
+    let no_plan = || anyhow!("{}", solved.no_plan_msg);
     // Strict comparisons, first-wins ties: with `bench` off this is the
     // seed planner's exact selection rule.
     let fastest = cands
@@ -332,31 +452,22 @@ pub fn plan_choice(
             None => Some(i),
         })
         .ok_or_else(no_plan)?;
-    let planning_s = t0.elapsed().as_secs_f64();
-    let mut cands = cands;
     for c in cands.iter_mut() {
-        c.plan.planning_s = planning_s;
+        c.plan.planning_s = solved.stats.planning_s;
     }
     let fastest = cands[fastest].clone();
     let cheapest = cands[cheapest].clone();
-    let stats = PlanStats {
-        planning_s,
-        exact_solves: solver_stats.exact(),
-        lpt_solves: solver_stats.lpt(),
-        subset_solves: solver_stats.subsets(),
-        cache_hits: 0,
-    };
-    Ok(PlanChoice { fastest, cheapest, candidates: cands, stats })
+    Ok(PlanChoice { fastest, cheapest, candidates: cands, stats: solved.stats })
 }
 
-/// Materialize and score every candidate grouping: map, partition,
-/// validate, simulate (arbiter), and price.
-fn scored_candidates(
+/// Materialize every candidate grouping: map, partition, validate, and
+/// simulate (arbiter). Pricing happens later, in [`score_solved`].
+fn raw_candidates(
     cluster: &ClusterSpec,
     profile: &ProfileDb,
     opts: &PlanOptions,
     solver_stats: &SolverStats,
-) -> Result<Vec<ScoredPlan>> {
+) -> Result<Vec<SolvedPlan>> {
     let model = &profile.model;
     let tp_dims: Vec<usize> = match opts.force_tp {
         Some(tp) => vec![tp],
@@ -426,21 +537,11 @@ fn scored_candidates(
             // every scored candidate.
             plan.est_iter_s = crate::sim::simulate_plan(profile, &plan).iter_s;
             let eq1_iter_s = cost::iter_time_s(profile, &plan);
-            let price_per_hour = cost::plan_price_per_hour(&profile.catalog, &plan);
-            let cost_per_iter_usd = cost::cost_per_iter_usd(price_per_hour, plan.est_iter_s);
             let tokens = cost::plan_tokens_per_iter(model, &plan);
-            let tokens_per_usd = if cost_per_iter_usd > 0.0 {
-                tokens / cost_per_iter_usd
-            } else {
-                f64::INFINITY
-            };
-            out.push(ScoredPlan {
+            out.push(SolvedPlan {
                 plan,
                 eq1_iter_s,
                 benched: grouping.benched,
-                price_per_hour,
-                cost_per_iter_usd,
-                tokens_per_usd,
                 tokens_per_iter: tokens,
             });
         }

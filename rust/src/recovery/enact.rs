@@ -196,8 +196,13 @@ pub struct EnactReport {
     pub exhausted: bool,
     /// Total wall-clock seconds the coordinator spent replanning.
     pub replan_total_s: f64,
-    /// Replans served from the coordinator's fleet-signature plan cache.
+    /// Replans served from the coordinator's layout-keyed solve cache.
     pub plan_cache_hits: usize,
+    /// Fresh solver runs the coordinator paid for (cache misses).
+    pub plan_solves: usize,
+    /// Seed of the enacted trace ([`SpotTrace::seed`]) so any run can be
+    /// reproduced solo via `--trace-seed`.
+    pub trace_seed: u64,
     pub rows: Vec<EnactRow>,
 }
 
@@ -226,9 +231,11 @@ impl EnactReport {
         }
     }
 
-    /// Per-event CSV (commas in reasons become `;`).
+    /// Per-event CSV (commas in reasons become `;`). The first line is a
+    /// `# trace_seed=N` comment naming the scenario.
     pub fn to_csv(&self) -> String {
-        let mut out = String::from(
+        let mut out = format!("# trace_seed={}\n", self.trace_seed);
+        out.push_str(
             "t_hours,decision,forced,gpus,iter_s,migration_s,replan_s,steps,loss,\
              save_local_b,save_cloud_b,load_local_b,load_rdma_b,load_cloud_b,\
              local_frac,peer_frac,cloud_frac,fig10_s,save_wall_s,save_bg_wall_s,load_wall_s,reason\n",
@@ -460,6 +467,8 @@ pub fn enact(
         opts: cfg.replay.opts.clone(),
         gpus_per_node: cfg.replay.gpus_per_node.max(1),
         envelope: cfg.replay.envelope,
+        plan_cache: cfg.replay.plan_cache,
+        shared_plan_cache: cfg.replay.shared_plan_cache.clone(),
     };
     let mut coord =
         ElasticCoordinator::new_with(profile.model.clone(), profile.clone(), cluster, rcfg)?;
@@ -500,7 +509,7 @@ pub fn enact(
         spans = layer_nodes(&plan, &splits[0]);
     }
 
-    for ev in trace.market_events(cfg.replay.price_rel_threshold) {
+    for ev in trace.market_events_iter(cfg.replay.price_rel_threshold) {
         // 0) meter the simulated interval; the envelope may end the run
         // before this event fires (out-of-order event times are a
         // malformed trace and error instead of being swallowed)
@@ -769,6 +778,8 @@ pub fn enact(
     report.usd = meter.usd;
     report.budget_slack_usd = cfg.replay.envelope.max_usd.map(|m| m - meter.usd);
     report.plan_cache_hits = coord.plan_cache_hits;
+    report.plan_solves = coord.plan_solves;
+    report.trace_seed = trace.seed;
 
     report.steps = report.losses.len();
     report.final_train_loss = report.losses.last().copied().unwrap_or(f64::NAN);
@@ -890,7 +901,7 @@ mod tests {
     #[test]
     fn empty_report_csvs_have_headers() {
         let r = EnactReport::default();
-        assert!(r.to_csv().starts_with("t_hours,decision"));
+        assert!(r.to_csv().starts_with("# trace_seed=0\nt_hours,decision"));
         assert_eq!(r.loss_csv(), "step,loss\n");
         assert!(r.matches_decision_log(&ReplayReport::default()));
     }

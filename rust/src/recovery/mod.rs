@@ -19,6 +19,11 @@
 //!   [`crate::planner::BudgetEnvelope`] ("spend at most $X by deadline
 //!   T") and stop with a [`ReplanDecision::BudgetExhausted`] terminal
 //!   row when it runs out.
+//! * [`sweep`](mod@sweep) — Monte-Carlo policy evaluation: N seeded
+//!   traces fanned out over [`crate::util::par::par_map`] with one
+//!   sealed cross-replay [`SharedPlanCache`], bit-identical at any
+//!   thread count; per-policy distributions ([`SweepReport`]) and
+//!   paired A/B deltas over the identical seed set ([`sweep_ab`]).
 //! * [`enact`](mod@enact) — execute the decision log on the **real**
 //!   stack: per-segment [`crate::pipeline::PipelineTrainer`] steps,
 //!   layer-wise [`crate::checkpoint::CheckpointManager`] save/load on
@@ -30,12 +35,18 @@ pub mod enact;
 pub mod migration;
 pub mod orchestrator;
 pub mod replay;
+pub mod sweep;
 pub mod timing;
 
 pub use enact::{baseline_train, enact, EnactConfig, EnactReport, EnactRow};
 pub use migration::{plan_migration, MigrationPlan};
 pub use orchestrator::{
     ElasticCoordinator, ReplanConfig, ReplanDecision, ReplanOutcome, ReplanPolicy,
+    SharedPlanCache,
 };
 pub use replay::{replay, ReplayConfig, ReplayReport, ReplayRow};
+pub use sweep::{
+    scenario_seed, sweep, sweep_ab, AbReport, Dist, PairedDelta, ScenarioRow, SweepConfig,
+    SweepReport,
+};
 pub use timing::{autohet_recovery_s, autohet_recovery_s_scaled, RecoveryScenario};

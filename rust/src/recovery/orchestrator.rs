@@ -17,6 +17,8 @@
 
 use std::collections::{BTreeSet, HashMap};
 use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, RwLock};
 
 use anyhow::Result;
 
@@ -27,7 +29,10 @@ use crate::cluster::{
 use crate::modelcfg::ModelCfg;
 use crate::planner::cost::plan_tokens_per_iter;
 use crate::planner::grouping::plan_eq3_objective;
-use crate::planner::{plan_choice, BudgetEnvelope, Objective, ParallelPlan, PlanChoice, PlanOptions};
+use crate::planner::{
+    plan_choice, score_solved, solve_candidates, BudgetEnvelope, Objective, ParallelPlan,
+    PlanChoice, PlanOptions, SolvedCandidates,
+};
 use crate::profile::ProfileDb;
 
 use super::migration::plan_migration;
@@ -68,6 +73,15 @@ pub struct ReplanConfig {
     /// [`ElasticCoordinator::note_spend`]); unbounded (the default) keeps
     /// every decision bit-identical to the envelope-free coordinator.
     pub envelope: BudgetEnvelope,
+    /// Serve replans from the layout-keyed solve cache (on by default).
+    /// Off forces a fresh solve on every event — the control arm the
+    /// sweep property tests compare decision logs against.
+    pub plan_cache: bool,
+    /// Optional cross-replay [`SharedPlanCache`]: coordinators publish
+    /// their solves into it until it is sealed, and consult it after the
+    /// private cache misses. Sweeps hand the same `Arc` to every
+    /// scenario's coordinator so one solve serves the whole ensemble.
+    pub shared_plan_cache: Option<Arc<SharedPlanCache>>,
 }
 
 impl Default for ReplanConfig {
@@ -78,6 +92,8 @@ impl Default for ReplanConfig {
             opts: PlanOptions::default(),
             gpus_per_node: 8,
             envelope: BudgetEnvelope::UNBOUNDED,
+            plan_cache: true,
+            shared_plan_cache: None,
         }
     }
 }
@@ -164,22 +180,110 @@ pub struct ElasticCoordinator {
     /// preempt+grant could resurrect the dead node as a "surviving"
     /// checkpoint holder in the migration cost model.
     next_node_id: usize,
-    /// Memoized `plan_choice` results keyed on the canonical fleet
-    /// signature (node layout + prices bucketed to $0.001). A market
-    /// event that merely restates known fleet state replans in
-    /// microseconds instead of re-running the solver.
-    plan_cache: HashMap<FleetSig, PlanChoice>,
-    /// Events whose candidate scoring was served from `plan_cache`.
+    /// Memoized price-independent solves keyed on the ordered node
+    /// *layout* ([`LayoutSig`] — prices deliberately excluded). A hit is
+    /// relabeled to the current node ids and re-priced through
+    /// [`score_solved`], the same float path a fresh solve takes, so
+    /// serving it is bit-identical to solving again — and price-only
+    /// market moves, which almost never repeat exactly, still hit.
+    plan_cache: HashMap<LayoutSig, CachedSolve>,
+    /// Replans served from the private or shared solve cache.
     pub plan_cache_hits: usize,
+    /// Fresh solver runs [`ElasticCoordinator::decide`] paid for (cache
+    /// misses); `hits / (hits + solves)` is the replan hit rate.
+    pub plan_solves: usize,
 }
 
-/// Canonical fleet signature: `(node_id, kind, count)` per node, plus
-/// per-kind spot prices bucketed to $0.001.
-type FleetSig = (Vec<(usize, usize, usize)>, Vec<u64>);
+/// Canonical fleet *layout*: ordered `(kind, count)` per node. Node ids
+/// and prices are deliberately excluded — the solver consumes
+/// `cluster.nodes` in order and treats ids as opaque labels (relabeled on
+/// retrieval via [`SolvedCandidates::remap_nodes`]), and prices never
+/// reach the solver (re-applied via [`score_solved`]).
+type LayoutSig = Vec<(usize, usize)>;
+
+/// One cached solve: the price-independent candidates plus the node-id
+/// sequence (in `cluster.nodes` order) of the fleet it was solved on.
+#[derive(Debug, Clone)]
+struct CachedSolve {
+    solved: Arc<SolvedCandidates>,
+    node_ids: Vec<usize>,
+}
 
 /// Cache bound; cleared wholesale when full (fleet states recur in small
 /// cycles, so an eviction policy fancier than "start over" buys nothing).
 const PLAN_CACHE_CAP: usize = 64;
+
+/// A read-mostly solve cache shared across replays (one per sweep).
+///
+/// Lifecycle: during a sweep's sequential warm-up pass every
+/// coordinator's fresh solve is published here; [`SharedPlanCache::seal`]
+/// then freezes it before the parallel phase, so the parallel scenarios
+/// only ever *read* it. Sealing is what makes sweep results bit-identical
+/// at any thread count: the set of servable layouts is fixed by the
+/// (deterministic, sequential) warm-up, never by parallel timing — and a
+/// served solve is itself bit-identical to a fresh one (see
+/// [`SolvedCandidates::remap_nodes`] / [`score_solved`]).
+#[derive(Debug, Default)]
+pub struct SharedPlanCache {
+    map: RwLock<HashMap<LayoutSig, CachedSolve>>,
+    sealed: AtomicBool,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+}
+
+impl SharedPlanCache {
+    pub fn new() -> SharedPlanCache {
+        SharedPlanCache::default()
+    }
+
+    /// Freeze the cache: subsequent inserts are silently dropped, lookups
+    /// keep working. Idempotent.
+    pub fn seal(&self) {
+        self.sealed.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_sealed(&self) -> bool {
+        self.sealed.load(Ordering::SeqCst)
+    }
+
+    /// Lookups served (cumulative, across every coordinator sharing it).
+    pub fn hits(&self) -> usize {
+        self.hits.load(Ordering::SeqCst)
+    }
+
+    /// Lookups that found nothing.
+    pub fn misses(&self) -> usize {
+        self.misses.load(Ordering::SeqCst)
+    }
+
+    /// Distinct layouts currently cached.
+    pub fn len(&self) -> usize {
+        self.map.read().expect("shared plan cache poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn get(&self, sig: &LayoutSig) -> Option<CachedSolve> {
+        let hit = self.map.read().expect("shared plan cache poisoned").get(sig).cloned();
+        match &hit {
+            Some(_) => self.hits.fetch_add(1, Ordering::SeqCst),
+            None => self.misses.fetch_add(1, Ordering::SeqCst),
+        };
+        hit
+    }
+
+    /// Publish a solve unless the cache is sealed (then: no-op). Unlike
+    /// the private per-coordinator cache this one is never cleared — a
+    /// sweep's working set is the warm-up's layouts, bounded by design.
+    fn insert_unsealed(&self, sig: LayoutSig, entry: CachedSolve) {
+        if self.is_sealed() {
+            return;
+        }
+        self.map.write().expect("shared plan cache poisoned").insert(sig, entry);
+    }
+}
 
 /// Migration-worthiness verdict for a voluntary (non-forced) candidate.
 struct Verdict {
@@ -264,23 +368,21 @@ impl ElasticCoordinator {
             next_node_id,
             plan_cache: HashMap::new(),
             plan_cache_hits: 0,
+            plan_solves: 0,
         })
     }
 
-    /// Signature of everything the solver sees: the node layout plus
-    /// per-kind prices bucketed to $0.001. Sub-millidollar price moves
-    /// land in the same bucket — far inside the amortization rule's 2%
-    /// hysteresis, so serving cached candidates cannot flip a decision
-    /// the rule would have made differently.
-    fn fleet_signature(&self) -> FleetSig {
-        let nodes = self
-            .cluster
-            .nodes
-            .iter()
-            .map(|n| (n.node_id, n.kind.index(), n.count))
-            .collect();
-        let prices = self.prices.iter().map(|&p| (p * 1000.0).round() as u64).collect();
-        (nodes, prices)
+    /// The current fleet's layout signature (everything the solver sees)
+    /// plus its node-id sequence (the labels a cached solve is relabeled
+    /// to on retrieval).
+    fn layout_signature(&self) -> (LayoutSig, Vec<usize>) {
+        let mut sig = Vec::with_capacity(self.cluster.nodes.len());
+        let mut ids = Vec::with_capacity(self.cluster.nodes.len());
+        for n in &self.cluster.nodes {
+            sig.push((n.kind.index(), n.count));
+            ids.push(n.node_id);
+        }
+        (sig, ids)
     }
 
     /// Report the run's cumulative billed dollars (metered by the
@@ -320,17 +422,77 @@ impl ElasticCoordinator {
         for &(kind, price) in prices {
             self.prices[kind] = price.max(0.0);
         }
-        let cat = self.repriced_catalog();
-        let mut cluster = self.cluster.clone();
-        cluster.catalog = cat.clone();
-        let mut profile = self.profile.clone();
-        profile.catalog = cat;
-        self.plan = plan_choice(&cluster, &profile, &self.cfg.opts).ok().map(|c| {
+        let (_, choice) = self.scored_choice();
+        self.plan = choice.map(|c| {
             c.pick_within(self.cfg.objective, &self.cfg.envelope, self.spent_usd, self.now_s)
                 .plan
                 .clone()
         });
         Ok(())
+    }
+
+    /// Score the current fleet at current spot prices, through the
+    /// layout-keyed solve cache: a hit is relabeled to the live node ids
+    /// ([`SolvedCandidates::remap_nodes`]) and re-priced via
+    /// [`score_solved`] — the identical float path a fresh solve takes —
+    /// so served and solved candidates are bit-for-bit the same. A miss
+    /// runs the solver (warm-started from the surviving plan) and
+    /// publishes the price-independent result to the private cache and,
+    /// until sealed, the shared one.
+    fn scored_choice(&mut self) -> (GpuCatalog, Option<PlanChoice>) {
+        let cat = self.repriced_catalog();
+        let (sig, node_ids) = self.layout_signature();
+        let cached = if self.cfg.plan_cache {
+            self.plan_cache.get(&sig).cloned().or_else(|| {
+                self.cfg.shared_plan_cache.as_ref().and_then(|sc| sc.get(&sig))
+            })
+        } else {
+            None
+        };
+        let solved: Option<Arc<SolvedCandidates>> = match cached {
+            Some(hit) => {
+                self.plan_cache_hits += 1;
+                Some(if hit.node_ids == node_ids {
+                    hit.solved
+                } else {
+                    Arc::new(hit.solved.remap_nodes(&hit.node_ids, &node_ids))
+                })
+            }
+            None => {
+                // One repriced catalog threaded through both the cluster
+                // and the profile, so the solver's catalog guard sees a
+                // consistent world (the solve itself never reads prices).
+                let mut cluster = self.cluster.clone();
+                cluster.catalog = cat.clone();
+                let mut profile = self.profile.clone();
+                profile.catalog = cat.clone();
+                let mut opts = self.cfg.opts.clone();
+                if let Some(cur) = &self.plan {
+                    if plan_fits(cur, &self.cluster) {
+                        if let Some(w) = plan_eq3_objective(cur, &self.model, &profile) {
+                            opts.warm = Some((cur.tp_dim, w));
+                        }
+                    }
+                }
+                self.plan_solves += 1;
+                let s = solve_candidates(&cluster, &profile, &opts).ok().map(Arc::new);
+                if self.cfg.plan_cache {
+                    if let Some(s) = &s {
+                        let entry = CachedSolve { solved: s.clone(), node_ids };
+                        if self.plan_cache.len() >= PLAN_CACHE_CAP {
+                            self.plan_cache.clear();
+                        }
+                        if let Some(sc) = &self.cfg.shared_plan_cache {
+                            sc.insert_unsealed(sig.clone(), entry.clone());
+                        }
+                        self.plan_cache.insert(sig, entry);
+                    }
+                }
+                s
+            }
+        };
+        let choice = solved.and_then(|s| score_solved(&s, &cat).ok());
+        (cat, choice)
     }
 
     /// Handle one batched market step: update prices, apply availability
@@ -561,42 +723,15 @@ impl ElasticCoordinator {
         let old_tp = old_plan.as_ref().map(|p| p.tp_dim).unwrap_or(1);
         let old_dp = old_plan.as_ref().map(|p| p.dp_degree()).unwrap_or(0);
 
-        // One repriced catalog threaded through both the cluster and the
-        // profile, so plan_choice's catalog guard sees a consistent world.
-        let cat = self.repriced_catalog();
-        let mut cluster = self.cluster.clone();
-        cluster.catalog = cat.clone();
-        let mut profile = self.profile.clone();
-        profile.catalog = cat.clone();
-        // Incremental replan: serve the scored candidates from the
-        // fleet-signature cache when this exact fleet was solved before;
-        // otherwise warm-start the solve with the surviving plan's Eq-3
-        // objective (a valid prune floor whenever its entities are all
-        // still alive) and remember the result. The envelope-aware pick
-        // below always runs fresh — spend and wall-clock move even when
-        // the fleet doesn't.
-        let sig = self.fleet_signature();
-        let choice = if let Some(hit) = self.plan_cache.get(&sig).cloned() {
-            self.plan_cache_hits += 1;
-            Some(hit)
-        } else {
-            let mut opts = self.cfg.opts.clone();
-            if let Some(cur) = &old_plan {
-                if plan_fits(cur, &self.cluster) {
-                    if let Some(w) = plan_eq3_objective(cur, &self.model, &profile) {
-                        opts.warm = Some((cur.tp_dim, w));
-                    }
-                }
-            }
-            let c = plan_choice(&cluster, &profile, &opts).ok();
-            if let Some(c) = &c {
-                if self.plan_cache.len() >= PLAN_CACHE_CAP {
-                    self.plan_cache.clear();
-                }
-                self.plan_cache.insert(sig, c.clone());
-            }
-            c
-        };
+        // Incremental replan: serve the price-independent solve from the
+        // layout cache when this fleet shape was solved before (relabel +
+        // re-price — bit-identical to solving fresh); otherwise
+        // warm-start the solve with the surviving plan's Eq-3 objective
+        // (a valid prune floor whenever its entities are all still alive)
+        // and remember the result. The envelope-aware pick below always
+        // runs fresh — spend and wall-clock move even when the fleet
+        // doesn't.
+        let (cat, choice) = self.scored_choice();
         let cand = choice.map(|c| {
             c.pick_within(self.cfg.objective, &self.cfg.envelope, self.spent_usd, self.now_s)
                 .clone()
@@ -968,6 +1103,161 @@ mod tests {
         // a fleet change invalidates the signature: miss again
         c.preempt(KindId::H800, 2, 1800.0).unwrap();
         assert_eq!(c.plan_cache_hits, 1);
+    }
+
+    #[test]
+    fn price_only_moves_are_served_from_cache_identically() {
+        // the layout key deliberately excludes prices: a price-only
+        // market move hits the cache, and the re-scored hit must decide
+        // exactly what a fresh solve would have (same plan topology,
+        // same estimates, same reason string)
+        let (model, profile, cluster) = parts();
+        let mk = |plan_cache| {
+            let cfg = ReplanConfig {
+                objective: Objective::Cost,
+                plan_cache,
+                ..Default::default()
+            };
+            ElasticCoordinator::new_with(
+                model.clone(),
+                profile.clone(),
+                cluster.clone(),
+                cfg,
+            )
+            .unwrap()
+        };
+        let mut cached = mk(true);
+        let mut fresh = mk(false);
+        let h800 = profile.catalog.get(KindId::H800).price_per_hour;
+        for (i, &mult) in [1.0f64, 1.4, 0.7, 1.4].iter().enumerate() {
+            let ev = MarketEvent {
+                at_s: 600.0 * (i as f64 + 1.0),
+                deltas: vec![],
+                prices: vec![(KindId::H800, h800 * mult)],
+                max_price_move: (mult - 1.0f64).abs(),
+            };
+            let a = cached.handle_market_event(&ev).unwrap();
+            let b = fresh.handle_market_event(&ev).unwrap();
+            assert_eq!(a.decision, b.decision, "event {i}");
+            assert_eq!(a.reason, b.reason, "event {i}");
+            assert_eq!(a.price_per_hour, b.price_per_hour, "event {i}");
+            match (&a.plan, &b.plan) {
+                (Some(pa), Some(pb)) => {
+                    assert!(same_topology(pa, pb), "event {i}: cache changed the plan");
+                    assert_eq!(pa.est_iter_s, pb.est_iter_s, "event {i}");
+                }
+                (pa, pb) => assert_eq!(pa.is_some(), pb.is_some(), "event {i}"),
+            }
+        }
+        // the layout never changed: one miss, then every replan hit —
+        // even though the prices moved on every event
+        assert_eq!(cached.plan_solves, 1);
+        assert_eq!(cached.plan_cache_hits, 3);
+        assert_eq!(fresh.plan_solves, 4);
+        assert_eq!(fresh.plan_cache_hits, 0);
+    }
+
+    #[test]
+    fn shared_cache_serves_other_coordinators_and_seals() {
+        let (model, profile, cluster) = parts();
+        let shared = Arc::new(SharedPlanCache::new());
+        let mk = || {
+            let cfg = ReplanConfig {
+                shared_plan_cache: Some(shared.clone()),
+                ..Default::default()
+            };
+            ElasticCoordinator::new_with(
+                model.clone(),
+                profile.clone(),
+                cluster.clone(),
+                cfg,
+            )
+            .unwrap()
+        };
+        let ev =
+            |at_s| MarketEvent { at_s, deltas: vec![], prices: vec![], max_price_move: 0.0 };
+        let mut warm = mk();
+        warm.handle_market_event(&ev(600.0)).unwrap();
+        assert_eq!(warm.plan_solves, 1);
+        assert_eq!(shared.len(), 1, "warm coordinator did not publish its solve");
+        shared.seal();
+        assert!(shared.is_sealed());
+        // a second coordinator with a cold private cache is served from
+        // the shared cache on its first event
+        let mut reader = mk();
+        let out = reader.handle_market_event(&ev(600.0)).unwrap();
+        assert!(out.plan.is_some());
+        assert_eq!(reader.plan_cache_hits, 1);
+        assert_eq!(reader.plan_solves, 0);
+        // sealed: a new layout's solve is no longer published
+        reader.preempt(KindId::H800, 2, 1200.0).unwrap();
+        assert_eq!(reader.plan_solves, 1);
+        assert_eq!(shared.len(), 1, "sealed cache accepted an insert");
+        assert!(shared.hits() >= 1);
+        // sealing is idempotent
+        shared.seal();
+        assert!(shared.is_sealed());
+    }
+
+    #[test]
+    fn relabeled_layout_is_served_and_matches_a_fresh_solve() {
+        // node1 (4xH800) dies, then 4xH800 are granted back as a fresh
+        // node: the layout signature matches the opening fleet but the
+        // node ids differ — the cached solve must be relabeled to the
+        // live ids and decide exactly what a cache-free solve would
+        let (model, profile, cluster) = parts();
+        let mk = |plan_cache| {
+            let cfg = ReplanConfig {
+                policy: ReplanPolicy::Greedy,
+                plan_cache,
+                ..Default::default()
+            };
+            ElasticCoordinator::new_with(
+                model.clone(),
+                profile.clone(),
+                cluster.clone(),
+                cfg,
+            )
+            .unwrap()
+        };
+        let run = |c: &mut ElasticCoordinator| {
+            // seed the opening layout, kill the H800 node, grant it back
+            c.handle_market_event(&MarketEvent {
+                at_s: 600.0,
+                deltas: vec![],
+                prices: vec![],
+                max_price_move: 0.0,
+            })
+            .unwrap();
+            c.preempt(KindId::H800, 4, 1200.0).unwrap();
+            c.grant(KindId::H800, 4, 1800.0).unwrap()
+        };
+        let mut cached = mk(true);
+        let mut fresh = mk(false);
+        let a = run(&mut cached);
+        let b = run(&mut fresh);
+        assert_eq!(
+            cached.plan_cache_hits, 1,
+            "the regrown fleet should hit the opening layout's entry"
+        );
+        assert_eq!(fresh.plan_cache_hits, 0);
+        assert_eq!(a.decision, b.decision);
+        assert_eq!(a.reason, b.reason);
+        let (pa, pb) = (a.plan.unwrap(), b.plan.unwrap());
+        assert!(same_topology(&pa, &pb), "relabeled hit diverged from the fresh solve");
+        assert_eq!(pa.est_iter_s, pb.est_iter_s);
+        // the relabeled plan references only live nodes (the dead node's
+        // id never leaks out of the cache)
+        pa.validate(cached.model.n_layers).unwrap();
+        assert!(plan_fits(&pa, &cached.cluster), "plan references dead nodes");
+        assert!(
+            pa.groups
+                .iter()
+                .flat_map(|g| &g.stages)
+                .flat_map(|s| &s.gpus)
+                .all(|g| g.node != 1),
+            "cached solve still references the dead node id"
+        );
     }
 
     #[test]

@@ -28,6 +28,7 @@
 //! price track moves every step; events are emitted per
 //! `price_rel_threshold`).
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
@@ -37,7 +38,9 @@ use crate::planner::cost::plan_tokens_per_iter;
 use crate::planner::{BudgetEnvelope, Objective, PlanOptions};
 use crate::profile::ProfileDb;
 
-use super::orchestrator::{per_usd, ElasticCoordinator, ReplanConfig, ReplanDecision, ReplanPolicy};
+use super::orchestrator::{
+    per_usd, ElasticCoordinator, ReplanConfig, ReplanDecision, ReplanPolicy, SharedPlanCache,
+};
 
 /// How a replay run is driven.
 #[derive(Debug, Clone)]
@@ -55,6 +58,13 @@ pub struct ReplayConfig {
     /// coordinator ([`super::orchestrator::ReplanConfig::envelope`]);
     /// the default unbounded envelope is inert.
     pub envelope: BudgetEnvelope,
+    /// Serve replans from the coordinator's layout-keyed solve cache
+    /// (see [`ReplanConfig::plan_cache`]); on by default.
+    pub plan_cache: bool,
+    /// Cross-replay solve cache a sweep shares across its scenarios
+    /// ([`super::sweep::sweep`]); `None` (the default) keeps each replay
+    /// self-contained.
+    pub shared_plan_cache: Option<Arc<SharedPlanCache>>,
 }
 
 impl Default for ReplayConfig {
@@ -66,6 +76,8 @@ impl Default for ReplayConfig {
             gpus_per_node: 8,
             price_rel_threshold: 0.05,
             envelope: BudgetEnvelope::UNBOUNDED,
+            plan_cache: true,
+            shared_plan_cache: None,
         }
     }
 }
@@ -97,6 +109,9 @@ pub struct ReplayRow {
 /// Aggregate accounting of one replay run.
 #[derive(Debug, Clone, Default)]
 pub struct ReplayReport {
+    /// Seed of the replayed trace ([`SpotTrace::seed`]): names the
+    /// scenario so a sweep outlier re-runs solo via `--trace-seed`.
+    pub trace_seed: u64,
     /// Horizon covered, seconds.
     pub horizon_s: f64,
     /// Tokens trained. Under a bounded envelope the meter halts at the
@@ -132,9 +147,11 @@ pub struct ReplayReport {
     pub replan_total_s: f64,
     /// Slowest single replan, seconds.
     pub replan_max_s: f64,
-    /// Events whose candidate scoring was served from the coordinator's
-    /// fleet-signature plan cache.
+    /// Replans served from the coordinator's layout-keyed solve cache
+    /// (private or shared).
     pub plan_cache_hits: usize,
+    /// Fresh solver runs the coordinator paid for (cache misses).
+    pub plan_solves: usize,
     pub rows: Vec<ReplayRow>,
 }
 
@@ -144,9 +161,11 @@ impl ReplayReport {
         per_usd(self.tokens, self.usd)
     }
 
-    /// Per-event CSV (commas in reasons become `;`).
+    /// Per-event CSV (commas in reasons become `;`). The first line is a
+    /// `# trace_seed=N` comment naming the scenario.
     pub fn to_csv(&self) -> String {
-        let mut out = String::from(
+        let mut out = format!("# trace_seed={}\n", self.trace_seed);
+        out.push_str(
             "t_hours,decision,forced,gpus,iter_s,fleet_usd_per_h,migration_s,replan_s,tokens,usd,reason\n",
         );
         for r in &self.rows {
@@ -365,6 +384,8 @@ pub fn replay(profile: &ProfileDb, trace: &SpotTrace, cfg: &ReplayConfig) -> Res
         opts: cfg.opts.clone(),
         gpus_per_node: node_size,
         envelope: cfg.envelope,
+        plan_cache: cfg.plan_cache,
+        shared_plan_cache: cfg.shared_plan_cache.clone(),
     };
     let mut coord =
         ElasticCoordinator::new_with(profile.model.clone(), profile.clone(), cluster, rcfg)?;
@@ -379,7 +400,7 @@ pub fn replay(profile: &ProfileDb, trace: &SpotTrace, cfg: &ReplayConfig) -> Res
     let mut stopped: Option<String> = None;
     let mut replan_total_s = 0.0f64;
     let mut replan_max_s = 0.0f64;
-    for ev in trace.market_events(cfg.price_rel_threshold) {
+    for ev in trace.market_events_iter(cfg.price_rel_threshold) {
         let active = active_of(&coord);
         stopped = metered_advance(
             &cfg.envelope,
@@ -449,6 +470,7 @@ pub fn replay(profile: &ProfileDb, trace: &SpotTrace, cfg: &ReplayConfig) -> Res
     }
 
     Ok(ReplayReport {
+        trace_seed: trace.seed,
         horizon_s,
         tokens: meter.tokens,
         usd: meter.usd,
@@ -466,6 +488,7 @@ pub fn replay(profile: &ProfileDb, trace: &SpotTrace, cfg: &ReplayConfig) -> Res
         replan_total_s,
         replan_max_s,
         plan_cache_hits: coord.plan_cache_hits,
+        plan_solves: coord.plan_solves,
         rows,
     })
 }
@@ -571,6 +594,7 @@ mod tests {
             avail: vec![vec![6], vec![4], vec![6]], // guaranteed delta events
             prices: vec![vec![1.2]; 3],
             cfg: tc,
+            seed: 0,
         };
         let err = replay(&p, &trace, &ReplayConfig::default()).unwrap_err().to_string();
         assert!(err.contains("precedes"), "{err}");
@@ -591,12 +615,15 @@ mod tests {
         let p = profile();
         let trace = short_trace(7);
         let report = replay(&p, &trace, &ReplayConfig::default()).unwrap();
+        assert_eq!(report.trace_seed, 7, "report names its scenario");
         let csv = report.to_csv();
         let lines: Vec<&str> = csv.lines().collect();
-        assert!(lines[0].starts_with("t_hours,decision,forced"));
-        assert_eq!(lines.len(), report.rows.len() + 1);
+        // the seed comment names the scenario for solo re-runs
+        assert_eq!(lines[0], "# trace_seed=7");
+        assert!(lines[1].starts_with("t_hours,decision,forced"));
+        assert_eq!(lines.len(), report.rows.len() + 2);
         // no unescaped commas leak from reasons: fixed column count
-        for l in &lines[1..] {
+        for l in &lines[2..] {
             assert_eq!(l.matches(',').count(), 10, "{l}");
         }
     }

@@ -1,0 +1,550 @@
+//! Monte-Carlo replay sweeps: evaluate a replan policy over *many*
+//! seeded market scenarios at once, in parallel, with one shared
+//! cross-replay plan cache.
+//!
+//! A single [`super::replay`](fn@super::replay::replay) answers "what
+//! would this policy have bought on *this* trace"; a sweep answers the
+//! question experiments actually ask — "what does this policy buy *in
+//! distribution*, over N draws of the market". Each scenario's trace
+//! seed is derived deterministically from a base seed and the scenario
+//! index ([`scenario_seed`]), the trace-gen → replay pipeline fans out
+//! over [`crate::util::par::par_map`], and the aggregate report is
+//! **bit-identical at any thread count**:
+//!
+//! * `par_map` returns results in input order, so aggregation sees the
+//!   same row sequence regardless of which worker finished first;
+//! * each scenario's replay is independently deterministic (one
+//!   `ProfileDb` shared read-only, per-scenario coordinator state);
+//! * the shared [`SharedPlanCache`] is populated by a **sequential
+//!   warm-up pass** and then [sealed](SharedPlanCache::seal) before the
+//!   parallel phase, so the set of cache hits — and, because a hit
+//!   re-scores the cached price-independent solve through the exact
+//!   same float path as a fresh solve, every downstream decision — does
+//!   not depend on scenario interleaving.
+//!
+//! The one determinism caveat is inherited from the planner: a
+//! wall-clock solver deadline (`PlanOptions::solver_deadline_s`) makes
+//! individual solves time-dependent, so sweeps that must be
+//! bit-reproducible should leave it unset (the default).
+//!
+//! [`sweep_ab`] is the paired-comparison mode: the *identical* seed set
+//! is replayed under two configs (e.g. amortized vs greedy hysteresis)
+//! and per-seed deltas come back alongside both aggregate reports —
+//! paired differences cancel scenario-to-scenario market variance, so
+//! far fewer scenarios separate two policies than two independent
+//! sweeps would need.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::cluster::{SpotTrace, TraceConfig};
+use crate::profile::ProfileDb;
+use crate::util::par;
+
+use super::orchestrator::SharedPlanCache;
+use super::replay::{replay, ReplayConfig, ReplayReport};
+
+/// The trace seed of scenario `index` under `base_seed`: a
+/// splitmix64-style bit mix, so consecutive indices land on
+/// statistically unrelated market draws while staying a pure function
+/// of `(base_seed, index)` — scenario 17 of seed 42 is the same trace
+/// on every machine, at every thread count, forever. An outlier row
+/// can therefore be re-run solo via `replay --trace-seed <seed>`.
+pub fn scenario_seed(base_seed: u64, index: usize) -> u64 {
+    let mut z = base_seed
+        .wrapping_add(0x9e37_79b9_7f4a_7c15)
+        .wrapping_add((index as u64).wrapping_mul(0xbf58_476d_1ce4_e5b9));
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// How a sweep is driven.
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    /// Number of seeded scenarios to replay.
+    pub scenarios: usize,
+    /// Base seed the per-scenario trace seeds derive from
+    /// ([`scenario_seed`]).
+    pub base_seed: u64,
+    /// Worker threads for the parallel phase; `None`/`Some(0)` = all
+    /// cores ([`par::resolve_threads`]).
+    pub threads: Option<usize>,
+    /// Scenarios replayed *sequentially* to populate the shared plan
+    /// cache before it is sealed. Small values (1–2) capture most of
+    /// the hit rate — layouts repeat heavily across scenarios — while
+    /// keeping the sequential fraction (Amdahl) negligible. Ignored
+    /// when `share_cache` is off or the cache is already sealed.
+    pub warmup: usize,
+    /// Share one sealed [`SharedPlanCache`] across all scenarios. On by
+    /// default; turning it off makes every scenario solve from scratch
+    /// (the control arm `tests/property_sweep.rs` pins against).
+    pub share_cache: bool,
+    /// Replay config applied to every scenario. Its
+    /// `shared_plan_cache` field is overwritten by the sweep.
+    pub replay: ReplayConfig,
+    /// Market-dynamics config each scenario's trace is drawn from.
+    pub trace: TraceConfig,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        SweepConfig {
+            scenarios: 32,
+            base_seed: 42,
+            threads: None,
+            warmup: 1,
+            share_cache: true,
+            replay: ReplayConfig::default(),
+            trace: TraceConfig::default(),
+        }
+    }
+}
+
+/// Summary statistics of one metric over the sweep's scenarios.
+///
+/// `p50`/`p95` are order statistics of the raw per-scenario values
+/// (sorted ascending, index `ceil(p/100·n) − 1`), so they are exact
+/// sample values, not interpolations — and therefore bit-stable.
+/// `worst` is the bad tail for the metric's polarity: the *minimum*
+/// for higher-is-better metrics (tokens/$), the *maximum* for
+/// lower-is-better ones (downtime, switches, spend).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Dist {
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub worst: f64,
+}
+
+impl Dist {
+    /// Distribution of `values`; `higher_is_better` picks which tail is
+    /// `worst`. Empty input yields all zeros.
+    pub fn of(values: &[f64], higher_is_better: bool) -> Dist {
+        if values.is_empty() {
+            return Dist::default();
+        }
+        let mut sorted = values.to_vec();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        let n = sorted.len();
+        let pct = |p: f64| {
+            let idx = ((p / 100.0 * n as f64).ceil() as usize).clamp(1, n) - 1;
+            sorted[idx]
+        };
+        Dist {
+            mean: sorted.iter().sum::<f64>() / n as f64,
+            p50: pct(50.0),
+            p95: pct(95.0),
+            worst: if higher_is_better { sorted[0] } else { sorted[n - 1] },
+        }
+    }
+}
+
+/// One scenario's outcome — the deterministic subset of its
+/// [`ReplayReport`] (wall-clock replan latencies are deliberately
+/// dropped: they vary run-to-run and would break the sweep's
+/// bit-identity contract).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioRow {
+    /// Scenario index within the sweep (0-based).
+    pub index: usize,
+    /// The trace seed replayed ([`scenario_seed`]).
+    pub seed: u64,
+    pub tokens: f64,
+    pub usd: f64,
+    pub tokens_per_usd: f64,
+    pub train_s: f64,
+    pub downtime_s: f64,
+    pub paused_s: f64,
+    pub switches: usize,
+    pub holds: usize,
+    pub unchanged: usize,
+    pub events: usize,
+    /// True when the budget envelope (not the horizon) ended the run.
+    pub exhausted: bool,
+    pub plan_cache_hits: usize,
+    pub plan_solves: usize,
+}
+
+impl ScenarioRow {
+    fn from_report(index: usize, r: &ReplayReport) -> ScenarioRow {
+        ScenarioRow {
+            index,
+            seed: r.trace_seed,
+            tokens: r.tokens,
+            usd: r.usd,
+            tokens_per_usd: r.tokens_per_usd(),
+            train_s: r.train_s,
+            downtime_s: r.downtime_s,
+            paused_s: r.paused_s,
+            switches: r.switches,
+            holds: r.holds,
+            unchanged: r.unchanged,
+            events: r.events,
+            exhausted: r.exhausted,
+            plan_cache_hits: r.plan_cache_hits,
+            plan_solves: r.plan_solves,
+        }
+    }
+}
+
+/// Aggregate of one policy over the whole sweep.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepReport {
+    pub scenarios: usize,
+    pub base_seed: u64,
+    /// Tokens bought per dollar (higher is better; `worst` = min).
+    pub tokens_per_usd: Dist,
+    /// Seconds lost to migrations (lower is better; `worst` = max).
+    pub downtime_s: Dist,
+    /// Migrations taken (lower is better; `worst` = max).
+    pub switches: Dist,
+    /// Dollars spent (lower is better; `worst` = max).
+    pub usd: Dist,
+    /// Replans served from the plan cache, summed over scenarios.
+    pub plan_cache_hits: usize,
+    /// Fresh solver runs paid for, summed over scenarios.
+    pub plan_solves: usize,
+    pub rows: Vec<ScenarioRow>,
+}
+
+impl SweepReport {
+    /// Fraction of replans served from the cache (0 when nothing ran).
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.plan_cache_hits + self.plan_solves;
+        if total == 0 {
+            0.0
+        } else {
+            self.plan_cache_hits as f64 / total as f64
+        }
+    }
+
+    /// Per-scenario CSV. The first line is a `# base_seed=N` comment so
+    /// the whole sweep can be reproduced from the file alone.
+    pub fn to_csv(&self) -> String {
+        let mut out =
+            format!("# base_seed={} scenarios={}\n", self.base_seed, self.scenarios);
+        out.push_str(
+            "scenario,seed,tokens,usd,tokens_per_usd,train_s,downtime_s,paused_s,\
+             switches,holds,unchanged,events,exhausted,plan_cache_hits,plan_solves\n",
+        );
+        for r in &self.rows {
+            out.push_str(&format!(
+                "{},{},{:.0},{:.2},{:.1},{:.0},{:.0},{:.0},{},{},{},{},{},{},{}\n",
+                r.index,
+                r.seed,
+                r.tokens,
+                r.usd,
+                r.tokens_per_usd,
+                r.train_s,
+                r.downtime_s,
+                r.paused_s,
+                r.switches,
+                r.holds,
+                r.unchanged,
+                r.events,
+                r.exhausted,
+                r.plan_cache_hits,
+                r.plan_solves,
+            ));
+        }
+        out
+    }
+}
+
+fn aggregate(cfg: &SweepConfig, rows: Vec<ScenarioRow>) -> SweepReport {
+    let col = |f: &dyn Fn(&ScenarioRow) -> f64| rows.iter().map(f).collect::<Vec<f64>>();
+    SweepReport {
+        scenarios: rows.len(),
+        base_seed: cfg.base_seed,
+        tokens_per_usd: Dist::of(&col(&|r| r.tokens_per_usd), true),
+        downtime_s: Dist::of(&col(&|r| r.downtime_s), false),
+        switches: Dist::of(&col(&|r| r.switches as f64), false),
+        usd: Dist::of(&col(&|r| r.usd), false),
+        plan_cache_hits: rows.iter().map(|r| r.plan_cache_hits).sum(),
+        plan_solves: rows.iter().map(|r| r.plan_solves).sum(),
+        rows,
+    }
+}
+
+/// Replay scenario `index` of the sweep under `rcfg`.
+fn run_scenario(
+    profile: &ProfileDb,
+    cfg: &SweepConfig,
+    rcfg: &ReplayConfig,
+    index: usize,
+) -> Result<ScenarioRow> {
+    let seed = scenario_seed(cfg.base_seed, index);
+    let trace = SpotTrace::generate(cfg.trace.clone(), seed);
+    let report = replay(profile, &trace, rcfg)?;
+    Ok(ScenarioRow::from_report(index, &report))
+}
+
+/// Run one sweep against an externally owned shared cache (or none).
+/// The warm-up pass runs sequentially only while the cache is still
+/// unsealed; once sealed — by this sweep or a previous one — every
+/// scenario goes straight to the parallel phase.
+fn sweep_with_cache(
+    profile: &ProfileDb,
+    cfg: &SweepConfig,
+    shared: Option<&Arc<SharedPlanCache>>,
+) -> Result<SweepReport> {
+    let threads = par::resolve_threads(cfg.threads);
+    let rcfg = ReplayConfig {
+        shared_plan_cache: shared.cloned(),
+        ..cfg.replay.clone()
+    };
+    let warm = match shared {
+        Some(sc) if !sc.is_sealed() => cfg.warmup.min(cfg.scenarios),
+        _ => 0,
+    };
+    let mut rows = Vec::with_capacity(cfg.scenarios);
+    for i in 0..warm {
+        rows.push(run_scenario(profile, cfg, &rcfg, i)?);
+    }
+    if let Some(sc) = shared {
+        // read-only from here on: hits can no longer depend on which
+        // scenario ran first
+        sc.seal();
+    }
+    let rest: Vec<usize> = (warm..cfg.scenarios).collect();
+    let done = par::par_map(threads, rest, |i| run_scenario(profile, cfg, &rcfg, i));
+    for r in done {
+        rows.push(r?);
+    }
+    Ok(aggregate(cfg, rows))
+}
+
+/// Evaluate `cfg.replay` over `cfg.scenarios` seeded market draws.
+///
+/// Deterministic contract: for a fixed `(profile, cfg)` — modulo
+/// `cfg.threads` and `cfg.warmup` being allowed to vary — the returned
+/// report is bit-identical. (`warmup` may vary because warm-up only
+/// decides *when* cache entries appear, never what a hit returns; the
+/// property tests pin threads 1/2/8 and cache on/off equivalence.)
+pub fn sweep(profile: &ProfileDb, cfg: &SweepConfig) -> Result<SweepReport> {
+    let shared = cfg.share_cache.then(SharedPlanCache::new).map(Arc::new);
+    sweep_with_cache(profile, cfg, shared.as_ref())
+}
+
+/// Per-seed paired difference, policy A minus policy B. Positive
+/// `d_tokens_per_usd` means A bought more tokens per dollar *on that
+/// exact market draw*.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PairedDelta {
+    pub index: usize,
+    pub seed: u64,
+    pub d_tokens: f64,
+    pub d_usd: f64,
+    pub d_tokens_per_usd: f64,
+    pub d_downtime_s: f64,
+    /// Switches A took minus switches B took (signed).
+    pub d_switches: i64,
+}
+
+/// Paired A/B sweep: both policies replayed over the identical seed set.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AbReport {
+    pub a: SweepReport,
+    pub b: SweepReport,
+    /// One delta per scenario, in scenario order (A − B).
+    pub deltas: Vec<PairedDelta>,
+}
+
+impl AbReport {
+    /// Mean per-seed tokens/$ advantage of A over B.
+    pub fn mean_d_tokens_per_usd(&self) -> f64 {
+        if self.deltas.is_empty() {
+            return 0.0;
+        }
+        self.deltas.iter().map(|d| d.d_tokens_per_usd).sum::<f64>() / self.deltas.len() as f64
+    }
+
+    /// Scenarios where A strictly beat B on tokens/$.
+    pub fn wins_a(&self) -> usize {
+        self.deltas.iter().filter(|d| d.d_tokens_per_usd > 0.0).count()
+    }
+
+    /// Per-seed delta CSV (A − B), `# base_seed=N` comment first.
+    pub fn to_csv(&self) -> String {
+        let mut out = format!(
+            "# base_seed={} scenarios={} (deltas are A minus B)\n",
+            self.a.base_seed, self.a.scenarios
+        );
+        out.push_str(
+            "scenario,seed,d_tokens,d_usd,d_tokens_per_usd,d_downtime_s,d_switches\n",
+        );
+        for d in &self.deltas {
+            out.push_str(&format!(
+                "{},{},{:.0},{:.2},{:.1},{:.0},{}\n",
+                d.index, d.seed, d.d_tokens, d.d_usd, d.d_tokens_per_usd, d.d_downtime_s,
+                d.d_switches,
+            ));
+        }
+        out
+    }
+}
+
+/// Paired A/B evaluation: replay the identical seed set under
+/// `cfg.replay` (policy A) and `replay_b` (policy B) and report
+/// per-seed deltas alongside both aggregates.
+///
+/// When the two configs share the same `PlanOptions` (and
+/// `cfg.share_cache` is on), one plan cache serves *both* arms: A's
+/// warm-up seals it, B runs fully sealed against the same entries — a
+/// cached solve is price- and policy-independent, so sharing is safe
+/// and roughly doubles the hit rate. Configs with different solver
+/// options each get their own cache (a solve under different
+/// `PlanOptions` is a different computation).
+pub fn sweep_ab(
+    profile: &ProfileDb,
+    cfg: &SweepConfig,
+    replay_b: &ReplayConfig,
+) -> Result<AbReport> {
+    let cfg_b = SweepConfig { replay: replay_b.clone(), ..cfg.clone() };
+    let (a, b) = if cfg.share_cache && cfg.replay.opts == replay_b.opts {
+        let shared = Arc::new(SharedPlanCache::new());
+        let a = sweep_with_cache(profile, cfg, Some(&shared))?;
+        let b = sweep_with_cache(profile, &cfg_b, Some(&shared))?;
+        (a, b)
+    } else {
+        (sweep(profile, cfg)?, sweep(profile, &cfg_b)?)
+    };
+    let deltas = a
+        .rows
+        .iter()
+        .zip(&b.rows)
+        .map(|(ra, rb)| PairedDelta {
+            index: ra.index,
+            seed: ra.seed,
+            d_tokens: ra.tokens - rb.tokens,
+            d_usd: ra.usd - rb.usd,
+            d_tokens_per_usd: ra.tokens_per_usd - rb.tokens_per_usd,
+            d_downtime_s: ra.downtime_s - rb.downtime_s,
+            d_switches: ra.switches as i64 - rb.switches as i64,
+        })
+        .collect();
+    Ok(AbReport { a, b, deltas })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{GpuCatalog, KindId};
+    use crate::modelcfg::ModelCfg;
+    use crate::recovery::orchestrator::ReplanPolicy;
+
+    fn profile() -> ProfileDb {
+        ProfileDb::build(&ModelCfg::bert_large(), &GpuCatalog::builtin(), &[1, 2, 4, 8], 1)
+    }
+
+    fn small_cfg(scenarios: usize) -> SweepConfig {
+        SweepConfig {
+            scenarios,
+            base_seed: 11,
+            threads: Some(2),
+            trace: TraceConfig {
+                horizon_s: 4.0 * 3600.0,
+                step_s: 1800.0,
+                capacity: vec![(KindId::A100, 6), (KindId::H800, 4)],
+                base_price_per_hour: vec![(KindId::A100, 1.2), (KindId::H800, 2.5)],
+                ..Default::default()
+            },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn scenario_seed_is_stable_and_spread() {
+        // pure function of (base, index)...
+        assert_eq!(scenario_seed(42, 0), scenario_seed(42, 0));
+        // ...distinct across indices and bases
+        let seeds: Vec<u64> = (0..64).map(|i| scenario_seed(42, i)).collect();
+        let mut uniq = seeds.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), seeds.len(), "seed collision");
+        assert_ne!(scenario_seed(42, 3), scenario_seed(43, 3));
+    }
+
+    #[test]
+    fn dist_percentiles_are_order_statistics() {
+        let vals: Vec<f64> = (1..=100).map(|x| x as f64).collect();
+        let d = Dist::of(&vals, false);
+        assert_eq!(d.p50, 50.0);
+        assert_eq!(d.p95, 95.0);
+        assert_eq!(d.worst, 100.0);
+        assert!((d.mean - 50.5).abs() < 1e-12);
+        let d = Dist::of(&vals, true);
+        assert_eq!(d.worst, 1.0, "higher-is-better worst is the min");
+        assert_eq!(Dist::of(&[], true), Dist::default());
+        // single element: every statistic is that element
+        let d = Dist::of(&[7.0], false);
+        assert_eq!((d.mean, d.p50, d.p95, d.worst), (7.0, 7.0, 7.0, 7.0));
+    }
+
+    #[test]
+    fn sweep_rows_match_solo_replays() {
+        // the fan-out changes nothing: each sweep row equals a solo
+        // replay of that scenario's seed
+        let p = profile();
+        let cfg = small_cfg(3);
+        let report = sweep(&p, &cfg).unwrap();
+        assert_eq!(report.rows.len(), 3);
+        for row in &report.rows {
+            assert_eq!(row.seed, scenario_seed(cfg.base_seed, row.index));
+            let trace = SpotTrace::generate(cfg.trace.clone(), row.seed);
+            let solo = replay(&p, &trace, &cfg.replay).unwrap();
+            assert_eq!(row.tokens, solo.tokens, "scenario {}", row.index);
+            assert_eq!(row.usd, solo.usd, "scenario {}", row.index);
+            assert_eq!(row.switches, solo.switches, "scenario {}", row.index);
+        }
+    }
+
+    #[test]
+    fn shared_cache_gets_hits_across_scenarios() {
+        let p = profile();
+        let report = sweep(&p, &small_cfg(4)).unwrap();
+        assert!(
+            report.plan_cache_hits > 0,
+            "layouts repeat across scenarios; the shared cache must see hits"
+        );
+        assert!(report.cache_hit_rate() > 0.0 && report.cache_hit_rate() <= 1.0);
+    }
+
+    #[test]
+    fn sweep_csv_names_its_seed() {
+        let p = profile();
+        let report = sweep(&p, &small_cfg(2)).unwrap();
+        let csv = report.to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert!(lines[0].starts_with("# base_seed=11"));
+        assert!(lines[1].starts_with("scenario,seed,tokens"));
+        assert_eq!(lines.len(), report.rows.len() + 2);
+    }
+
+    #[test]
+    fn ab_deltas_are_a_minus_b_on_identical_seeds() {
+        let p = profile();
+        let cfg = small_cfg(3);
+        let mut replay_b = cfg.replay.clone();
+        replay_b.policy = ReplanPolicy::Greedy;
+        let ab = sweep_ab(&p, &cfg, &replay_b).unwrap();
+        assert_eq!(ab.deltas.len(), 3);
+        for (d, (ra, rb)) in ab.deltas.iter().zip(ab.a.rows.iter().zip(&ab.b.rows)) {
+            assert_eq!(ra.seed, rb.seed, "paired mode must replay identical seeds");
+            assert_eq!(d.seed, ra.seed);
+            assert_eq!(d.d_tokens, ra.tokens - rb.tokens);
+            assert_eq!(d.d_switches, ra.switches as i64 - rb.switches as i64);
+        }
+        // a policy compared against itself is a wash on every seed
+        let same = sweep_ab(&p, &cfg, &cfg.replay).unwrap();
+        for d in &same.deltas {
+            assert_eq!(d.d_tokens, 0.0);
+            assert_eq!(d.d_usd, 0.0);
+            assert_eq!(d.d_switches, 0);
+        }
+        assert_eq!(same.mean_d_tokens_per_usd(), 0.0);
+    }
+}

@@ -78,6 +78,7 @@ fn three_event_trace() -> SpotTrace {
         ],
         prices: vec![vec![1.2, 2.5]; 6],
         cfg: tc,
+        seed: 0,
     }
 }
 
@@ -103,6 +104,7 @@ fn pause_resume_trace() -> SpotTrace {
         ],
         prices: vec![vec![1.2, 2.5]; 5],
         cfg: tc,
+        seed: 0,
     }
 }
 

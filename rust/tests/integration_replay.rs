@@ -7,7 +7,7 @@ use autohet::cluster::{GpuCatalog, KindId, SpotTrace, TraceConfig};
 use autohet::modelcfg::ModelCfg;
 use autohet::planner::{Objective, PlanOptions};
 use autohet::profile::ProfileDb;
-use autohet::recovery::{replay, ReplanPolicy, ReplayConfig};
+use autohet::recovery::{replay, sweep_ab, ReplanPolicy, ReplayConfig, SweepConfig};
 
 fn trace_72h(cat: &GpuCatalog, seed: u64) -> SpotTrace {
     // hourly market steps keep the 72 h replay affordable in CI while
@@ -95,5 +95,75 @@ fn replay_runs_on_a_json_defined_catalog() {
     assert!(report.tokens > 0.0);
     assert!(report.events > 0);
     let csv = report.to_csv();
-    assert!(csv.lines().count() == report.rows.len() + 1);
+    // rows + the `# trace_seed=` comment + the column header
+    assert!(csv.lines().count() == report.rows.len() + 2);
+}
+
+#[test]
+fn paired_sweep_reproduces_amortized_beats_greedy_in_aggregate() {
+    // the Monte-Carlo restatement of `amortized_beats_greedy_over_72h`:
+    // instead of three hand-named seeds, a paired A/B sweep replays the
+    // identical derived seed set under both policies and the aggregate
+    // must tell the same story — amortized hysteresis buys more tokens
+    // per dollar over the sweep.
+    let cat = GpuCatalog::builtin();
+    let model = ModelCfg::gpt3_6p7b();
+    let profile = ProfileDb::build(&model, &cat, &[1, 2, 4, 8], 1);
+    let replay_amortized = ReplayConfig {
+        objective: Objective::Cost,
+        policy: ReplanPolicy::Amortized { horizon_s: 12.0 * 3600.0, min_rel_gain: 0.005 },
+        opts: PlanOptions { bench: true, ..Default::default() },
+        price_rel_threshold: 0.03,
+        ..Default::default()
+    };
+    let replay_greedy =
+        ReplayConfig { policy: ReplanPolicy::Greedy, ..replay_amortized.clone() };
+    let cfg = SweepConfig {
+        scenarios: 3,
+        base_seed: 11,
+        threads: Some(2),
+        replay: replay_amortized,
+        trace: TraceConfig {
+            horizon_s: 72.0 * 3600.0,
+            step_s: 3600.0,
+            capacity: vec![(KindId::A100, 8), (KindId::H800, 4), (KindId::H20, 4)],
+            mean_frac: 0.7,
+            ..TraceConfig::from_catalog(&cat, 8)
+        },
+        ..Default::default()
+    };
+    let ab = sweep_ab(&profile, &cfg, &replay_greedy).unwrap();
+
+    // both arms replayed the identical derived seed set
+    assert_eq!(ab.deltas.len(), 3);
+    for (ra, rb) in ab.a.rows.iter().zip(&ab.b.rows) {
+        assert_eq!(ra.seed, rb.seed, "paired arms diverged on seeds");
+        assert!(ra.tokens > 0.0 && rb.tokens > 0.0, "seed {}: nothing trained", ra.seed);
+        assert!(ra.usd > 0.0 && rb.usd > 0.0, "seed {}: nothing billed", ra.seed);
+    }
+    // hysteresis engages somewhere in the sweep, and the greedy arm has
+    // churn for it to save
+    let holds_a: usize = ab.a.rows.iter().map(|r| r.holds).sum();
+    let switches_g: usize = ab.b.rows.iter().map(|r| r.switches).sum();
+    assert!(holds_a > 0, "amortized never held a plan across the sweep");
+    assert!(switches_g > 0, "greedy never migrated — the market was flat");
+    // the headline, in aggregate over the paired seed set: amortized is
+    // cheaper per token without giving up meaningful training volume
+    let totals = |rows: &[autohet::recovery::ScenarioRow]| {
+        rows.iter().fold((0.0, 0.0), |(t, u), r| (t + r.tokens, u + r.usd))
+    };
+    let (tok_a, usd_a) = totals(&ab.a.rows);
+    let (tok_g, usd_g) = totals(&ab.b.rows);
+    assert!(
+        tok_a / usd_a > tok_g / usd_g,
+        "amortized not cheaper per token in aggregate: {:.1} vs greedy {:.1} tokens/$",
+        tok_a / usd_a,
+        tok_g / usd_g
+    );
+    assert!(
+        tok_a >= 0.98 * tok_g,
+        "amortized gave up too many tokens: {tok_a:.3e} vs greedy {tok_g:.3e}"
+    );
+    // the two sweeps shared one sealed plan cache (identical PlanOptions)
+    assert!(ab.a.plan_cache_hits + ab.b.plan_cache_hits > 0, "shared cache never hit");
 }

@@ -1,0 +1,190 @@
+//! Property tests for Monte-Carlo replay sweeps (`recovery::sweep`):
+//!
+//! 1. **Thread-count bit-identity** — the whole `SweepReport` (rows,
+//!    distributions, *and* cache counters) is identical at 1, 2, and 8
+//!    threads: `par_map` preserves order and the shared plan cache is
+//!    sealed before the parallel phase, so nothing observable depends
+//!    on scheduling.
+//! 2. **The plan cache never changes decisions** — a replay served from
+//!    a sealed shared cache produces the identical decision log, meter
+//!    bits included, as a cache-disabled replay of the same trace (a
+//!    hit re-scores the cached price-independent solve through the same
+//!    float path as a fresh solve).
+//! 3. **Seed derivation** — scenario seeds are a pure function of
+//!    `(base_seed, index)`, collision-free over practical sweep sizes.
+
+use std::sync::Arc;
+
+use autohet::cluster::{GpuCatalog, KindId, SpotTrace, TraceConfig};
+use autohet::modelcfg::ModelCfg;
+use autohet::profile::ProfileDb;
+use autohet::recovery::{
+    replay, scenario_seed, sweep, ReplayConfig, ReplayReport, ScenarioRow, SharedPlanCache,
+    SweepConfig,
+};
+
+fn profile() -> ProfileDb {
+    ProfileDb::build(&ModelCfg::bert_large(), &GpuCatalog::builtin(), &[1, 2, 4, 8], 1)
+}
+
+fn sweep_cfg(scenarios: usize, base_seed: u64) -> SweepConfig {
+    SweepConfig {
+        scenarios,
+        base_seed,
+        trace: TraceConfig {
+            horizon_s: 8.0 * 3600.0,
+            step_s: 1800.0,
+            capacity: vec![(KindId::A100, 8), (KindId::H800, 4)],
+            base_price_per_hour: vec![(KindId::A100, 1.2), (KindId::H800, 2.5)],
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+/// A row with its cache counters zeroed, for comparisons where the two
+/// runs legitimately differ in *where* solves were served from but must
+/// not differ in anything the solves decided.
+fn decisions_only(r: &ScenarioRow) -> ScenarioRow {
+    ScenarioRow { plan_cache_hits: 0, plan_solves: 0, ..r.clone() }
+}
+
+#[test]
+fn sweep_is_bit_identical_across_thread_counts() {
+    let p = profile();
+    let base = sweep_cfg(6, 77);
+    let reference = sweep(&p, &SweepConfig { threads: Some(1), ..base.clone() }).unwrap();
+    for threads in [2usize, 8] {
+        let r = sweep(&p, &SweepConfig { threads: Some(threads), ..base.clone() }).unwrap();
+        // full-report equality: rows, distributions, AND cache counters —
+        // the sealed cache makes even hit counts scheduling-independent
+        assert_eq!(reference, r, "threads=1 vs threads={threads}");
+    }
+}
+
+#[test]
+fn shared_cache_never_changes_sweep_decisions() {
+    let p = profile();
+    let base = sweep_cfg(5, 13);
+    let cached = sweep(&p, &base).unwrap();
+    let uncached = sweep(
+        &p,
+        &SweepConfig {
+            share_cache: false,
+            replay: ReplayConfig { plan_cache: false, ..base.replay.clone() },
+            ..base.clone()
+        },
+    )
+    .unwrap();
+    assert!(cached.plan_cache_hits > 0, "cache never engaged — vacuous comparison");
+    assert_eq!(uncached.plan_cache_hits, 0, "cache-disabled arm still hit a cache");
+    assert_eq!(cached.rows.len(), uncached.rows.len());
+    for (a, b) in cached.rows.iter().zip(&uncached.rows) {
+        assert_eq!(
+            decisions_only(a),
+            decisions_only(b),
+            "seed {}: the plan cache changed an outcome",
+            a.seed
+        );
+    }
+    // aggregates built from those rows agree too
+    assert_eq!(cached.tokens_per_usd, uncached.tokens_per_usd);
+    assert_eq!(cached.downtime_s, uncached.downtime_s);
+    assert_eq!(cached.switches, uncached.switches);
+    assert_eq!(cached.usd, uncached.usd);
+}
+
+/// Deterministic per-row fields of a replay, wall-clock latencies
+/// excluded.
+fn decision_log(r: &ReplayReport) -> Vec<(f64, String, bool, usize, f64, f64, f64, f64, f64)> {
+    r.rows
+        .iter()
+        .map(|row| {
+            (
+                row.at_s,
+                format!("{}|{}", row.decision, row.reason),
+                row.forced,
+                row.gpus,
+                row.iter_s,
+                row.price_per_hour,
+                row.migration_s,
+                row.tokens_total,
+                row.usd_total,
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn sealed_cache_hits_replay_identically_to_no_cache() {
+    // the strongest form of the guarantee, at the single-replay level:
+    // populate a shared cache, seal it, and replay the same trace again
+    // entirely from hits — the decision log must match a replay that
+    // never touched any cache.
+    let p = profile();
+    let cfg = sweep_cfg(1, 99);
+    let trace = SpotTrace::generate(cfg.trace.clone(), scenario_seed(99, 0));
+
+    let no_cache = replay(
+        &p,
+        &trace,
+        &ReplayConfig { plan_cache: false, ..cfg.replay.clone() },
+    )
+    .unwrap();
+
+    let shared = Arc::new(SharedPlanCache::new());
+    let warm = replay(
+        &p,
+        &trace,
+        &ReplayConfig { shared_plan_cache: Some(shared.clone()), ..cfg.replay.clone() },
+    )
+    .unwrap();
+    shared.seal();
+    let from_hits = replay(
+        &p,
+        &trace,
+        &ReplayConfig { shared_plan_cache: Some(shared.clone()), ..cfg.replay.clone() },
+    )
+    .unwrap();
+
+    assert!(!shared.is_empty(), "warm-up populated nothing");
+    assert!(
+        from_hits.plan_cache_hits >= warm.plan_cache_hits,
+        "sealed replay should be served from the shared cache"
+    );
+    for (tag, r) in [("warm", &warm), ("sealed", &from_hits)] {
+        assert_eq!(
+            decision_log(&no_cache),
+            decision_log(r),
+            "{tag} run diverged from the cache-free decision log"
+        );
+        assert_eq!(no_cache.tokens, r.tokens, "{tag}");
+        assert_eq!(no_cache.usd, r.usd, "{tag}");
+        assert_eq!(no_cache.switches, r.switches, "{tag}");
+        assert_eq!(no_cache.holds, r.holds, "{tag}");
+        assert_eq!(no_cache.unchanged, r.unchanged, "{tag}");
+    }
+}
+
+#[test]
+fn scenario_seeds_are_pure_and_collision_free() {
+    // pure function of (base, index)
+    for i in 0..32 {
+        assert_eq!(scenario_seed(5, i), scenario_seed(5, i));
+    }
+    // collision-free over a practical sweep size, across nearby bases
+    let mut seeds: Vec<u64> = Vec::new();
+    for base in [0u64, 1, 42, u64::MAX] {
+        for i in 0..512 {
+            seeds.push(scenario_seed(base, i));
+        }
+    }
+    let n = seeds.len();
+    seeds.sort_unstable();
+    seeds.dedup();
+    assert_eq!(seeds.len(), n, "scenario_seed collided");
+    // and every generated trace actually carries its seed
+    let cfg = sweep_cfg(2, 3).trace;
+    let s = scenario_seed(3, 1);
+    assert_eq!(SpotTrace::generate(cfg, s).seed, s);
+}

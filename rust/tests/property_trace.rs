@@ -75,6 +75,32 @@ fn arbitrary_catalog_traces_bounded_and_priced() {
 }
 
 #[test]
+fn streaming_events_match_eager_on_arbitrary_catalogs() {
+    // `market_events` is a thin `.collect()` over `market_events_iter`;
+    // the two surfaces must stay event-for-event identical for any
+    // catalog, capacity, seed, and threshold — including the infinite
+    // threshold (availability deltas only) and zero (every price tick).
+    let mut rng = Rng::new(0x17E8);
+    for case in 0..10u64 {
+        let cat = random_catalog(&mut rng);
+        let cap = 3 + rng.below(10);
+        let trace = SpotTrace::generate(TraceConfig::from_catalog(&cat, cap), 200 + case);
+        for threshold in [0.0, 0.01, 0.05, 0.3, f64::INFINITY] {
+            let eager = trace.market_events(threshold);
+            let streamed: Vec<_> = trace.market_events_iter(threshold).collect();
+            assert_eq!(eager, streamed, "case {case} threshold {threshold}");
+            // and the stream is resumable: a partially drained iterator
+            // picks up exactly where it left off
+            let mut it = trace.market_events_iter(threshold);
+            let head: Vec<_> = it.by_ref().take(2).collect();
+            let tail: Vec<_> = it.collect();
+            let rejoined: Vec<_> = head.into_iter().chain(tail).collect();
+            assert_eq!(eager, rejoined, "case {case} threshold {threshold}: resume broke");
+        }
+    }
+}
+
+#[test]
 fn price_reversion_dominates_on_arbitrary_catalogs() {
     // With noise off, every non-spike step must pull the price strictly
     // toward its preset anchor; spikes (the only away-moves) are rare.
