@@ -1,0 +1,179 @@
+//! Multi-job scheduler sweep throughput: a 3-job shared pool cleared
+//! over many seeded market draws at 1/4/8 worker threads, with the
+//! salted shared plan cache on.
+//!
+//! Measures scenarios/second for the full trace-gen → multi-job
+//! schedule pipeline (`recovery::scheduler::sched_sweep`), the shared
+//! cache hit rate, the mean pool utilization the clearing achieves, and
+//! the parallel speedup — and re-checks, in a release build at bench
+//! scale, that the sweep report is bit-identical at every thread count.
+//! Each row is written machine-readably to `BENCH_sched.json` at the
+//! repo root. Pass `--assert` to fail (exit 1) when a floor is missed.
+
+use std::time::Instant;
+
+use autohet::cluster::{GpuCatalog, KindId, TraceConfig};
+use autohet::modelcfg::ModelCfg;
+use autohet::planner::Objective;
+use autohet::recovery::{
+    sched_sweep, JobSpec, ReplanPolicy, SchedSweepConfig, SchedSweepReport,
+};
+use autohet::util::bench::Table;
+use autohet::util::json::Json;
+
+/// Floors are deliberately generous vs a warm release build: CI runners
+/// are slow, shared, and typically 4-core (8 worker threads oversubscribe
+/// there, so the speedup floor is set by cores, not threads).
+const SCENARIOS: usize = 16;
+const ASSERT_MIN_SCEN_PER_S: f64 = 0.2; // at the widest thread count
+const ASSERT_MIN_SPEEDUP_8: f64 = 1.5; // 8 threads vs 1 thread
+const ASSERT_MIN_UTILIZATION: f64 = 0.5; // mean over scenarios
+
+fn jobs() -> Vec<JobSpec> {
+    vec![
+        JobSpec { weight: 2.0, ..JobSpec::new("prod", ModelCfg::bert_large()) },
+        JobSpec {
+            priority: 1,
+            objective: Objective::Cost,
+            max_gpus: Some(8),
+            ..JobSpec::new("research", ModelCfg::bert_large())
+        },
+        JobSpec {
+            priority: 2,
+            weight: 0.5,
+            policy: ReplanPolicy::Greedy,
+            ..JobSpec::new("background", ModelCfg::bert_large())
+        },
+    ]
+}
+
+fn sweep_cfg(threads: usize) -> SchedSweepConfig {
+    SchedSweepConfig {
+        scenarios: SCENARIOS,
+        base_seed: 42,
+        threads: Some(threads),
+        warmup: 1,
+        trace: TraceConfig {
+            horizon_s: 24.0 * 3600.0,
+            step_s: 1800.0,
+            capacity: vec![(KindId::A100, 16), (KindId::H800, 8)],
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+fn main() {
+    let assert_bounds = std::env::args().any(|a| a == "--assert");
+    let job_set = jobs();
+    let cat = GpuCatalog::builtin();
+
+    let mut t = Table::new(&[
+        "threads",
+        "scenarios",
+        "wall_s",
+        "scen_per_s",
+        "hit_rate",
+        "pool_use",
+        "speedup",
+    ]);
+    let mut json_rows: Vec<Json> = Vec::new();
+    let mut failures: Vec<String> = Vec::new();
+    let mut baseline_wall = f64::NAN;
+    let mut widest: Option<(usize, f64)> = None; // (threads, scen/s)
+    let mut reference: Option<SchedSweepReport> = None;
+
+    for threads in [1usize, 4, 8] {
+        let cfg = sweep_cfg(threads);
+        let t0 = Instant::now();
+        let report = sched_sweep(&job_set, &cat, &cfg, 1).expect("sched_sweep failed");
+        let wall = t0.elapsed().as_secs_f64();
+        if threads == 1 {
+            baseline_wall = wall;
+        }
+        let scen_per_s = SCENARIOS as f64 / wall.max(1e-9);
+        let speedup = baseline_wall / wall.max(1e-9);
+        let hit_rate = report.cache_hit_rate();
+        let pool_use = report.utilization.mean;
+        widest = Some((threads, scen_per_s));
+
+        // the determinism contract, re-checked in release at bench scale
+        match &reference {
+            None => reference = Some(report.clone()),
+            Some(r) => {
+                if *r != report {
+                    failures.push(format!(
+                        "sched sweep report at {threads} threads differs from the 1-thread run"
+                    ));
+                }
+            }
+        }
+
+        t.row(&[
+            threads.to_string(),
+            SCENARIOS.to_string(),
+            format!("{wall:.2}"),
+            format!("{scen_per_s:.2}"),
+            format!("{hit_rate:.2}"),
+            format!("{pool_use:.2}"),
+            format!("{speedup:.2}x"),
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("threads", Json::num(threads as f64)),
+            ("scenarios", Json::num(SCENARIOS as f64)),
+            ("wall_s", Json::num(wall)),
+            ("scenarios_per_s", Json::num(scen_per_s)),
+            ("cache_hits", Json::num(report.plan_cache_hits as f64)),
+            ("plan_solves", Json::num(report.plan_solves as f64)),
+            ("cache_hit_rate", Json::num(hit_rate)),
+            ("mean_utilization", Json::num(pool_use)),
+            ("speedup_vs_1t", Json::num(speedup)),
+        ]));
+
+        if threads == 8 && speedup < ASSERT_MIN_SPEEDUP_8 {
+            failures.push(format!(
+                "8-thread speedup {speedup:.2}x below floor {ASSERT_MIN_SPEEDUP_8:.1}x"
+            ));
+        }
+        if pool_use < ASSERT_MIN_UTILIZATION {
+            failures.push(format!(
+                "mean pool utilization {pool_use:.2} at {threads} threads below floor \
+                 {ASSERT_MIN_UTILIZATION:.2}"
+            ));
+        }
+    }
+    t.print(&format!(
+        "Sched sweep throughput ({SCENARIOS} scenarios x 24h traces, {} jobs, shared cache)",
+        job_set.len()
+    ));
+
+    if let Some((threads, scen_per_s)) = widest {
+        if scen_per_s < ASSERT_MIN_SCEN_PER_S {
+            failures.push(format!(
+                "{scen_per_s:.2} scenarios/s at {threads} threads below floor \
+                 {ASSERT_MIN_SCEN_PER_S:.1}"
+            ));
+        }
+    }
+
+    let out = Json::obj(vec![
+        ("series", Json::str("sched_perf")),
+        ("generated_by", Json::str("cargo bench --bench sched_sweep")),
+        ("jobs", Json::num(job_set.len() as f64)),
+        ("rows", Json::Arr(json_rows)),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_sched.json");
+    match std::fs::write(path, out.to_string_pretty() + "\n") {
+        Ok(()) => println!("wrote perf series to {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+
+    if !failures.is_empty() {
+        for f in &failures {
+            eprintln!("sched-perf assertion failed: {f}");
+        }
+        if assert_bounds {
+            std::process::exit(1);
+        }
+    }
+}

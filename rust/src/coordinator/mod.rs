@@ -14,8 +14,9 @@ use crate::pipeline::{ExecTopology, PipelineTrainer};
 use crate::planner::{auto_plan, plan_choice, BudgetEnvelope, Objective, PlanOptions, ScoredPlan};
 use crate::profile::ProfileDb;
 use crate::recovery::{
-    baseline_train, enact, replay, sweep, sweep_ab, EnactConfig, ReplanPolicy, ReplayConfig,
-    ReplayReport, SweepConfig, SweepReport,
+    baseline_train, enact, load_jobs_file, replay, run_schedule, sched_sweep, sweep, sweep_ab,
+    ClearingPolicy, EnactConfig, ReplanPolicy, ReplayConfig, ReplayReport, SchedSweepConfig,
+    SchedSweepReport, SchedulerConfig, SchedulerReport, SweepConfig, SweepReport,
 };
 use crate::runtime::{Engine, HostTensor};
 use crate::sim::simulate_plan;
@@ -94,6 +95,23 @@ USAGE:
                   to a background worker (N encode threads) so only the
                   snapshot blocks training — results are bit-identical
                   at any worker count
+  autohet sched   [--jobs FILE] [--counts 16xA100,8xH800]
+                  [--policy priority|fair] [--hours H] [--seed N]
+                  [--trace-seed N] [--scenarios N] [--threads T]
+                  [--warmup N] [--no-cache] [--gpus-per-node N]
+                  [--csv FILE] [--fleet-csv FILE]
+                  multi-job scheduling on one shared spot pool: the jobs
+                  file (JSON: per-job name/model plus optional objective,
+                  policy, amortize_h, priority, weight, max_gpus,
+                  budget_usd, deadline_h, and a top-level `pool`) admits
+                  N jobs, and every market event re-clears the pool
+                  across them — strict priority or weighted fair-share —
+                  so one job's preemption can become another's grant in
+                  the same event; reports per-job tokens/$/downtime +
+                  envelope slack and fleet utilization; `--scenarios N`
+                  sweeps N seeded markets in parallel (bit-identical at
+                  any --threads count); `--csv` dumps the per-job
+                  decision log, `--fleet-csv` the utilization track
   autohet models                                      list model presets
 ";
 
@@ -771,6 +789,152 @@ pub fn cmd_enact(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Per-job + fleet summary of one scheduled run for the CLI.
+fn print_sched(r: &SchedulerReport) {
+    println!(
+        "{} clearing over {:.1}h (trace seed {}): {:.2e} tokens | ${:.2} | {:.0} tokens/$ | \
+         mean pool utilization {:.0}%",
+        r.policy,
+        r.horizon_s / 3600.0,
+        r.trace_seed,
+        r.tokens(),
+        r.usd(),
+        r.tokens_per_usd(),
+        100.0 * r.mean_utilization()
+    );
+    for j in &r.jobs {
+        println!(
+            "  {:<10} {:.2e} tokens | ${:.2} | {:.0} tokens/$ | train {:.1}h, migration \
+             {:.1}min, paused {:.1}h | {} switches, {} holds{}",
+            j.name,
+            j.tokens,
+            j.usd,
+            j.tokens_per_usd,
+            j.train_s / 3600.0,
+            j.downtime_s / 60.0,
+            j.paused_s / 3600.0,
+            j.switches,
+            j.holds,
+            if j.exhausted { " | EXHAUSTED" } else { "" }
+        );
+        if let Some(s) = j.budget_slack_usd {
+            println!("    budget slack ${s:.2}");
+        }
+        if let Some(s) = j.deadline_slack_s {
+            println!("    deadline slack {:.1}h", s / 3600.0);
+        }
+    }
+    println!("  plan cache: {} hits / {} solves", r.plan_cache_hits, r.plan_solves);
+}
+
+/// Distribution summary of a multi-job sweep for the CLI.
+fn print_sched_sweep(r: &SchedSweepReport) {
+    println!("sched sweep ({}): {} scenarios, base seed {}", r.policy, r.scenarios, r.base_seed);
+    println!(
+        "  tokens/$: mean {:.1} | p50 {:.1} | p95 {:.1} | worst {:.1}",
+        r.tokens_per_usd.mean, r.tokens_per_usd.p50, r.tokens_per_usd.p95, r.tokens_per_usd.worst
+    );
+    println!(
+        "  downtime: mean {:.1}min | p50 {:.1}min | p95 {:.1}min | worst {:.1}min",
+        r.downtime_s.mean / 60.0,
+        r.downtime_s.p50 / 60.0,
+        r.downtime_s.p95 / 60.0,
+        r.downtime_s.worst / 60.0
+    );
+    println!(
+        "  pool use: mean {:.0}% | p50 {:.0}% | p95 {:.0}% | worst {:.0}%",
+        100.0 * r.utilization.mean,
+        100.0 * r.utilization.p50,
+        100.0 * r.utilization.p95,
+        100.0 * r.utilization.worst
+    );
+    println!(
+        "  spend:    mean ${:.2} | p50 ${:.2} | p95 ${:.2} | worst ${:.2}",
+        r.usd.mean, r.usd.p50, r.usd.p95, r.usd.worst
+    );
+    println!(
+        "  plan cache: {} hits / {} solves ({:.0}% hit rate)",
+        r.plan_cache_hits,
+        r.plan_solves,
+        100.0 * r.cache_hit_rate()
+    );
+}
+
+pub fn cmd_sched(args: &Args) -> Result<()> {
+    let jobs_arg = args.get_str("jobs", "examples/jobs.json");
+    // CI and docs invoke from rust/; the bundled job sets live at the
+    // repo root, so fall back one directory up before erroring
+    let jobs_path = if Path::new(jobs_arg).exists() {
+        PathBuf::from(jobs_arg)
+    } else {
+        Path::new("..").join(jobs_arg)
+    };
+    let (pool, jobs) = load_jobs_file(&jobs_path)?;
+    let counts = match args.get("counts") {
+        Some(s) => s.to_string(),
+        None => pool.unwrap_or_else(|| "16xA100,8xH800".to_string()),
+    };
+    let cluster = parse_counts(&counts)?;
+    let policy: ClearingPolicy = args.get_str("policy", "fair").parse()?;
+    let seed = args.get_u64("seed", 1);
+    let hours = args.get_f64("hours", 24.0);
+    let mut tc = TraceConfig::from_cluster(&cluster);
+    tc.horizon_s = hours * 3600.0;
+    let scfg = SchedulerConfig {
+        policy,
+        gpus_per_node: args.get_usize("gpus-per-node", 8),
+        ..Default::default()
+    };
+    log_info!(
+        "scheduling {} jobs on a {}-GPU spot pool ({counts}) for {hours:.0}h, {policy} clearing",
+        jobs.len(),
+        cluster.total_gpus(),
+    );
+
+    let scenarios = args.get_usize("scenarios", 0);
+    if scenarios > 0 {
+        let cfg = SchedSweepConfig {
+            scenarios,
+            base_seed: seed,
+            threads: match args.get_usize("threads", 0) {
+                0 => None, // all cores
+                n => Some(n),
+            },
+            warmup: args.get_usize("warmup", 1),
+            share_cache: !args.has("no-cache"),
+            sched: scfg,
+            trace: tc,
+        };
+        let t0 = Instant::now();
+        let report = sched_sweep(&jobs, &cluster.catalog, &cfg, seed)?;
+        let wall = t0.elapsed().as_secs_f64();
+        print_sched_sweep(&report);
+        println!(
+            "{} scenarios in {wall:.2}s ({:.1} scenarios/s)",
+            report.scenarios,
+            report.scenarios as f64 / wall.max(1e-9)
+        );
+        if let Some(csv) = args.get("csv") {
+            std::fs::write(csv, report.to_csv())?;
+            log_info!("wrote per-scenario rows to {csv}");
+        }
+    } else {
+        let trace_seed = args.get_u64("trace-seed", seed);
+        let trace = SpotTrace::generate(tc, trace_seed);
+        let report = run_schedule(&jobs, &cluster.catalog, &trace, &scfg, seed)?;
+        print_sched(&report);
+        if let Some(csv) = args.get("csv") {
+            std::fs::write(csv, report.to_csv())?;
+            log_info!("wrote per-job decision log to {csv}");
+        }
+        if let Some(csv) = args.get("fleet-csv") {
+            std::fs::write(csv, report.fleet_csv())?;
+            log_info!("wrote fleet utilization track to {csv}");
+        }
+    }
+    Ok(())
+}
+
 pub fn cmd_models() -> Result<()> {
     println!("{:<12} {:>8} {:>8} {:>6} {:>10} {:>12}", "name", "layers", "hidden", "seq", "params", "ckpt GB");
     for name in ModelCfg::all_presets() {
@@ -797,6 +961,7 @@ pub fn run(args: Args) -> Result<()> {
         Some("trace") => cmd_trace(&args),
         Some("replay") => cmd_replay(&args),
         Some("sweep") => cmd_sweep(&args),
+        Some("sched") => cmd_sched(&args),
         Some("enact") => cmd_enact(&args),
         Some("models") => cmd_models(),
         _ => {

@@ -44,8 +44,10 @@ use std::time::Instant;
 use anyhow::{anyhow, ensure, Result};
 
 use crate::checkpoint::{
-    AsyncCheckpointer, CheckpointManager, CkptKey, Codec, LoadReport, SaveReport, Snapshot,
+    AsyncCheckpointer, CheckpointManager, CkptKey, Codec, CommittedSave, LoadReport, SaveReport,
+    Snapshot,
 };
+use crate::util::csv::csv_field;
 use crate::cluster::{Interconnect, SpotTrace};
 use crate::pipeline::{ExecTopology, PipelineTrainer};
 use crate::planner::ParallelPlan;
@@ -151,6 +153,12 @@ pub struct EnactRow {
     /// byte counters fed through [`autohet_recovery_s_scaled`] with the
     /// checkpoint's measured compression ratio.
     pub timing_model_s: f64,
+    /// Measured compression ratio of this row's committed save
+    /// (`compressed / raw`; 1.0 when nothing was saved). Backfilled from
+    /// the background worker's commit result alongside `save` — the
+    /// same per-tag path as `save_bg_wall_s` — so async and sync runs
+    /// report the identical ratio.
+    pub save_ratio: f64,
     pub reason: String,
 }
 
@@ -231,19 +239,20 @@ impl EnactReport {
         }
     }
 
-    /// Per-event CSV (commas in reasons become `;`). The first line is a
-    /// `# trace_seed=N` comment naming the scenario.
+    /// Per-event CSV (reasons are RFC-4180 escaped via [`csv_field`]).
+    /// The first line is a `# trace_seed=N` comment naming the scenario.
     pub fn to_csv(&self) -> String {
         let mut out = format!("# trace_seed={}\n", self.trace_seed);
         out.push_str(
             "t_hours,decision,forced,gpus,iter_s,migration_s,replan_s,steps,loss,\
              save_local_b,save_cloud_b,load_local_b,load_rdma_b,load_cloud_b,\
-             local_frac,peer_frac,cloud_frac,fig10_s,save_wall_s,save_bg_wall_s,load_wall_s,reason\n",
+             local_frac,peer_frac,cloud_frac,fig10_s,save_ratio,save_wall_s,save_bg_wall_s,\
+             load_wall_s,reason\n",
         );
         for r in &self.rows {
             let load = r.load.clone().unwrap_or_default();
             out.push_str(&format!(
-                "{:.3},{},{},{},{:.4},{:.1},{:.4},{},{:.4},{},{},{},{},{},{:.3},{:.3},{:.3},{:.1},{:.4},{:.4},{:.4},{}\n",
+                "{:.3},{},{},{},{:.4},{:.1},{:.4},{},{:.4},{},{},{},{},{},{:.3},{:.3},{:.3},{:.1},{:.4},{:.4},{:.4},{:.4},{}\n",
                 r.at_s / 3600.0,
                 r.decision,
                 r.forced,
@@ -262,10 +271,11 @@ impl EnactReport {
                 r.peer_frac,
                 r.cloud_frac,
                 r.timing_model_s,
+                r.save_ratio,
                 r.save_wall_s,
                 r.save_bg_wall_s,
                 r.load_wall_s,
-                r.reason.replace(',', ";"),
+                csv_field(&r.reason),
             ));
         }
         out
@@ -469,6 +479,7 @@ pub fn enact(
         envelope: cfg.replay.envelope,
         plan_cache: cfg.replay.plan_cache,
         shared_plan_cache: cfg.replay.shared_plan_cache.clone(),
+        cache_salt: 0,
     };
     let mut coord =
         ElasticCoordinator::new_with(profile.model.clone(), profile.clone(), cluster, rcfg)?;
@@ -492,6 +503,14 @@ pub fn enact(
     let mut meter = Meter::default();
     let mut t_cursor = 0.0;
     let mut stopped: Option<String> = None;
+    // Commit results harvested from the checkpointer as the run goes
+    // (plus whatever `finish()` returns at the end). The compression
+    // ratio a restore prices Fig-10 with is derived from this stream —
+    // NOT read off `CheckpointManager::last_save_ratio` at restore time,
+    // which under async checkpointing could reflect a different save
+    // than the one the restore loads (the stale-ratio bug).
+    let mut committed: Vec<CommittedSave> = Vec::new();
+    let mut last_save_ratio = 1.0f64;
 
     // materialize the opening plan
     let mut trainer: Option<PipelineTrainer> = None;
@@ -606,8 +625,16 @@ pub fn enact(
             let splits = engine_splits(&plan, dims.n_layers, cfg.max_groups);
             let topo = ExecTopology::from_layer_splits(&splits);
             // a restore reads the manager: barrier behind every
-            // submitted save/drop/wipe first
+            // submitted save/drop/wipe first, then harvest the commits
+            // that completed — the newest committed save's compression
+            // ratio is what the restore's Fig-10 pricing must use
             ck.drain();
+            for c in ck.take_done() {
+                if let Ok(rep) = &c.report {
+                    last_save_ratio = rep.compression_ratio();
+                }
+                committed.push(c);
+            }
             let bitmap_empty = ck.lock().bitmap.keys().is_empty();
             if bitmap_empty {
                 // nothing was ever checkpointed (the run opened paused):
@@ -624,11 +651,7 @@ pub fn enact(
                 let mut params = ModelParams::init(&dims, cfg.seed);
                 let mut adam = Adam::new(cfg.adam, &params);
                 let t1 = Instant::now();
-                let (rep, save_ratio) = {
-                    let mut mgr = ck.lock();
-                    let rep = mgr.load_full(&mut params, Some(&mut adam), load_node)?;
-                    (rep, mgr.last_save_ratio)
-                };
+                let rep = ck.lock().load_full(&mut params, Some(&mut adam), load_node)?;
                 load_wall_s = t1.elapsed().as_secs_f64();
                 // optimizer step count continues across the migration
                 adam.step = report.losses.len() as u64;
@@ -648,7 +671,7 @@ pub fn enact(
                     &profile.model,
                     &sc,
                     &Interconnect::default(),
-                    save_ratio,
+                    last_save_ratio,
                 );
                 load = Some(rep);
                 trainer = Some(PipelineTrainer::from_state(
@@ -697,6 +720,7 @@ pub fn enact(
             peer_frac,
             cloud_frac,
             timing_model_s,
+            save_ratio: 1.0,
             reason: out.reason,
         });
     }
@@ -752,12 +776,15 @@ pub fn enact(
             peer_frac: 0.0,
             cloud_frac: 0.0,
             timing_model_s: 0.0,
+            save_ratio: 1.0,
             reason: why,
         });
     }
     // stop the checkpoint worker and backfill every row's commit result
-    // (tag = the row index recorded at submit time)
-    let (_mgr, committed) = ck.finish();
+    // (tag = the row index recorded at submit time); commits already
+    // harvested mid-run by a restore are in `committed`
+    let (_mgr, rest) = ck.finish();
+    committed.extend(rest);
     for c in committed {
         let rep = c
             .report
@@ -772,6 +799,7 @@ pub fn enact(
             .get_mut(c.tag)
             .ok_or_else(|| anyhow!("save tag {} has no row", c.tag))?;
         row.save_bg_wall_s = c.bg_wall_s;
+        row.save_ratio = rep.compression_ratio();
         row.save = rep;
     }
 
@@ -904,5 +932,48 @@ mod tests {
         assert!(r.to_csv().starts_with("# trace_seed=0\nt_hours,decision"));
         assert_eq!(r.loss_csv(), "step,loss\n");
         assert!(r.matches_decision_log(&ReplayReport::default()));
+    }
+
+    #[test]
+    fn csv_escapes_hostile_reason_strings() {
+        // a reason containing `", \n` is RFC-4180 quoted, so the row grid
+        // keeps its column count under any CSV reader
+        let row = EnactRow {
+            at_s: 600.0,
+            decision: ReplanDecision::Kept,
+            forced: false,
+            gpus: 8,
+            iter_s: 0.5,
+            price_per_hour: 9.6,
+            migration_s: 0.0,
+            replan_s: 0.0,
+            steps_run: 4,
+            loss_before: 1.0,
+            dp_groups: 2,
+            enacted_groups: 2,
+            save: SaveReport::default(),
+            save_wall_s: 0.0,
+            save_bg_wall_s: 0.0,
+            load: None,
+            load_wall_s: 0.0,
+            local_frac: 0.0,
+            peer_frac: 0.0,
+            cloud_frac: 0.0,
+            timing_model_s: 0.0,
+            save_ratio: 1.0,
+            reason: "held: \"spike\", \nretry".to_string(),
+        };
+        let r = EnactReport { rows: vec![row], ..Default::default() };
+        let csv = r.to_csv();
+        assert!(
+            csv.ends_with(",\"held: \"\"spike\"\", \nretry\"\n"),
+            "reason not RFC-4180 escaped: {csv:?}"
+        );
+        // header and row agree on column count once the quoted field
+        // (which holds the only commas and the newline) is ignored
+        let header_commas = csv.lines().nth(1).unwrap().matches(',').count();
+        let row_line = csv.split('\n').nth(2).unwrap();
+        let unquoted = &row_line[..row_line.find('"').unwrap()];
+        assert_eq!(unquoted.matches(',').count(), header_commas, "{row_line:?}");
     }
 }

@@ -24,6 +24,15 @@
 //!   sealed cross-replay [`SharedPlanCache`], bit-identical at any
 //!   thread count; per-policy distributions ([`SweepReport`]) and
 //!   paired A/B deltas over the identical seed set ([`sweep_ab`]).
+//! * [`scheduler`](mod@scheduler) — the multi-job service: a shared GPU
+//!   pool admitted to N jobs (each its own model/objective/envelope),
+//!   re-cleared across jobs on every market event by a pluggable policy
+//!   (strict [priority](scheduler::ClearingPolicy::Priority) or
+//!   weighted [fair-share](scheduler::ClearingPolicy::FairShare)), so a
+//!   preemption for one job can become a grant for another within the
+//!   same event; per-job tokens/$/downtime and fleet utilization
+//!   ([`scheduler::SchedulerReport`]), bit-identical Monte-Carlo
+//!   multi-job sweeps ([`scheduler::sched_sweep`]).
 //! * [`enact`](mod@enact) — execute the decision log on the **real**
 //!   stack: per-segment [`crate::pipeline::PipelineTrainer`] steps,
 //!   layer-wise [`crate::checkpoint::CheckpointManager`] save/load on
@@ -35,16 +44,22 @@ pub mod enact;
 pub mod migration;
 pub mod orchestrator;
 pub mod replay;
+pub mod scheduler;
 pub mod sweep;
 pub mod timing;
 
 pub use enact::{baseline_train, enact, EnactConfig, EnactReport, EnactRow};
 pub use migration::{plan_migration, MigrationPlan};
 pub use orchestrator::{
-    ElasticCoordinator, ReplanConfig, ReplanDecision, ReplanOutcome, ReplanPolicy,
+    job_cache_salt, ElasticCoordinator, ReplanConfig, ReplanDecision, ReplanOutcome, ReplanPolicy,
     SharedPlanCache,
 };
 pub use replay::{replay, ReplayConfig, ReplayReport, ReplayRow};
+pub use scheduler::{
+    clear_pool, fair_split, load_jobs_file, run_schedule, run_schedule_with, sched_sweep,
+    ClearingJob, ClearingPolicy, FleetRow, JobRow, JobSpec, JobSummary, SchedScenarioRow,
+    SchedSweepConfig, SchedSweepReport, SchedulerConfig, SchedulerReport,
+};
 pub use sweep::{
     scenario_seed, sweep, sweep_ab, AbReport, Dist, PairedDelta, ScenarioRow, SweepConfig,
     SweepReport,

@@ -82,6 +82,13 @@ pub struct ReplanConfig {
     /// private cache misses. Sweeps hand the same `Arc` to every
     /// scenario's coordinator so one solve serves the whole ensemble.
     pub shared_plan_cache: Option<Arc<SharedPlanCache>>,
+    /// Namespaces the layout-keyed solve caches (private and shared):
+    /// a lookup is only served by entries published under the same salt.
+    /// Single-job replays leave it at 0; the multi-job scheduler sets it
+    /// to [`job_cache_salt`] per job, so two jobs with matching fleet
+    /// layouts *and* matching (model, plan options) share solves while
+    /// jobs with different planner inputs can never cross-serve.
+    pub cache_salt: u64,
 }
 
 impl Default for ReplanConfig {
@@ -94,6 +101,7 @@ impl Default for ReplanConfig {
             envelope: BudgetEnvelope::UNBOUNDED,
             plan_cache: true,
             shared_plan_cache: None,
+            cache_salt: 0,
         }
     }
 }
@@ -194,12 +202,15 @@ pub struct ElasticCoordinator {
     pub plan_solves: usize,
 }
 
-/// Canonical fleet *layout*: ordered `(kind, count)` per node. Node ids
-/// and prices are deliberately excluded — the solver consumes
+/// Canonical fleet *layout*: the coordinator's
+/// [`ReplanConfig::cache_salt`] plus ordered `(kind, count)` per node.
+/// Node ids and prices are deliberately excluded — the solver consumes
 /// `cluster.nodes` in order and treats ids as opaque labels (relabeled on
 /// retrieval via [`SolvedCandidates::remap_nodes`]), and prices never
-/// reach the solver (re-applied via [`score_solved`]).
-type LayoutSig = Vec<(usize, usize)>;
+/// reach the solver (re-applied via [`score_solved`]). The salt keeps
+/// per-job planner inputs (model, options) from cross-serving through a
+/// shared cache.
+type LayoutSig = (u64, Vec<(usize, usize)>);
 
 /// One cached solve: the price-independent candidates plus the node-id
 /// sequence (in `cluster.nodes` order) of the fleet it was solved on.
@@ -335,6 +346,23 @@ pub(crate) fn per_usd(tokens: f64, usd: f64) -> f64 {
     }
 }
 
+/// Deterministic [`ReplanConfig::cache_salt`] for a job's planner inputs:
+/// FNV-1a over the model config and plan options' `Debug` forms. Two
+/// jobs with equal (model, options) get equal salts and therefore share
+/// layout-keyed solves through a [`SharedPlanCache`]; any difference in
+/// either yields (with overwhelming probability) a distinct salt and a
+/// disjoint cache namespace. Objective, policy, and envelope are
+/// deliberately excluded — they are applied *after* the cached solve
+/// (via [`score_solved`] / `pick_within`), so they cannot invalidate it.
+pub fn job_cache_salt(model: &ModelCfg, opts: &PlanOptions) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in format!("{model:?}|{opts:?}").bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
 impl ElasticCoordinator {
     pub fn new(model: ModelCfg, profile: ProfileDb, cluster: ClusterSpec) -> Result<Self> {
         ElasticCoordinator::new_with(model, profile, cluster, ReplanConfig::default())
@@ -376,19 +404,32 @@ impl ElasticCoordinator {
     /// plus its node-id sequence (the labels a cached solve is relabeled
     /// to on retrieval).
     fn layout_signature(&self) -> (LayoutSig, Vec<usize>) {
-        let mut sig = Vec::with_capacity(self.cluster.nodes.len());
+        let mut shape = Vec::with_capacity(self.cluster.nodes.len());
         let mut ids = Vec::with_capacity(self.cluster.nodes.len());
         for n in &self.cluster.nodes {
-            sig.push((n.kind.index(), n.count));
+            shape.push((n.kind.index(), n.count));
             ids.push(n.node_id);
         }
-        (sig, ids)
+        ((self.cfg.cache_salt, shape), ids)
     }
 
     /// Report the run's cumulative billed dollars (metered by the
     /// replay/enact caller) so the budget-envelope rule can price every
     /// candidate against what is actually left.
+    ///
+    /// The contract is **absolute cumulative** spend: each call reports
+    /// the run's total dollars billed so far, not an increment, so the
+    /// sequence of reported values must be non-decreasing. A decreasing
+    /// value would un-spend budget and re-enable envelope-rejected
+    /// switches; debug builds assert monotonicity to catch a meter that
+    /// accidentally reports per-interval deltas.
     pub fn note_spend(&mut self, usd: f64) {
+        debug_assert!(
+            usd >= self.spent_usd,
+            "note_spend must be monotone: cumulative spend fell from {} to {}",
+            self.spent_usd,
+            usd
+        );
         self.spent_usd = usd;
     }
 
@@ -1258,6 +1299,79 @@ mod tests {
                 .all(|g| g.node != 1),
             "cached solve still references the dead node id"
         );
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "note_spend must be monotone")]
+    fn decreasing_spend_panics_in_debug() {
+        // the contract is absolute-cumulative: a meter reporting a lower
+        // total than before is un-spending budget, which must trip the
+        // debug assertion rather than silently re-enable rejected switches
+        let mut c = coordinator();
+        c.note_spend(10.0);
+        c.note_spend(9.0);
+    }
+
+    #[test]
+    fn spend_can_repeat_without_panicking() {
+        // equal consecutive totals are fine (no billing between events)
+        let mut c = coordinator();
+        c.note_spend(10.0);
+        c.note_spend(10.0);
+        assert_eq!(c.spent_usd, 10.0);
+    }
+
+    #[test]
+    fn job_cache_salt_tracks_planner_inputs() {
+        let model = ModelCfg::bert_large();
+        let opts = PlanOptions::default();
+        assert_eq!(job_cache_salt(&model, &opts), job_cache_salt(&model, &opts));
+        let other_model = ModelCfg::gpt3_6p7b();
+        assert_ne!(job_cache_salt(&model, &opts), job_cache_salt(&other_model, &opts));
+        let other_opts = PlanOptions { bench: false, ..Default::default() };
+        assert_ne!(job_cache_salt(&model, &opts), job_cache_salt(&model, &other_opts));
+    }
+
+    #[test]
+    fn distinct_salts_partition_the_shared_cache() {
+        // two coordinators over the same fleet but different salts must
+        // not serve each other's solves; a third with a matching salt is
+        // served. This is what keeps per-job planner inputs separate in
+        // the multi-job scheduler's shared cache.
+        let (model, profile, cluster) = parts();
+        let shared = Arc::new(SharedPlanCache::new());
+        let mk = |salt| {
+            let cfg = ReplanConfig {
+                shared_plan_cache: Some(shared.clone()),
+                cache_salt: salt,
+                ..Default::default()
+            };
+            ElasticCoordinator::new_with(
+                model.clone(),
+                profile.clone(),
+                cluster.clone(),
+                cfg,
+            )
+            .unwrap()
+        };
+        let ev =
+            |at_s| MarketEvent { at_s, deltas: vec![], prices: vec![], max_price_move: 0.0 };
+        let mut a = mk(1);
+        a.handle_market_event(&ev(600.0)).unwrap();
+        assert_eq!(a.plan_solves, 1);
+        assert_eq!(shared.len(), 1);
+        // different salt, same layout: must miss and solve fresh
+        let mut b = mk(2);
+        b.handle_market_event(&ev(600.0)).unwrap();
+        assert_eq!(b.plan_cache_hits, 0, "salt 2 was served salt 1's solve");
+        assert_eq!(b.plan_solves, 1);
+        assert_eq!(shared.len(), 2, "each salt owns its own entry");
+        // same salt, cold private cache: served from the shared cache
+        let mut c = mk(1);
+        c.handle_market_event(&ev(600.0)).unwrap();
+        assert_eq!(c.plan_cache_hits, 1);
+        assert_eq!(c.plan_solves, 0);
     }
 
     #[test]

@@ -41,6 +41,7 @@ use crate::profile::ProfileDb;
 use super::orchestrator::{
     per_usd, ElasticCoordinator, ReplanConfig, ReplanDecision, ReplanPolicy, SharedPlanCache,
 };
+use crate::util::csv::csv_field;
 
 /// How a replay run is driven.
 #[derive(Debug, Clone)]
@@ -161,8 +162,9 @@ impl ReplayReport {
         per_usd(self.tokens, self.usd)
     }
 
-    /// Per-event CSV (commas in reasons become `;`). The first line is a
-    /// `# trace_seed=N` comment naming the scenario.
+    /// Per-event CSV (reasons are RFC-4180 escaped via
+    /// [`csv_field`]). The first line is a `# trace_seed=N` comment
+    /// naming the scenario.
     pub fn to_csv(&self) -> String {
         let mut out = format!("# trace_seed={}\n", self.trace_seed);
         out.push_str(
@@ -181,7 +183,7 @@ impl ReplayReport {
                 r.replan_s,
                 r.tokens_total,
                 r.usd_total,
-                r.reason.replace(',', ";"),
+                csv_field(&r.reason),
             ));
         }
         out
@@ -386,6 +388,7 @@ pub fn replay(profile: &ProfileDb, trace: &SpotTrace, cfg: &ReplayConfig) -> Res
         envelope: cfg.envelope,
         plan_cache: cfg.plan_cache,
         shared_plan_cache: cfg.shared_plan_cache.clone(),
+        cache_salt: 0,
     };
     let mut coord =
         ElasticCoordinator::new_with(profile.model.clone(), profile.clone(), cluster, rcfg)?;
@@ -626,6 +629,38 @@ mod tests {
         for l in &lines[2..] {
             assert_eq!(l.matches(',').count(), 10, "{l}");
         }
+    }
+
+    #[test]
+    fn csv_escapes_hostile_reason_strings() {
+        // a reason containing `", \n` must not corrupt the row grid: the
+        // field is RFC-4180 quoted, embedded quotes doubled, and the
+        // newline stays *inside* the quotes
+        let report = ReplayReport {
+            trace_seed: 1,
+            rows: vec![ReplayRow {
+                at_s: 3600.0,
+                decision: ReplanDecision::Kept,
+                forced: false,
+                gpus: 8,
+                iter_s: 0.5,
+                price_per_hour: 9.6,
+                migration_s: 0.0,
+                replan_s: 0.0,
+                tokens_total: 100.0,
+                usd_total: 2.0,
+                reason: "held: \"spike\", \nretry".to_string(),
+            }],
+            ..Default::default()
+        };
+        let csv = report.to_csv();
+        assert!(
+            csv.ends_with(",2.00,\"held: \"\"spike\"\", \nretry\"\n"),
+            "reason not RFC-4180 escaped: {csv:?}"
+        );
+        // an RFC-4180 reader sees exactly 3 lines: comment, header, row
+        // (the newline is quoted); a naive line count would see 4
+        assert_eq!(csv.lines().count(), 4);
     }
 
     #[test]

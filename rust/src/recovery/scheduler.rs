@@ -1,0 +1,1149 @@
+//! Multi-job spot scheduler: shared-pool admission and fair-share
+//! clearing on top of the elastic coordinator.
+//!
+//! The single-job [`replay`](mod@super::replay) hands one coordinator the
+//! whole market. This module promotes that loop into a scheduler
+//! *service*: jobs are **values** ([`JobSpec`] — each with its own model,
+//! plan options, replan policy, and [`BudgetEnvelope`]) admitted into one
+//! shared GPU pool, and a single event loop consumes the streaming
+//! [`SpotTrace::market_events_iter`] and re-clears the pool across jobs
+//! on every event. The clearing is a **pure function**
+//! ([`clear_pool`] — state lives in [`run_schedule_with`]'s loop,
+//! decision rules live here) with two pluggable policies:
+//!
+//! * [`ClearingPolicy::Priority`] — strict priority order (ties broken
+//!   by admission order), each job greedily filled per kind up to its
+//!   optional `max_gpus` cap;
+//! * [`ClearingPolicy::FairShare`] — weighted max-min per kind
+//!   ([`fair_split`]: largest-remainder proportional shares, ties to the
+//!   earlier job, capped shares redistributed to jobs with room).
+//!
+//! Because every event re-clears the *whole* pool, a preemption for job
+//! A can become a grant for job B **within the same event**, and a job
+//! that exhausts its envelope releases its GPUs to the survivors at the
+//! next event. Each job's share-diff is dispatched to its own
+//! [`ElasticCoordinator`] as a synthetic [`MarketEvent`], so all the
+//! migration-cost-aware replan machinery (and its meters) applies
+//! per job unchanged. Billing follows each job's *plan*, exactly as in
+//! the single-job replay, so per-job tokens/$ attribution needs no new
+//! accounting.
+//!
+//! Determinism: clearing is pure, jobs are visited in admission order,
+//! and per-job solve caches are namespaced by [`job_cache_salt`] — so a
+//! [`sched_sweep`] over N seeded scenarios is bit-identical at any
+//! `--threads` count once the shared [`SharedPlanCache`] is sealed
+//! (`tests/property_sched.rs` pins this). Jobs with matching fleet
+//! layouts *and* matching planner inputs share solves through the
+//! sealed cache; different inputs can never cross-serve.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+use std::str::FromStr;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::cluster::{ClusterSpec, GpuCatalog, KindId, MarketEvent, SpotTrace, TraceConfig};
+use crate::modelcfg::ModelCfg;
+use crate::planner::{BudgetEnvelope, Objective, PlanOptions};
+use crate::profile::ProfileDb;
+use crate::util::csv::csv_field;
+use crate::util::json::Json;
+use crate::util::par;
+
+use super::orchestrator::{
+    job_cache_salt, per_usd, ElasticCoordinator, ReplanConfig, ReplanDecision, ReplanPolicy,
+    SharedPlanCache,
+};
+use super::replay::{active_of, metered_advance, opening_prices, Meter};
+use super::sweep::{scenario_seed, Dist};
+
+/// One admitted job: everything the scheduler needs to plan, meter, and
+/// bill it independently of its pool-mates.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    /// Unique name (CSV/report key).
+    pub name: String,
+    pub model: ModelCfg,
+    pub objective: Objective,
+    pub policy: ReplanPolicy,
+    pub opts: PlanOptions,
+    /// Per-job budget/deadline cap. An exhausted job stops training and
+    /// releases its share back to the pool at the next clearing.
+    pub envelope: BudgetEnvelope,
+    /// Clearing rank under [`ClearingPolicy::Priority`]: lower is
+    /// served first, ties break to the earlier-admitted job.
+    pub priority: usize,
+    /// Share weight under [`ClearingPolicy::FairShare`]; a weight of 0
+    /// is never allocated anything.
+    pub weight: f64,
+    /// Optional fleet-wide GPU cap for this job (spans all kinds).
+    pub max_gpus: Option<usize>,
+}
+
+impl JobSpec {
+    /// A job with neutral scheduling knobs: time objective, default
+    /// amortized replan policy, unbounded envelope, priority 0,
+    /// weight 1, no GPU cap.
+    pub fn new(name: &str, model: ModelCfg) -> JobSpec {
+        JobSpec {
+            name: name.to_string(),
+            model,
+            objective: Objective::Time,
+            policy: ReplanPolicy::default(),
+            opts: PlanOptions::default(),
+            envelope: BudgetEnvelope::UNBOUNDED,
+            priority: 0,
+            weight: 1.0,
+            max_gpus: None,
+        }
+    }
+
+    fn clearing(&self, stopped: bool) -> ClearingJob {
+        ClearingJob {
+            priority: self.priority,
+            weight: self.weight,
+            max_gpus: self.max_gpus,
+            stopped,
+        }
+    }
+}
+
+/// How the shared pool is divided among jobs at each market event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClearingPolicy {
+    /// Strict priority: sort by `(priority, admission index)`, fill each
+    /// job per kind up to its cap before the next job sees anything.
+    Priority,
+    /// Weighted max-min per kind: proportional largest-remainder shares,
+    /// capped jobs' surplus redistributed to jobs with room.
+    FairShare,
+}
+
+impl fmt::Display for ClearingPolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            ClearingPolicy::Priority => "priority",
+            ClearingPolicy::FairShare => "fair-share",
+        })
+    }
+}
+
+impl FromStr for ClearingPolicy {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<ClearingPolicy> {
+        match s {
+            "priority" | "prio" => Ok(ClearingPolicy::Priority),
+            "fair" | "fair-share" | "fairshare" => Ok(ClearingPolicy::FairShare),
+            other => Err(anyhow!("unknown clearing policy `{other}` (want `priority` or `fair`)")),
+        }
+    }
+}
+
+/// The slice of a job the clearing rule is allowed to see — the
+/// state/rules split that keeps [`clear_pool`] a pure function.
+#[derive(Debug, Clone, Copy)]
+pub struct ClearingJob {
+    pub priority: usize,
+    pub weight: f64,
+    pub max_gpus: Option<usize>,
+    /// Envelope-exhausted jobs are never allocated anything; their
+    /// former share clears to the survivors in the same pass.
+    pub stopped: bool,
+}
+
+/// Divide `avail` units among weighted shares, each with a `room` cap:
+/// proportional largest-remainder rounding (remainder ties break to the
+/// earlier share), with capped shares' surplus redistributed among the
+/// shares that still have room until the units or the room run out.
+/// Deterministic in its inputs. Zero-weight shares get nothing.
+pub fn fair_split(avail: usize, shares: &[(f64, usize)]) -> Vec<usize> {
+    let mut alloc = vec![0usize; shares.len()];
+    let mut left = avail;
+    loop {
+        let eligible: Vec<usize> =
+            (0..shares.len()).filter(|&i| shares[i].0 > 0.0 && alloc[i] < shares[i].1).collect();
+        if left == 0 || eligible.is_empty() {
+            break;
+        }
+        let total_w: f64 = eligible.iter().map(|&i| shares[i].0).sum();
+        let mut add = vec![0usize; eligible.len()];
+        let mut fracs: Vec<(f64, usize)> = Vec::with_capacity(eligible.len());
+        for (e, &i) in eligible.iter().enumerate() {
+            let ideal = left as f64 * shares[i].0 / total_w;
+            let room = shares[i].1 - alloc[i];
+            add[e] = (ideal.floor() as usize).min(room);
+            fracs.push((ideal - ideal.floor(), e));
+        }
+        // guard against float rounding pushing the floors past `left`
+        let mut total: usize = add.iter().sum();
+        while total > left {
+            for a in add.iter_mut().rev() {
+                if *a > 0 {
+                    *a -= 1;
+                    total -= 1;
+                    break;
+                }
+            }
+        }
+        let mut rem = left - total;
+        fracs.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+        for &(_, e) in &fracs {
+            if rem == 0 {
+                break;
+            }
+            if add[e] < shares[eligible[e]].1 - alloc[eligible[e]] {
+                add[e] += 1;
+                rem -= 1;
+            }
+        }
+        let progressed: usize = add.iter().sum();
+        if progressed == 0 {
+            break;
+        }
+        for (e, &i) in eligible.iter().enumerate() {
+            alloc[i] += add[e];
+        }
+        left -= progressed;
+    }
+    alloc
+}
+
+/// Clear the pool across jobs: given per-kind availability and each
+/// job's clearing-relevant state, return every job's per-kind
+/// allocation. Pure — same `(policy, pool, jobs)` always yields the
+/// same split, so an event with no pool change reshuffles nothing.
+pub fn clear_pool(
+    policy: ClearingPolicy,
+    pool: &[usize],
+    jobs: &[ClearingJob],
+) -> Vec<Vec<usize>> {
+    let mut alloc = vec![vec![0usize; pool.len()]; jobs.len()];
+    // global (cross-kind) GPU budget left per job
+    let mut cap_left: Vec<usize> = jobs
+        .iter()
+        .map(|j| if j.stopped { 0 } else { j.max_gpus.unwrap_or(usize::MAX) })
+        .collect();
+    match policy {
+        ClearingPolicy::Priority => {
+            let mut order: Vec<usize> = (0..jobs.len()).collect();
+            order.sort_by_key(|&i| (jobs[i].priority, i));
+            for (ki, &have) in pool.iter().enumerate() {
+                let mut avail = have;
+                for &i in &order {
+                    if avail == 0 {
+                        break;
+                    }
+                    let take = avail.min(cap_left[i]);
+                    alloc[i][ki] = take;
+                    cap_left[i] -= take;
+                    avail -= take;
+                }
+            }
+        }
+        ClearingPolicy::FairShare => {
+            for (ki, &have) in pool.iter().enumerate() {
+                let shares: Vec<(f64, usize)> = jobs
+                    .iter()
+                    .enumerate()
+                    .map(|(i, j)| {
+                        let w = if j.stopped { 0.0 } else { j.weight.max(0.0) };
+                        (w, cap_left[i])
+                    })
+                    .collect();
+                let split = fair_split(have, &shares);
+                for (i, &got) in split.iter().enumerate() {
+                    alloc[i][ki] = got;
+                    cap_left[i] -= got;
+                }
+            }
+        }
+    }
+    alloc
+}
+
+/// Scheduler service configuration (job-independent knobs).
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    pub policy: ClearingPolicy,
+    /// Physical host size: allocations are chunked into nodes of at
+    /// most this many GPUs, for opening fleets and grants alike.
+    pub gpus_per_node: usize,
+    /// Emit a price-only market event when any kind moves this much
+    /// relative to the last emitted event.
+    pub price_rel_threshold: f64,
+    /// Serve each job's replans from its layout-keyed solve cache.
+    pub plan_cache: bool,
+    /// Optional cross-job/cross-scenario [`SharedPlanCache`]. Every
+    /// job's coordinator gets the same `Arc`, namespaced per job by
+    /// [`job_cache_salt`], so jobs with matching planner inputs and
+    /// fleet layouts share solves.
+    pub shared_plan_cache: Option<Arc<SharedPlanCache>>,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            policy: ClearingPolicy::FairShare,
+            gpus_per_node: 8,
+            price_rel_threshold: 0.05,
+            plan_cache: true,
+            shared_plan_cache: None,
+        }
+    }
+}
+
+/// Decision record for one job at one market event.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobRow {
+    pub at_s: f64,
+    pub job: String,
+    pub decision: ReplanDecision,
+    pub forced: bool,
+    /// GPUs the job holds after this event's clearing.
+    pub gpus: usize,
+    /// GPUs this clearing granted to the job.
+    pub granted: usize,
+    /// GPUs this clearing took from the job.
+    pub preempted: usize,
+    pub iter_s: f64,
+    pub price_per_hour: f64,
+    pub migration_s: f64,
+    pub tokens_total: f64,
+    pub usd_total: f64,
+    pub reason: String,
+}
+
+/// Pool occupancy after one event's clearing.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FleetRow {
+    pub at_s: f64,
+    /// Market availability across all kinds.
+    pub pool_gpus: usize,
+    /// GPUs the clearing handed to (live) jobs.
+    pub allocated_gpus: usize,
+    /// `allocated / pool` (0 when the pool is empty).
+    pub utilization: f64,
+}
+
+/// End-of-run accounting for one job.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSummary {
+    pub name: String,
+    pub tokens: f64,
+    pub usd: f64,
+    pub tokens_per_usd: f64,
+    pub train_s: f64,
+    pub downtime_s: f64,
+    pub paused_s: f64,
+    /// Migrations taken / skipped-by-amortization / no-change events.
+    pub switches: usize,
+    pub holds: usize,
+    pub unchanged: usize,
+    /// True when the job's envelope stopped it before the horizon.
+    pub exhausted: bool,
+    /// `max_usd - spent` at end of run (`None` when uncapped).
+    pub budget_slack_usd: Option<f64>,
+    /// `deadline - wall clock` at end of run (`None` when no deadline).
+    pub deadline_slack_s: Option<f64>,
+}
+
+/// Everything one scheduled run produced. `PartialEq` is the
+/// determinism oracle: no wall-clock fields, so two runs of the same
+/// inputs must compare equal bit-for-bit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SchedulerReport {
+    pub trace_seed: u64,
+    pub horizon_s: f64,
+    pub policy: ClearingPolicy,
+    pub jobs: Vec<JobSummary>,
+    pub rows: Vec<JobRow>,
+    pub fleet: Vec<FleetRow>,
+    /// Layout-cache hits / fresh solves summed over all jobs.
+    pub plan_cache_hits: usize,
+    pub plan_solves: usize,
+}
+
+impl SchedulerReport {
+    pub fn tokens(&self) -> f64 {
+        self.jobs.iter().map(|j| j.tokens).sum()
+    }
+
+    pub fn usd(&self) -> f64 {
+        self.jobs.iter().map(|j| j.usd).sum()
+    }
+
+    pub fn tokens_per_usd(&self) -> f64 {
+        per_usd(self.tokens(), self.usd())
+    }
+
+    /// Mean pool utilization over all fleet rows (0 with no rows).
+    pub fn mean_utilization(&self) -> f64 {
+        if self.fleet.is_empty() {
+            return 0.0;
+        }
+        self.fleet.iter().map(|f| f.utilization).sum::<f64>() / self.fleet.len() as f64
+    }
+
+    /// Per-job decision log; string fields are RFC-4180 escaped via
+    /// [`csv_field`].
+    pub fn to_csv(&self) -> String {
+        let mut out = format!(
+            "# trace_seed={} policy={} horizon_h={:.1}\n",
+            self.trace_seed,
+            self.policy,
+            self.horizon_s / 3600.0
+        );
+        out.push_str(
+            "t_hours,job,decision,forced,gpus,granted,preempted,iter_s,\
+             fleet_usd_per_h,migration_s,tokens,usd,reason\n",
+        );
+        for r in &self.rows {
+            out.push_str(&format!(
+                "{:.3},{},{},{},{},{},{},{:.4},{:.2},{:.1},{:.0},{:.2},{}\n",
+                r.at_s / 3600.0,
+                csv_field(&r.job),
+                r.decision,
+                r.forced,
+                r.gpus,
+                r.granted,
+                r.preempted,
+                r.iter_s,
+                r.price_per_hour,
+                r.migration_s,
+                r.tokens_total,
+                r.usd_total,
+                csv_field(&r.reason),
+            ));
+        }
+        out
+    }
+
+    /// Fleet-wide utilization track, one row per market event.
+    pub fn fleet_csv(&self) -> String {
+        let mut out = format!("# trace_seed={} policy={}\n", self.trace_seed, self.policy);
+        out.push_str("t_hours,pool_gpus,allocated_gpus,utilization\n");
+        for f in &self.fleet {
+            out.push_str(&format!(
+                "{:.3},{},{},{:.4}\n",
+                f.at_s / 3600.0,
+                f.pool_gpus,
+                f.allocated_gpus,
+                f.utilization
+            ));
+        }
+        out
+    }
+}
+
+/// Build one [`ProfileDb`] per distinct model across the job set (keyed
+/// by model name, shared by every job that trains that model). Errors
+/// if two jobs reuse a model name for different configurations.
+pub fn build_profiles(
+    jobs: &[JobSpec],
+    catalog: &GpuCatalog,
+    seed: u64,
+) -> Result<BTreeMap<String, ProfileDb>> {
+    let mut out: BTreeMap<String, ProfileDb> = BTreeMap::new();
+    for job in jobs {
+        match out.get(&job.model.name) {
+            Some(p) => anyhow::ensure!(
+                p.model == job.model,
+                "jobs disagree on model `{}`: two different configs share the name",
+                job.model.name
+            ),
+            None => {
+                let db = ProfileDb::build(&job.model, catalog, &[1, 2, 4, 8], seed);
+                out.insert(job.model.name.clone(), db);
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Chunk a per-kind allocation into `gpus_per_node`-sized nodes.
+fn cluster_for(
+    catalog: &GpuCatalog,
+    kinds: &[KindId],
+    alloc: &[usize],
+    gpus_per_node: usize,
+) -> ClusterSpec {
+    let node_size = gpus_per_node.max(1);
+    let mut counts = Vec::new();
+    for (&kind, &n) in kinds.iter().zip(alloc) {
+        let mut left = n;
+        while left > 0 {
+            let take = left.min(node_size);
+            counts.push((take, kind));
+            left -= take;
+        }
+    }
+    ClusterSpec::from_counts_in(catalog, &counts)
+}
+
+/// Per-job live state owned by the event loop (the coordinator plus the
+/// same meters the single-job replay keeps).
+struct JobState {
+    coord: ElasticCoordinator,
+    meter: Meter,
+    t_cursor: f64,
+    stopped: Option<String>,
+}
+
+fn exhausted_row(job: &JobSpec, st: &JobState, held: usize, why: &str) -> JobRow {
+    JobRow {
+        at_s: st.t_cursor,
+        job: job.name.clone(),
+        decision: ReplanDecision::BudgetExhausted,
+        forced: true,
+        gpus: 0,
+        granted: 0,
+        preempted: held,
+        iter_s: 0.0,
+        price_per_hour: 0.0,
+        migration_s: 0.0,
+        tokens_total: st.meter.tokens,
+        usd_total: st.meter.usd,
+        reason: why.to_string(),
+    }
+}
+
+/// Drive the whole job set through one trace against prebuilt profiles.
+///
+/// Per market event: (1) every live job is billed up to the event on
+/// its old share and its envelope checked (a stop emits a terminal
+/// [`ReplanDecision::BudgetExhausted`] row and releases the share);
+/// (2) the event's deltas move the pool; (3) [`clear_pool`] splits the
+/// new pool across live jobs; (4) each job's share-diff is dispatched
+/// to its coordinator as a synthetic [`MarketEvent`] carrying the real
+/// price track; (5) a [`FleetRow`] records pool occupancy.
+pub fn run_schedule_with(
+    jobs: &[JobSpec],
+    profiles: &BTreeMap<String, ProfileDb>,
+    trace: &SpotTrace,
+    cfg: &SchedulerConfig,
+) -> Result<SchedulerReport> {
+    anyhow::ensure!(!jobs.is_empty(), "scheduler needs at least one job");
+    for (i, a) in jobs.iter().enumerate() {
+        for b in &jobs[i + 1..] {
+            anyhow::ensure!(a.name != b.name, "duplicate job name `{}`", a.name);
+        }
+    }
+    let opening = opening_prices(trace)?;
+    let kinds = trace.kinds.clone();
+    let horizon_s = trace.covered_s();
+
+    let mut pool: Vec<usize> = trace.avail[0].clone();
+    let opening_jobs: Vec<ClearingJob> = jobs.iter().map(|j| j.clearing(false)).collect();
+    let mut alloc = clear_pool(cfg.policy, &pool, &opening_jobs);
+
+    let mut states: Vec<JobState> = Vec::with_capacity(jobs.len());
+    for (j, job) in jobs.iter().enumerate() {
+        let profile = profiles.get(&job.model.name).ok_or_else(|| {
+            anyhow!("no profile for model `{}` (job `{}`)", job.model.name, job.name)
+        })?;
+        anyhow::ensure!(
+            profile.model == job.model,
+            "profile for `{}` was built for a different model config",
+            job.model.name
+        );
+        for &kind in &kinds {
+            anyhow::ensure!(
+                kind.index() < profile.catalog.len(),
+                "trace kind KindId({}) is not in the profile catalog {}",
+                kind.index(),
+                profile.catalog
+            );
+        }
+        let rcfg = ReplanConfig {
+            objective: job.objective,
+            policy: job.policy,
+            opts: job.opts.clone(),
+            gpus_per_node: cfg.gpus_per_node,
+            envelope: job.envelope,
+            plan_cache: cfg.plan_cache,
+            shared_plan_cache: cfg.shared_plan_cache.clone(),
+            cache_salt: job_cache_salt(&job.model, &job.opts),
+        };
+        let cluster = cluster_for(&profile.catalog, &kinds, &alloc[j], cfg.gpus_per_node);
+        let mut coord =
+            ElasticCoordinator::new_with(job.model.clone(), profile.clone(), cluster, rcfg)?;
+        coord.reprice(&opening)?;
+        states.push(JobState {
+            coord,
+            meter: Meter::default(),
+            t_cursor: 0.0,
+            stopped: None,
+        });
+    }
+
+    let mut rows: Vec<JobRow> = Vec::new();
+    let mut fleet: Vec<FleetRow> = Vec::new();
+    for ev in trace.market_events_iter(cfg.price_rel_threshold) {
+        // 1. bill every live job up to this event on its old share
+        for (j, job) in jobs.iter().enumerate() {
+            let st = &mut states[j];
+            if st.stopped.is_some() {
+                continue;
+            }
+            let active = active_of(&st.coord);
+            let stop = metered_advance(
+                &job.envelope,
+                &mut st.meter,
+                &mut st.t_cursor,
+                ev.at_s,
+                horizon_s,
+                active,
+            )?;
+            match stop {
+                Some(why) => {
+                    let held: usize = alloc[j].iter().sum();
+                    rows.push(exhausted_row(job, st, held, &why));
+                    st.stopped = Some(why);
+                }
+                None => st.coord.note_spend(st.meter.usd),
+            }
+        }
+        // 2. the market's deltas move the shared pool
+        for &(kind, delta) in &ev.deltas {
+            let ki = kinds.iter().position(|&k| k == kind).ok_or_else(|| {
+                anyhow!("event kind KindId({}) is not in the trace kind set", kind.index())
+            })?;
+            pool[ki] = (pool[ki] as i64 + delta).max(0) as usize;
+        }
+        // 3. one clearing pass across all jobs — a preemption for one
+        // job can become a grant for another within this same event
+        let clearing: Vec<ClearingJob> = jobs
+            .iter()
+            .zip(&states)
+            .map(|(j, st)| j.clearing(st.stopped.is_some()))
+            .collect();
+        let next = clear_pool(cfg.policy, &pool, &clearing);
+        // 4. dispatch each live job's share-diff as a synthetic event
+        for (j, job) in jobs.iter().enumerate() {
+            let st = &mut states[j];
+            if st.stopped.is_some() {
+                alloc[j] = next[j].clone();
+                continue;
+            }
+            let deltas: Vec<(KindId, i64)> = kinds
+                .iter()
+                .enumerate()
+                .filter_map(|(ki, &kind)| {
+                    let d = next[j][ki] as i64 - alloc[j][ki] as i64;
+                    (d != 0).then_some((kind, d))
+                })
+                .collect();
+            let granted: usize = deltas.iter().map(|&(_, d)| d.max(0) as usize).sum();
+            let preempted: usize = deltas.iter().map(|&(_, d)| (-d).max(0) as usize).sum();
+            let sev = MarketEvent {
+                at_s: ev.at_s,
+                deltas,
+                prices: ev.prices.clone(),
+                max_price_move: ev.max_price_move,
+            };
+            let out = st.coord.handle_market_event(&sev)?;
+            if out.decision == ReplanDecision::Paused {
+                // a pause abandons the fleet: pending migration debt
+                // dies with it (same rule as the single-job replay)
+                st.meter.pending_migration_s = 0.0;
+            }
+            st.meter.pending_migration_s += out.migration_s;
+            rows.push(JobRow {
+                at_s: ev.at_s,
+                job: job.name.clone(),
+                decision: out.decision,
+                forced: out.forced,
+                gpus: st.coord.cluster.total_gpus(),
+                granted,
+                preempted,
+                iter_s: out.plan.as_ref().map_or(0.0, |p| p.est_iter_s),
+                price_per_hour: out.price_per_hour,
+                migration_s: out.migration_s,
+                tokens_total: st.meter.tokens,
+                usd_total: st.meter.usd,
+                reason: out.reason,
+            });
+            alloc[j] = next[j].clone();
+        }
+        // 5. pool occupancy after the clearing
+        let pool_gpus: usize = pool.iter().sum();
+        let allocated_gpus: usize = alloc.iter().map(|a| a.iter().sum::<usize>()).sum();
+        let utilization =
+            if pool_gpus == 0 { 0.0 } else { allocated_gpus as f64 / pool_gpus as f64 };
+        fleet.push(FleetRow { at_s: ev.at_s, pool_gpus, allocated_gpus, utilization });
+    }
+
+    // bill the tail out to the horizon
+    for (j, job) in jobs.iter().enumerate() {
+        let st = &mut states[j];
+        if st.stopped.is_some() {
+            continue;
+        }
+        let active = active_of(&st.coord);
+        if let Some(why) = metered_advance(
+            &job.envelope,
+            &mut st.meter,
+            &mut st.t_cursor,
+            horizon_s,
+            horizon_s,
+            active,
+        )? {
+            let held: usize = alloc[j].iter().sum();
+            rows.push(exhausted_row(job, st, held, &why));
+            st.stopped = Some(why);
+        }
+    }
+
+    let mut summaries = Vec::with_capacity(jobs.len());
+    let mut plan_cache_hits = 0;
+    let mut plan_solves = 0;
+    for (job, st) in jobs.iter().zip(&states) {
+        plan_cache_hits += st.coord.plan_cache_hits;
+        plan_solves += st.coord.plan_solves;
+        summaries.push(JobSummary {
+            name: job.name.clone(),
+            tokens: st.meter.tokens,
+            usd: st.meter.usd,
+            tokens_per_usd: per_usd(st.meter.tokens, st.meter.usd),
+            train_s: st.meter.train_s,
+            downtime_s: st.meter.downtime_s,
+            paused_s: st.meter.paused_s,
+            switches: st.coord.replans,
+            holds: st.coord.holds,
+            unchanged: st.coord.unchanged,
+            exhausted: st.stopped.is_some(),
+            budget_slack_usd: job.envelope.max_usd.map(|cap| cap - st.meter.usd),
+            deadline_slack_s: job.envelope.deadline_s.map(|d| d - st.t_cursor),
+        });
+    }
+    Ok(SchedulerReport {
+        trace_seed: trace.seed,
+        horizon_s,
+        policy: cfg.policy,
+        jobs: summaries,
+        rows,
+        fleet,
+        plan_cache_hits,
+        plan_solves,
+    })
+}
+
+/// [`run_schedule_with`] plus profile construction: one [`ProfileDb`]
+/// per distinct model at `profile_seed`, shared across the job set.
+pub fn run_schedule(
+    jobs: &[JobSpec],
+    catalog: &GpuCatalog,
+    trace: &SpotTrace,
+    cfg: &SchedulerConfig,
+    profile_seed: u64,
+) -> Result<SchedulerReport> {
+    let profiles = build_profiles(jobs, catalog, profile_seed)?;
+    run_schedule_with(jobs, &profiles, trace, cfg)
+}
+
+/// Monte-Carlo evaluation of a job set: how it fares across `scenarios`
+/// seeded market draws.
+#[derive(Debug, Clone)]
+pub struct SchedSweepConfig {
+    pub scenarios: usize,
+    /// Scenario `i` runs the trace seeded [`scenario_seed`]`(base, i)`.
+    pub base_seed: u64,
+    /// Fan-out width (`None` = all cores). Never changes results.
+    pub threads: Option<usize>,
+    /// Scenarios replayed sequentially to populate the shared cache
+    /// before it is sealed. Ignored when `share_cache` is off or the
+    /// cache is already sealed.
+    pub warmup: usize,
+    /// Share one sealed [`SharedPlanCache`] across all scenarios (and
+    /// all jobs within each — the per-job salts keep entries honest).
+    pub share_cache: bool,
+    pub sched: SchedulerConfig,
+    pub trace: TraceConfig,
+}
+
+impl Default for SchedSweepConfig {
+    fn default() -> Self {
+        SchedSweepConfig {
+            scenarios: 16,
+            base_seed: 42,
+            threads: None,
+            warmup: 1,
+            share_cache: true,
+            sched: SchedulerConfig::default(),
+            trace: TraceConfig::default(),
+        }
+    }
+}
+
+impl SchedSweepConfig {
+    /// Reject degenerate sweeps up front (same contract as
+    /// [`super::sweep::SweepConfig::validate`]).
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.scenarios > 0,
+            "SchedSweepConfig.scenarios is 0 — a sweep needs at least one scenario \
+             (empty Dist order statistics would silently report zeros)"
+        );
+        anyhow::ensure!(
+            self.warmup <= self.scenarios,
+            "SchedSweepConfig.warmup ({}) exceeds scenarios ({}) — the sequential \
+             warm-up cannot replay scenarios the sweep does not contain",
+            self.warmup,
+            self.scenarios
+        );
+        Ok(())
+    }
+}
+
+/// One scenario of a [`sched_sweep`], aggregated over all jobs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SchedScenarioRow {
+    pub index: usize,
+    pub seed: u64,
+    pub tokens: f64,
+    pub usd: f64,
+    pub tokens_per_usd: f64,
+    pub downtime_s: f64,
+    pub switches: usize,
+    /// Jobs whose envelope stopped them before the horizon.
+    pub exhausted_jobs: usize,
+    pub mean_utilization: f64,
+    pub plan_cache_hits: usize,
+    pub plan_solves: usize,
+}
+
+impl SchedScenarioRow {
+    fn from_report(index: usize, seed: u64, r: &SchedulerReport) -> SchedScenarioRow {
+        SchedScenarioRow {
+            index,
+            seed,
+            tokens: r.tokens(),
+            usd: r.usd(),
+            tokens_per_usd: r.tokens_per_usd(),
+            downtime_s: r.jobs.iter().map(|j| j.downtime_s).sum(),
+            switches: r.jobs.iter().map(|j| j.switches).sum(),
+            exhausted_jobs: r.jobs.iter().filter(|j| j.exhausted).count(),
+            mean_utilization: r.mean_utilization(),
+            plan_cache_hits: r.plan_cache_hits,
+            plan_solves: r.plan_solves,
+        }
+    }
+}
+
+/// Distributions over a [`sched_sweep`]'s scenarios.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SchedSweepReport {
+    pub scenarios: usize,
+    pub base_seed: u64,
+    pub policy: ClearingPolicy,
+    pub tokens_per_usd: Dist,
+    pub downtime_s: Dist,
+    pub usd: Dist,
+    pub utilization: Dist,
+    pub plan_cache_hits: usize,
+    pub plan_solves: usize,
+    pub rows: Vec<SchedScenarioRow>,
+}
+
+impl SchedSweepReport {
+    /// Fraction of replans served from a cache across the whole sweep.
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.plan_cache_hits + self.plan_solves;
+        if total == 0 {
+            0.0
+        } else {
+            self.plan_cache_hits as f64 / total as f64
+        }
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = format!(
+            "# scenarios={} base_seed={} policy={}\n",
+            self.scenarios, self.base_seed, self.policy
+        );
+        out.push_str(
+            "scenario,seed,tokens,usd,tokens_per_usd,downtime_s,switches,\
+             exhausted_jobs,mean_utilization\n",
+        );
+        for r in &self.rows {
+            out.push_str(&format!(
+                "{},{},{:.0},{:.2},{:.1},{:.0},{},{},{:.4}\n",
+                r.index,
+                r.seed,
+                r.tokens,
+                r.usd,
+                r.tokens_per_usd,
+                r.downtime_s,
+                r.switches,
+                r.exhausted_jobs,
+                r.mean_utilization
+            ));
+        }
+        out
+    }
+}
+
+/// Evaluate a job set over `cfg.scenarios` seeded market draws.
+///
+/// Deterministic contract (pinned by `tests/property_sched.rs`): for a
+/// fixed `(jobs, catalog, cfg, profile_seed)` — modulo `cfg.threads`
+/// being allowed to vary — the returned report is bit-identical.
+/// Profiles are built once and shared read-only; the shared plan cache
+/// is populated by a sequential warm-up and sealed before the parallel
+/// fan-out, so cache hits cannot depend on scenario scheduling order.
+pub fn sched_sweep(
+    jobs: &[JobSpec],
+    catalog: &GpuCatalog,
+    cfg: &SchedSweepConfig,
+    profile_seed: u64,
+) -> Result<SchedSweepReport> {
+    cfg.validate()?;
+    let profiles = build_profiles(jobs, catalog, profile_seed)?;
+    let threads = par::resolve_threads(cfg.threads);
+    let shared = match (&cfg.sched.shared_plan_cache, cfg.share_cache) {
+        (Some(sc), _) => Some(sc.clone()),
+        (None, true) => Some(Arc::new(SharedPlanCache::new())),
+        (None, false) => None,
+    };
+    let scfg = SchedulerConfig { shared_plan_cache: shared.clone(), ..cfg.sched.clone() };
+    let run = |i: usize| -> Result<SchedScenarioRow> {
+        let seed = scenario_seed(cfg.base_seed, i);
+        let trace = SpotTrace::generate(cfg.trace.clone(), seed);
+        let report = run_schedule_with(jobs, &profiles, &trace, &scfg)?;
+        Ok(SchedScenarioRow::from_report(i, seed, &report))
+    };
+    let warm = match &shared {
+        Some(sc) if !sc.is_sealed() => cfg.warmup,
+        _ => 0,
+    };
+    let mut rows = Vec::with_capacity(cfg.scenarios);
+    for i in 0..warm {
+        rows.push(run(i)?);
+    }
+    if let Some(sc) = &shared {
+        // read-only from here on: hits can no longer depend on which
+        // scenario (or job) ran first
+        sc.seal();
+    }
+    let rest: Vec<usize> = (warm..cfg.scenarios).collect();
+    for r in par::par_map(threads, rest, run) {
+        rows.push(r?);
+    }
+    let of = |f: fn(&SchedScenarioRow) -> f64| rows.iter().map(f).collect::<Vec<_>>();
+    Ok(SchedSweepReport {
+        scenarios: cfg.scenarios,
+        base_seed: cfg.base_seed,
+        policy: cfg.sched.policy,
+        tokens_per_usd: Dist::of(&of(|r| r.tokens_per_usd), true),
+        downtime_s: Dist::of(&of(|r| r.downtime_s), false),
+        usd: Dist::of(&of(|r| r.usd), false),
+        utilization: Dist::of(&of(|r| r.mean_utilization), true),
+        plan_cache_hits: rows.iter().map(|r| r.plan_cache_hits).sum(),
+        plan_solves: rows.iter().map(|r| r.plan_solves).sum(),
+        rows,
+    })
+}
+
+/// Parse a job-set file: `{"pool": "16xA100,8xH800", "jobs": [{...}]}`.
+/// Per job: `name` + `model` (a `ModelCfg::by_name` preset) required;
+/// optional `objective` (`time`/`cost`), `policy`
+/// (`greedy`/`amortized`) with `amortize_h`, `priority`, `weight`,
+/// `max_gpus`, `budget_usd`, `deadline_h`. Returns the optional pool
+/// counts string (CLI `--counts` syntax) and the admitted jobs.
+pub fn load_jobs_file(path: &Path) -> Result<(Option<String>, Vec<JobSpec>)> {
+    let doc = Json::parse_file(path)?;
+    let pool = doc.get("pool").and_then(|p| p.as_str().map(str::to_string));
+    let arr = doc
+        .req("jobs")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("{}: `jobs` must be an array", path.display()))?;
+    let mut jobs = Vec::with_capacity(arr.len());
+    for (i, item) in arr.iter().enumerate() {
+        jobs.push(
+            job_from_json(item).with_context(|| format!("jobs[{i}] in {}", path.display()))?,
+        );
+    }
+    anyhow::ensure!(!jobs.is_empty(), "{}: `jobs` is empty", path.display());
+    Ok((pool, jobs))
+}
+
+fn job_from_json(j: &Json) -> Result<JobSpec> {
+    let name = j
+        .req("name")?
+        .as_str()
+        .ok_or_else(|| anyhow!("`name` must be a string"))?
+        .to_string();
+    let model_name =
+        j.req("model")?.as_str().ok_or_else(|| anyhow!("`model` must be a string"))?;
+    let model = ModelCfg::by_name(model_name)
+        .ok_or_else(|| anyhow!("unknown model `{model_name}` (see `autohet models`)"))?;
+    let objective = match j.get("objective").and_then(Json::as_str) {
+        Some(s) => s.parse::<Objective>()?,
+        None => Objective::Time,
+    };
+    let amortize_h = j.get("amortize_h").and_then(Json::as_f64);
+    let policy = match j.get("policy").and_then(Json::as_str) {
+        None | Some("amortized") => {
+            let mut p = ReplanPolicy::default();
+            if let (ReplanPolicy::Amortized { horizon_s, .. }, Some(h)) = (&mut p, amortize_h) {
+                *horizon_s = h * 3600.0;
+            }
+            p
+        }
+        Some("greedy") => ReplanPolicy::Greedy,
+        Some(other) => anyhow::bail!("unknown policy `{other}` (want `greedy` or `amortized`)"),
+    };
+    let envelope = BudgetEnvelope {
+        max_usd: j.get("budget_usd").and_then(Json::as_f64),
+        deadline_s: j.get("deadline_h").and_then(Json::as_f64).map(|h| h * 3600.0),
+    };
+    Ok(JobSpec {
+        name,
+        model,
+        objective,
+        policy,
+        opts: PlanOptions { bench: envelope.is_bounded(), ..PlanOptions::default() },
+        envelope,
+        priority: j.get("priority").and_then(Json::as_usize).unwrap_or(0),
+        weight: j.get("weight").and_then(Json::as_f64).unwrap_or(1.0),
+        max_gpus: j.get("max_gpus").and_then(Json::as_usize),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const NO_CAP: usize = usize::MAX;
+
+    #[test]
+    fn fair_split_largest_remainder_ties_to_earlier_share() {
+        // 5 split 1:1 → ideal 2.5 each; the leftover unit goes to the
+        // earlier share, deterministically
+        assert_eq!(fair_split(5, &[(1.0, NO_CAP), (1.0, NO_CAP)]), vec![3, 2]);
+        // weights steer the proportion
+        assert_eq!(fair_split(9, &[(2.0, NO_CAP), (1.0, NO_CAP)]), vec![6, 3]);
+    }
+
+    #[test]
+    fn fair_split_redistributes_capped_shares() {
+        // share 0 caps out at 2; its surplus flows to share 1
+        assert_eq!(fair_split(8, &[(1.0, 2), (1.0, NO_CAP)]), vec![2, 6]);
+        // everyone capped: leftover units stay unallocated
+        assert_eq!(fair_split(10, &[(1.0, 3), (1.0, 2)]), vec![3, 2]);
+    }
+
+    #[test]
+    fn fair_split_ignores_zero_weight_shares() {
+        assert_eq!(fair_split(4, &[(0.0, 10), (2.0, 10)]), vec![0, 4]);
+        assert_eq!(fair_split(4, &[]), Vec::<usize>::new());
+    }
+
+    fn job(priority: usize, weight: f64, max_gpus: Option<usize>) -> ClearingJob {
+        ClearingJob { priority, weight, max_gpus, stopped: false }
+    }
+
+    #[test]
+    fn priority_clearing_fills_by_rank_then_cap() {
+        let pool = [8, 4];
+        // lower priority value wins; job 1 outranks job 0
+        let ranked = [job(1, 1.0, None), job(0, 1.0, None)];
+        let alloc = clear_pool(ClearingPolicy::Priority, &pool, &ranked);
+        assert_eq!(alloc, vec![vec![0, 0], vec![8, 4]]);
+        // a capped winner leaves the rest to the runner-up
+        let capped = [job(1, 1.0, None), job(0, 1.0, Some(6))];
+        let alloc = clear_pool(ClearingPolicy::Priority, &pool, &capped);
+        assert_eq!(alloc, vec![vec![2, 4], vec![6, 0]]);
+    }
+
+    #[test]
+    fn fair_share_respects_global_cap_across_kinds() {
+        let pool = [4, 4];
+        let jobs = [job(0, 1.0, Some(3)), job(0, 1.0, None)];
+        let alloc = clear_pool(ClearingPolicy::FairShare, &pool, &jobs);
+        // kind 0 splits 2/2; job 0 has 1 GPU of cap left, so kind 1
+        // goes 1/3 — the cap's surplus clears to job 1
+        assert_eq!(alloc, vec![vec![2, 1], vec![2, 3]]);
+        assert_eq!(alloc[0].iter().sum::<usize>(), 3);
+    }
+
+    #[test]
+    fn stopped_jobs_release_their_share() {
+        let pool = [8];
+        let stopped = ClearingJob { priority: 0, weight: 1.0, max_gpus: None, stopped: true };
+        for policy in [ClearingPolicy::Priority, ClearingPolicy::FairShare] {
+            let alloc = clear_pool(policy, &pool, &[stopped, job(1, 1.0, None)]);
+            assert_eq!(alloc, vec![vec![0], vec![8]], "{policy}");
+        }
+    }
+
+    #[test]
+    fn clearing_policy_round_trips_through_strings() {
+        assert_eq!("priority".parse::<ClearingPolicy>().unwrap(), ClearingPolicy::Priority);
+        assert_eq!("fair".parse::<ClearingPolicy>().unwrap(), ClearingPolicy::FairShare);
+        assert!("nope".parse::<ClearingPolicy>().is_err());
+    }
+
+    fn small_trace_cfg() -> TraceConfig {
+        TraceConfig {
+            step_s: 1800.0,
+            horizon_s: 4.0 * 3600.0,
+            capacity: vec![(KindId::A100, 16), (KindId::H800, 8)],
+            ..TraceConfig::default()
+        }
+    }
+
+    #[test]
+    fn schedule_runs_are_deterministic_and_conserve_the_pool() {
+        let catalog = GpuCatalog::builtin();
+        let jobs = vec![
+            JobSpec::new("alpha", ModelCfg::bert_large()),
+            JobSpec { priority: 1, ..JobSpec::new("beta", ModelCfg::bert_large()) },
+        ];
+        let trace = SpotTrace::generate(small_trace_cfg(), 7);
+        let cfg = SchedulerConfig::default();
+        let a = run_schedule(&jobs, &catalog, &trace, &cfg, 1).unwrap();
+        let b = run_schedule(&jobs, &catalog, &trace, &cfg, 1).unwrap();
+        assert_eq!(a, b, "same inputs must replay bit-identically");
+        assert_eq!(a.jobs.len(), 2);
+        assert!(!a.fleet.is_empty());
+        for f in &a.fleet {
+            assert!(
+                f.allocated_gpus <= f.pool_gpus,
+                "clearing over-allocated: {} > {} at {}s",
+                f.allocated_gpus,
+                f.pool_gpus,
+                f.at_s
+            );
+        }
+        // both CSVs parse out to one line per row plus preamble
+        assert_eq!(a.to_csv().lines().count(), 2 + a.rows.len());
+        assert_eq!(a.fleet_csv().lines().count(), 2 + a.fleet.len());
+    }
+
+    #[test]
+    fn degenerate_sched_sweeps_error_up_front() {
+        let cfg = SchedSweepConfig { scenarios: 0, ..SchedSweepConfig::default() };
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("scenarios is 0"), "{err}");
+        let cfg = SchedSweepConfig { scenarios: 2, warmup: 5, ..SchedSweepConfig::default() };
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("warmup (5) exceeds scenarios (2)"), "{err}");
+    }
+
+    #[test]
+    fn duplicate_job_names_are_rejected() {
+        let catalog = GpuCatalog::builtin();
+        let jobs = vec![
+            JobSpec::new("same", ModelCfg::bert_large()),
+            JobSpec::new("same", ModelCfg::bert_large()),
+        ];
+        let trace = SpotTrace::generate(small_trace_cfg(), 7);
+        let err = run_schedule(&jobs, &catalog, &trace, &SchedulerConfig::default(), 1)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("duplicate job name"), "{err}");
+    }
+}

@@ -102,6 +102,29 @@ impl Default for SweepConfig {
     }
 }
 
+impl SweepConfig {
+    /// Reject degenerate sweep shapes up front with a named error
+    /// (mirroring the zero-step-trace guard in `replay`): zero scenarios
+    /// would aggregate empty `Dist` order statistics into silent zeros,
+    /// and a warm-up longer than the sweep would run the whole
+    /// "parallel" phase sequentially while claiming a fan-out.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.scenarios > 0,
+            "SweepConfig.scenarios is 0 — a sweep needs at least one scenario \
+             (empty Dist order statistics would silently report zeros)"
+        );
+        anyhow::ensure!(
+            self.warmup <= self.scenarios,
+            "SweepConfig.warmup ({}) exceeds scenarios ({}) — the sequential \
+             warm-up cannot replay scenarios the sweep does not contain",
+            self.warmup,
+            self.scenarios
+        );
+        Ok(())
+    }
+}
+
 /// Summary statistics of one metric over the sweep's scenarios.
 ///
 /// `p50`/`p95` are order statistics of the raw per-scenario values
@@ -290,13 +313,14 @@ fn sweep_with_cache(
     cfg: &SweepConfig,
     shared: Option<&Arc<SharedPlanCache>>,
 ) -> Result<SweepReport> {
+    cfg.validate()?;
     let threads = par::resolve_threads(cfg.threads);
     let rcfg = ReplayConfig {
         shared_plan_cache: shared.cloned(),
         ..cfg.replay.clone()
     };
     let warm = match shared {
-        Some(sc) if !sc.is_sealed() => cfg.warmup.min(cfg.scenarios),
+        Some(sc) if !sc.is_sealed() => cfg.warmup,
         _ => 0,
     };
     let mut rows = Vec::with_capacity(cfg.scenarios);
@@ -522,6 +546,24 @@ mod tests {
         assert!(lines[0].starts_with("# base_seed=11"));
         assert!(lines[1].starts_with("scenario,seed,tokens"));
         assert_eq!(lines.len(), report.rows.len() + 2);
+    }
+
+    #[test]
+    fn degenerate_sweep_configs_error_up_front() {
+        let p = profile();
+        let zero = SweepConfig { scenarios: 0, ..small_cfg(1) };
+        let err = sweep(&p, &zero).unwrap_err().to_string();
+        assert!(err.contains("scenarios is 0"), "{err}");
+        let over = SweepConfig { warmup: 5, ..small_cfg(2) };
+        let err = sweep(&p, &over).unwrap_err().to_string();
+        assert!(err.contains("warmup (5) exceeds scenarios (2)"), "{err}");
+        // the A/B path routes through the same validation
+        let err = sweep_ab(&p, &over, &over.replay.clone()).unwrap_err().to_string();
+        assert!(err.contains("warmup"), "{err}");
+        // the boundary case warmup == scenarios is legal
+        let edge = SweepConfig { warmup: 2, ..small_cfg(2) };
+        edge.validate().unwrap();
+        assert_eq!(sweep(&p, &edge).unwrap().rows.len(), 2);
     }
 
     #[test]

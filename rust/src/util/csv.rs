@@ -1,0 +1,53 @@
+//! Minimal RFC-4180 CSV field escaping for the report emitters.
+//!
+//! Every `to_csv()` in the crate routes its *string* fields through
+//! [`csv_field`] so a replan reason containing a comma, quote, or
+//! newline cannot corrupt the row grid. Numeric fields are formatted
+//! directly (they can never contain a delimiter).
+
+/// Escape one CSV field per RFC 4180: fields containing a comma,
+/// double-quote, CR, or LF are wrapped in double-quotes with embedded
+/// quotes doubled; everything else is passed through unchanged (so
+/// delimiter-free reasons stay byte-identical to the unescaped form).
+pub fn csv_field(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') || s.contains('\r') {
+        let mut out = String::with_capacity(s.len() + 2);
+        out.push('"');
+        for c in s.chars() {
+            if c == '"' {
+                out.push('"');
+            }
+            out.push(c);
+        }
+        out.push('"');
+        out
+    } else {
+        s.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plain_fields_pass_through_unquoted() {
+        assert_eq!(csv_field("kept"), "kept");
+        assert_eq!(csv_field("hold: gain 1.2% below threshold"), "hold: gain 1.2% below threshold");
+        assert_eq!(csv_field(""), "");
+    }
+
+    #[test]
+    fn delimiters_force_quoting() {
+        assert_eq!(csv_field("a,b"), "\"a,b\"");
+        assert_eq!(csv_field("line1\nline2"), "\"line1\nline2\"");
+        assert_eq!(csv_field("cr\rhere"), "\"cr\rhere\"");
+    }
+
+    #[test]
+    fn embedded_quotes_are_doubled() {
+        assert_eq!(csv_field("say \"hi\""), "\"say \"\"hi\"\"\"");
+        // The ISSUE's regression payload: a reason containing `", \n`.
+        assert_eq!(csv_field("held: \"spike\", \nretry"), "\"held: \"\"spike\"\", \nretry\"");
+    }
+}

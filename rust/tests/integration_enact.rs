@@ -300,6 +300,38 @@ fn async_enact_is_bit_identical_to_sync_at_any_worker_count() {
 }
 
 #[test]
+fn async_timing_model_matches_sync_bit_for_bit() {
+    let Some(e) = engine() else { return };
+    let p = profile();
+    let trace = three_event_trace();
+
+    let mut sc = cfg("ratio-sync");
+    sc.ckpt_codec = Codec::Delta;
+    let sync = enact(&e, &p, &trace, &sc).unwrap();
+    let mut ac = cfg("ratio-async");
+    ac.ckpt_codec = Codec::Delta;
+    ac.ckpt_workers = 4;
+    let bg = enact(&e, &p, &trace, &ac).unwrap();
+
+    assert_eq!(bg.rows.len(), sync.rows.len());
+    for (a, s) in bg.rows.iter().zip(&sync.rows) {
+        // the Fig-10 recovery estimate prices the *measured* compression
+        // ratio of the checkpoint it restores; backgrounding the save
+        // must not shift either by a single bit
+        assert_eq!(a.timing_model_s.to_bits(), s.timing_model_s.to_bits(), "at {}s", a.at_s);
+        assert_eq!(a.save_ratio.to_bits(), s.save_ratio.to_bits(), "at {}s", a.at_s);
+        // and the reported ratio is the committed save's own, never a
+        // stale or default one
+        if a.save.bytes_raw > 0 {
+            assert_eq!(a.save_ratio, a.save.compression_ratio(), "at {}s", a.at_s);
+        }
+        assert!(a.save_ratio > 0.0 && a.save_ratio.is_finite(), "at {}s", a.at_s);
+    }
+    // the invariant is vacuous unless some row actually committed bytes
+    assert!(sync.rows.iter().any(|r| r.save.bytes_raw > 0), "no save committed");
+}
+
+#[test]
 fn codec_compression_never_perturbs_training() {
     let Some(e) = engine() else { return };
     let p = profile();

@@ -1,0 +1,195 @@
+//! Property tests for the multi-job spot scheduler
+//! (`recovery::scheduler`):
+//!
+//! 1. **Same-event rerouting** — on a hand-built two-kind trace, one
+//!    market event both preempts job A and grants job B (priority
+//!    clearing caps A, so the H800 grant splits across jobs at the
+//!    same `at_s`).
+//! 2. **Exhaustion clears to the survivors** — a job that spends out
+//!    its [`BudgetEnvelope`] releases its whole share, and the next
+//!    clearing grants it to the surviving job with **zero** market
+//!    delta: A's preemption literally becomes B's grant.
+//! 3. **Policy divergence** — the identical trace clears 16/0 under
+//!    strict priority and 8/8 under equal-weight fair-share.
+//! 4. **Thread-count bit-identity** — a 3-job/2-kind Monte-Carlo sweep
+//!    returns the identical `SchedSweepReport` (rows, distributions,
+//!    cache counters, CSV bytes) at 1, 2, and 8 threads, and across
+//!    repeated runs: clearing is pure, jobs are visited in admission
+//!    order, and the shared plan cache is sealed before the fan-out.
+
+use autohet::cluster::{GpuCatalog, KindId, SpotTrace, TraceConfig};
+use autohet::modelcfg::ModelCfg;
+use autohet::planner::{BudgetEnvelope, Objective};
+use autohet::recovery::{
+    run_schedule, sched_sweep, ClearingPolicy, JobSpec, ReplanDecision, ReplanPolicy,
+    SchedSweepConfig, SchedulerConfig,
+};
+
+fn hand_trace(
+    capacity: Vec<(KindId, usize)>,
+    step_s: f64,
+    avail: Vec<Vec<usize>>,
+    prices: Vec<Vec<f64>>,
+) -> SpotTrace {
+    let kinds: Vec<KindId> = capacity.iter().map(|&(k, _)| k).collect();
+    let cfg = TraceConfig {
+        step_s,
+        horizon_s: avail.len() as f64 * step_s,
+        capacity,
+        ..TraceConfig::default()
+    };
+    SpotTrace { cfg, kinds, avail, prices, seed: 0 }
+}
+
+#[test]
+fn one_event_preempts_job_a_and_grants_job_b() {
+    // open with 8 A100 (all to alpha); the one market event preempts
+    // 2 A100 and grants 4 H800 — alpha (capped at 8) absorbs only 2 of
+    // them, so beta's first GPUs arrive in the very same event
+    let trace = hand_trace(
+        vec![(KindId::A100, 8), (KindId::H800, 4)],
+        600.0,
+        vec![vec![8, 0], vec![6, 4], vec![6, 4]],
+        vec![vec![1.2, 1.0], vec![1.2, 1.0], vec![1.2, 1.0]],
+    );
+    let jobs = vec![
+        JobSpec { max_gpus: Some(8), ..JobSpec::new("alpha", ModelCfg::bert_large()) },
+        JobSpec { priority: 1, ..JobSpec::new("beta", ModelCfg::bert_large()) },
+    ];
+    let cfg = SchedulerConfig { policy: ClearingPolicy::Priority, ..Default::default() };
+    let report = run_schedule(&jobs, &GpuCatalog::builtin(), &trace, &cfg, 1).unwrap();
+
+    let at = |name: &str| {
+        report
+            .rows
+            .iter()
+            .find(|r| r.job == name && (r.at_s - 600.0).abs() < 1e-9)
+            .unwrap_or_else(|| panic!("no 600s row for {name}"))
+    };
+    let a = at("alpha");
+    assert_eq!((a.preempted, a.granted, a.gpus), (2, 2, 8), "alpha: {a:?}");
+    let b = at("beta");
+    assert_eq!((b.preempted, b.granted, b.gpus), (0, 2, 2), "beta: {b:?}");
+    // the whole surviving pool is re-placed by the same clearing pass
+    let fleet = &report.fleet[0];
+    assert_eq!((fleet.pool_gpus, fleet.allocated_gpus), (10, 10));
+    assert!((fleet.utilization - 1.0).abs() < 1e-9);
+}
+
+#[test]
+fn exhausted_job_releases_its_share_to_the_survivor() {
+    // flat availability: the only market event is the price move at
+    // 1200s. alpha's $0.20 budget dies long before that, so the event's
+    // clearing hands alpha's 8 GPUs to beta with zero market delta.
+    let trace = hand_trace(
+        vec![(KindId::A100, 16)],
+        600.0,
+        vec![vec![16], vec![16], vec![16]],
+        vec![vec![1.0], vec![1.0], vec![2.0]],
+    );
+    let jobs = vec![
+        JobSpec {
+            envelope: BudgetEnvelope { max_usd: Some(0.2), deadline_s: None },
+            ..JobSpec::new("alpha", ModelCfg::bert_large())
+        },
+        JobSpec::new("beta", ModelCfg::bert_large()),
+    ];
+    let cfg = SchedulerConfig { policy: ClearingPolicy::FairShare, ..Default::default() };
+    let report = run_schedule(&jobs, &GpuCatalog::builtin(), &trace, &cfg, 1).unwrap();
+
+    let a = report
+        .rows
+        .iter()
+        .find(|r| r.decision == ReplanDecision::BudgetExhausted)
+        .expect("alpha never exhausted");
+    assert_eq!(a.job, "alpha");
+    assert!(a.at_s < 1200.0, "stopped at {}s, after the event", a.at_s);
+    assert_eq!(a.preempted, 8, "alpha's whole share is released");
+    assert!((a.usd_total - 0.2).abs() < 1e-6, "spent ${}", a.usd_total);
+    let b = report
+        .rows
+        .iter()
+        .find(|r| r.job == "beta" && (r.at_s - 1200.0).abs() < 1e-9)
+        .expect("no 1200s row for beta");
+    assert_eq!((b.granted, b.preempted, b.gpus), (8, 0, 16), "beta: {b:?}");
+    assert!(report.jobs[0].exhausted && !report.jobs[1].exhausted);
+    // fairness bookkeeping: the slack is what was left of the cap
+    let slack = report.jobs[0].budget_slack_usd.unwrap();
+    assert!(slack.abs() < 1e-6, "budget slack {slack}");
+}
+
+#[test]
+fn priority_and_fair_share_clear_the_same_trace_differently() {
+    let trace = hand_trace(
+        vec![(KindId::A100, 16)],
+        600.0,
+        vec![vec![16], vec![16], vec![16]],
+        vec![vec![1.0], vec![1.0], vec![2.0]],
+    );
+    let jobs = vec![
+        JobSpec::new("alpha", ModelCfg::bert_large()),
+        JobSpec { priority: 1, ..JobSpec::new("beta", ModelCfg::bert_large()) },
+    ];
+    let catalog = GpuCatalog::builtin();
+    let prio_cfg = SchedulerConfig { policy: ClearingPolicy::Priority, ..Default::default() };
+    let fair_cfg = SchedulerConfig { policy: ClearingPolicy::FairShare, ..Default::default() };
+    let prio = run_schedule(&jobs, &catalog, &trace, &prio_cfg, 1).unwrap();
+    let fair = run_schedule(&jobs, &catalog, &trace, &fair_cfg, 1).unwrap();
+
+    let gpus = |r: &autohet::recovery::SchedulerReport, name: &str| {
+        r.rows.iter().find(|row| row.job == name).map(|row| row.gpus).unwrap()
+    };
+    assert_eq!((gpus(&prio, "alpha"), gpus(&prio, "beta")), (16, 0));
+    assert_eq!((gpus(&fair, "alpha"), gpus(&fair, "beta")), (8, 8));
+    assert_ne!(prio, fair);
+}
+
+fn sweep_jobs() -> Vec<JobSpec> {
+    vec![
+        JobSpec { weight: 2.0, ..JobSpec::new("prod", ModelCfg::bert_large()) },
+        JobSpec {
+            priority: 1,
+            objective: Objective::Cost,
+            max_gpus: Some(8),
+            ..JobSpec::new("research", ModelCfg::bert_large())
+        },
+        JobSpec {
+            priority: 2,
+            weight: 0.5,
+            policy: ReplanPolicy::Greedy,
+            ..JobSpec::new("background", ModelCfg::bert_large())
+        },
+    ]
+}
+
+fn sweep_cfg(threads: usize) -> SchedSweepConfig {
+    SchedSweepConfig {
+        scenarios: 3,
+        base_seed: 42,
+        threads: Some(threads),
+        warmup: 1,
+        trace: TraceConfig {
+            step_s: 1800.0,
+            horizon_s: 6.0 * 3600.0,
+            capacity: vec![(KindId::A100, 16), (KindId::H800, 8)],
+            ..TraceConfig::default()
+        },
+        ..SchedSweepConfig::default()
+    }
+}
+
+#[test]
+fn sched_sweep_is_bit_identical_at_any_thread_count() {
+    let jobs = sweep_jobs();
+    let catalog = GpuCatalog::builtin();
+    let r1 = sched_sweep(&jobs, &catalog, &sweep_cfg(1), 7).unwrap();
+    let r2 = sched_sweep(&jobs, &catalog, &sweep_cfg(2), 7).unwrap();
+    let r8 = sched_sweep(&jobs, &catalog, &sweep_cfg(8), 7).unwrap();
+    assert_eq!(r1, r2, "threads=1 vs threads=2 diverged");
+    assert_eq!(r2, r8, "threads=2 vs threads=8 diverged");
+    assert_eq!(r1.to_csv(), r8.to_csv());
+    // and across runs of the same config (fresh caches, same bits)
+    let again = sched_sweep(&jobs, &catalog, &sweep_cfg(2), 7).unwrap();
+    assert_eq!(r2, again, "repeated run diverged");
+    assert_eq!(r1.rows.len(), 3);
+}
