@@ -6,10 +6,12 @@
 
 pub mod catalog;
 pub mod gpu;
+pub mod region;
 pub mod spec;
 pub mod trace;
 
 pub use catalog::{GpuCatalog, GpuSpec, KindId, KindVec};
 pub use gpu::Interconnect;
+pub use region::{region_seed, RegionId, RegionMap, RegionSpec, RegionalTrace};
 pub use spec::{ClusterSpec, GpuRef, NodeSpec};
 pub use trace::{MarketEvent, MarketEvents, PreemptionEvent, SpotTrace, TraceConfig};

@@ -1,0 +1,455 @@
+//! Regional spot pools: correlated markets per region and the egress
+//! price matrix that cross-region migrations pay.
+//!
+//! Real spot markets are regional. Prices carry a per-region level, and
+//! preemption storms are *correlated within a region*: a capacity crunch
+//! takes out every GPU kind there at once — which is exactly when
+//! cross-region arbitrage pays. A [`RegionMap`] names the regions, their
+//! price levels, their storm climates, and the egress $/GB matrix; a
+//! [`RegionalTrace`] derives one [`SpotTrace`] per region from a single
+//! base [`TraceConfig`] and seed (region 0 keeps the caller's seed, so a
+//! single-region regional trace is **bit-identical** to a solo
+//! `SpotTrace::generate`), and merges the per-region event streams into
+//! one time-ordered market feed the regional replay engine
+//! (`recovery::regions`) consumes.
+//!
+//! The JSON schema (`examples/regions.json`) is pinned by this doctest:
+//!
+//! ```
+//! use autohet::cluster::region::RegionMap;
+//! use autohet::util::json::Json;
+//!
+//! let doc = r#"{
+//!     "regions": [
+//!         {"name": "region-a", "storm_prob": 0.05, "storm_sev": 1.0, "storm_len": 4},
+//!         {"name": "region-b", "price_mult": 1.15}
+//!     ],
+//!     "egress_usd_per_gb": [[0.0, 0.08], [0.08, 0.0]]
+//! }"#;
+//! let map = RegionMap::from_json(&Json::parse(doc).unwrap()).unwrap();
+//! assert_eq!(map.len(), 2);
+//! assert!((map.egress(autohet::cluster::RegionId(0), autohet::cluster::RegionId(1)) - 0.08).abs() < 1e-12);
+//! assert!((map.regions[1].price_mult - 1.15).abs() < 1e-12);
+//! ```
+
+use anyhow::{anyhow, bail, Result};
+
+use super::trace::{MarketEvent, SpotTrace, TraceConfig};
+use crate::util::json::Json;
+
+/// Dense index of a region within a [`RegionMap`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct RegionId(pub usize);
+
+impl RegionId {
+    pub fn index(self) -> usize {
+        self.0
+    }
+}
+
+/// One spot region: a price level and a storm climate layered on top of
+/// the shared base [`TraceConfig`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegionSpec {
+    /// Region key, e.g. `"us-east"`. Unique case-insensitively.
+    pub name: String,
+    /// Regional price level: multiplies every kind's base-price anchor
+    /// (1.0 = the catalog's level).
+    pub price_mult: f64,
+    /// Probability per trace step that a region-wide capacity storm
+    /// starts ([`TraceConfig::storm_prob`]).
+    pub storm_prob: f64,
+    /// Fraction of availability a storm step destroys (1.0 = the region
+    /// goes dark).
+    pub storm_sev: f64,
+    /// Storm duration in steps.
+    pub storm_len: usize,
+}
+
+impl Default for RegionSpec {
+    fn default() -> Self {
+        RegionSpec {
+            name: "local".to_string(),
+            price_mult: 1.0,
+            storm_prob: 0.0,
+            storm_sev: 1.0,
+            storm_len: 3,
+        }
+    }
+}
+
+/// The region universe: per-region market knobs plus the egress $/GB
+/// matrix cross-region migrations pay on the checkpoint bytes that move.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegionMap {
+    pub regions: Vec<RegionSpec>,
+    /// `egress_usd_per_gb[from][to]`: dollars per GB billed when a
+    /// checkpoint leaves region `from` for region `to`. The diagonal is
+    /// zero — moving within a region is not an egress event.
+    pub egress_usd_per_gb: Vec<Vec<f64>>,
+}
+
+impl RegionMap {
+    /// The pre-region world: one storm-free region at the catalog price
+    /// level, zero egress. Replays over this map are bit-identical to
+    /// region-free replays.
+    pub fn single() -> RegionMap {
+        RegionMap {
+            regions: vec![RegionSpec::default()],
+            egress_usd_per_gb: vec![vec![0.0]],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.regions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.regions.is_empty()
+    }
+
+    /// Egress $/GB for a `from -> to` move. Panics on a foreign
+    /// [`RegionId`] (ids are only meaningful relative to one map).
+    pub fn egress(&self, from: RegionId, to: RegionId) -> f64 {
+        self.egress_usd_per_gb[from.0][to.0]
+    }
+
+    pub fn name(&self, id: RegionId) -> &str {
+        &self.regions[id.0].name
+    }
+
+    /// Case-insensitive name lookup; the error lists every known region.
+    pub fn lookup(&self, name: &str) -> Result<RegionId> {
+        self.regions
+            .iter()
+            .position(|r| r.name.eq_ignore_ascii_case(name))
+            .map(RegionId)
+            .ok_or_else(|| {
+                anyhow!(
+                    "unknown region `{name}`; known regions: [{}]",
+                    self.regions.iter().map(|r| r.name.as_str()).collect::<Vec<_>>().join(", ")
+                )
+            })
+    }
+
+    /// Reject malformed maps with named errors (the regions analogue of
+    /// `TraceConfig::validate`).
+    pub fn validate(&self) -> Result<()> {
+        if self.regions.is_empty() {
+            bail!("RegionMap.regions is empty — at least one region is required");
+        }
+        for (i, r) in self.regions.iter().enumerate() {
+            if r.name.is_empty() {
+                bail!("RegionMap.regions[{i}].name must be non-empty");
+            }
+            if self.regions[..i].iter().any(|o| o.name.eq_ignore_ascii_case(&r.name)) {
+                bail!("duplicate region name `{}` in RegionMap", r.name);
+            }
+            if !r.price_mult.is_finite() || r.price_mult <= 0.0 {
+                bail!("region `{}`: price_mult ({}) must be finite and positive", r.name, r.price_mult);
+            }
+            for (knob, v) in [("storm_prob", r.storm_prob), ("storm_sev", r.storm_sev)] {
+                if !v.is_finite() || !(0.0..=1.0).contains(&v) {
+                    bail!("region `{}`: {knob} ({v}) must be a finite fraction in [0, 1]", r.name);
+                }
+            }
+            if r.storm_len == 0 {
+                bail!("region `{}`: storm_len is 0 — a storm must last at least one step", r.name);
+            }
+        }
+        if self.egress_usd_per_gb.len() != self.regions.len() {
+            bail!(
+                "RegionMap.egress_usd_per_gb has {} rows for {} regions — the matrix must be square",
+                self.egress_usd_per_gb.len(),
+                self.regions.len()
+            );
+        }
+        for (i, row) in self.egress_usd_per_gb.iter().enumerate() {
+            if row.len() != self.regions.len() {
+                bail!(
+                    "RegionMap.egress_usd_per_gb[{i}] has {} columns for {} regions",
+                    row.len(),
+                    self.regions.len()
+                );
+            }
+            for (j, &v) in row.iter().enumerate() {
+                if !v.is_finite() || v < 0.0 {
+                    bail!("RegionMap.egress_usd_per_gb[{i}][{j}] ({v}) must be finite and non-negative");
+                }
+                if i == j && v != 0.0 {
+                    bail!(
+                        "RegionMap.egress_usd_per_gb[{i}][{i}] ({v}) must be 0 — \
+                         intra-region moves pay no egress"
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    // ---------- JSON ----------
+    //
+    // Schema (see `examples/regions.json` and the module doctest):
+    // `{"regions": [{"name": "...", "price_mult": 1.0, "storm_prob": 0.0,
+    //   "storm_sev": 1.0, "storm_len": 3}, ...],
+    //   "egress_usd_per_gb": [[...], ...] | 0.08}`
+    // `egress_usd_per_gb` may be a full matrix or a single scalar applied
+    // to every off-diagonal pair; omitted entirely it defaults to 0.
+    pub fn from_json(j: &Json) -> Result<RegionMap> {
+        let regions = j
+            .req("regions")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("RegionMap `regions` must be an array"))?
+            .iter()
+            .map(|r| {
+                let d = RegionSpec::default();
+                Ok(RegionSpec {
+                    name: r
+                        .req("name")?
+                        .as_str()
+                        .ok_or_else(|| anyhow!("region `name` must be a string"))?
+                        .to_string(),
+                    price_mult: r.get("price_mult").and_then(|v| v.as_f64()).unwrap_or(d.price_mult),
+                    storm_prob: r.get("storm_prob").and_then(|v| v.as_f64()).unwrap_or(d.storm_prob),
+                    storm_sev: r.get("storm_sev").and_then(|v| v.as_f64()).unwrap_or(d.storm_sev),
+                    storm_len: r.get("storm_len").and_then(|v| v.as_usize()).unwrap_or(d.storm_len),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let n = regions.len();
+        let egress_usd_per_gb = match j.get("egress_usd_per_gb") {
+            None => vec![vec![0.0; n]; n],
+            Some(e) => {
+                if let Some(flat) = e.as_f64() {
+                    (0..n)
+                        .map(|i| (0..n).map(|j| if i == j { 0.0 } else { flat }).collect())
+                        .collect()
+                } else {
+                    e.as_arr()
+                        .ok_or_else(|| {
+                            anyhow!("`egress_usd_per_gb` must be a matrix or a single $/GB number")
+                        })?
+                        .iter()
+                        .map(|row| {
+                            row.as_arr()
+                                .ok_or_else(|| anyhow!("`egress_usd_per_gb` rows must be arrays"))?
+                                .iter()
+                                .map(|v| {
+                                    v.as_f64().ok_or_else(|| {
+                                        anyhow!("`egress_usd_per_gb` entries must be numbers")
+                                    })
+                                })
+                                .collect::<Result<Vec<f64>>>()
+                        })
+                        .collect::<Result<Vec<_>>>()?
+                }
+            }
+        };
+        let map = RegionMap { regions, egress_usd_per_gb };
+        map.validate()?;
+        Ok(map)
+    }
+}
+
+/// The per-region trace seed. Region 0 keeps the caller's seed
+/// untouched, so a single-region [`RegionalTrace`] reproduces a solo
+/// [`SpotTrace::generate`] bit for bit; other regions get independent
+/// splitmix-style derived streams.
+pub fn region_seed(seed: u64, region: usize) -> u64 {
+    seed ^ (region as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15).rotate_left(17)
+}
+
+/// One spot market per region, all derived from a single base config and
+/// seed. `traces[r]` layers region `r`'s price level and storm climate
+/// onto the base [`TraceConfig`].
+#[derive(Debug, Clone)]
+pub struct RegionalTrace {
+    pub map: RegionMap,
+    pub traces: Vec<SpotTrace>,
+    pub seed: u64,
+}
+
+impl RegionalTrace {
+    /// Generate every region's trace. The base config's own
+    /// storm/price-level knobs are *composed with* each region's
+    /// ([`RegionSpec::price_mult`] multiplies, storm knobs override), so
+    /// a map whose region 0 is the default spec reproduces
+    /// `SpotTrace::generate(base, seed)` bit-identically.
+    pub fn generate(base: &TraceConfig, map: &RegionMap, seed: u64) -> Result<RegionalTrace> {
+        base.validate()?;
+        map.validate()?;
+        let traces = map
+            .regions
+            .iter()
+            .enumerate()
+            .map(|(r, spec)| {
+                let cfg = TraceConfig {
+                    region_price_mult: base.region_price_mult * spec.price_mult,
+                    storm_prob: spec.storm_prob,
+                    storm_sev: spec.storm_sev,
+                    storm_len: spec.storm_len,
+                    ..base.clone()
+                };
+                SpotTrace::generate(cfg, region_seed(seed, r))
+            })
+            .collect();
+        Ok(RegionalTrace { map: map.clone(), traces, seed })
+    }
+
+    pub fn regions(&self) -> usize {
+        self.traces.len()
+    }
+
+    /// The merged market feed: every region's
+    /// [`SpotTrace::market_events`] stream, time-ordered, ties broken by
+    /// region index (deterministic for a given trace).
+    pub fn merged_events(&self, price_rel_threshold: f64) -> Vec<(RegionId, MarketEvent)> {
+        let mut all: Vec<(RegionId, MarketEvent)> = Vec::new();
+        for (r, trace) in self.traces.iter().enumerate() {
+            all.extend(
+                trace.market_events_iter(price_rel_threshold).map(|ev| (RegionId(r), ev)),
+            );
+        }
+        // stable sort: within a region events are already time-ordered,
+        // across regions ties break to the lower region index
+        all.sort_by(|a, b| {
+            a.1.at_s.partial_cmp(&b.1.at_s).unwrap().then(a.0 .0.cmp(&b.0 .0))
+        });
+        all
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_region_map() -> RegionMap {
+        RegionMap {
+            regions: vec![
+                RegionSpec { name: "a".into(), ..Default::default() },
+                RegionSpec { name: "b".into(), price_mult: 1.2, ..Default::default() },
+            ],
+            egress_usd_per_gb: vec![vec![0.0, 0.05], vec![0.05, 0.0]],
+        }
+    }
+
+    #[test]
+    fn single_region_trace_is_bit_identical_to_solo_generate() {
+        let base = TraceConfig::default();
+        let rt = RegionalTrace::generate(&base, &RegionMap::single(), 7).unwrap();
+        let solo = SpotTrace::generate(base, 7);
+        assert_eq!(rt.traces.len(), 1);
+        assert_eq!(rt.traces[0].avail, solo.avail);
+        assert!(rt.traces[0].prices.iter().zip(&solo.prices).all(|(x, y)| {
+            x.iter().zip(y).all(|(p, q)| p.to_bits() == q.to_bits())
+        }));
+        // and the merged feed is exactly the solo event stream
+        let merged = rt.merged_events(0.05);
+        let solo_evs = solo.market_events(0.05);
+        assert_eq!(merged.len(), solo_evs.len());
+        for ((rid, ev), solo_ev) in merged.iter().zip(&solo_evs) {
+            assert_eq!(*rid, RegionId(0));
+            assert_eq!(ev, solo_ev);
+        }
+    }
+
+    #[test]
+    fn regions_draw_independent_markets() {
+        let rt = RegionalTrace::generate(&TraceConfig::default(), &two_region_map(), 11).unwrap();
+        assert_ne!(rt.traces[0].avail, rt.traces[1].avail, "regions share one RNG stream");
+        assert_eq!(region_seed(11, 0), 11, "region 0 must keep the caller's seed");
+        assert_ne!(region_seed(11, 1), 11);
+    }
+
+    #[test]
+    fn merged_events_are_time_ordered_with_region_tiebreak() {
+        let rt = RegionalTrace::generate(&TraceConfig::default(), &two_region_map(), 13).unwrap();
+        let merged = rt.merged_events(0.05);
+        assert!(!merged.is_empty());
+        for w in merged.windows(2) {
+            let (a, b) = (&w[0], &w[1]);
+            assert!(
+                a.1.at_s < b.1.at_s || (a.1.at_s == b.1.at_s && a.0 .0 <= b.0 .0),
+                "feed out of order at {:.0}s", b.1.at_s
+            );
+        }
+        // both regions contribute
+        assert!(merged.iter().any(|(r, _)| *r == RegionId(0)));
+        assert!(merged.iter().any(|(r, _)| *r == RegionId(1)));
+    }
+
+    #[test]
+    fn price_mult_lifts_the_region_price_level() {
+        let rt = RegionalTrace::generate(&TraceConfig::default(), &two_region_map(), 17).unwrap();
+        let mean = |t: &SpotTrace, ki: usize| {
+            t.prices.iter().map(|r| r[ki]).sum::<f64>() / t.prices.len() as f64
+        };
+        for ki in 0..rt.traces[0].kinds.len() {
+            assert!(
+                mean(&rt.traces[1], ki) > mean(&rt.traces[0], ki),
+                "kind {ki}: 1.2x region is not dearer"
+            );
+        }
+    }
+
+    #[test]
+    fn storm_region_goes_dark_while_calm_region_survives() {
+        let map = RegionMap {
+            regions: vec![
+                RegionSpec {
+                    name: "stormy".into(),
+                    storm_prob: 1.0,
+                    storm_sev: 1.0,
+                    storm_len: 100_000,
+                    ..Default::default()
+                },
+                RegionSpec { name: "calm".into(), ..Default::default() },
+            ],
+            egress_usd_per_gb: vec![vec![0.0, 0.08], vec![0.08, 0.0]],
+        };
+        let rt = RegionalTrace::generate(&TraceConfig::default(), &map, 19).unwrap();
+        assert!(rt.traces[0].avail.iter().flatten().all(|&a| a == 0), "storm region survived");
+        assert!(rt.traces[1].avail.iter().flatten().sum::<usize>() > 0, "calm region dark");
+    }
+
+    #[test]
+    fn validate_names_the_bad_field() {
+        let mut m = two_region_map();
+        m.egress_usd_per_gb[0][1] = -1.0;
+        assert!(m.validate().unwrap_err().to_string().contains("egress_usd_per_gb"));
+        let mut m = two_region_map();
+        m.egress_usd_per_gb[1][1] = 0.5;
+        assert!(m.validate().unwrap_err().to_string().contains("intra-region"));
+        let mut m = two_region_map();
+        m.regions[1].name = "A".into();
+        assert!(m.validate().unwrap_err().to_string().contains("duplicate"));
+        let mut m = two_region_map();
+        m.regions[0].storm_sev = 2.0;
+        assert!(m.validate().unwrap_err().to_string().contains("storm_sev"));
+        let mut m = two_region_map();
+        m.egress_usd_per_gb.pop();
+        assert!(m.validate().unwrap_err().to_string().contains("square"));
+    }
+
+    #[test]
+    fn scalar_egress_expands_to_an_off_diagonal_matrix() {
+        let doc = r#"{"regions": [{"name": "a"}, {"name": "b"}, {"name": "c"}],
+                      "egress_usd_per_gb": 0.09}"#;
+        let map = RegionMap::from_json(&Json::parse(doc).unwrap()).unwrap();
+        for i in 0..3 {
+            for j in 0..3 {
+                let want = if i == j { 0.0 } else { 0.09 };
+                assert_eq!(map.egress_usd_per_gb[i][j], want);
+            }
+        }
+        assert_eq!(map.lookup("C").unwrap(), RegionId(2));
+        assert!(map.lookup("d").unwrap_err().to_string().contains("known regions"));
+    }
+
+    #[test]
+    fn default_single_map_is_valid_and_free() {
+        let m = RegionMap::single();
+        m.validate().unwrap();
+        assert_eq!(m.egress(RegionId(0), RegionId(0)), 0.0);
+    }
+}

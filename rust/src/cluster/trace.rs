@@ -19,9 +19,16 @@
 //! exactly as in the seed implementation (prices come from an
 //! independent RNG stream), so pre-price traces reproduce bit-identically.
 
+use anyhow::{bail, Result};
+
 use crate::cluster::catalog::{GpuCatalog, KindId};
 use crate::cluster::spec::ClusterSpec;
 use crate::util::rng::Rng;
+
+/// Salt of the independent RNG stream that drives region-wide capacity
+/// storms (availability and price streams keep their own seeds, so
+/// storm-free configs reproduce pre-storm traces bit-identically).
+const STORM_STREAM_SALT: u64 = 0xC2B2_AE3D_27D4_EB4F;
 
 #[derive(Debug, Clone)]
 pub struct TraceConfig {
@@ -43,7 +50,9 @@ pub struct TraceConfig {
     /// Per-kind spot $/hr the price track reverts to, keyed by
     /// [`KindId`] (NOT positional, so overriding `capacity` alone keeps
     /// the anchors attached to the right kinds). Kinds with no entry
-    /// fall back to 1.2 $/hr (the A100 anchor).
+    /// fall back to the built-in catalog's `price_per_hour` for that
+    /// kind (1.2 $/hr, the A100 anchor, for kinds the built-in catalog
+    /// does not know).
     pub base_price_per_hour: Vec<(KindId, f64)>,
     /// Mean-reversion strength of the price multiplier (0..1).
     pub price_reversion: f64,
@@ -52,6 +61,22 @@ pub struct TraceConfig {
     /// Multiplier applied to a kind's price on its demand-spike steps
     /// (spot prices surge exactly when availability crashes).
     pub spike_price_mult: f64,
+    /// Regional spot price level: a flat multiplier on every kind's
+    /// base-price anchor (1.0 = the catalog's level; regional traces set
+    /// it from [`crate::cluster::region::RegionSpec::price_mult`]).
+    pub region_price_mult: f64,
+    /// Probability per step that a region-wide capacity storm *starts*.
+    /// A storm is the correlated-market event the per-kind spike model
+    /// cannot express: one shared shock crushes **every** kind's
+    /// availability together (and surges every price) for `storm_len`
+    /// steps. Storms draw from their own RNG stream, so the default 0.0
+    /// keeps traces bit-identical to pre-storm generation.
+    pub storm_prob: f64,
+    /// Fraction of every kind's availability a storm step destroys
+    /// (1.0 = the whole region goes dark at once).
+    pub storm_sev: f64,
+    /// Storm duration in steps once one starts (>= 1).
+    pub storm_len: usize,
 }
 
 impl Default for TraceConfig {
@@ -74,6 +99,10 @@ impl Default for TraceConfig {
             price_reversion: 0.1,
             price_noise: 0.04,
             spike_price_mult: 1.8,
+            region_price_mult: 1.0,
+            storm_prob: 0.0,
+            storm_sev: 1.0,
+            storm_len: 3,
         }
     }
 }
@@ -110,13 +139,78 @@ impl TraceConfig {
         TraceConfig { capacity, base_price_per_hour, ..Default::default() }
     }
 
-    /// The $/hr anchor a kind's price track reverts to (1.2, the A100
-    /// anchor, for kinds without an explicit entry).
+    /// The $/hr anchor a kind's price track reverts to. A kind without
+    /// an explicit entry falls back to its own built-in catalog
+    /// `price_per_hour` (H800 anchors at 2.5, not the A100's 1.2);
+    /// kinds the built-in catalog does not cover keep the historical
+    /// 1.2 $/hr A100 anchor.
     pub fn base_price_of(&self, kind: KindId) -> f64 {
         self.base_price_per_hour
             .iter()
             .find(|&&(k, _)| k == kind)
-            .map_or(1.2, |&(_, p)| p)
+            .map(|&(_, p)| p)
+            .unwrap_or_else(|| {
+                let cat = GpuCatalog::builtin();
+                if kind.index() < cat.len() {
+                    cat.get(kind).price_per_hour
+                } else {
+                    1.2
+                }
+            })
+    }
+
+    /// Reject malformed configs up front with named errors, instead of
+    /// letting a NaN step or a negative noise knob corrupt a replay
+    /// downstream (mirrors `SweepConfig::validate()`). Called by the
+    /// replay/enact/sweep/sched entry points before any trace is
+    /// generated.
+    pub fn validate(&self) -> Result<()> {
+        let finite_nonneg = |name: &str, v: f64| -> Result<()> {
+            if !v.is_finite() || v < 0.0 {
+                bail!("TraceConfig.{name} ({v}) must be finite and non-negative");
+            }
+            Ok(())
+        };
+        if !self.step_s.is_finite() || self.step_s <= 0.0 {
+            bail!("TraceConfig.step_s ({}) must be a positive, finite number of seconds", self.step_s);
+        }
+        finite_nonneg("horizon_s", self.horizon_s)?;
+        if self.capacity.is_empty() {
+            bail!("TraceConfig.capacity is empty — a trace needs at least one GPU kind");
+        }
+        for &(frac_name, v) in &[
+            ("mean_frac", self.mean_frac),
+            ("reversion", self.reversion),
+            ("spike_prob", self.spike_prob),
+            ("price_reversion", self.price_reversion),
+            ("storm_prob", self.storm_prob),
+            ("storm_sev", self.storm_sev),
+        ] {
+            if !v.is_finite() || !(0.0..=1.0).contains(&v) {
+                bail!("TraceConfig.{frac_name} ({v}) must be a finite fraction in [0, 1]");
+            }
+        }
+        finite_nonneg("noise_frac", self.noise_frac)?;
+        finite_nonneg("price_noise", self.price_noise)?;
+        finite_nonneg("spike_price_mult", self.spike_price_mult)?;
+        if !self.region_price_mult.is_finite() || self.region_price_mult <= 0.0 {
+            bail!(
+                "TraceConfig.region_price_mult ({}) must be finite and positive",
+                self.region_price_mult
+            );
+        }
+        if self.storm_len == 0 {
+            bail!("TraceConfig.storm_len is 0 — a storm must last at least one step");
+        }
+        for &(kind, price) in &self.base_price_per_hour {
+            if !price.is_finite() || price < 0.0 {
+                bail!(
+                    "TraceConfig.base_price_per_hour[KindId({})] ({price}) must be finite and non-negative",
+                    kind.index()
+                );
+            }
+        }
+        Ok(())
     }
 }
 
@@ -179,7 +273,26 @@ impl SpotTrace {
         // can correlate its surges without touching the availability RNG
         // stream (availability stays bit-identical to pre-price traces).
         let mut spiked: Vec<Vec<bool>> = Vec::with_capacity(steps);
+        // Region-wide storms draw from a third independent stream: with
+        // storm_prob = 0.0 the stream is never consulted and the shock
+        // multiply never runs, so storm-free traces are bit-identical to
+        // pre-storm generation.
+        let mut storm_rng = Rng::new(seed ^ STORM_STREAM_SALT);
+        let mut storm_left = 0usize;
         for _ in 0..steps {
+            let storming = if cfg.storm_prob > 0.0 {
+                if storm_left > 0 {
+                    storm_left -= 1;
+                    true
+                } else if storm_rng.f64() < cfg.storm_prob {
+                    storm_left = cfg.storm_len.max(1) - 1;
+                    true
+                } else {
+                    false
+                }
+            } else {
+                false
+            };
             let mut spike_row = vec![false; kinds.len()];
             let row: Vec<usize> = level
                 .iter_mut()
@@ -194,6 +307,12 @@ impl SpotTrace {
                         *l *= rng.f64() * 0.5;
                         spike_row[ki] = true;
                     }
+                    // Storm: one shared regional shock crushes every kind
+                    // together (and marks the step so its price surges too).
+                    if storming {
+                        *l *= 1.0 - cfg.storm_sev.clamp(0.0, 1.0);
+                        spike_row[ki] = true;
+                    }
                     *l = l.clamp(0.0, cap);
                     l.round() as usize
                 })
@@ -206,7 +325,11 @@ impl SpotTrace {
         // multiplier around each kind's base price; demand-spike steps
         // multiply the price up (then the AR(1) pull decays it back).
         let mut price_rng = Rng::new(seed ^ 0x9E37_79B9_7F4A_7C15);
-        let bases: Vec<f64> = kinds.iter().map(|&k| cfg.base_price_of(k)).collect();
+        // The regional price level scales every anchor; 1.0 (the default)
+        // is an IEEE-exact no-op, so single-region price tracks reproduce
+        // pre-region traces bit for bit.
+        let bases: Vec<f64> =
+            kinds.iter().map(|&k| cfg.base_price_of(k) * cfg.region_price_mult).collect();
         let mut mult: Vec<f64> = vec![1.0; kinds.len()];
         let mut prices = Vec::with_capacity(steps);
         for spike_row in &spiked {
@@ -483,9 +606,118 @@ mod tests {
         let t = SpotTrace::generate(cfg, 13);
         let mean: f64 = t.prices.iter().map(|r| r[0]).sum::<f64>() / t.prices.len() as f64;
         assert!(mean > 0.45 && mean < 1.8, "H20 track anchored wrong: {mean}");
-        // a kind with no entry at all falls back to the A100 anchor
+        // a kind with no entry falls back to its OWN catalog price (the
+        // old code fell back to the A100's 1.2 $/hr literal for everyone)
         let empty = TraceConfig { base_price_per_hour: vec![], ..Default::default() };
-        assert_eq!(empty.base_price_of(KindId::H800), 1.2);
+        assert_eq!(empty.base_price_of(KindId::H800), 2.5);
+        assert_eq!(empty.base_price_of(KindId::H20), 0.9);
+        // a kind past the built-in catalog keeps the historical fallback
+        assert_eq!(empty.base_price_of(KindId(97)), 1.2);
+    }
+
+    #[test]
+    fn validate_accepts_defaults_and_names_bad_knobs() {
+        TraceConfig::default().validate().unwrap();
+        let bad_step = TraceConfig { step_s: f64::NAN, ..Default::default() };
+        assert!(bad_step.validate().unwrap_err().to_string().contains("step_s"));
+        let neg_noise = TraceConfig { noise_frac: -0.1, ..Default::default() };
+        assert!(neg_noise.validate().unwrap_err().to_string().contains("noise_frac"));
+        let empty_cap = TraceConfig { capacity: vec![], ..Default::default() };
+        assert!(empty_cap.validate().unwrap_err().to_string().contains("capacity"));
+        let bad_prob = TraceConfig { spike_prob: 1.5, ..Default::default() };
+        assert!(bad_prob.validate().unwrap_err().to_string().contains("spike_prob"));
+        let bad_price = TraceConfig {
+            base_price_per_hour: vec![(KindId::A100, f64::INFINITY)],
+            ..Default::default()
+        };
+        assert!(bad_price.validate().unwrap_err().to_string().contains("base_price_per_hour"));
+        let bad_storm = TraceConfig { storm_prob: -0.2, ..Default::default() };
+        assert!(bad_storm.validate().unwrap_err().to_string().contains("storm_prob"));
+        let bad_mult = TraceConfig { region_price_mult: 0.0, ..Default::default() };
+        assert!(bad_mult.validate().unwrap_err().to_string().contains("region_price_mult"));
+        let bad_len = TraceConfig { storm_len: 0, ..Default::default() };
+        assert!(bad_len.validate().unwrap_err().to_string().contains("storm_len"));
+    }
+
+    #[test]
+    fn storm_free_configs_reproduce_pre_storm_traces_bit_for_bit() {
+        // the storm stream must not perturb the availability or price
+        // streams when storms are off (the default) — explicit defaults
+        // and Default::default() agree bit for bit
+        let explicit = TraceConfig {
+            region_price_mult: 1.0,
+            storm_prob: 0.0,
+            storm_sev: 1.0,
+            storm_len: 3,
+            ..Default::default()
+        };
+        let a = SpotTrace::generate(explicit, 21);
+        let b = SpotTrace::generate(TraceConfig::default(), 21);
+        assert_eq!(a.avail, b.avail);
+        assert!(a.prices.iter().zip(&b.prices).all(|(x, y)| {
+            x.iter().zip(y).all(|(p, q)| p.to_bits() == q.to_bits())
+        }));
+    }
+
+    #[test]
+    fn storms_crash_every_kind_together_and_surge_prices() {
+        // a certain, total, long storm: the whole region goes dark on
+        // step 1 and every kind's price spikes together
+        let cfg = TraceConfig {
+            storm_prob: 1.0,
+            storm_sev: 1.0,
+            storm_len: 100_000,
+            ..Default::default()
+        };
+        let calm = SpotTrace::generate(TraceConfig::default(), 33);
+        let t = SpotTrace::generate(cfg, 33);
+        for (s, row) in t.avail.iter().enumerate() {
+            assert!(row.iter().all(|&a| a == 0), "step {s}: storm left {row:?} alive");
+        }
+        // prices surge region-wide relative to the calm trace
+        let mean = |tr: &SpotTrace, ki: usize| {
+            tr.prices.iter().map(|r| r[ki]).sum::<f64>() / tr.prices.len() as f64
+        };
+        for ki in 0..t.kinds.len() {
+            assert!(
+                mean(&t, ki) > mean(&calm, ki),
+                "kind {ki}: storm did not bid the price up"
+            );
+        }
+    }
+
+    #[test]
+    fn partial_storm_severity_scales_the_crash() {
+        let half = TraceConfig {
+            storm_prob: 1.0,
+            storm_sev: 0.5,
+            storm_len: 100_000,
+            ..Default::default()
+        };
+        let t = SpotTrace::generate(half, 35);
+        let calm = SpotTrace::generate(TraceConfig::default(), 35);
+        let sum = |tr: &SpotTrace| -> usize { tr.avail.iter().flatten().sum() };
+        let (storm_total, calm_total) = (sum(&t), sum(&calm));
+        assert!(storm_total > 0, "sev 0.5 must leave survivors");
+        assert!(
+            storm_total < calm_total,
+            "sev 0.5 did not bite: {storm_total} vs calm {calm_total}"
+        );
+    }
+
+    #[test]
+    fn region_price_mult_scales_the_whole_track() {
+        let cfg = TraceConfig { region_price_mult: 2.0, ..Default::default() };
+        let hi = SpotTrace::generate(cfg, 41);
+        let base = SpotTrace::generate(TraceConfig::default(), 41);
+        // same seed, same multiplier path: every price is exactly 2x
+        // (modulo the 0.01 floor, which a 2x track never touches)
+        for (r2, r1) in hi.prices.iter().zip(&base.prices) {
+            for (&p2, &p1) in r2.iter().zip(r1) {
+                assert!((p2 - 2.0 * p1).abs() < 1e-9, "{p2} vs 2x{p1}");
+            }
+        }
+        assert_eq!(hi.avail, base.avail, "price level must not touch availability");
     }
 
     #[test]

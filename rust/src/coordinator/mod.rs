@@ -6,7 +6,9 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::cluster::{ClusterSpec, GpuCatalog, KindVec, SpotTrace, TraceConfig};
+use crate::cluster::{
+    ClusterSpec, GpuCatalog, KindVec, RegionId, RegionMap, RegionalTrace, SpotTrace, TraceConfig,
+};
 use crate::log_info;
 use crate::metrics::Recorder;
 use crate::modelcfg::ModelCfg;
@@ -14,9 +16,9 @@ use crate::pipeline::{ExecTopology, PipelineTrainer};
 use crate::planner::{auto_plan, plan_choice, BudgetEnvelope, Objective, PlanOptions, ScoredPlan};
 use crate::profile::ProfileDb;
 use crate::recovery::{
-    baseline_train, enact, load_jobs_file, replay, run_schedule, sched_sweep, sweep, sweep_ab,
-    ClearingPolicy, EnactConfig, ReplanPolicy, ReplayConfig, ReplayReport, SchedSweepConfig,
-    SchedSweepReport, SchedulerConfig, SchedulerReport, SweepConfig, SweepReport,
+    baseline_train, enact, load_jobs_file, replay, replay_regions, run_schedule, sched_sweep,
+    sweep, sweep_ab, ClearingPolicy, EnactConfig, ReplanPolicy, ReplayConfig, ReplayReport,
+    SchedSweepConfig, SchedSweepReport, SchedulerConfig, SchedulerReport, SweepConfig, SweepReport,
 };
 use crate::runtime::{Engine, HostTensor};
 use crate::sim::simulate_plan;
@@ -29,7 +31,7 @@ autohet — automatic 3D parallelism for heterogeneous spot-instance GPUs
 USAGE:
   autohet plan    [--model NAME] [--cluster FILE|--counts 4xA100,2xH800]
                   [--objective time|cost] [--no-bench] [--out FILE]
-                  [--budget-usd X] [--deadline-h H]
+                  [--budget-usd X] [--deadline-h H] [--regions FILE]
                   [--plan-threads N] [--plan-deadline-ms T]
                   cluster FILEs may carry a custom GPU catalog (`catalog.kinds`,
                   incl. per-kind `price_per_hour` / `rdma_nics`); `--objective
@@ -39,7 +41,10 @@ USAGE:
                   `--plan-threads` caps the solver's worker threads (default
                   all cores; results are bit-identical at any count) and
                   `--plan-deadline-ms` bounds the solve wall-clock, scaling
-                  the exact/subset budgets down to fit
+                  the exact/subset budgets down to fit; `--regions FILE`
+                  (e.g. examples/regions.json) appends a per-region
+                  arbitrage table: the same fleet scored at every region's
+                  price level, with the egress $/GB a relocation would pay
   autohet sim     [--model NAME] [--counts ...]       simulate an iteration
   autohet train   [--artifacts DIR] [--steps N] [--groups 2,2|4] [--k N]
                   [--lr F] [--seed N] [--csv FILE]    real PJRT training
@@ -47,7 +52,7 @@ USAGE:
   autohet replay  [--model NAME] [--cluster FILE|--counts ...] [--hours H]
                   [--objective time|cost] [--amortize-h H] [--greedy]
                   [--gpus-per-node N] [--seed N] [--trace-seed N] [--csv FILE]
-                  [--budget-usd X] [--deadline-h H]
+                  [--budget-usd X] [--deadline-h H] [--regions FILE]
                   [--plan-threads N] [--plan-deadline-ms T]
                   replay a generated spot-market trace (per-kind capacity =
                   the given cluster counts) through the elastic coordinator;
@@ -57,13 +62,20 @@ USAGE:
                   the run (spend ≤ $X, stop at T) — the meter halts at the
                   cap and decisions weigh candidates within the envelope;
                   `--trace-seed` pins the market draw independently of the
-                  profiling seed (e.g. to re-run one sweep scenario solo)
+                  profiling seed (e.g. to re-run one sweep scenario solo);
+                  `--regions FILE` replays a multi-region market: one
+                  correlated trace per region (storms crash every kind in a
+                  region together), per-event arbitrage scans of foreign
+                  regions, and cross-region relocation priced as the Fig-10
+                  cloud-only restore plus egress $/GB on the checkpoint
+                  bytes that move — a single-region map is bit-identical to
+                  the region-free replay
   autohet sweep   [--model NAME] [--cluster FILE|--counts ...] [--hours H]
                   [--scenarios N] [--threads T] [--seed S] [--warmup N]
                   [--policy-a greedy|amortized] [--policy-b greedy|amortized]
                   [--objective time|cost] [--amortize-h H] [--no-cache]
                   [--gpus-per-node N] [--csv FILE]
-                  [--budget-usd X] [--deadline-h H]
+                  [--budget-usd X] [--deadline-h H] [--regions FILE]
                   [--plan-threads N] [--plan-deadline-ms T]
                   Monte-Carlo policy evaluation: replay N seeded scenarios
                   (trace seeds derived from --seed) in parallel over T
@@ -74,10 +86,13 @@ USAGE:
                   per-seed A−B deltas are reported (paired comparison);
                   one plan cache is shared across scenarios (sealed after a
                   `--warmup`-scenario sequential pass; `--no-cache` disables
-                  it); `--csv` dumps per-scenario rows (or A−B deltas)
+                  it); `--csv` dumps per-scenario rows (or A−B deltas);
+                  `--regions FILE` sweeps multi-region scenarios — rows gain
+                  relocation counts and egress spend, still bit-identical at
+                  any --threads count
   autohet enact   [--model NAME] [--cluster FILE|--counts ...] [--hours H]
                   [--objective time|cost] [--amortize-h H] [--greedy]
-                  [--budget-usd X] [--deadline-h H]
+                  [--budget-usd X] [--deadline-h H] [--regions FILE]
                   [--plan-threads N] [--plan-deadline-ms T]
                   [--gpus-per-node N] [--seed N] [--trace-seed N]
                   [--steps-per-event N]
@@ -94,12 +109,13 @@ USAGE:
                   a codec, `--ckpt-async-workers N` moves encode+commit
                   to a background worker (N encode threads) so only the
                   snapshot blocks training — results are bit-identical
-                  at any worker count
+                  at any worker count; `--regions FILE` enacts inside
+                  region 0's market climate (relocation is replay-level)
   autohet sched   [--jobs FILE] [--counts 16xA100,8xH800]
                   [--policy priority|fair] [--hours H] [--seed N]
                   [--trace-seed N] [--scenarios N] [--threads T]
                   [--warmup N] [--no-cache] [--gpus-per-node N]
-                  [--csv FILE] [--fleet-csv FILE]
+                  [--csv FILE] [--fleet-csv FILE] [--regions FILE]
                   multi-job scheduling on one shared spot pool: the jobs
                   file (JSON: per-job name/model plus optional objective,
                   policy, amortize_h, priority, weight, max_gpus,
@@ -111,7 +127,9 @@ USAGE:
                   envelope slack and fleet utilization; `--scenarios N`
                   sweeps N seeded markets in parallel (bit-identical at
                   any --threads count); `--csv` dumps the per-job
-                  decision log, `--fleet-csv` the utilization track
+                  decision log, `--fleet-csv` the utilization track;
+                  `--regions FILE` runs the pool in region 0's market
+                  climate (jobs may carry a `region` placement label)
   autohet models                                      list model presets
 ";
 
@@ -136,6 +154,21 @@ fn load_cluster(args: &Args) -> Result<ClusterSpec> {
         return ClusterSpec::from_json(&crate::util::json::Json::parse_file(Path::new(f))?);
     }
     parse_counts(args.get_str("counts", "4xA100,4xH800"))
+}
+
+/// `--regions FILE` → the regional market map (validated on parse). CI
+/// and docs invoke from rust/; the bundled maps live at the repo root,
+/// so fall back one directory up before erroring (the `--jobs`
+/// convention).
+fn load_regions(args: &Args) -> Result<Option<RegionMap>> {
+    let Some(f) = args.get("regions") else { return Ok(None) };
+    let path = if Path::new(f).exists() {
+        PathBuf::from(f)
+    } else {
+        Path::new("..").join(f)
+    };
+    let map = RegionMap::from_json(&crate::util::json::Json::parse_file(&path)?)?;
+    Ok(Some(map))
 }
 
 fn load_model(args: &Args) -> Result<ModelCfg> {
@@ -283,6 +316,49 @@ pub fn cmd_plan(args: &Args) -> Result<()> {
             Objective::Cost => "fastest alternative",
         };
         print_scored(tag, other, &cluster.catalog);
+    }
+    // `--regions`: score the same fleet at every region's price level —
+    // the arbitrage table a regional replay's relocation scan works from
+    if let Some(map) = load_regions(args)? {
+        println!("regional arbitrage ({} regions):", map.len());
+        let base: Vec<f64> =
+            cluster.catalog.specs().iter().map(|s| s.price_per_hour).collect();
+        let mut best: Option<(usize, f64)> = None;
+        for (r, spec) in map.regions.iter().enumerate() {
+            let prices: Vec<f64> = base.iter().map(|p| p * spec.price_mult).collect();
+            let cat = cluster.catalog.with_prices(&prices);
+            let mut c2 = cluster.clone();
+            c2.catalog = cat.clone();
+            let mut p2 = profile.clone();
+            p2.catalog = cat;
+            let ch = plan_choice(&c2, &p2, &opts)?;
+            let s = ch.pick_within(objective, &envelope, 0.0, 0.0);
+            // cheapest way out of this region, for the egress intuition
+            let out_egress = map.egress_usd_per_gb[r]
+                .iter()
+                .enumerate()
+                .filter(|&(j, _)| j != r)
+                .map(|(_, &v)| v)
+                .fold(f64::INFINITY, f64::min);
+            let egress = if out_egress.is_finite() {
+                format!(" | egress out ≥ ${out_egress:.2}/GB")
+            } else {
+                String::new()
+            };
+            println!(
+                "  {:<12} x{:.2} prices | ${:>7.2}/h | iter {:.3}s | {:.0} tokens/${egress}",
+                spec.name, spec.price_mult, s.price_per_hour, s.plan.est_iter_s, s.tokens_per_usd
+            );
+            if best.map_or(true, |(_, t)| s.tokens_per_usd > t) {
+                best = Some((r, s.tokens_per_usd));
+            }
+        }
+        if let Some((r, _)) = best {
+            println!(
+                "  best tokens/$: `{}` (relocation also pays the Fig-10 cloud restore + egress)",
+                map.regions[r].name
+            );
+        }
     }
     if let Some(out) = args.get("out") {
         std::fs::write(out, pick.plan.to_json(&cluster.catalog).to_string_pretty())?;
@@ -443,22 +519,48 @@ fn print_replay(tag: &str, r: &ReplayReport) {
     }
 }
 
+/// Regional arbitrage line under a replay summary (regional runs only).
+fn print_regions(r: &ReplayReport) {
+    println!(
+        "  regions: {} relocations | egress ${:.2} | ended in `{}`",
+        r.relocations, r.egress_usd, r.final_region
+    );
+}
+
 pub fn cmd_replay(args: &Args) -> Result<()> {
     let model = load_model(args)?;
     let cluster = load_cluster(args)?;
     let seed = args.get_u64("seed", 1);
     let profile = build_profile(&model, &cluster.catalog, seed);
     let (trace, cfg) = market_setup(args, &cluster, 24.0)?;
+    // `--regions` lifts the replay to a multi-region market: one
+    // correlated trace per region (region 0 reuses the solo seed) and
+    // egress-priced cross-region relocation in the decision loop
+    let regional = match load_regions(args)? {
+        Some(map) => Some(RegionalTrace::generate(&trace.cfg, &map, trace.seed)?),
+        None => None,
+    };
+    let run = |c: &ReplayConfig| match &regional {
+        Some(rt) => replay_regions(&profile, rt, c),
+        None => replay(&profile, &trace, c),
+    };
 
     log_info!(
-        "replaying {:.0}h spot trace (seed {seed}) for {} on {} GPUs, objective {}",
+        "replaying {:.0}h spot trace (seed {seed}) for {} on {} GPUs, objective {}{}",
         args.get_f64("hours", 24.0),
         model.name,
         cluster.total_gpus(),
         args.get_str("objective", "time"),
+        match &regional {
+            Some(rt) => format!(", {} regions", rt.regions()),
+            None => String::new(),
+        },
     );
-    let report = replay(&profile, &trace, &cfg)?;
+    let report = run(&cfg)?;
     print_replay(if args.has("greedy") { "greedy" } else { "amortized" }, &report);
+    if regional.is_some() {
+        print_regions(&report);
+    }
 
     // the counterfactual policy on the identical trace
     let other_policy = match cfg.policy {
@@ -469,8 +571,11 @@ pub fn cmd_replay(args: &Args) -> Result<()> {
         ReplanPolicy::Amortized { .. } => ReplanPolicy::Greedy,
     };
     let other_cfg = ReplayConfig { policy: other_policy, ..cfg.clone() };
-    let other = replay(&profile, &trace, &other_cfg)?;
+    let other = run(&other_cfg)?;
     print_replay(if args.has("greedy") { "amortized (counterfactual)" } else { "greedy (counterfactual)" }, &other);
+    if regional.is_some() {
+        print_regions(&other);
+    }
 
     if let Some(csv) = args.get("csv") {
         std::fs::write(csv, report.to_csv())?;
@@ -497,6 +602,7 @@ fn market_setup(
     let trace_seed = args.get_u64("trace-seed", args.get_u64("seed", 1));
     let mut tc = TraceConfig::from_cluster(cluster);
     tc.horizon_s = hours * 3600.0;
+    tc.validate()?;
     let trace = SpotTrace::generate(tc, trace_seed);
     let policy = if args.has("greedy") {
         ReplanPolicy::Greedy
@@ -602,6 +708,7 @@ pub fn cmd_sweep(args: &Args) -> Result<()> {
         share_cache: !args.has("no-cache"),
         replay: rcfg,
         trace: tc,
+        regions: load_regions(args)?,
     };
     log_info!(
         "sweeping {} scenarios of {:.0}h spot traces (base seed {seed}) for {} on {} GPUs",
@@ -665,6 +772,22 @@ pub fn cmd_enact(args: &Args) -> Result<()> {
     let seed = args.get_u64("seed", 1);
     let profile = build_profile(&model, &cluster.catalog, seed);
     let (trace, rcfg) = market_setup(args, &cluster, 2.0)?;
+    // enactment drives the real stack inside ONE region: with
+    // `--regions`, region 0's market climate (price level + storms) is
+    // what gets enacted — cross-region relocation is a replay-level
+    // decision (`autohet replay --regions`), not a training-path one
+    let trace = match load_regions(args)? {
+        Some(map) => {
+            let rt = RegionalTrace::generate(&trace.cfg, &map, trace.seed)?;
+            log_info!(
+                "enacting inside region 0 `{}` of a {}-region map",
+                map.name(RegionId(0)),
+                map.len()
+            );
+            rt.traces.into_iter().next().unwrap()
+        }
+        None => trace,
+    };
 
     let mut ecfg = EnactConfig {
         replay: rcfg.clone(),
@@ -880,6 +1003,25 @@ pub fn cmd_sched(args: &Args) -> Result<()> {
     let hours = args.get_f64("hours", 24.0);
     let mut tc = TraceConfig::from_cluster(&cluster);
     tc.horizon_s = hours * 3600.0;
+    // the multi-job pool lives in one region: compose region 0's market
+    // climate onto the base config exactly like `RegionalTrace::generate`
+    // does (region 0 keeps the caller's seed, so this IS region 0's
+    // trace); jobs carry informational `region` placement labels
+    if let Some(map) = load_regions(args)? {
+        let spec = &map.regions[0];
+        tc.region_price_mult *= spec.price_mult;
+        tc.storm_prob = spec.storm_prob;
+        tc.storm_sev = spec.storm_sev;
+        tc.storm_len = spec.storm_len;
+        log_info!(
+            "regional pool: region 0 `{}` of {} (price x{:.2}, storm p={:.2})",
+            spec.name,
+            map.len(),
+            spec.price_mult,
+            spec.storm_prob
+        );
+    }
+    tc.validate()?;
     let scfg = SchedulerConfig {
         policy,
         gpus_per_node: args.get_usize("gpus-per-node", 8),

@@ -159,6 +159,12 @@ pub struct EnactRow {
     /// same per-tag path as `save_bg_wall_s` — so async and sync runs
     /// report the identical ratio.
     pub save_ratio: f64,
+    /// Region label the fleet was homed in when this row fired. Enactment
+    /// drives the real stack inside a single region (region 0 of a
+    /// `--regions` map, `"local"` otherwise) — cross-region relocation is
+    /// a replay-level decision, so the column is constant per run but
+    /// keeps the row grid aligned with [`super::replay::ReplayRow`].
+    pub region: String,
     pub reason: String,
 }
 
@@ -247,12 +253,12 @@ impl EnactReport {
             "t_hours,decision,forced,gpus,iter_s,migration_s,replan_s,steps,loss,\
              save_local_b,save_cloud_b,load_local_b,load_rdma_b,load_cloud_b,\
              local_frac,peer_frac,cloud_frac,fig10_s,save_ratio,save_wall_s,save_bg_wall_s,\
-             load_wall_s,reason\n",
+             load_wall_s,region,reason\n",
         );
         for r in &self.rows {
             let load = r.load.clone().unwrap_or_default();
             out.push_str(&format!(
-                "{:.3},{},{},{},{:.4},{:.1},{:.4},{},{:.4},{},{},{},{},{},{:.3},{:.3},{:.3},{:.1},{:.4},{:.4},{:.4},{:.4},{}\n",
+                "{:.3},{},{},{},{:.4},{:.1},{:.4},{},{:.4},{},{},{},{},{},{:.3},{:.3},{:.3},{:.1},{:.4},{:.4},{:.4},{:.4},{},{}\n",
                 r.at_s / 3600.0,
                 r.decision,
                 r.forced,
@@ -275,6 +281,7 @@ impl EnactReport {
                 r.save_wall_s,
                 r.save_bg_wall_s,
                 r.load_wall_s,
+                csv_field(&r.region),
                 csv_field(&r.reason),
             ));
         }
@@ -721,6 +728,7 @@ pub fn enact(
             cloud_frac,
             timing_model_s,
             save_ratio: 1.0,
+            region: "local".to_string(),
             reason: out.reason,
         });
     }
@@ -777,6 +785,7 @@ pub fn enact(
             cloud_frac: 0.0,
             timing_model_s: 0.0,
             save_ratio: 1.0,
+            region: "local".to_string(),
             reason: why,
         });
     }
@@ -961,12 +970,13 @@ mod tests {
             cloud_frac: 0.0,
             timing_model_s: 0.0,
             save_ratio: 1.0,
+            region: "local".to_string(),
             reason: "held: \"spike\", \nretry".to_string(),
         };
         let r = EnactReport { rows: vec![row], ..Default::default() };
         let csv = r.to_csv();
         assert!(
-            csv.ends_with(",\"held: \"\"spike\"\", \nretry\"\n"),
+            csv.ends_with(",local,\"held: \"\"spike\"\", \nretry\"\n"),
             "reason not RFC-4180 escaped: {csv:?}"
         );
         // header and row agree on column count once the quoted field

@@ -19,6 +19,14 @@
 //!   [`crate::planner::BudgetEnvelope`] ("spend at most $X by deadline
 //!   T") and stop with a [`ReplanDecision::BudgetExhausted`] terminal
 //!   row when it runs out.
+//! * [`regions`](mod@regions) — regional replay over a
+//!   [`crate::cluster::RegionalTrace`]: the fleet homes in one region,
+//!   foreign markets are tracked as live snapshots, and an arbitrage
+//!   scan relocates it cross-region when the projected tokens (net of
+//!   the Fig-10 cloud-only restore *and* the egress $/GB bill on moved
+//!   checkpoint bytes) beat staying — including the forced case where a
+//!   regional storm kills the home fleet and the run re-forms elsewhere
+//!   from cloud checkpoints alone.
 //! * [`sweep`](mod@sweep) — Monte-Carlo policy evaluation: N seeded
 //!   traces fanned out over [`crate::util::par::par_map`] with one
 //!   sealed cross-replay [`SharedPlanCache`], bit-identical at any
@@ -43,6 +51,7 @@
 pub mod enact;
 pub mod migration;
 pub mod orchestrator;
+pub mod regions;
 pub mod replay;
 pub mod scheduler;
 pub mod sweep;
@@ -54,6 +63,7 @@ pub use orchestrator::{
     job_cache_salt, ElasticCoordinator, ReplanConfig, ReplanDecision, ReplanOutcome, ReplanPolicy,
     SharedPlanCache,
 };
+pub use regions::{region_cache_salt, replay_regions};
 pub use replay::{replay, ReplayConfig, ReplayReport, ReplayRow};
 pub use scheduler::{
     clear_pool, fair_split, load_jobs_file, run_schedule, run_schedule_with, sched_sweep,
@@ -64,4 +74,7 @@ pub use sweep::{
     scenario_seed, sweep, sweep_ab, AbReport, Dist, PairedDelta, ScenarioRow, SweepConfig,
     SweepReport,
 };
-pub use timing::{autohet_recovery_s, autohet_recovery_s_scaled, RecoveryScenario};
+pub use timing::{
+    autohet_recovery_s, autohet_recovery_s_scaled, cross_region_migration, CrossRegionMigration,
+    RecoveryScenario,
+};

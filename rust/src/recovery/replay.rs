@@ -104,6 +104,13 @@ pub struct ReplayRow {
     pub replan_s: f64,
     pub tokens_total: f64,
     pub usd_total: f64,
+    /// Region the fleet runs in after the event (`"local"` for
+    /// region-free replays; a [`crate::cluster::RegionMap`] name under
+    /// [`super::regions::replay_regions`]).
+    pub region: String,
+    /// Egress dollars this event billed (non-zero only on a cross-region
+    /// relocation).
+    pub egress_usd: f64,
     pub reason: String,
 }
 
@@ -153,6 +160,14 @@ pub struct ReplayReport {
     pub plan_cache_hits: usize,
     /// Fresh solver runs the coordinator paid for (cache misses).
     pub plan_solves: usize,
+    /// Cross-region relocations taken (always 0 for region-free replays;
+    /// counted separately from in-region `switches`).
+    pub relocations: usize,
+    /// Total egress dollars billed by relocations (already included in
+    /// `usd`).
+    pub egress_usd: f64,
+    /// Region the run ended in (`"local"` for region-free replays).
+    pub final_region: String,
     pub rows: Vec<ReplayRow>,
 }
 
@@ -168,11 +183,11 @@ impl ReplayReport {
     pub fn to_csv(&self) -> String {
         let mut out = format!("# trace_seed={}\n", self.trace_seed);
         out.push_str(
-            "t_hours,decision,forced,gpus,iter_s,fleet_usd_per_h,migration_s,replan_s,tokens,usd,reason\n",
+            "t_hours,decision,forced,gpus,iter_s,fleet_usd_per_h,migration_s,replan_s,tokens,usd,region,egress_usd,reason\n",
         );
         for r in &self.rows {
             out.push_str(&format!(
-                "{:.3},{},{},{},{:.4},{:.2},{:.1},{:.4},{:.0},{:.2},{}\n",
+                "{:.3},{},{},{},{:.4},{:.2},{:.1},{:.4},{:.0},{:.2},{},{:.2},{}\n",
                 r.at_s / 3600.0,
                 r.decision,
                 r.forced,
@@ -183,6 +198,8 @@ impl ReplayReport {
                 r.replan_s,
                 r.tokens_total,
                 r.usd_total,
+                csv_field(&r.region),
+                r.egress_usd,
                 csv_field(&r.reason),
             ));
         }
@@ -439,6 +456,8 @@ pub fn replay(profile: &ProfileDb, trace: &SpotTrace, cfg: &ReplayConfig) -> Res
             replan_s,
             tokens_total: meter.tokens,
             usd_total: meter.usd,
+            region: "local".to_string(),
+            egress_usd: 0.0,
             reason: out.reason,
         });
     }
@@ -468,6 +487,8 @@ pub fn replay(profile: &ProfileDb, trace: &SpotTrace, cfg: &ReplayConfig) -> Res
             replan_s: 0.0,
             tokens_total: meter.tokens,
             usd_total: meter.usd,
+            region: "local".to_string(),
+            egress_usd: 0.0,
             reason: why,
         });
     }
@@ -492,6 +513,9 @@ pub fn replay(profile: &ProfileDb, trace: &SpotTrace, cfg: &ReplayConfig) -> Res
         replan_max_s,
         plan_cache_hits: coord.plan_cache_hits,
         plan_solves: coord.plan_solves,
+        relocations: 0,
+        egress_usd: 0.0,
+        final_region: "local".to_string(),
         rows,
     })
 }
@@ -627,8 +651,10 @@ mod tests {
         assert_eq!(lines.len(), report.rows.len() + 2);
         // no unescaped commas leak from reasons: fixed column count
         for l in &lines[2..] {
-            assert_eq!(l.matches(',').count(), 10, "{l}");
+            assert_eq!(l.matches(',').count(), 12, "{l}");
         }
+        // region-free replays pin the sentinel region in every row
+        assert!(lines[2..].iter().all(|l| l.contains(",local,")), "region column missing");
     }
 
     #[test]
@@ -649,14 +675,17 @@ mod tests {
                 replan_s: 0.0,
                 tokens_total: 100.0,
                 usd_total: 2.0,
+                region: "eu, \"west\"".to_string(),
+                egress_usd: 0.0,
                 reason: "held: \"spike\", \nretry".to_string(),
             }],
             ..Default::default()
         };
         let csv = report.to_csv();
+        // both free-text columns (region, reason) are RFC-4180 escaped
         assert!(
-            csv.ends_with(",2.00,\"held: \"\"spike\"\", \nretry\"\n"),
-            "reason not RFC-4180 escaped: {csv:?}"
+            csv.ends_with(",2.00,\"eu, \"\"west\"\"\",0.00,\"held: \"\"spike\"\", \nretry\"\n"),
+            "region/reason not RFC-4180 escaped: {csv:?}"
         );
         // an RFC-4180 reader sees exactly 3 lines: comment, header, row
         // (the newline is quoted); a naive line count would see 4

@@ -80,6 +80,12 @@ pub struct JobSpec {
     pub weight: f64,
     /// Optional fleet-wide GPU cap for this job (spans all kinds).
     pub max_gpus: Option<usize>,
+    /// Placement label surfaced in every [`JobRow`] (CSV `region`
+    /// column). The scheduler clears one regional pool — under a
+    /// `--regions` map that pool is region 0's trace — so the label is
+    /// informational: it names where the job's share lives, defaulting
+    /// to `"local"`.
+    pub region: Option<String>,
 }
 
 impl JobSpec {
@@ -97,7 +103,13 @@ impl JobSpec {
             priority: 0,
             weight: 1.0,
             max_gpus: None,
+            region: None,
         }
+    }
+
+    /// The job's placement label for rows/CSVs (`"local"` when unset).
+    pub fn region_label(&self) -> &str {
+        self.region.as_deref().unwrap_or("local")
     }
 
     fn clearing(&self, stopped: bool) -> ClearingJob {
@@ -312,6 +324,8 @@ pub struct JobRow {
     pub migration_s: f64,
     pub tokens_total: f64,
     pub usd_total: f64,
+    /// The job's placement label ([`JobSpec::region_label`]).
+    pub region: String,
     pub reason: String,
 }
 
@@ -397,11 +411,11 @@ impl SchedulerReport {
         );
         out.push_str(
             "t_hours,job,decision,forced,gpus,granted,preempted,iter_s,\
-             fleet_usd_per_h,migration_s,tokens,usd,reason\n",
+             fleet_usd_per_h,migration_s,tokens,usd,region,reason\n",
         );
         for r in &self.rows {
             out.push_str(&format!(
-                "{:.3},{},{},{},{},{},{},{:.4},{:.2},{:.1},{:.0},{:.2},{}\n",
+                "{:.3},{},{},{},{},{},{},{:.4},{:.2},{:.1},{:.0},{:.2},{},{}\n",
                 r.at_s / 3600.0,
                 csv_field(&r.job),
                 r.decision,
@@ -414,6 +428,7 @@ impl SchedulerReport {
                 r.migration_s,
                 r.tokens_total,
                 r.usd_total,
+                csv_field(&r.region),
                 csv_field(&r.reason),
             ));
         }
@@ -505,6 +520,7 @@ fn exhausted_row(job: &JobSpec, st: &JobState, held: usize, why: &str) -> JobRow
         migration_s: 0.0,
         tokens_total: st.meter.tokens,
         usd_total: st.meter.usd,
+        region: job.region_label().to_string(),
         reason: why.to_string(),
     }
 }
@@ -663,6 +679,7 @@ pub fn run_schedule_with(
                 migration_s: out.migration_s,
                 tokens_total: st.meter.tokens,
                 usd_total: st.meter.usd,
+                region: job.region_label().to_string(),
                 reason: out.reason,
             });
             alloc[j] = next[j].clone();
@@ -793,6 +810,7 @@ impl SchedSweepConfig {
             self.warmup,
             self.scenarios
         );
+        self.trace.validate()?;
         Ok(())
     }
 }
@@ -950,8 +968,9 @@ pub fn sched_sweep(
 /// Per job: `name` + `model` (a `ModelCfg::by_name` preset) required;
 /// optional `objective` (`time`/`cost`), `policy`
 /// (`greedy`/`amortized`) with `amortize_h`, `priority`, `weight`,
-/// `max_gpus`, `budget_usd`, `deadline_h`. Returns the optional pool
-/// counts string (CLI `--counts` syntax) and the admitted jobs.
+/// `max_gpus`, `budget_usd`, `deadline_h`, and `region` (a placement
+/// label surfaced in the per-job CSV). Returns the optional pool counts
+/// string (CLI `--counts` syntax) and the admitted jobs.
 pub fn load_jobs_file(path: &Path) -> Result<(Option<String>, Vec<JobSpec>)> {
     let doc = Json::parse_file(path)?;
     let pool = doc.get("pool").and_then(|p| p.as_str().map(str::to_string));
@@ -1009,6 +1028,7 @@ fn job_from_json(j: &Json) -> Result<JobSpec> {
         priority: j.get("priority").and_then(Json::as_usize).unwrap_or(0),
         weight: j.get("weight").and_then(Json::as_f64).unwrap_or(1.0),
         max_gpus: j.get("max_gpus").and_then(Json::as_usize),
+        region: j.get("region").and_then(|r| r.as_str().map(str::to_string)),
     })
 }
 
@@ -1131,6 +1151,39 @@ mod tests {
         let cfg = SchedSweepConfig { scenarios: 2, warmup: 5, ..SchedSweepConfig::default() };
         let err = cfg.validate().unwrap_err().to_string();
         assert!(err.contains("warmup (5) exceeds scenarios (2)"), "{err}");
+    }
+
+    #[test]
+    fn job_region_labels_flow_into_rows_and_csv() {
+        let catalog = GpuCatalog::builtin();
+        let jobs = vec![
+            JobSpec {
+                region: Some("eu-west".to_string()),
+                ..JobSpec::new("alpha", ModelCfg::bert_large())
+            },
+            JobSpec { priority: 1, ..JobSpec::new("beta", ModelCfg::bert_large()) },
+        ];
+        let trace = SpotTrace::generate(small_trace_cfg(), 7);
+        let report =
+            run_schedule(&jobs, &catalog, &trace, &SchedulerConfig::default(), 1).unwrap();
+        assert!(!report.rows.is_empty());
+        for r in &report.rows {
+            let want = if r.job == "alpha" { "eu-west" } else { "local" };
+            assert_eq!(r.region, want, "job {} at {}s", r.job, r.at_s);
+        }
+        let csv = report.to_csv();
+        assert!(csv.lines().nth(1).unwrap().ends_with("usd,region,reason"));
+        assert!(csv.contains(",eu-west,"));
+    }
+
+    #[test]
+    fn sched_sweep_validate_rejects_malformed_traces() {
+        let cfg = SchedSweepConfig {
+            trace: TraceConfig { step_s: 0.0, ..small_trace_cfg() },
+            ..SchedSweepConfig::default()
+        };
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("step_s"), "{err}");
     }
 
     #[test]

@@ -38,11 +38,12 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::cluster::{SpotTrace, TraceConfig};
+use crate::cluster::{RegionMap, RegionalTrace, SpotTrace, TraceConfig};
 use crate::profile::ProfileDb;
 use crate::util::par;
 
 use super::orchestrator::SharedPlanCache;
+use super::regions::replay_regions;
 use super::replay::{replay, ReplayConfig, ReplayReport};
 
 /// The trace seed of scenario `index` under `base_seed`: a
@@ -86,6 +87,13 @@ pub struct SweepConfig {
     pub replay: ReplayConfig,
     /// Market-dynamics config each scenario's trace is drawn from.
     pub trace: TraceConfig,
+    /// Regional pool map: when set, every scenario draws one correlated
+    /// market per region ([`RegionalTrace`]) and replays through the
+    /// arbitrage-aware regional engine
+    /// ([`replay_regions`](super::regions::replay_regions)). `None`
+    /// (the default) keeps the region-free path bit-identical to
+    /// pre-region sweeps.
+    pub regions: Option<RegionMap>,
 }
 
 impl Default for SweepConfig {
@@ -98,6 +106,7 @@ impl Default for SweepConfig {
             share_cache: true,
             replay: ReplayConfig::default(),
             trace: TraceConfig::default(),
+            regions: None,
         }
     }
 }
@@ -121,6 +130,10 @@ impl SweepConfig {
             self.warmup,
             self.scenarios
         );
+        self.trace.validate()?;
+        if let Some(map) = &self.regions {
+            map.validate()?;
+        }
         Ok(())
     }
 }
@@ -188,6 +201,10 @@ pub struct ScenarioRow {
     pub exhausted: bool,
     pub plan_cache_hits: usize,
     pub plan_solves: usize,
+    /// Cross-region relocations taken (0 on region-free sweeps).
+    pub relocations: usize,
+    /// Egress dollars billed by relocations (0 on region-free sweeps).
+    pub egress_usd: f64,
 }
 
 impl ScenarioRow {
@@ -208,6 +225,8 @@ impl ScenarioRow {
             exhausted: r.exhausted,
             plan_cache_hits: r.plan_cache_hits,
             plan_solves: r.plan_solves,
+            relocations: r.relocations,
+            egress_usd: r.egress_usd,
         }
     }
 }
@@ -250,11 +269,12 @@ impl SweepReport {
             format!("# base_seed={} scenarios={}\n", self.base_seed, self.scenarios);
         out.push_str(
             "scenario,seed,tokens,usd,tokens_per_usd,train_s,downtime_s,paused_s,\
-             switches,holds,unchanged,events,exhausted,plan_cache_hits,plan_solves\n",
+             switches,holds,unchanged,events,exhausted,plan_cache_hits,plan_solves,\
+             relocations,egress_usd\n",
         );
         for r in &self.rows {
             out.push_str(&format!(
-                "{},{},{:.0},{:.2},{:.1},{:.0},{:.0},{:.0},{},{},{},{},{},{},{}\n",
+                "{},{},{:.0},{:.2},{:.1},{:.0},{:.0},{:.0},{},{},{},{},{},{},{},{},{:.2}\n",
                 r.index,
                 r.seed,
                 r.tokens,
@@ -270,6 +290,8 @@ impl SweepReport {
                 r.exhausted,
                 r.plan_cache_hits,
                 r.plan_solves,
+                r.relocations,
+                r.egress_usd,
             ));
         }
         out
@@ -299,8 +321,16 @@ fn run_scenario(
     index: usize,
 ) -> Result<ScenarioRow> {
     let seed = scenario_seed(cfg.base_seed, index);
-    let trace = SpotTrace::generate(cfg.trace.clone(), seed);
-    let report = replay(profile, &trace, rcfg)?;
+    let report = match &cfg.regions {
+        Some(map) => {
+            let rt = RegionalTrace::generate(&cfg.trace, map, seed)?;
+            replay_regions(profile, &rt, rcfg)?
+        }
+        None => {
+            let trace = SpotTrace::generate(cfg.trace.clone(), seed);
+            replay(profile, &trace, rcfg)?
+        }
+    };
     Ok(ScenarioRow::from_report(index, &report))
 }
 
@@ -564,6 +594,42 @@ mod tests {
         let edge = SweepConfig { warmup: 2, ..small_cfg(2) };
         edge.validate().unwrap();
         assert_eq!(sweep(&p, &edge).unwrap().rows.len(), 2);
+    }
+
+    #[test]
+    fn regional_sweep_matches_region_free_and_counts_relocations() {
+        use crate::cluster::{RegionMap, RegionSpec};
+        let p = profile();
+        // a single-region map is the region-free sweep, bit for bit
+        let mut cfg = small_cfg(2);
+        cfg.regions = Some(RegionMap::single());
+        let regional = sweep(&p, &cfg).unwrap();
+        let plain = sweep(&p, &small_cfg(2)).unwrap();
+        assert_eq!(regional.rows, plain.rows);
+        // CSV grows the region columns but keeps the same prefix
+        assert!(regional.to_csv().lines().nth(1).unwrap().ends_with("relocations,egress_usd"));
+        // a two-region map replays through the regional engine and is
+        // bit-identical across thread counts
+        let map = RegionMap {
+            regions: vec![
+                RegionSpec { name: "a".into(), ..Default::default() },
+                RegionSpec { name: "b".into(), ..Default::default() },
+            ],
+            egress_usd_per_gb: vec![vec![0.0, 0.05], vec![0.05, 0.0]],
+        };
+        let mut c1 = small_cfg(2);
+        c1.regions = Some(map.clone());
+        c1.threads = Some(1);
+        let mut c2 = c1.clone();
+        c2.threads = Some(2);
+        let r1 = sweep(&p, &c1).unwrap();
+        let r2 = sweep(&p, &c2).unwrap();
+        assert_eq!(r1.rows, r2.rows, "regional sweep depends on thread count");
+        // a malformed map errors up front with a named field
+        let mut bad = c1.clone();
+        bad.regions.as_mut().unwrap().egress_usd_per_gb[0][1] = -1.0;
+        let err = sweep(&p, &bad).unwrap_err().to_string();
+        assert!(err.contains("egress_usd_per_gb"), "{err}");
     }
 
     #[test]

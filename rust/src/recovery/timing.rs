@@ -91,6 +91,48 @@ pub fn autohet_recovery_s_scaled(
     t_local.max(t_peer) + t_cloud + RESTART_OVERHEAD_S
 }
 
+/// What a cross-region relocation costs: Fig-10 downtime for a
+/// cloud-only restore plus egress dollars on the bytes that leave the
+/// source region.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CrossRegionMigration {
+    /// Seconds to re-form the fleet in the destination region
+    /// (cloud-only Fig-10 scenario: no local or peer tier survives).
+    pub downtime_s: f64,
+    /// Checkpoint bytes pulled through the cloud front door — the
+    /// quantity the egress meter bills.
+    pub bytes_cloud: f64,
+    /// Egress dollars billed on `bytes_cloud` at the region pair's $/GB.
+    pub egress_usd: f64,
+}
+
+/// Price a cross-region relocation. No local NVMe copy and no RDMA peer
+/// survives a region move — the fleet re-forms in the destination region
+/// from **cloud checkpoints alone** (`local_frac = peer_frac = 0`,
+/// Fig-10 scenario-B shape pushed to its limit), and every byte that
+/// crosses the region boundary additionally pays `egress_usd_per_gb`
+/// ([`crate::cluster::RegionMap::egress`]).
+pub fn cross_region_migration(
+    model: &ModelCfg,
+    surviving_nodes: usize,
+    dp_groups_new: usize,
+    ic: &Interconnect,
+    egress_usd_per_gb: f64,
+) -> CrossRegionMigration {
+    let sc = RecoveryScenario {
+        surviving_nodes,
+        local_frac: 0.0,
+        peer_frac: 0.0,
+        dp_groups_new,
+    };
+    let bytes_cloud = model.ckpt_bytes_total() * sc.cloud_frac() * dp_groups_new.max(1) as f64;
+    CrossRegionMigration {
+        downtime_s: autohet_recovery_s(model, &sc, ic),
+        bytes_cloud,
+        egress_usd: bytes_cloud / 1e9 * egress_usd_per_gb.max(0.0),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -140,6 +182,34 @@ mod tests {
         assert!(half > 0.5 * full - 1e-9);
         // ratios above 1 (raw fallback pathologies) clamp to 1
         assert_eq!(autohet_recovery_s_scaled(&m, &sc, &ic, 1.7).to_bits(), full.to_bits());
+    }
+
+    #[test]
+    fn cross_region_is_cloud_only_plus_egress() {
+        let m = ModelCfg::gpt3_6p7b();
+        let ic = Interconnect::default();
+        let mig = cross_region_migration(&m, 4, 2, &ic, 0.08);
+        // cloud-only restore: bytes = full checkpoint x DP groups
+        assert!((mig.bytes_cloud - m.ckpt_bytes_total() * 2.0).abs() < 1.0);
+        // egress bills exactly bytes/1e9 * $/GB
+        assert!((mig.egress_usd - mig.bytes_cloud / 1e9 * 0.08).abs() < 1e-9);
+        assert!(mig.egress_usd > 0.0);
+        // downtime is the scenario with local = peer = 0 through the
+        // same Fig-10 model
+        let sc = RecoveryScenario {
+            surviving_nodes: 4,
+            local_frac: 0.0,
+            peer_frac: 0.0,
+            dp_groups_new: 2,
+        };
+        assert_eq!(mig.downtime_s.to_bits(), autohet_recovery_s(&m, &sc, &ic).to_bits());
+        // and it dominates the fully-local in-region recovery
+        let local = autohet_recovery_s(&m, &RecoveryScenario::scenario_a(2, 4), &ic);
+        assert!(mig.downtime_s > local);
+        // free egress (same cloud) still pays the cloud restore time
+        let free = cross_region_migration(&m, 4, 2, &ic, 0.0);
+        assert_eq!(free.egress_usd, 0.0);
+        assert_eq!(free.downtime_s.to_bits(), mig.downtime_s.to_bits());
     }
 
     #[test]

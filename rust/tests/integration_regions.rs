@@ -1,0 +1,145 @@
+//! End-to-end regional spot markets: a correlated storm kills every GPU
+//! kind in the home region at once and the fleet must re-form in a
+//! foreign region from cloud checkpoints alone, paying egress on every
+//! moved byte — while a single-region map stays bit-identical to the
+//! region-free replay engine.
+
+use autohet::cluster::{
+    GpuCatalog, Interconnect, KindId, RegionId, RegionMap, RegionSpec, RegionalTrace, SpotTrace,
+    TraceConfig,
+};
+use autohet::modelcfg::ModelCfg;
+use autohet::profile::ProfileDb;
+use autohet::recovery::{
+    cross_region_migration, replay, replay_regions, ReplanDecision, ReplayConfig,
+};
+
+fn profile() -> ProfileDb {
+    ProfileDb::build(&ModelCfg::bert_large(), &GpuCatalog::builtin(), &[1, 2, 4, 8], 1)
+}
+
+fn base_trace_cfg(hours: f64) -> TraceConfig {
+    TraceConfig {
+        horizon_s: hours * 3600.0,
+        step_s: 1800.0,
+        capacity: vec![(KindId::A100, 6), (KindId::H800, 4)],
+        ..Default::default()
+    }
+}
+
+#[test]
+fn regional_storm_relocates_the_fleet_via_cloud_checkpoints() {
+    // the classic failure story: region `doomed` is hit by a permanent
+    // correlated storm (every kind dark from step 0), region `haven`
+    // stays calm — the run must relocate, restore cloud-tier-only, and
+    // bill egress on the checkpoint bytes that crossed the region line
+    let profile = profile();
+    let map = RegionMap {
+        regions: vec![
+            RegionSpec {
+                name: "doomed".into(),
+                storm_prob: 1.0,
+                storm_sev: 1.0,
+                storm_len: 100_000,
+                ..Default::default()
+            },
+            RegionSpec { name: "haven".into(), price_mult: 1.05, ..Default::default() },
+        ],
+        egress_usd_per_gb: vec![vec![0.0, 0.08], vec![0.08, 0.0]],
+    };
+    let rt = RegionalTrace::generate(&base_trace_cfg(12.0), &map, 3).unwrap();
+    // the storm is region-wide and correlated: every kind, every step
+    assert!(
+        rt.traces[0].avail.iter().flatten().all(|&a| a == 0),
+        "storm region still has capacity"
+    );
+    assert!(rt.traces[1].avail.iter().flatten().sum::<usize>() > 0, "haven went dark");
+
+    let report = replay_regions(&profile, &rt, &ReplayConfig::default()).unwrap();
+    assert!(report.relocations >= 1, "storm never forced a relocation");
+    assert_eq!(report.final_region, "haven");
+    assert!(report.egress_usd > 0.0, "relocation billed no egress");
+    assert!(report.tokens > 0.0, "the fleet never re-formed and trained");
+
+    let reloc = report
+        .rows
+        .iter()
+        .find(|r| r.reason.contains("relocated"))
+        .expect("no relocation row in the decision log");
+    assert_eq!(reloc.decision, ReplanDecision::Switched);
+    assert_eq!(reloc.region, "haven");
+    assert!(reloc.forced, "a dead home region must force the move");
+    assert!(reloc.migration_s > 0.0, "cloud-only restore cannot be free");
+    assert!(reloc.egress_usd > 0.0);
+    assert!(
+        reloc.reason.contains("cloud-only restore"),
+        "relocation must restore from the cloud tier: {}",
+        reloc.reason
+    );
+    // egress is billed into the run's spend meter, not alongside it
+    assert!(report.usd >= report.egress_usd);
+}
+
+#[test]
+fn single_region_map_is_bit_identical_to_region_free_replay() {
+    // the regional engine with one default region IS the old engine:
+    // same rows, same meters, to the bit — at several seeds
+    let profile = profile();
+    for seed in [1u64, 9, 42] {
+        let tc = base_trace_cfg(24.0);
+        let solo_trace = SpotTrace::generate(tc.clone(), seed);
+        let solo = replay(&profile, &solo_trace, &ReplayConfig::default()).unwrap();
+        let rt = RegionalTrace::generate(&tc, &RegionMap::single(), seed).unwrap();
+        let regional = replay_regions(&profile, &rt, &ReplayConfig::default()).unwrap();
+
+        assert_eq!(regional.tokens.to_bits(), solo.tokens.to_bits(), "seed {seed}");
+        assert_eq!(regional.usd.to_bits(), solo.usd.to_bits(), "seed {seed}");
+        assert_eq!(regional.downtime_s.to_bits(), solo.downtime_s.to_bits(), "seed {seed}");
+        assert_eq!(regional.switches, solo.switches, "seed {seed}");
+        assert_eq!(regional.holds, solo.holds, "seed {seed}");
+        assert_eq!(regional.relocations, 0);
+        assert_eq!(regional.egress_usd, 0.0);
+        assert_eq!(regional.final_region, "local");
+        assert_eq!(regional.rows.len(), solo.rows.len(), "seed {seed}");
+        for (a, b) in regional.rows.iter().zip(&solo.rows) {
+            assert_eq!(a.decision, b.decision);
+            assert_eq!(a.at_s.to_bits(), b.at_s.to_bits());
+            assert_eq!(a.region, "local");
+            assert_eq!(a.egress_usd, 0.0);
+        }
+    }
+}
+
+#[test]
+fn cross_region_restore_is_cloud_only_and_egress_priced() {
+    // the Fig-10 pricing of a relocation: every checkpoint byte comes
+    // from the cloud tier (nothing local survives a region move) and the
+    // egress bill is exactly rate x moved GB
+    let model = ModelCfg::bert_large();
+    let mig = cross_region_migration(&model, 2, 2, &Interconnect::default(), 0.08);
+    assert!(mig.bytes_cloud > 0.0, "cross-region restore must pull from cloud");
+    assert!(mig.downtime_s > 0.0);
+    let expect = mig.bytes_cloud / 1e9 * 0.08;
+    assert!((mig.egress_usd - expect).abs() < 1e-9, "{} vs {}", mig.egress_usd, expect);
+    // free-egress regions still pay the restore downtime
+    let free = cross_region_migration(&model, 2, 2, &Interconnect::default(), 0.0);
+    assert_eq!(free.egress_usd, 0.0);
+    assert!(free.downtime_s > 0.0);
+}
+
+#[test]
+fn bundled_regions_example_parses_and_validates() {
+    // the map the README/CI quickstart points at must stay loadable
+    let path = if std::path::Path::new("examples/regions.json").exists() {
+        std::path::PathBuf::from("examples/regions.json")
+    } else {
+        std::path::Path::new("..").join("examples/regions.json")
+    };
+    let map =
+        RegionMap::from_json(&autohet::util::json::Json::parse_file(&path).unwrap()).unwrap();
+    assert!(map.len() >= 2, "example should exercise a multi-region market");
+    map.validate().unwrap();
+    for r in 0..map.len() {
+        assert_eq!(map.egress(RegionId(r), RegionId(r)), 0.0);
+    }
+}
